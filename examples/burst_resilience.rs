@@ -1,0 +1,52 @@
+//! Burst resilience: inject 8×-scale traffic spikes and compare how the
+//! three LT strategies absorb them (the paper's §7.2.7 / Fig 16a story:
+//! LT-I and LT-U cap out at the forecast ceiling, LT-UA's last-20-minute
+//! forecast-gap override keeps scaling).
+//!
+//! ```bash
+//! cargo run --release --example burst_resilience
+//! ```
+
+use sageserve::config::{ModelKind, Tier};
+use sageserve::metrics::LatencySummary;
+use sageserve::sim::engine::{run_simulation, SimConfig, Strategy};
+use sageserve::trace::generator::TraceConfig;
+
+fn main() {
+    println!("burst resilience: 1 simulated day, random 5–15 min bursts amplified to ~8x\n");
+    println!(
+        "{:<8} {:>14} {:>14} {:>12} {:>12}",
+        "strategy", "IW-F p95 TTFT", "IW-F viol %", "inst-hours", "mean util"
+    );
+    for strategy in [Strategy::LtI, Strategy::LtU, Strategy::LtUa] {
+        let cfg = SimConfig {
+            trace: TraceConfig {
+                days: 1.0,
+                scale: 0.1,
+                bursts: true,
+                burst_amplitude: 2.7,       // 2–4x base → ~5.4–10.8x spikes
+                burst_minutes: (25.0, 50.0), // long enough to cross LT-UA's
+                                             // end-of-hour correction window
+                ..Default::default()
+            },
+            strategy,
+            ..Default::default()
+        };
+        let sim = run_simulation(cfg);
+        let iwf = LatencySummary::from_outcomes(
+            sim.metrics.outcomes.iter().filter(|o| o.tier == Tier::IwF),
+        );
+        let ih = sim.metrics.model_instance_hours(ModelKind::Llama2_70B, sim.end_time());
+        println!(
+            "{:<8} {:>13.2}s {:>13.1}% {:>12.1} {:>12.2}",
+            strategy.name(),
+            iwf.ttft_p95,
+            iwf.sla_violation_rate * 100.0,
+            ih,
+            sim.metrics.mean_util(ModelKind::Llama2_70B)
+        );
+    }
+    println!("\nexpected shape (paper Fig 16a): LT-UA holds the lowest tail latency under");
+    println!("bursts because it alone scales past the ILP/forecast ceiling when observed");
+    println!("TPS exceeds 5x the prediction.");
+}

@@ -1,0 +1,53 @@
+//! Quickstart: simulate one morning of LLM traffic under SageServe's
+//! LT-UA strategy and print the SLA / cost summary.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use sageserve::config::Tier;
+use sageserve::sim::engine::{run_simulation, SimConfig, Strategy};
+use sageserve::trace::generator::TraceConfig;
+
+fn main() {
+    // A quarter-day of the Jul-2025 workload at 1% of production volume:
+    // 4 models, 3 regions, all three SLA tiers.
+    let cfg = SimConfig {
+        trace: TraceConfig { days: 0.25, scale: 0.05, ..Default::default() },
+        strategy: Strategy::LtUa,
+        ..Default::default()
+    };
+    println!("SageServe quickstart: 6 simulated hours, strategy = lt-ua\n");
+    let sim = run_simulation(cfg);
+
+    println!("requests completed: {}", sim.metrics.outcomes.len());
+    for tier in Tier::ALL {
+        let s = sim.metrics.latency_by_tier(tier);
+        if s.count == 0 {
+            continue;
+        }
+        println!(
+            "  {tier:<5} n={:<7} TTFT p50 {:.2}s p95 {:.2}s | E2E p95 {:.2}s | SLA viol {:.1}%",
+            s.count,
+            s.ttft_p50,
+            s.ttft_p95,
+            s.e2e_p95,
+            s.sla_violation_rate * 100.0
+        );
+    }
+    let end = sim.end_time();
+    let mut total = 0.0;
+    for &m in &sim.cfg.trace.models {
+        let ih = sim.metrics.model_instance_hours(m, end);
+        total += ih;
+        println!("  {m:<12} {ih:>7.1} instance-hours (mean util {:.2})", sim.metrics.mean_util(m));
+    }
+    println!(
+        "\ntotal {total:.1} instance-hours; {:.1} donated to spot; {:.2} GPU-h lost to scaling",
+        sim.metrics.spot_hours(end),
+        sim.metrics.scaling_waste.total_gpu_hours()
+    );
+    println!("\nNext steps:");
+    println!("  target/release/sageserve exp all          # regenerate the paper's figures");
+    println!("  cargo run --release --example serve_model # real PJRT serving end-to-end");
+}

@@ -1,0 +1,220 @@
+"""AOT export: lower the Layer-2 graphs to HLO *text* artifacts.
+
+Python runs exactly once, at build time (`make artifacts`); the Rust
+coordinator loads these artifacts through the `xla` crate
+(``HloModuleProto::from_text_file`` → ``PjRtClient::compile``) and never
+touches Python again.
+
+HLO **text** — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids that the pinned
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written to ``--out-dir`` (default ``../artifacts``):
+
+  forecast.hlo.txt        [S, T] history        -> [S, H] TPS forecast
+  tinylm_prefill.hlo.txt  (params…, tokens[B,S]) -> (logits, k_cache, v_cache)
+  tinylm_decode.hlo.txt   (params…, token[B], pos[B], caches) -> (logits, caches)
+  tinylm_params.bin       all parameters, flat little-endian f32, manifest order
+  manifest.json           shapes/orders/config for the Rust loader
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from . import forecast_graph as fc_mod
+from .model import ModelConfig
+from .forecast_graph import ForecastConfig
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_forecast(out_dir: str, cfg: ForecastConfig) -> dict:
+    spec = jax.ShapeDtypeStruct((cfg.n_series, cfg.history), jnp.float32)
+    lowered = jax.jit(lambda h: (fc_mod.forecast(h, cfg),)).lower(spec)
+    path = os.path.join(out_dir, "forecast.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"wrote {path}")
+    return {
+        "n_series": cfg.n_series, "history": cfg.history,
+        "season": cfg.season, "order": cfg.order, "horizon": cfg.horizon,
+    }
+
+
+def export_tinylm_shape_variants(out_dir: str, base: ModelConfig) -> list:
+    """Smaller (prefill_len, max_len) variants of the same weights.
+
+    The Fig 9 fidelity study needs execution time to *vary* with shape —
+    a single fixed-shape executable has constant cost regardless of the
+    actual token count.  Weights are shared with the base export (the
+    pos-embedding table is simply indexed below the variant's max_len),
+    so only the HLO differs.
+    """
+    variants = [(32, 64), (64, 128)]  # base (128, 256) is the third point
+    pspec = model_mod.params_spec(base)
+    out = []
+    for (s, m) in variants:
+        cfg = dataclasses.replace(base, prefill_len=s, max_len=m)
+        tok_spec = jax.ShapeDtypeStruct((cfg.batch, s), jnp.int32)
+        lowered = jax.jit(
+            lambda p, t, c=cfg: model_mod.prefill(p, t, c)
+        ).lower(pspec, tok_spec)
+        path = os.path.join(out_dir, f"tinylm_prefill_s{s}_m{m}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        print(f"wrote {path}")
+
+        bh = cfg.batch * cfg.n_heads
+        cache_spec = jax.ShapeDtypeStruct(
+            (cfg.n_layers, bh, m, cfg.head_dim), jnp.float32)
+        tok1 = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+        pos1 = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+        lowered = jax.jit(
+            lambda p, t, x, kc, vc, c=cfg: model_mod.decode_step(p, t, x, kc, vc, c)
+        ).lower(pspec, tok1, pos1, cache_spec, cache_spec)
+        path = os.path.join(out_dir, f"tinylm_decode_s{s}_m{m}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        print(f"wrote {path}")
+        out.append({"prefill_len": s, "max_len": m})
+    return out
+
+
+def export_tinylm(out_dir: str, cfg: ModelConfig, seed: int) -> dict:
+    params = model_mod.init_params(cfg, seed=seed)
+    pspec = model_mod.params_spec(cfg)
+
+    # --- weights blob (manifest order = param_shapes order) ---
+    blob_path = os.path.join(out_dir, "tinylm_params.bin")
+    with open(blob_path, "wb") as f:
+        for name, _ in model_mod.param_shapes(cfg):
+            np.asarray(params[name], dtype="<f4").tofile(f)
+    print(f"wrote {blob_path}")
+
+    # NOTE on argument order: jax flattens the params dict by sorted key
+    # order.  The Rust loader replays the same flattening (manifest stores
+    # the *sorted* traversal order explicitly as `hlo_param_order`).
+    sorted_names = sorted(p[0] for p in model_mod.param_shapes(cfg))
+
+    # --- prefill ---
+    tok_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.prefill_len), jnp.int32)
+    lowered = jax.jit(
+        lambda p, t: model_mod.prefill(p, t, cfg)
+    ).lower(pspec, tok_spec)
+    path = os.path.join(out_dir, "tinylm_prefill.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"wrote {path}")
+
+    # --- decode step ---
+    bh = cfg.batch * cfg.n_heads
+    cache_spec = jax.ShapeDtypeStruct(
+        (cfg.n_layers, bh, cfg.max_len, cfg.head_dim), jnp.float32)
+    tok1 = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+    pos1 = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+    lowered = jax.jit(
+        lambda p, t, s, kc, vc: model_mod.decode_step(p, t, s, kc, vc, cfg)
+    ).lower(pspec, tok1, pos1, cache_spec, cache_spec)
+    path = os.path.join(out_dir, "tinylm_decode.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"wrote {path}")
+
+    return {
+        "vocab": cfg.vocab, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads, "d_ff": cfg.d_ff, "max_len": cfg.max_len,
+        "batch": cfg.batch, "prefill_len": cfg.prefill_len,
+        "head_dim": cfg.head_dim, "seed": seed,
+        "params": [{"name": n, "shape": list(s)}
+                   for n, s in model_mod.param_shapes(cfg)],
+        "hlo_param_order": sorted_names,
+    }
+
+
+def export_selftest(out_dir: str, mcfg: ModelConfig, fcfg: ForecastConfig,
+                    seed: int) -> None:
+    """Golden outputs for the Rust PJRT round-trip test.
+
+    Runs the *jitted jax* versions of the exported graphs on fixed inputs
+    and records input + output samples; `rust/tests/pjrt_roundtrip.rs`
+    executes the HLO artifacts on the same inputs and asserts allclose.
+    """
+    rng = np.random.default_rng(12345)
+    params = model_mod.init_params(mcfg, seed=seed)
+
+    tokens = rng.integers(0, mcfg.vocab,
+                          size=(mcfg.batch, mcfg.prefill_len)).astype(np.int32)
+    logits, kc, vc = jax.jit(
+        lambda p, t: model_mod.prefill(p, t, mcfg))(params, jnp.asarray(tokens))
+    last = np.asarray(logits[:, -1, :])
+    nxt = np.argmax(last, axis=-1).astype(np.int32)
+    pos = np.full((mcfg.batch,), mcfg.prefill_len, np.int32)
+    dec_logits, _, _ = jax.jit(
+        lambda p, t, s, k, v: model_mod.decode_step(p, t, s, k, v, mcfg)
+    )(params, jnp.asarray(nxt), jnp.asarray(pos), kc, vc)
+
+    t_axis = np.arange(fcfg.history)
+    hist = np.stack([
+        100.0 * (s + 1) * (1.0 + 0.5 * np.sin(2 * np.pi * t_axis / fcfg.season + s))
+        for s in range(fcfg.n_series)
+    ]).astype(np.float32)
+    fc = fc_mod.forecast(jnp.asarray(hist), fcfg)
+
+    blob = {
+        "prefill_tokens": tokens.flatten().tolist(),
+        "prefill_last_logits_head": last[:, :8].flatten().tolist(),
+        "greedy_next": nxt.tolist(),
+        "decode_logits_head": np.asarray(dec_logits)[:, :8].flatten().tolist(),
+        "forecast_history": hist.flatten().tolist(),
+        "forecast_out": np.asarray(fc).flatten().tolist(),
+    }
+    path = os.path.join(out_dir, "selftest.json")
+    with open(path, "w") as f:
+        json.dump(blob, f)
+    print(f"wrote {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="legacy single-artifact path (ignored; kept for Make)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    mcfg, fcfg = ModelConfig(), ForecastConfig()
+    tinylm = export_tinylm(out_dir, mcfg, args.seed)
+    tinylm["shape_variants"] = export_tinylm_shape_variants(out_dir, mcfg)
+    manifest = {
+        "forecast": export_forecast(out_dir, fcfg),
+        "tinylm": tinylm,
+    }
+    export_selftest(out_dir, mcfg, fcfg, args.seed)
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

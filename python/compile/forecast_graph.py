@@ -1,0 +1,120 @@
+"""Layer-2 JAX forecast graph: SageServe's hourly Load Predictor.
+
+The paper forecasts next-hour input TPS per (model, region) with ARIMA
+(§6.3).  We implement the equivalent *seasonal AR* pipeline as a single
+AOT-compilable graph so the Rust Autoscaler calls one PJRT executable per
+decision epoch:
+
+  1. seasonal differencing  d[t] = y[t] - y[t-m]          (removes the
+     diurnal cycle; m = periods per day),
+  2. per-series AR(p) fit on d via conditioned least squares — the normal
+     equations are solved with a hand-rolled ridge-regularized Gauss-Jordan
+     (:func:`solve_spd`) because ``jnp.linalg.*`` lowers to LAPACK custom
+     calls the bare PJRT CPU client cannot resolve,
+  3. iterated H-step forecast of d via the Layer-1 Pallas kernel
+     (:func:`kernels.ar_forecast`),
+  4. seasonal re-integration  ŷ[T+h] = d̂[T+h] + y[T+h-m].
+
+Inputs/outputs are pure arrays: ``history [S, T] -> forecast [S, H]`` with
+S = n_models · n_regions series.  ``aot.py`` fixes (S, T, m, p, H) at
+lowering time; the Rust side supplies the trailing window each epoch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ar_forecast
+
+
+@dataclasses.dataclass(frozen=True)
+class ForecastConfig:
+    """Static shape/order parameters, fixed at AOT time."""
+
+    n_series: int = 15     # models x regions
+    history: int = 672     # T: trailing window length (7 days @ 15 min)
+    season: int = 96       # m: periods per day (15-min resolution)
+    order: int = 8         # p: AR order on the differenced series
+    horizon: int = 4       # H: steps ahead (next hour @ 15 min)
+    ridge: float = 1e-3    # Tikhonov weight in the normal equations
+
+
+def solve_spd(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Solve ``a @ x = b`` for a batch of small SPD systems.
+
+    Gauss-Jordan elimination without pivoting — valid because ``a`` is
+    ridge-regularized SPD.  ``a: [S, n, n]``, ``b: [S, n]`` with n small
+    (p+1); unrolled at trace time so the HLO is straight-line code.
+    """
+    s, n, _ = a.shape
+    aug = jnp.concatenate([a, b[:, :, None]], axis=2)  # [S, n, n+1]
+    for col in range(n):
+        pivot = aug[:, col, col][:, None]              # [S, 1]
+        row = aug[:, col, :] / pivot                   # [S, n+1]
+        aug = aug.at[:, col, :].set(row)
+        factors = aug[:, :, col]                       # [S, n]
+        factors = factors.at[:, col].set(0.0)          # skip the pivot row
+        aug = aug - factors[:, :, None] * row[:, None, :]
+    return aug[:, :, n]
+
+
+def fit_ar(diff: jnp.ndarray, order: int, ridge: float):
+    """Conditioned-least-squares AR(p) fit for a batch of series.
+
+    Args:
+      diff: ``[S, Td]`` differenced series (time ascending).
+      order: AR order p.
+      ridge: Tikhonov regularizer (also guards near-constant series).
+
+    Returns:
+      ``(coefs [S, p], intercept [S])`` with ``coefs[:, 0]`` on the newest
+      lag, matching the Layer-1 kernel convention.
+    """
+    s, td = diff.shape
+    rows = td - order
+    # Design matrix X[t, i] = d[t + order - 1 - i]  (lag i+1), target y[t] =
+    # d[t + order].  Built with static slices: stack p shifted views.
+    x = jnp.stack([diff[:, order - 1 - i:td - 1 - i] for i in range(order)],
+                  axis=2)                              # [S, rows, p]
+    y = diff[:, order:]                                # [S, rows]
+    ones = jnp.ones((s, rows, 1), diff.dtype)
+    xa = jnp.concatenate([x, ones], axis=2)            # [S, rows, p+1]
+    gram = jnp.einsum("sri,srj->sij", xa, xa)
+    gram = gram + ridge * jnp.eye(order + 1, dtype=diff.dtype)[None]
+    rhs = jnp.einsum("sri,sr->si", xa, y)
+    beta = solve_spd(gram, rhs)                        # [S, p+1]
+    return beta[:, :order], beta[:, order]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def forecast(history: jnp.ndarray, cfg: ForecastConfig) -> jnp.ndarray:
+    """End-to-end load forecast: ``[S, T] -> [S, H]`` (clamped at >= 0)."""
+    s, t = history.shape
+    assert s == cfg.n_series and t == cfg.history, (history.shape, cfg)
+    m, p, h = cfg.season, cfg.order, cfg.horizon
+    assert h <= m, "re-integration below assumes horizon within one season"
+
+    diff = history[:, m:] - history[:, :-m]            # [S, T-m]
+    coefs, icept = fit_ar(diff, p, cfg.ridge)
+    recent = diff[:, -p:]                              # newest last
+    dhat = ar_forecast(recent, coefs, icept, horizon=h)  # [S, H] (L1 kernel)
+    # ŷ[T+i] = d̂[T+i] + y[T+i-m] for i = 1..H  (H <= m ⇒ base is observed).
+    base = history[:, t - m:t - m + h]
+    return jnp.maximum(dhat + base, 0.0)
+
+
+def forecast_ref(history: jnp.ndarray, cfg: ForecastConfig) -> jnp.ndarray:
+    """Oracle: same pipeline with the pure-jnp AR recursion (no Pallas)."""
+    from .kernels.ref import ar_forecast_ref
+
+    m, p, h = cfg.season, cfg.order, cfg.horizon
+    t = history.shape[1]
+    diff = history[:, m:] - history[:, :-m]
+    coefs, icept = fit_ar(diff, p, cfg.ridge)
+    dhat = ar_forecast_ref(diff[:, -p:], coefs, icept, h)
+    base = history[:, t - m:t - m + h]
+    return jnp.maximum(dhat + base, 0.0)

@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for the SageServe reproduction.
+
+Two compute hot-spots live here:
+
+* :mod:`attention` — a tiled, online-softmax attention kernel (the TPU
+  rethink of GPU flash-attention) used by the Layer-2 transformer that the
+  Rust coordinator serves via PJRT.
+* :mod:`ar_forecast` — a batched seasonal-AR forecast recursion used by the
+  Layer-2 forecast graph that drives SageServe's predictive autoscaler.
+
+Both are authored with ``interpret=True`` so the lowered HLO runs on the CPU
+PJRT client (real-TPU lowering emits Mosaic custom-calls the CPU plugin
+cannot execute).  :mod:`ref` holds the pure-``jnp`` oracles that pytest
+checks the kernels against.
+"""
+
+from . import ref  # noqa: F401
+from .attention import mha_attention, mha_attention_decode  # noqa: F401
+from .ar_forecast import ar_forecast  # noqa: F401

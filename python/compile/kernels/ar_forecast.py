@@ -1,0 +1,105 @@
+"""Batched iterated AR(p) forecast as a Pallas kernel (Layer 1).
+
+SageServe's Load Predictor forecasts the next hour of input TPS for every
+(model, region) pair — S = l·r series — each hour.  The hot loop is an
+iterated AR recursion: every horizon step consumes the previous step's
+prediction, so the H steps are inherently sequential while the S series are
+embarrassingly parallel.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the *series*
+axis; each grid step holds a ``[block_s, p]`` tile of history and
+coefficients resident in VMEM and runs the whole H-step recursion in-kernel
+with a ``fori_loop``, writing the ``[block_s, H]`` forecast tile once.
+History is loaded from HBM exactly once and the recursion never round-trips
+through HBM — the entire working set is a few KiB of VMEM.  The lag shift
+is expressed as a roll + masked insert on the VPU (8×128 lanes), which
+vectorizes across the series tile.
+
+Executed with ``interpret=True`` for CPU-PJRT portability.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_S = 128
+
+
+def _ar_kernel(hist_ref, coef_ref, icept_ref, out_ref, *, horizon: int):
+    """One series-tile grid step: run the full H-step AR recursion.
+
+    hist_ref:  [block_s, p]  newest-last history tile
+    coef_ref:  [block_s, p]  coefs, coef[:, 0] multiplies the newest lag
+    icept_ref: [block_s, 1]  per-series intercept
+    out_ref:   [block_s, horizon]
+    """
+    block_s, p = hist_ref.shape
+    # lags[:, 0] = newest observation (reverse the newest-last layout).
+    lags = hist_ref[...][:, ::-1].astype(jnp.float32)
+    coefs = coef_ref[...].astype(jnp.float32)
+    icept = icept_ref[...][:, 0].astype(jnp.float32)
+
+    def step(h, carry):
+        lags = carry
+        nxt = icept + jnp.sum(coefs * lags, axis=1)
+        out_ref[:, h] = nxt.astype(out_ref.dtype)
+        # Shift the lag window: drop the oldest, insert the prediction at
+        # lane 0.  roll+where keeps this a pure VPU op (no gathers).
+        rolled = jnp.roll(lags, shift=1, axis=1)
+        lane = jax.lax.broadcasted_iota(jnp.int32, (block_s, p), 1)
+        return jnp.where(lane == 0, nxt[:, None], rolled)
+
+    jax.lax.fori_loop(0, horizon, step, lags)
+
+
+@functools.partial(jax.jit, static_argnames=("horizon", "block_s"))
+def ar_forecast(history: jnp.ndarray, coefs: jnp.ndarray,
+                intercept: jnp.ndarray, *, horizon: int,
+                block_s: int = DEFAULT_BLOCK_S) -> jnp.ndarray:
+    """Forecast ``horizon`` steps for a batch of AR(p) series.
+
+    Semantics match :func:`..kernels.ref.ar_forecast_ref` exactly.
+
+    Args:
+      history: ``[series, p]`` most-recent observations, newest last.
+      coefs: ``[series, p]`` AR coefficients, index 0 = newest lag.
+      intercept: ``[series]`` constants.
+      horizon: forecast steps H (static).
+      block_s: series-tile size (static); clamped and padded internally.
+
+    Returns:
+      ``[series, horizon]`` float32 forecasts.
+    """
+    series, p = history.shape
+    if coefs.shape != (series, p):
+        raise ValueError(f"coefs {coefs.shape} != history {history.shape}")
+    if intercept.shape != (series,):
+        raise ValueError(f"intercept {intercept.shape} != ({series},)")
+    bs = min(block_s, series)
+    # Pad the series axis up to a tile multiple; padded rows compute
+    # garbage that is sliced away below.
+    padded = (series + bs - 1) // bs * bs
+    if padded != series:
+        pad = padded - series
+        history = jnp.pad(history, ((0, pad), (0, 0)))
+        coefs = jnp.pad(coefs, ((0, pad), (0, 0)))
+        intercept = jnp.pad(intercept, ((0, pad),))
+
+    grid = (padded // bs,)
+    out = pl.pallas_call(
+        functools.partial(_ar_kernel, horizon=horizon),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, p), lambda i: (i, 0)),
+            pl.BlockSpec((bs, p), lambda i: (i, 0)),
+            pl.BlockSpec((bs, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, horizon), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, horizon), jnp.float32),
+        interpret=True,  # CPU-PJRT portability; see module docstring.
+    )(history, coefs, intercept[:, None])
+    return out[:series]

@@ -1,0 +1,248 @@
+"""Layer-2 JAX model: the byte-level transformer LM the Rust coordinator serves.
+
+This is the "small real model" of the end-to-end serving example
+(examples/serve_model.rs): a GPT-style decoder-only transformer over a
+byte vocabulary (256 symbols, tokenizer-free), whose attention runs through
+the Layer-1 Pallas kernels (:mod:`kernels.attention`).
+
+Two entry points are AOT-lowered to HLO text by :mod:`aot` and executed by
+the Rust PJRT runtime — Python never runs at serve time:
+
+* :func:`prefill` — process a padded prompt batch, return last-position
+  logits plus the populated KV cache buffers.
+* :func:`decode_step` — append one token per sequence, return next-token
+  logits and updated caches.
+
+Parameters are generated deterministically (:func:`init_params`), exported
+as a flat little-endian f32 blob + JSON manifest (see :mod:`aot`), and fed
+back in as runtime inputs by Rust in manifest order.  Weights as inputs
+(not HLO constants) keeps the HLO text small and lets the same HLO serve
+any checkpoint of the same shape.
+
+Shape conventions are fixed at lowering time (continuous batching on the
+Rust side maps requests onto batch lanes):
+  B   batch lanes            S   prefill prompt length
+  M   max sequence length (KV buffer)   L/H/D/F  layers/heads/model/ffn dims
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import mha_attention, mha_attention_decode
+from .kernels.ref import layernorm_ref as _layernorm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture hyper-parameters (fixed at AOT time)."""
+
+    vocab: int = 256          # byte-level vocabulary
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_ff: int = 1024
+    max_len: int = 256        # KV cache buffer length M
+    batch: int = 8            # serving batch lanes B
+    prefill_len: int = 128    # padded prompt length S
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# Parameter manifest order — Rust reads the blob in exactly this order.
+def param_shapes(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Names and shapes of every parameter, in flat manifest order."""
+    shapes: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_embed", (cfg.vocab, cfg.d_model)),
+        ("pos_embed", (cfg.max_len, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        shapes += [
+            (f"l{i}.ln1_g", (cfg.d_model,)),
+            (f"l{i}.ln1_b", (cfg.d_model,)),
+            (f"l{i}.wq", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wk", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wv", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wo", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.ln2_g", (cfg.d_model,)),
+            (f"l{i}.ln2_b", (cfg.d_model,)),
+            (f"l{i}.w1", (cfg.d_model, cfg.d_ff)),
+            (f"l{i}.b1", (cfg.d_ff,)),
+            (f"l{i}.w2", (cfg.d_ff, cfg.d_model)),
+            (f"l{i}.b2", (cfg.d_model,)),
+        ]
+    shapes += [
+        ("lnf_g", (cfg.d_model,)),
+        ("lnf_b", (cfg.d_model,)),
+        ("lm_head", (cfg.d_model, cfg.vocab)),
+    ]
+    return shapes
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Deterministic scaled-gaussian init (the 'checkpoint' we serve)."""
+    rng = np.random.default_rng(seed)
+    params: Dict[str, jnp.ndarray] = {}
+    for name, shape in param_shapes(cfg):
+        if name.endswith(("_g",)):
+            arr = np.ones(shape, np.float32)
+        elif name.endswith(("_b", ".b1", ".b2")):
+            arr = np.zeros(shape, np.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            arr = rng.normal(0.0, fan_in ** -0.5, size=shape).astype(np.float32)
+        params[name] = jnp.asarray(arr)
+    return params
+
+
+def params_spec(cfg: ModelConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for jit.lower — same pytree as init_params."""
+    return {name: jax.ShapeDtypeStruct(shape, jnp.float32)
+            for name, shape in param_shapes(cfg)}
+
+
+def _gelu(x: jnp.ndarray) -> jnp.ndarray:
+    # tanh-approx GELU: avoids erf, which keeps the lowered HLO free of
+    # custom calls the bare PJRT CPU client cannot resolve.
+    c = np.sqrt(2.0 / np.pi).astype(np.float32)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x ** 3)))
+
+
+def _split_heads(x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """[B, T, D] -> [B*H, T, dh] (batch folded into the kernel head axis)."""
+    b, t, _ = x.shape
+    x = x.reshape(b, t, cfg.n_heads, cfg.head_dim)
+    return x.transpose(0, 2, 1, 3).reshape(b * cfg.n_heads, t, cfg.head_dim)
+
+
+def _merge_heads(x: jnp.ndarray, cfg: ModelConfig, batch: int) -> jnp.ndarray:
+    """[B*H, T, dh] -> [B, T, D]."""
+    t = x.shape[1]
+    x = x.reshape(batch, cfg.n_heads, t, cfg.head_dim).transpose(0, 2, 1, 3)
+    return x.reshape(batch, t, cfg.d_model)
+
+
+def _block_prefill(params: Dict[str, Any], i: int, x: jnp.ndarray,
+                   cfg: ModelConfig):
+    """One transformer block over the full prompt; returns (x, k, v)."""
+    p = lambda s: params[f"l{i}.{s}"]  # noqa: E731
+    b = x.shape[0]
+    h = _layernorm(x, p("ln1_g"), p("ln1_b"))
+    q = _split_heads(h @ p("wq"), cfg)
+    k = _split_heads(h @ p("wk"), cfg)
+    v = _split_heads(h @ p("wv"), cfg)
+    att = mha_attention(q, k, v, causal=True)
+    x = x + _merge_heads(att, cfg, b) @ p("wo")
+    h = _layernorm(x, p("ln2_g"), p("ln2_b"))
+    x = x + _gelu(h @ p("w1") + p("b1")) @ p("w2") + p("b2")
+    return x, k, v
+
+
+def prefill(params: Dict[str, Any], tokens: jnp.ndarray, cfg: ModelConfig):
+    """Prompt processing.
+
+    Args:
+      params: parameter dict (see :func:`param_shapes`).
+      tokens: ``[B, S]`` int32 byte ids (right-padded; padding positions
+        produce cache entries that decode masks away via ``kv_len``).
+
+    Returns:
+      ``(logits, k_cache, v_cache)`` where ``logits`` is ``[B, S, vocab]``
+      (the Rust side picks the row at each prompt's true last position) and
+      the caches are ``[L, B*H, M, dh]`` with positions ``>= S`` zeroed.
+    """
+    b, s = tokens.shape
+    x = params["tok_embed"][tokens] + params["pos_embed"][None, :s, :]
+    ks, vs = [], []
+    for i in range(cfg.n_layers):
+        x, k, v = _block_prefill(params, i, x, cfg)
+        pad = cfg.max_len - s
+        ks.append(jnp.pad(k, ((0, 0), (0, pad), (0, 0))))
+        vs.append(jnp.pad(v, ((0, 0), (0, pad), (0, 0))))
+    x = _layernorm(x, params["lnf_g"], params["lnf_b"])
+    logits = x @ params["lm_head"]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def decode_step(params: Dict[str, Any], token: jnp.ndarray,
+                pos: jnp.ndarray, k_cache: jnp.ndarray,
+                v_cache: jnp.ndarray, cfg: ModelConfig):
+    """Append one token per lane and predict the next.
+
+    Args:
+      token: ``[B]`` int32 — the token at position ``pos`` of each lane.
+      pos: ``[B]`` int32 — where ``token`` goes in the cache (0-based).
+      k_cache, v_cache: ``[L, B*H, M, dh]`` buffers from prefill/previous
+        steps.
+
+    Returns:
+      ``(logits, k_cache, v_cache)`` — ``[B, vocab]`` next-token logits and
+      updated caches.
+    """
+    b = token.shape[0]
+    x = params["tok_embed"][token] + params["pos_embed"][pos]  # [B, D]
+    x = x[:, None, :]  # [B, 1, D]
+    # Per-(lane,head) valid length after inserting this token.
+    kv_len = jnp.repeat(pos + 1, cfg.n_heads)  # [B*H]
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        p = lambda s: params[f"l{i}.{s}"]  # noqa: E731
+        h = _layernorm(x, p("ln1_g"), p("ln1_b"))
+        q = _split_heads(h @ p("wq"), cfg)             # [B*H, 1, dh]
+        k_new = _split_heads(h @ p("wk"), cfg)
+        v_new = _split_heads(h @ p("wv"), cfg)
+        # Scatter this step's K/V rows into the cache at pos (per lane).
+        rows = jnp.repeat(pos, cfg.n_heads)            # [B*H]
+        k_i = _scatter_rows(k_cache[i], rows, k_new[:, 0, :])
+        v_i = _scatter_rows(v_cache[i], rows, v_new[:, 0, :])
+        new_k.append(k_i)
+        new_v.append(v_i)
+        att = mha_attention_decode(q, k_i, v_i, kv_len)
+        x = x + _merge_heads(att, cfg, b) @ p("wo")
+        h = _layernorm(x, p("ln2_g"), p("ln2_b"))
+        x = x + _gelu(h @ p("w1") + p("b1")) @ p("w2") + p("b2")
+    x = _layernorm(x, params["lnf_g"], params["lnf_b"])
+    logits = (x @ params["lm_head"])[:, 0, :]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def _scatter_rows(buf: jnp.ndarray, rows: jnp.ndarray,
+                  vals: jnp.ndarray) -> jnp.ndarray:
+    """Set ``buf[h, rows[h], :] = vals[h]`` for every head lane ``h``.
+
+    Expressed as a one-hot masked blend (no scatter op) so the lowered HLO
+    stays within the op set the bare PJRT CPU client executes fast.
+    """
+    n, m, _ = buf.shape
+    onehot = (jnp.arange(m)[None, :] == rows[:, None]).astype(buf.dtype)
+    return buf * (1.0 - onehot[:, :, None]) + onehot[:, :, None] * vals[:, None, :]
+
+
+def reference_logits(params: Dict[str, Any], tokens: jnp.ndarray,
+                     cfg: ModelConfig) -> jnp.ndarray:
+    """Oracle: full-sequence logits via plain jnp attention (no Pallas, no
+    cache) — used by pytest to validate prefill+decode consistency."""
+    from .kernels.ref import attention_ref
+
+    b, s = tokens.shape
+    x = params["tok_embed"][tokens] + params["pos_embed"][None, :s, :]
+    for i in range(cfg.n_layers):
+        p = lambda t: params[f"l{i}.{t}"]  # noqa: E731
+        h = _layernorm(x, p("ln1_g"), p("ln1_b"))
+        q = _split_heads(h @ p("wq"), cfg)
+        k = _split_heads(h @ p("wk"), cfg)
+        v = _split_heads(h @ p("wv"), cfg)
+        att = attention_ref(q, k, v, causal=True)
+        x = x + _merge_heads(att, cfg, b) @ p("wo")
+        h = _layernorm(x, p("ln2_g"), p("ln2_b"))
+        x = x + _gelu(h @ p("w1") + p("b1")) @ p("w2") + p("b2")
+    x = _layernorm(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["lm_head"]

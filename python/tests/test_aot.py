@@ -1,0 +1,80 @@
+"""AOT export path: HLO text generation sanity (fast — no full export).
+
+The full `make artifacts` round-trip (including numerics vs the Rust PJRT
+runtime) is covered by `sageserve selftest` / rust/tests/pjrt_roundtrip.rs;
+these tests pin the pieces that must hold for that bridge to exist at all.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile.forecast_graph import ForecastConfig, forecast
+
+
+TINY = M.ModelConfig(d_model=32, n_layers=1, n_heads=2, d_ff=64,
+                     max_len=16, batch=2, prefill_len=8)
+
+
+def test_to_hlo_text_produces_parseable_module():
+    lowered = jax.jit(lambda x: (x @ x + 1.0,)).lower(
+        jax.ShapeDtypeStruct((4, 4), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:60]
+    assert "ENTRY" in text
+    # return_tuple=True: root computation returns a tuple type.
+    assert "(f32[4,4]" in text
+
+
+def test_hlo_text_has_no_custom_calls():
+    """The bare PJRT CPU client cannot resolve jaxlib custom calls; the
+    exported graphs must avoid them (that's why solve_spd and tanh-GELU
+    exist)."""
+    params = M.params_spec(TINY)
+    toks = jax.ShapeDtypeStruct((TINY.batch, TINY.prefill_len), jnp.int32)
+    lowered = jax.jit(lambda p, t: M.prefill(p, t, TINY)).lower(params, toks)
+    text = aot.to_hlo_text(lowered)
+    assert "custom-call" not in text, "prefill HLO contains custom calls"
+
+    fcfg = ForecastConfig(n_series=2, history=200, season=96, order=4, horizon=4)
+    hist = jax.ShapeDtypeStruct((2, 200), jnp.float32)
+    lowered = jax.jit(lambda h: (forecast(h, fcfg),)).lower(hist)
+    text = aot.to_hlo_text(lowered)
+    assert "custom-call" not in text, "forecast HLO contains custom calls"
+
+
+def test_param_manifest_matches_flattened_params():
+    """Weights blob order (param_shapes) and HLO argument order (sorted
+    names) must both be derivable from the manifest — the Rust loader
+    depends on it."""
+    names = [n for n, _ in M.param_shapes(TINY)]
+    assert len(names) == len(set(names)), "duplicate param names"
+    params = M.init_params(TINY, seed=0)
+    assert set(params.keys()) == set(names)
+    # jax flattens dicts in sorted-key order; that's what aot.py records.
+    leaves, _ = jax.tree_util.tree_flatten(params)
+    by_sorted = [np.asarray(params[k]) for k in sorted(names)]
+    assert len(leaves) == len(by_sorted)
+    for a, b in zip(leaves, by_sorted):
+        np.testing.assert_array_equal(np.asarray(a), b)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_weights_blob_roundtrip(tmp_path, seed):
+    cfg = TINY
+    params = M.init_params(cfg, seed=seed)
+    blob = tmp_path / "params.bin"
+    with open(blob, "wb") as f:
+        for name, _ in M.param_shapes(cfg):
+            np.asarray(params[name], dtype="<f4").tofile(f)
+    raw = np.fromfile(blob, dtype="<f4")
+    offset = 0
+    for name, shape in M.param_shapes(cfg):
+        n = int(np.prod(shape))
+        got = raw[offset:offset + n].reshape(shape)
+        np.testing.assert_array_equal(got, np.asarray(params[name]))
+        offset += n
+    assert offset == raw.size

@@ -1,0 +1,104 @@
+"""Layer-2 forecast graph: SPD solver, AR fit, end-to-end forecast quality."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import forecast_graph as F
+
+RNG = np.random.default_rng(99)
+
+
+class TestSolveSpd:
+    def test_matches_numpy(self):
+        n, s = 9, 5
+        a = RNG.normal(size=(s, n, n)).astype(np.float32)
+        a = a @ a.transpose(0, 2, 1) + 0.5 * np.eye(n, dtype=np.float32)
+        b = RNG.normal(size=(s, n)).astype(np.float32)
+        x = F.solve_spd(jnp.asarray(a), jnp.asarray(b))
+        expect = np.stack([np.linalg.solve(a[i], b[i]) for i in range(s)])
+        np.testing.assert_allclose(x, expect, atol=1e-3, rtol=1e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(1, 10), s=st.integers(1, 8),
+           seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_spd(self, n, s, seed):
+        rng = np.random.default_rng(seed)
+        a = rng.normal(size=(s, n, n)).astype(np.float32)
+        a = a @ a.transpose(0, 2, 1) + np.eye(n, dtype=np.float32)
+        b = rng.normal(size=(s, n)).astype(np.float32)
+        x = np.asarray(F.solve_spd(jnp.asarray(a), jnp.asarray(b)))
+        residual = np.einsum("sij,sj->si", a, x) - b
+        assert np.abs(residual).max() < 1e-2
+
+
+class TestFitAr:
+    def test_recovers_known_ar2(self):
+        """Fit on a synthetic AR(2) series; coefficients must be recovered."""
+        a1, a2, c = 0.6, -0.3, 1.5
+        t = 800
+        y = np.zeros(t, np.float64)
+        noise = RNG.normal(0, 0.05, t)
+        for i in range(2, t):
+            y[i] = c + a1 * y[i - 1] + a2 * y[i - 2] + noise[i]
+        diff = jnp.asarray(y[None, :], jnp.float32)
+        coefs, icept = F.fit_ar(diff, order=2, ridge=1e-4)
+        assert abs(float(coefs[0, 0]) - a1) < 0.05   # newest lag
+        assert abs(float(coefs[0, 1]) - a2) < 0.05
+        assert abs(float(icept[0]) - c) < 0.2
+
+    def test_constant_series_stable(self):
+        """Ridge keeps the normal equations solvable for constant series."""
+        diff = jnp.ones((3, 100), jnp.float32) * 5.0
+        coefs, icept = F.fit_ar(diff, order=4, ridge=1e-3)
+        assert bool(jnp.isfinite(coefs).all()) and bool(jnp.isfinite(icept).all())
+        # One-step prediction should still be ~5.
+        pred = icept + jnp.sum(coefs * 5.0, axis=1)
+        np.testing.assert_allclose(pred, 5.0, atol=0.2)
+
+
+class TestForecast:
+    CFG = F.ForecastConfig(n_series=4, history=672, season=96, order=8,
+                           horizon=4)
+
+    def _diurnal(self, n, extra=0):
+        t = np.arange(self.CFG.history + extra)
+        out = []
+        for s in range(n):
+            y = 50 * (s + 1) * (1 + 0.6 * np.sin(2 * np.pi * t / 96 + s))
+            out.append(y + RNG.normal(0, 2, t.shape))
+        return np.stack(out).astype(np.float32)
+
+    def test_kernel_path_matches_ref(self):
+        hist = jnp.asarray(self._diurnal(4))
+        out = F.forecast(hist, self.CFG)
+        ref = F.forecast_ref(hist, self.CFG)
+        np.testing.assert_allclose(out, ref, atol=1e-2, rtol=1e-3)
+
+    def test_diurnal_accuracy(self):
+        """MAPE < 10% on clean diurnal traffic (paper: ARIMA is 'accurate
+        enough to forecast the diurnal load')."""
+        ys = self._diurnal(4, extra=self.CFG.horizon)
+        hist = jnp.asarray(ys[:, :self.CFG.history])
+        fc = np.asarray(F.forecast(hist, self.CFG))
+        true = ys[:, self.CFG.history:]
+        mape = np.abs((fc - true) / np.maximum(true, 1.0)).mean()
+        assert mape < 0.10, mape
+
+    def test_non_negative(self):
+        """TPS forecasts are clamped at zero even for crashing series."""
+        t = np.arange(self.CFG.history)
+        y = np.maximum(1000.0 - 2.0 * t, 0.0)
+        hist = jnp.asarray(np.tile(y, (4, 1)), jnp.float32)
+        fc = F.forecast(hist, self.CFG)
+        assert float(fc.min()) >= 0.0
+
+    def test_shape_contract(self):
+        hist = jnp.asarray(self._diurnal(4))
+        fc = F.forecast(hist, self.CFG)
+        assert fc.shape == (4, self.CFG.horizon)
+
+    def test_wrong_shape_raises(self):
+        with pytest.raises(AssertionError):
+            F.forecast(jnp.zeros((3, 100), jnp.float32), self.CFG)

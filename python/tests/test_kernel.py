@@ -1,0 +1,235 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This file is the CORE correctness signal for the compute layer.  Fixed-case
+tests pin down the exact serving shapes; hypothesis sweeps shapes, dtypes
+and block sizes.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mha_attention, mha_attention_decode, ar_forecast
+from compile.kernels.ref import (
+    attention_ref,
+    attention_decode_ref,
+    ar_forecast_ref,
+)
+
+RNG = np.random.default_rng(1234)
+
+
+def _randn(*shape, scale=1.0, dtype=np.float32):
+    return jnp.asarray(RNG.normal(0, scale, size=shape).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# prefill attention kernel
+# ---------------------------------------------------------------------------
+
+class TestAttentionPrefill:
+    def test_serving_shape(self):
+        """The exact (heads, seq, dim) used by the AOT'd prefill graph."""
+        q, k, v = (_randn(64, 128, 32) for _ in range(3))
+        out = mha_attention(q, k, v, causal=True)
+        ref = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_non_causal(self):
+        q, k, v = (_randn(4, 64, 64) for _ in range(3))
+        out = mha_attention(q, k, v, causal=False)
+        ref = attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_multiple_q_blocks(self):
+        """seq_q spanning several q tiles exercises the grid index math."""
+        q, k, v = (_randn(2, 256, 32) for _ in range(3))
+        out = mha_attention(q, k, v, causal=True, block_q=64, block_k=64)
+        ref = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_rect_kv_longer_than_q(self):
+        """seq_k > seq_q aligns the causal diagonal to the key end."""
+        q = _randn(2, 64, 32)
+        k, v = _randn(2, 128, 32), _randn(2, 128, 32)
+        out = mha_attention(q, k, v, causal=True, block_q=64, block_k=64)
+        ref = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_single_query_row(self):
+        q = _randn(8, 1, 64)
+        k, v = _randn(8, 128, 64), _randn(8, 128, 64)
+        out = mha_attention(q, k, v, causal=True)
+        ref = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_large_logits_stable(self):
+        """Online softmax must not overflow for large-magnitude logits."""
+        rng = np.random.default_rng(42)
+        q, k, v = (jnp.asarray(rng.normal(0, 30.0, (2, 64, 32)), jnp.float32)
+                   for _ in range(3))
+        out = mha_attention(q, k, v, causal=True)
+        assert bool(jnp.isfinite(out).all())
+        ref = attention_ref(q, k, v, causal=True)
+        # With |logits| ~ O(1e3) a one-ulp difference in the running max
+        # shifts exp() noticeably; 1e-3 relative is the honest bound here.
+        np.testing.assert_allclose(out, ref, atol=1e-3, rtol=1e-3)
+
+    def test_rejects_misaligned_blocks(self):
+        q, k, v = (_randn(2, 100, 32) for _ in range(3))
+        with pytest.raises(ValueError):
+            mha_attention(q, k, v, block_q=64, block_k=64)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        heads=st.integers(1, 4),
+        dim=st.sampled_from([16, 32, 64]),
+        q_blocks=st.integers(1, 3),
+        k_extra=st.integers(0, 2),
+        block=st.sampled_from([32, 64]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, heads, dim, q_blocks, k_extra, block,
+                               causal, seed):
+        rng = np.random.default_rng(seed)
+        seq_q = q_blocks * block
+        seq_k = seq_q + k_extra * block
+        q = jnp.asarray(rng.normal(size=(heads, seq_q, dim)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(heads, seq_k, dim)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(heads, seq_k, dim)), jnp.float32)
+        out = mha_attention(q, k, v, causal=causal, block_q=block, block_k=block)
+        ref = attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(out, ref, atol=5e-5, rtol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention kernel
+# ---------------------------------------------------------------------------
+
+class TestAttentionDecode:
+    def test_serving_shape(self):
+        """Exact decode shape from the AOT'd graph: B*H=64 lanes, M=256."""
+        q = _randn(64, 1, 32)
+        k, v = _randn(64, 256, 32), _randn(64, 256, 32)
+        lens = jnp.asarray(RNG.integers(1, 257, size=64), jnp.int32)
+        out = mha_attention_decode(q, k, v, lens)
+        ref = attention_decode_ref(q, k, v, lens)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_len_one(self):
+        """A sequence that has seen exactly one token attends only to it."""
+        q = _randn(4, 1, 16)
+        k, v = _randn(4, 64, 16), _randn(4, 64, 16)
+        lens = jnp.ones((4,), jnp.int32)
+        out = mha_attention_decode(q, k, v, lens)
+        np.testing.assert_allclose(out[:, 0, :], v[:, 0, :], atol=2e-5,
+                                   rtol=2e-5)
+
+    def test_full_buffer(self):
+        q = _randn(4, 1, 16)
+        k, v = _randn(4, 64, 16), _randn(4, 64, 16)
+        lens = jnp.full((4,), 64, jnp.int32)
+        out = mha_attention_decode(q, k, v, lens)
+        ref = attention_decode_ref(q, k, v, lens)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_garbage_beyond_len_ignored(self):
+        """Poison the invalid cache slots; output must not change."""
+        q = _randn(4, 1, 16)
+        k, v = _randn(4, 64, 16), _randn(4, 64, 16)
+        lens = jnp.full((4,), 10, jnp.int32)
+        base = mha_attention_decode(q, k, v, lens)
+        k2 = k.at[:, 10:, :].set(1e9)
+        v2 = v.at[:, 10:, :].set(-1e9)
+        poisoned = mha_attention_decode(q, k2, v2, lens)
+        np.testing.assert_allclose(base, poisoned, atol=2e-5, rtol=2e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        heads=st.integers(1, 8),
+        dim=st.sampled_from([16, 32]),
+        max_blocks=st.integers(1, 4),
+        block=st.sampled_from([32, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_lengths(self, heads, dim, max_blocks, block, seed):
+        rng = np.random.default_rng(seed)
+        max_len = max_blocks * block
+        q = jnp.asarray(rng.normal(size=(heads, 1, dim)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(heads, max_len, dim)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(heads, max_len, dim)), jnp.float32)
+        lens = jnp.asarray(rng.integers(1, max_len + 1, size=heads), jnp.int32)
+        out = mha_attention_decode(q, k, v, lens, block_k=block)
+        ref = attention_decode_ref(q, k, v, lens)
+        np.testing.assert_allclose(out, ref, atol=5e-5, rtol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# AR forecast kernel
+# ---------------------------------------------------------------------------
+
+class TestARForecast:
+    def test_serving_shape(self):
+        """The exact (series, order, horizon) used by the AOT'd graph."""
+        s, p, h = 15, 8, 4
+        hist = _randn(s, p, scale=10.0)
+        coef = _randn(s, p, scale=0.2)
+        icept = _randn(s)
+        out = ar_forecast(hist, coef, icept, horizon=h)
+        ref = ar_forecast_ref(hist, coef, icept, h)
+        np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+    def test_horizon_one_is_dot_product(self):
+        hist = _randn(3, 4)
+        coef = _randn(3, 4, scale=0.3)
+        icept = _randn(3)
+        out = ar_forecast(hist, coef, icept, horizon=1)
+        expect = icept + jnp.sum(coef * hist[:, ::-1], axis=1)
+        np.testing.assert_allclose(out[:, 0], expect, atol=1e-5, rtol=1e-5)
+
+    def test_ar1_closed_form(self):
+        """AR(1) with coefficient a: y[h] = a^h y0 + c (1-a^h)/(1-a)."""
+        a, c, y0 = 0.5, 2.0, 10.0
+        hist = jnp.asarray([[y0]], jnp.float32)
+        coef = jnp.asarray([[a]], jnp.float32)
+        icept = jnp.asarray([c], jnp.float32)
+        out = np.asarray(ar_forecast(hist, coef, icept, horizon=5))[0]
+        expect = [a ** h * y0 + c * (1 - a ** h) / (1 - a)
+                  for h in range(1, 6)]
+        np.testing.assert_allclose(out, expect, atol=1e-4, rtol=1e-4)
+
+    def test_series_padding(self):
+        """Series counts that do not divide block_s are padded internally."""
+        s, p, h = 7, 4, 3
+        hist, coef, icept = _randn(s, p), _randn(s, p, scale=0.2), _randn(s)
+        out = ar_forecast(hist, coef, icept, horizon=h, block_s=4)
+        ref = ar_forecast_ref(hist, coef, icept, h)
+        np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+    def test_shape_validation(self):
+        with pytest.raises(ValueError):
+            ar_forecast(_randn(3, 4), _randn(3, 5), _randn(3), horizon=2)
+        with pytest.raises(ValueError):
+            ar_forecast(_randn(3, 4), _randn(3, 4), _randn(4), horizon=2)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        series=st.integers(1, 40),
+        order=st.integers(1, 12),
+        horizon=st.integers(1, 16),
+        block=st.sampled_from([4, 8, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, series, order, horizon, block, seed):
+        rng = np.random.default_rng(seed)
+        hist = jnp.asarray(rng.normal(0, 10, (series, order)), jnp.float32)
+        # Keep the companion matrix stable so iterated forecasts don't blow
+        # past f32 range for large horizons.
+        coef = jnp.asarray(rng.normal(0, 0.9 / order, (series, order)),
+                           jnp.float32)
+        icept = jnp.asarray(rng.normal(0, 1, (series,)), jnp.float32)
+        out = ar_forecast(hist, coef, icept, horizon=horizon, block_s=block)
+        ref = ar_forecast_ref(hist, coef, icept, horizon)
+        np.testing.assert_allclose(out, ref, atol=1e-3, rtol=1e-3)

@@ -1,0 +1,72 @@
+//! Bench: the hourly forecast path — native seasonal-AR vs the
+//! AOT/PJRT-compiled Layer-2 graph (with the Layer-1 Pallas kernel), plus
+//! the full controller epoch (forecast + per-model ILP).
+//!
+//! Paper reference: ~0.7 s ARIMA + ~1.5 s ILP per hourly decision.
+
+use std::collections::BTreeMap;
+
+use sageserve::config::{GpuKind, ModelKind, Region, ScalingParams, Tier};
+use sageserve::coordinator::controller::{run_epoch, Telemetry};
+use sageserve::forecast::{Forecaster, NativeArForecaster, PjrtForecaster};
+use sageserve::perf::PerfTable;
+use sageserve::trace::generator::{TraceConfig, TraceGenerator};
+use sageserve::util::bench::bench;
+
+fn history(models: &[ModelKind]) -> Vec<Vec<f64>> {
+    let gen = TraceGenerator::new(TraceConfig { days: 7.0, scale: 0.2, ..Default::default() });
+    let mut out = Vec::new();
+    for &m in models {
+        for r in Region::ALL {
+            out.push(
+                (0..672)
+                    .map(|b| {
+                        let t = (b as f64 + 0.5) * 900.0;
+                        gen.rate(m, r, Tier::IwF, t)
+                            * TraceGenerator::mean_tokens_exact(m, Tier::IwF)
+                    })
+                    .collect(),
+            );
+        }
+    }
+    out
+}
+
+fn main() {
+    println!("forecast + controller epoch (12 series = 4 models x 3 regions)\n");
+    let models = ModelKind::EVAL4;
+    let hist = history(&models);
+
+    let mut native = NativeArForecaster::new(96, 8, 4);
+    bench("native seasonal-AR forecast (12 series)", 2_000, || native.forecast(&hist));
+
+    match PjrtForecaster::load("artifacts") {
+        Ok(mut pjrt) => {
+            bench("PJRT seasonal-AR forecast (AOT artifact)", 200, || pjrt.forecast(&hist));
+        }
+        Err(_) => println!("(skip PJRT forecast bench: run `make artifacts`)"),
+    }
+
+    // Full control epoch: forecast + 4 per-model capacity ILPs.
+    let mut telemetry = Telemetry::new(&models, 900.0);
+    let mut warm = BTreeMap::new();
+    let mut i = 0;
+    for &m in &models {
+        for r in Region::ALL {
+            warm.insert((m, r), hist[i].clone());
+            i += 1;
+        }
+    }
+    telemetry.warmup(&warm);
+    let perf = PerfTable::new(GpuKind::H100x8, &models);
+    let params = ScalingParams::default();
+    let counts: BTreeMap<(ModelKind, Region), usize> = models
+        .iter()
+        .flat_map(|&m| Region::ALL.into_iter().map(move |r| ((m, r), 6usize)))
+        .collect();
+    let mut fc = NativeArForecaster::new(96, 8, 4);
+    bench("full control epoch (forecast + 4 ILPs)", 500, || {
+        run_epoch(&telemetry, &mut fc, &perf, &params, &counts, 0.0).len()
+    });
+    println!("\npaper reference: ~0.7 s forecast + ~1.5 s ILP per hourly epoch");
+}

@@ -1,0 +1,49 @@
+//! Bench: the routing hot path — per-request region selection + JSQ
+//! instance pick + scheduler ordering.  L3 must never be the bottleneck
+//! (DESIGN.md §Perf target: « 1 µs per decision).
+
+use sageserve::config::{GpuKind, ModelKind, Region, RoutingParams, ScalingParams, Tier};
+use sageserve::coordinator::router::{route_instance, route_region};
+use sageserve::coordinator::scheduler::SchedPolicy;
+use sageserve::perf::PerfTable;
+use sageserve::sim::cluster::{Cluster, PoolTag};
+use sageserve::trace::generator::{TraceConfig, TraceGenerator};
+use sageserve::util::bench::bench;
+
+fn main() {
+    println!("router + scheduler hot path\n");
+    let models = ModelKind::EVAL4;
+    let cluster = Cluster::new(
+        &models,
+        PerfTable::new(GpuKind::H100x8, &models),
+        ScalingParams::default(),
+        &[(PoolTag::Unified, 20)],
+        40,
+    );
+    let routing = RoutingParams::default();
+
+    bench("route_region (3 regions, util scan)", 2_000_000, || {
+        route_region(&cluster, &routing, ModelKind::Llama2_70B, Region::CentralUs)
+    });
+
+    bench("route_instance (JSQ over 20 instances)", 2_000_000, || {
+        route_instance(&cluster, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF)
+    });
+
+    // Scheduler ordering on realistic queue depths.
+    let gen = TraceGenerator::new(TraceConfig { days: 0.01, scale: 0.05, ..Default::default() });
+    let queue: Vec<_> = gen.stream().take(64).collect();
+    for (name, policy) in [
+        ("fcfs", SchedPolicy::Fcfs),
+        ("edf", SchedPolicy::Edf),
+        ("pf", SchedPolicy::Pf),
+        ("dpa", SchedPolicy::dpa_default()),
+    ] {
+        let q = queue.clone();
+        bench(&format!("scheduler order {} (64-deep queue)", name), 500_000, move || {
+            let mut q2 = q.clone();
+            policy.order(&mut q2, 100.0);
+            q2.len()
+        });
+    }
+}

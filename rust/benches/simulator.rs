@@ -1,0 +1,35 @@
+//! Bench: end-to-end simulator throughput — simulated requests per
+//! wall-clock second across strategies (the number that bounds how big an
+//! experiment we can replay; the paper's full traces are 10M requests).
+
+use sageserve::sim::engine::{run_simulation, SimConfig, Strategy};
+use sageserve::trace::generator::{TraceConfig, TraceGenerator};
+use sageserve::util::bench::bench;
+
+fn main() {
+    println!("simulator end-to-end throughput (0.1 day, 4 models, 3 regions)\n");
+    for strategy in [Strategy::Reactive, Strategy::LtUa, Strategy::Chiron] {
+        let cfg = || SimConfig {
+            trace: TraceConfig { days: 0.1, scale: 0.05, ..Default::default() },
+            strategy,
+            ..Default::default()
+        };
+        let n_requests = TraceGenerator::new(cfg().trace.clone()).stream().count();
+        let result = bench(&format!("simulate {} ({n_requests} reqs)", strategy.name()), 10, || {
+            run_simulation(cfg()).metrics.outcomes.len()
+        });
+        let reqs_per_sec = n_requests as f64 / (result.mean_ns / 1e9);
+        println!("    → {:.2} M simulated requests / wall-second\n", reqs_per_sec / 1e6);
+    }
+
+    // Trace generation alone (the simulator's input pipeline).
+    let cfg = TraceConfig { days: 0.1, scale: 0.05, ..Default::default() };
+    let n = TraceGenerator::new(cfg.clone()).stream().count();
+    let r = bench(&format!("trace generation ({n} reqs)"), 10, || {
+        TraceGenerator::new(cfg.clone()).stream().count()
+    });
+    println!(
+        "    → {:.2} M generated requests / wall-second",
+        n as f64 / (r.mean_ns / 1e9) / 1e6
+    );
+}

@@ -1,0 +1,331 @@
+//! Core domain types and experiment configuration.
+//!
+//! Everything the paper parameterizes lives here: regions, model types, GPU
+//! SKUs, workload tiers and their SLAs, and the scaling/provisioning
+//! constants of §2.3/§4/§6 (thresholds, cooldowns, redeploy delays).
+
+use std::fmt;
+
+/// Simulated/real time, in seconds since experiment start.
+pub type Time = f64;
+
+pub const MINUTE: Time = 60.0;
+pub const HOUR: Time = 3600.0;
+pub const DAY: Time = 86_400.0;
+pub const WEEK: Time = 7.0 * DAY;
+
+/// US data-center regions used throughout the paper (§2.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Region {
+    EastUs,
+    CentralUs,
+    WestUs,
+}
+
+impl Region {
+    pub const ALL: [Region; 3] = [Region::EastUs, Region::CentralUs, Region::WestUs];
+
+    pub fn index(self) -> usize {
+        match self {
+            Region::EastUs => 0,
+            Region::CentralUs => 1,
+            Region::WestUs => 2,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Region {
+        Region::ALL[i]
+    }
+}
+
+impl fmt::Display for Region {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Region::EastUs => "eastus",
+            Region::CentralUs => "centralus",
+            Region::WestUs => "westus",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Open-source model types used in the evaluation (§7.1), plus the
+/// Llama-4-Scout MoE added in the scalability test (§7.2.5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ModelKind {
+    Bloom176B,
+    Llama2_70B,
+    Llama31_8B,
+    Llama32_3B,
+    Llama4Scout,
+    /// The ~3M-parameter byte-level transformer actually served end-to-end
+    /// through PJRT by `serve/` (examples/serve_model.rs).
+    TinyLm,
+}
+
+impl ModelKind {
+    /// The four standard evaluation models (§7.1).
+    pub const EVAL4: [ModelKind; 4] = [
+        ModelKind::Bloom176B,
+        ModelKind::Llama2_70B,
+        ModelKind::Llama31_8B,
+        ModelKind::Llama32_3B,
+    ];
+
+    /// EVAL4 plus the MoE model of the scalability test (§7.2.5).
+    pub const EVAL5: [ModelKind; 5] = [
+        ModelKind::Bloom176B,
+        ModelKind::Llama2_70B,
+        ModelKind::Llama31_8B,
+        ModelKind::Llama32_3B,
+        ModelKind::Llama4Scout,
+    ];
+
+    pub fn index(self) -> usize {
+        match self {
+            ModelKind::Bloom176B => 0,
+            ModelKind::Llama2_70B => 1,
+            ModelKind::Llama31_8B => 2,
+            ModelKind::Llama32_3B => 3,
+            ModelKind::Llama4Scout => 4,
+            ModelKind::TinyLm => 5,
+        }
+    }
+}
+
+impl fmt::Display for ModelKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            ModelKind::Bloom176B => "bloom-176b",
+            ModelKind::Llama2_70B => "llama2-70b",
+            ModelKind::Llama31_8B => "llama3.1-8b",
+            ModelKind::Llama32_3B => "llama3.2-3b",
+            ModelKind::Llama4Scout => "llama4-scout",
+            ModelKind::TinyLm => "tinylm",
+        };
+        f.write_str(s)
+    }
+}
+
+/// GPU SKUs (§2.1).  One *instance* is a whole 8-GPU VM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GpuKind {
+    H100x8,
+    A100x8,
+}
+
+impl GpuKind {
+    pub fn index(self) -> usize {
+        match self {
+            GpuKind::H100x8 => 0,
+            GpuKind::A100x8 => 1,
+        }
+    }
+
+    /// Total HBM per instance VM (GiB).
+    pub fn hbm_gib(self) -> f64 {
+        640.0 // 8 x 80 GB for both SKUs
+    }
+
+    /// On-demand $/hour for the 8-GPU VM (§7.2.1 quotes $98.32/h for H100).
+    pub fn dollars_per_hour(self) -> f64 {
+        match self {
+            GpuKind::H100x8 => 98.32,
+            GpuKind::A100x8 => 54.20,
+        }
+    }
+}
+
+impl fmt::Display for GpuKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            GpuKind::H100x8 => "8xH100",
+            GpuKind::A100x8 => "8xA100",
+        })
+    }
+}
+
+/// Workload tiers and their SLAs (§2.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Tier {
+    /// Interactive-fast: TTFT < 1 s @ p95.
+    IwF,
+    /// Interactive-normal: TTFT < 1 min @ p95.
+    IwN,
+    /// Non-interactive: 24 h completion deadline, queued by the Queue Manager.
+    Niw,
+}
+
+impl Tier {
+    pub const ALL: [Tier; 3] = [Tier::IwF, Tier::IwN, Tier::Niw];
+
+    pub fn index(self) -> usize {
+        match self {
+            Tier::IwF => 0,
+            Tier::IwN => 1,
+            Tier::Niw => 2,
+        }
+    }
+
+    pub fn is_interactive(self) -> bool {
+        !matches!(self, Tier::Niw)
+    }
+
+    /// TTFT SLA in seconds (IW tiers) — §2.2.
+    pub fn ttft_sla(self) -> Option<Time> {
+        match self {
+            Tier::IwF => Some(1.0),
+            Tier::IwN => Some(60.0),
+            Tier::Niw => None,
+        }
+    }
+
+    /// Completion deadline for NIW (§6.2).
+    pub fn deadline(self) -> Option<Time> {
+        match self {
+            Tier::Niw => Some(24.0 * HOUR),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Tier {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Tier::IwF => "IW-F",
+            Tier::IwN => "IW-N",
+            Tier::Niw => "NIW",
+        })
+    }
+}
+
+/// Trace epochs characterized in §3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Epoch {
+    /// November 2024: ~1/5 the Jul-2025 load, no IW-F/IW-N split.
+    Nov2024,
+    /// July 2025: 5x growth, three tiers.
+    Jul2025,
+}
+
+/// Provisioning and scaling constants (§2.3, §4, §6).
+#[derive(Debug, Clone)]
+pub struct ScalingParams {
+    /// Reclaim a spot instance already hosting the same model type.
+    pub spot_reclaim_secs: Time,
+    /// Redeploy weights available in the local region repository.
+    pub local_redeploy_secs: Time,
+    /// Pull weights from a remote region.
+    pub remote_redeploy_secs: Time,
+    /// Reactive scale-out threshold on effective memory utilization.
+    pub scale_out_util: f64,
+    /// Reactive scale-in threshold.
+    pub scale_in_util: f64,
+    /// Cooldown between reactive scaling events (§4: 15 s).
+    pub cooldown_secs: Time,
+    /// Minimum instances per (model, region) endpoint.
+    pub min_instances: usize,
+    /// Maximum instances per (model, region).
+    pub max_instances: usize,
+    /// NIW release threshold: below this util, release 1 queued request.
+    pub niw_release_util_1: f64,
+    /// Below this util, release 2 queued requests.
+    pub niw_release_util_2: f64,
+    /// NIW age (secs) past which priority is upgraded to 0 (§6.2: 10 h).
+    pub niw_aging_secs: Time,
+    /// Decision epoch of the forecast + ILP controller (§6.3: hourly).
+    pub control_interval: Time,
+    /// LT-UA: continue scaling out if observed TPS >= this multiple of the
+    /// forecast during the last 20 min of the hour (§6.4: 5x).
+    pub ua_over_factor: f64,
+    /// LT-UA: continue scaling in below this multiple (§6.4: 0.5x).
+    pub ua_under_factor: f64,
+    /// LT-UA: length of the end-of-hour correction window (20 min).
+    pub ua_window: Time,
+    /// Forecast headroom buffer beta = this fraction of last hour's NIW
+    /// load (§6.3: 10%).
+    pub niw_buffer_frac: f64,
+    /// Fraction of a model-region's peak that must be serveable locally
+    /// (§5's epsilon).
+    pub epsilon: f64,
+}
+
+impl Default for ScalingParams {
+    fn default() -> Self {
+        ScalingParams {
+            spot_reclaim_secs: 1.0 * MINUTE,
+            local_redeploy_secs: 10.0 * MINUTE,
+            remote_redeploy_secs: 2.0 * HOUR,
+            scale_out_util: 0.70,
+            scale_in_util: 0.30,
+            cooldown_secs: 15.0,
+            min_instances: 2,
+            max_instances: 20,
+            niw_release_util_1: 0.60,
+            niw_release_util_2: 0.50,
+            niw_aging_secs: 10.0 * HOUR,
+            control_interval: HOUR,
+            ua_over_factor: 5.0,
+            ua_under_factor: 0.5,
+            ua_window: 20.0 * MINUTE,
+            niw_buffer_frac: 0.10,
+            epsilon: 0.6,
+        }
+    }
+}
+
+/// Routing constants (§6.1).
+#[derive(Debug, Clone)]
+pub struct RoutingParams {
+    /// Route to the first preferred region whose effective memory
+    /// utilization is below this threshold (70% in production).
+    pub region_util_threshold: f64,
+    /// Mean inter-region network latency (§2.1: ~50 ms).
+    pub inter_region_latency: Time,
+}
+
+impl Default for RoutingParams {
+    fn default() -> Self {
+        RoutingParams { region_util_threshold: 0.70, inter_region_latency: 0.050 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn region_index_roundtrip() {
+        for r in Region::ALL {
+            assert_eq!(Region::from_index(r.index()), r);
+        }
+    }
+
+    #[test]
+    fn tier_slas_match_paper() {
+        assert_eq!(Tier::IwF.ttft_sla(), Some(1.0));
+        assert_eq!(Tier::IwN.ttft_sla(), Some(60.0));
+        assert_eq!(Tier::Niw.ttft_sla(), None);
+        assert_eq!(Tier::Niw.deadline(), Some(24.0 * 3600.0));
+    }
+
+    #[test]
+    fn default_scaling_params_match_paper() {
+        let p = ScalingParams::default();
+        assert_eq!(p.scale_out_util, 0.70);
+        assert_eq!(p.scale_in_util, 0.30);
+        assert_eq!(p.cooldown_secs, 15.0);
+        assert_eq!(p.local_redeploy_secs, 600.0);
+        assert_eq!(p.remote_redeploy_secs, 7200.0);
+        assert_eq!(p.ua_over_factor, 5.0);
+        assert_eq!(p.ua_under_factor, 0.5);
+    }
+
+    #[test]
+    fn display_names_stable() {
+        assert_eq!(ModelKind::Bloom176B.to_string(), "bloom-176b");
+        assert_eq!(Region::WestUs.to_string(), "westus");
+        assert_eq!(Tier::IwF.to_string(), "IW-F");
+        assert_eq!(GpuKind::H100x8.to_string(), "8xH100");
+    }
+}

@@ -1,0 +1,585 @@
+//! Auto-scaling strategies (§4, §6.4) plus the Chiron SOTA baseline [34].
+//!
+//! * **Siloed** — the legacy O365 deployment: separate IW (16) / NIW (4)
+//!   pools per (model, region), each reactively scaled on 70/30 effective
+//!   memory-utilization thresholds with a 15 s cooldown.
+//! * **Reactive** — the same thresholds over one *unified* pool (§4).
+//! * **LT-I** — apply the hourly forecast+ILP δ immediately (§6.4).
+//! * **LT-U** — arm the δ target, move toward it only when the 70/30
+//!   utilization thresholds are actually breached.
+//! * **LT-UA** — LT-U plus the ARIMA-gap override: in the last 20 min of
+//!   the hour, keep scaling past the target if observed TPS ≥ 5× forecast
+//!   (under-prediction) or below it if ≤ 0.5× (over-prediction).
+//! * **Chiron** — interactive/mixed/batch pools (10/5/5 init) scaled by
+//!   queue backpressure against Θ·SLA using offline profiles; no
+//!   memory-utilization consolidation (which is why it over-provisions —
+//!   §7.2.3).
+
+use std::collections::BTreeMap;
+
+use crate::config::{ModelKind, Region, ScalingParams, Tier, Time};
+use crate::metrics::Metrics;
+use crate::sim::cluster::{Cluster, PoolTag};
+use crate::sim::event::{Event, EventQueue};
+use crate::sim::instance::InstState;
+
+/// Scaling strategy selector (CLI-visible names).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    Siloed,
+    Reactive,
+    LtI,
+    LtU,
+    LtUa,
+    Chiron,
+}
+
+impl Strategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::Siloed => "siloed",
+            Strategy::Reactive => "reactive",
+            Strategy::LtI => "lt-i",
+            Strategy::LtU => "lt-u",
+            Strategy::LtUa => "lt-ua",
+            Strategy::Chiron => "chiron",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Strategy> {
+        Some(match s {
+            "siloed" => Strategy::Siloed,
+            "reactive" => Strategy::Reactive,
+            "lt-i" | "lti" => Strategy::LtI,
+            "lt-u" | "ltu" => Strategy::LtU,
+            "lt-ua" | "ltua" => Strategy::LtUa,
+            "chiron" => Strategy::Chiron,
+            _ => return None,
+        })
+    }
+
+    /// Does this strategy use the NIW Queue Manager (unified pool)?
+    pub fn uses_queue_manager(self) -> bool {
+        !matches!(self, Strategy::Siloed | Strategy::Chiron)
+    }
+
+    /// Does this strategy run the hourly forecast + ILP epoch?
+    pub fn uses_forecast(self) -> bool {
+        matches!(self, Strategy::LtI | Strategy::LtU | Strategy::LtUa)
+    }
+
+    /// Initial pool layout per (model, region), given the total instance
+    /// budget per endpoint (§4: Siloed 16/4 of 20; §7.1: Chiron 10/5/5).
+    pub fn initial_pools(self, total: usize) -> Vec<(PoolTag, usize)> {
+        match self {
+            Strategy::Siloed => {
+                let niw = (total / 5).max(1);
+                vec![(PoolTag::SiloIw, total - niw), (PoolTag::SiloNiw, niw)]
+            }
+            Strategy::Chiron => {
+                let batch = total / 4;
+                let mixed = total / 4;
+                vec![
+                    (PoolTag::ChironInteractive, total - batch - mixed),
+                    (PoolTag::ChironMixed, mixed),
+                    (PoolTag::ChironBatch, batch),
+                ]
+            }
+            _ => vec![(PoolTag::Unified, total)],
+        }
+    }
+}
+
+/// Borrowed simulation pieces the scaler operates on.
+pub struct ScaleCtx<'a> {
+    pub now: Time,
+    pub cluster: &'a mut Cluster,
+    pub metrics: &'a mut Metrics,
+    pub events: &'a mut EventQueue,
+    /// Requests displaced by immediate drains; the engine re-routes these
+    /// after the autoscaler call returns.
+    pub reroutes: Vec<crate::trace::types::Request>,
+}
+
+impl ScaleCtx<'_> {
+    /// Scale out one instance and schedule its ProvisionDone event.
+    fn scale_out(&mut self, model: ModelKind, region: Region, pool: PoolTag) -> bool {
+        let Some((id, ready)) = self.cluster.scale_out(model, region, pool, self.now, self.metrics)
+        else {
+            return false;
+        };
+        self.events.push(ready, Event::ProvisionDone { instance: id });
+        self.record_ledgers(model, region);
+        true
+    }
+
+    /// Begin draining one instance (it converts to spot when empty).
+    /// Idle instances (no running batch) convert immediately — otherwise
+    /// an idle endpoint would hold Draining instances forever, since only
+    /// chunk completions trigger `finish_drain`.
+    fn scale_in(&mut self, model: ModelKind, region: Region, pool: Option<PoolTag>) -> bool {
+        let Some(id) = self.cluster.scale_in(model, region, pool) else {
+            return false;
+        };
+        if self.cluster.instances[id].batch.is_empty() {
+            let stragglers = self.cluster.instances[id].take_waiting();
+            self.reroutes.extend(stragglers);
+            self.cluster.finish_drain(id);
+        }
+        self.record_ledgers(model, region);
+        true
+    }
+
+    pub fn record_ledgers(&mut self, model: ModelKind, region: Region) {
+        let allocated = self.cluster.allocated_count(model, region);
+        self.metrics
+            .instances
+            .entry((model, region))
+            .or_default()
+            .record(self.now, allocated);
+        let spot = self
+            .cluster
+            .spot_pool
+            .get(&region)
+            .map(|v| v.iter().filter(|&&i| self.cluster.instances[i].model == model).count())
+            .unwrap_or(0);
+        self.metrics
+            .spot_instances
+            .entry((model, region))
+            .or_default()
+            .record(self.now, spot);
+    }
+
+    fn cooldown_ok(&self, model: ModelKind, region: Region, params: &ScalingParams) -> bool {
+        let ep = &self.cluster.endpoints[&(model, region)];
+        self.now - ep.last_scale >= params.cooldown_secs || ep.last_scale == 0.0
+    }
+
+    fn touch_cooldown(&mut self, model: ModelKind, region: Region) {
+        self.cluster.endpoints.get_mut(&(model, region)).unwrap().last_scale = self.now;
+    }
+}
+
+/// Chiron per-pool scaling state.
+#[derive(Debug, Default)]
+struct ChironState {
+    /// Exponentially-smoothed interactive backpressure per (model, region).
+    pressure: BTreeMap<(ModelKind, Region), f64>,
+}
+
+/// The autoscaler: strategy + mutable state.
+pub struct Autoscaler {
+    pub strategy: Strategy,
+    pub params: ScalingParams,
+    /// Chiron's Θ (0.6 per §7.1).
+    pub chiron_theta: f64,
+    chiron: ChironState,
+}
+
+impl Autoscaler {
+    pub fn new(strategy: Strategy, params: ScalingParams) -> Self {
+        Autoscaler { strategy, params, chiron_theta: 0.6, chiron: ChironState::default() }
+    }
+
+    /// Per-request reactive check (§4: scaling decisions made per request,
+    /// 15 s cooldown).  Applies to Siloed and Reactive; LT-U/LT-UA use the
+    /// same thresholds but only toward their armed targets (on_tick).
+    pub fn on_request(&mut self, ctx: &mut ScaleCtx, model: ModelKind, region: Region, tier: Tier) {
+        match self.strategy {
+            Strategy::Reactive => {
+                self.reactive_check(ctx, model, region, PoolTag::Unified, None);
+            }
+            Strategy::Siloed => {
+                let pool = if tier.is_interactive() { PoolTag::SiloIw } else { PoolTag::SiloNiw };
+                self.reactive_check(ctx, model, region, pool, Some(pool));
+            }
+            _ => {}
+        }
+    }
+
+    fn pool_util(cluster: &Cluster, model: ModelKind, region: Region, pool: Option<PoolTag>) -> f64 {
+        let mut used = 0u64;
+        let mut cap = 0u64;
+        for &i in &cluster.endpoints[&(model, region)].instances {
+            let inst = &cluster.instances[i];
+            if inst.state == InstState::Active && pool.map_or(true, |p| inst.pool == p) {
+                used += inst.kv_used;
+                cap += inst.kv_capacity;
+            }
+        }
+        if cap == 0 {
+            1.0
+        } else {
+            used as f64 / cap as f64
+        }
+    }
+
+    fn reactive_check(
+        &mut self,
+        ctx: &mut ScaleCtx,
+        model: ModelKind,
+        region: Region,
+        out_pool: PoolTag,
+        filter: Option<PoolTag>,
+    ) {
+        if !ctx.cooldown_ok(model, region, &self.params) {
+            return;
+        }
+        let util = Self::pool_util(ctx.cluster, model, region, filter);
+        if util > self.params.scale_out_util {
+            if ctx.scale_out(model, region, out_pool) {
+                ctx.touch_cooldown(model, region);
+            }
+        } else if util < self.params.scale_in_util {
+            if ctx.scale_in(model, region, filter) {
+                ctx.touch_cooldown(model, region);
+            }
+        }
+    }
+
+    /// Hourly control epoch: arm or apply the ILP deltas (LT strategies).
+    /// `plans` carries (model, region, delta, forecast_peak_tps).
+    pub fn on_epoch(&mut self, ctx: &mut ScaleCtx, plans: &[(ModelKind, Region, i64, f64)]) {
+        if !self.strategy.uses_forecast() {
+            return;
+        }
+        for &(model, region, delta, forecast_tps) in plans {
+            let current = ctx.cluster.allocated_count(model, region) as i64;
+            let target = (current + delta).max(self.params.min_instances as i64) as usize;
+            {
+                let ep = ctx.cluster.endpoints.get_mut(&(model, region)).unwrap();
+                ep.target = Some(target);
+                ep.forecast_tps = forecast_tps;
+            }
+            if self.strategy == Strategy::LtI {
+                // Immediate: jump straight to the recommended count.
+                for _ in 0..delta.max(0) {
+                    if !ctx.scale_out(model, region, PoolTag::Unified) {
+                        break;
+                    }
+                }
+                for _ in 0..(-delta).max(0) {
+                    if !ctx.scale_in(model, region, None) {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Periodic tick: LT-U/LT-UA deferred progression, the LT-UA
+    /// forecast-gap override, and Chiron's backpressure loop.
+    /// `observed_tps`: current input TPS per (model, region);
+    /// `epoch_elapsed`: seconds into the current control hour.
+    pub fn on_tick(
+        &mut self,
+        ctx: &mut ScaleCtx,
+        observed_tps: &BTreeMap<(ModelKind, Region), f64>,
+        epoch_elapsed: Time,
+    ) {
+        match self.strategy {
+            Strategy::LtU | Strategy::LtUa => {
+                self.lt_tick(ctx, observed_tps, epoch_elapsed);
+            }
+            Strategy::Chiron => self.chiron_tick(ctx, observed_tps),
+            _ => {}
+        }
+    }
+
+    fn lt_tick(
+        &mut self,
+        ctx: &mut ScaleCtx,
+        observed_tps: &BTreeMap<(ModelKind, Region), f64>,
+        epoch_elapsed: Time,
+    ) {
+        let keys: Vec<(ModelKind, Region)> = ctx.cluster.endpoints.keys().copied().collect();
+        for (model, region) in keys {
+            let (target, forecast_tps) = {
+                let ep = &ctx.cluster.endpoints[&(model, region)];
+                match ep.target {
+                    Some(t) => (t, ep.forecast_tps),
+                    None => continue,
+                }
+            };
+            if !ctx.cooldown_ok(model, region, &self.params) {
+                continue;
+            }
+            let allocated = ctx.cluster.allocated_count(model, region);
+            let util = Self::pool_util(ctx.cluster, model, region, None);
+            // Deferred progression toward the armed target (LT-U core).
+            if allocated < target && util > self.params.scale_out_util {
+                if ctx.scale_out(model, region, PoolTag::Unified) {
+                    ctx.touch_cooldown(model, region);
+                }
+                continue;
+            }
+            if allocated > target && util < self.params.scale_in_util {
+                if ctx.scale_in(model, region, None) {
+                    ctx.touch_cooldown(model, region);
+                }
+                continue;
+            }
+            // LT-UA: forecast-gap override in the last 20 min of the hour.
+            if self.strategy == Strategy::LtUa
+                && epoch_elapsed >= self.params.control_interval - self.params.ua_window
+            {
+                let observed = observed_tps.get(&(model, region)).copied().unwrap_or(0.0);
+                if forecast_tps > 0.0 {
+                    let ratio = observed / forecast_tps;
+                    if ratio >= self.params.ua_over_factor && allocated >= target {
+                        if ctx.scale_out(model, region, PoolTag::Unified) {
+                            ctx.touch_cooldown(model, region);
+                        }
+                    } else if ratio <= self.params.ua_under_factor
+                        && allocated <= target
+                        && util < self.params.scale_in_util
+                    {
+                        if ctx.scale_in(model, region, None) {
+                            ctx.touch_cooldown(model, region);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Chiron: scale the interactive pool when estimated queueing delay
+    /// breaches Θ × TTFT-SLA (backpressure, from offline profiles); the
+    /// batch pool when NIW backlog threatens deadlines.  Consolidation is
+    /// conservative (that's the published behaviour we compare against).
+    fn chiron_tick(&mut self, ctx: &mut ScaleCtx, _observed: &BTreeMap<(ModelKind, Region), f64>) {
+        let keys: Vec<(ModelKind, Region)> = ctx.cluster.endpoints.keys().copied().collect();
+        for (model, region) in keys {
+            if !ctx.cooldown_ok(model, region, &self.params) {
+                continue;
+            }
+            let profile = ctx.cluster.perf.profile(model);
+            // Estimated interactive queue delay from offline profile:
+            // pending tokens / (instances × profile TPS).
+            let mut pending = 0u64;
+            let mut n_int = 0usize;
+            for &i in &ctx.cluster.endpoints[&(model, region)].instances {
+                let inst = &ctx.cluster.instances[i];
+                if inst.pool.serves_iw() && inst.state == InstState::Active {
+                    pending += inst.pending_tokens();
+                    n_int += 1;
+                }
+            }
+            let capacity_tps = (n_int.max(1) as f64) * profile.prompt_tps;
+            let est_delay = pending as f64 / capacity_tps;
+            let key = (model, region);
+            let smoothed = {
+                let p = self.chiron.pressure.entry(key).or_insert(0.0);
+                *p = 0.7 * *p + 0.3 * est_delay;
+                *p
+            };
+            // Strictest IW SLA = 1 s (IW-F); Θ = 0.6.
+            let sla_budget = self.chiron_theta * 1.0;
+            if smoothed > sla_budget {
+                if ctx.scale_out(model, region, PoolTag::ChironInteractive) {
+                    ctx.touch_cooldown(model, region);
+                }
+            } else if smoothed < 0.05 * sla_budget {
+                // Conservative scale-in: only at very low pressure AND low
+                // utilization, and never below the initial interactive size.
+                let util = Self::pool_util(ctx.cluster, model, region,
+                                           Some(PoolTag::ChironInteractive));
+                if util < 0.15 && n_int > 10 {
+                    if ctx.scale_in(model, region, Some(PoolTag::ChironInteractive)) {
+                        ctx.touch_cooldown(model, region);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuKind;
+    use crate::perf::PerfTable;
+
+    fn setup(strategy: Strategy, per_endpoint: usize) -> (Cluster, Metrics, EventQueue, Autoscaler) {
+        let params = ScalingParams::default();
+        let pools = strategy.initial_pools(per_endpoint);
+        let cluster = Cluster::new(
+            &[ModelKind::Llama2_70B],
+            PerfTable::new(GpuKind::A100x8, &[ModelKind::Llama2_70B]),
+            params.clone(),
+            &pools,
+            20,
+        );
+        (cluster, Metrics::default(), EventQueue::new(), Autoscaler::new(strategy, params))
+    }
+
+    fn load_instances(cluster: &mut Cluster, frac: f64) {
+        for inst in &mut cluster.instances {
+            inst.kv_used = (inst.kv_capacity as f64 * frac) as u64;
+        }
+    }
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in [Strategy::Siloed, Strategy::Reactive, Strategy::LtI, Strategy::LtU,
+                  Strategy::LtUa, Strategy::Chiron] {
+            assert_eq!(Strategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(Strategy::parse("nope"), None);
+    }
+
+    #[test]
+    fn initial_pools_match_paper() {
+        let siloed = Strategy::Siloed.initial_pools(20);
+        assert_eq!(siloed, vec![(PoolTag::SiloIw, 16), (PoolTag::SiloNiw, 4)]);
+        let chiron = Strategy::Chiron.initial_pools(20);
+        assert_eq!(
+            chiron,
+            vec![(PoolTag::ChironInteractive, 10), (PoolTag::ChironMixed, 5), (PoolTag::ChironBatch, 5)]
+        );
+        assert_eq!(Strategy::LtUa.initial_pools(20), vec![(PoolTag::Unified, 20)]);
+    }
+
+    #[test]
+    fn reactive_scales_out_above_threshold() {
+        let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::Reactive, 4);
+        load_instances(&mut cluster, 0.9);
+        let before = cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs);
+        let mut ctx = ScaleCtx { now: 100.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        scaler.on_request(&mut ctx, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF);
+        assert_eq!(cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs), before + 1);
+        assert_eq!(events.len(), 1); // ProvisionDone scheduled
+    }
+
+    #[test]
+    fn reactive_scales_in_below_threshold() {
+        let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::Reactive, 4);
+        load_instances(&mut cluster, 0.05);
+        let mut ctx = ScaleCtx { now: 100.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        scaler.on_request(&mut ctx, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF);
+        // The instance was idle, so it converted to spot immediately.
+        assert_eq!(cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs), 3);
+        assert_eq!(cluster.spot_count(Region::EastUs), 1);
+    }
+
+    #[test]
+    fn cooldown_blocks_rapid_scaling() {
+        let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::Reactive, 4);
+        load_instances(&mut cluster, 0.9);
+        let mut ctx = ScaleCtx { now: 100.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        scaler.on_request(&mut ctx, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF);
+        let mut ctx = ScaleCtx { now: 105.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        scaler.on_request(&mut ctx, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF);
+        // Second call inside the 15 s cooldown: no extra instance.
+        assert_eq!(events.len(), 1);
+    }
+
+    #[test]
+    fn siloed_scales_only_the_signalling_pool() {
+        let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::Siloed, 15);
+        // Saturate only the NIW silo.
+        for inst in &mut cluster.instances {
+            if inst.pool == PoolTag::SiloNiw {
+                inst.kv_used = (inst.kv_capacity as f64 * 0.95) as u64;
+            }
+        }
+        let mut ctx = ScaleCtx { now: 50.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        scaler.on_request(&mut ctx, ModelKind::Llama2_70B, Region::EastUs, Tier::Niw);
+        // But an IW request must not trigger anything (IW pool is idle).
+        let mut ctx = ScaleCtx { now: 200.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        scaler.on_request(&mut ctx, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF);
+        // one scale_out from NIW, and the idle IW pool triggers scale_in
+        let niw_pool: Vec<_> = cluster.endpoints[&(ModelKind::Llama2_70B, Region::EastUs)]
+            .instances
+            .iter()
+            .filter(|&&i| cluster.instances[i].pool == PoolTag::SiloNiw)
+            .collect();
+        assert_eq!(niw_pool.len(), 4); // 3 + 1 scaled out (15 → 12/3 split)
+    }
+
+    #[test]
+    fn lt_i_applies_delta_immediately() {
+        let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::LtI, 4);
+        let mut ctx = ScaleCtx { now: 3600.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        scaler.on_epoch(&mut ctx, &[(ModelKind::Llama2_70B, Region::EastUs, 3, 1000.0)]);
+        assert_eq!(cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs), 7);
+    }
+
+    #[test]
+    fn lt_u_defers_until_util_breach() {
+        let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::LtU, 4);
+        let mut ctx = ScaleCtx { now: 3600.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        scaler.on_epoch(&mut ctx, &[(ModelKind::Llama2_70B, Region::EastUs, 3, 1000.0)]);
+        // Target armed but nothing applied yet.
+        assert_eq!(cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs), 4);
+        // Low util tick: still nothing.
+        let obs = BTreeMap::new();
+        let mut ctx = ScaleCtx { now: 3700.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        scaler.on_tick(&mut ctx, &obs, 100.0);
+        assert_eq!(cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs), 4);
+        // Util breach: one step toward the target per tick+cooldown.
+        load_instances(&mut cluster, 0.9);
+        let mut ctx = ScaleCtx { now: 3800.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        scaler.on_tick(&mut ctx, &obs, 200.0);
+        assert_eq!(cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs), 5);
+    }
+
+    #[test]
+    fn lt_ua_overrides_on_forecast_gap() {
+        let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::LtUa, 4);
+        let mut ctx = ScaleCtx { now: 3600.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        scaler.on_epoch(&mut ctx, &[(ModelKind::Llama2_70B, Region::EastUs, 0, 100.0)]);
+        // Observed TPS 8× the forecast, inside the last-20-min window, at
+        // target count ⇒ scale out beyond the target.
+        let mut obs = BTreeMap::new();
+        obs.insert((ModelKind::Llama2_70B, Region::EastUs), 800.0);
+        let mut ctx = ScaleCtx { now: 7000.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        scaler.on_tick(&mut ctx, &obs, 3000.0); // elapsed 3000 ≥ 3600-1200
+        assert_eq!(cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs), 5);
+    }
+
+    #[test]
+    fn lt_u_does_not_override_on_gap() {
+        let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::LtU, 4);
+        let mut ctx = ScaleCtx { now: 3600.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        scaler.on_epoch(&mut ctx, &[(ModelKind::Llama2_70B, Region::EastUs, 0, 100.0)]);
+        let mut obs = BTreeMap::new();
+        obs.insert((ModelKind::Llama2_70B, Region::EastUs), 800.0);
+        let mut ctx = ScaleCtx { now: 7000.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        scaler.on_tick(&mut ctx, &obs, 3000.0);
+        assert_eq!(cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs), 4);
+    }
+
+    #[test]
+    fn chiron_scales_on_backpressure() {
+        let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::Chiron, 12);
+        // Pile pending tokens on interactive instances.
+        for inst in &mut cluster.instances {
+            if inst.pool == PoolTag::ChironInteractive {
+                inst.push_waiting(crate::trace::types::Request {
+                    id: 1,
+                    arrival: 0.0,
+                    model: ModelKind::Llama2_70B,
+                    origin: Region::EastUs,
+                    tier: Tier::IwF,
+                    app: crate::trace::types::AppKind::Chat,
+                    input_tokens: 4_000_000,
+                    output_tokens: 1000,
+                });
+            }
+        }
+        let obs = BTreeMap::new();
+        // Several ticks to build smoothed pressure past Θ.
+        for k in 0..5 {
+            let mut ctx = ScaleCtx {
+                now: 100.0 + 20.0 * k as f64,
+                cluster: &mut cluster,
+                metrics: &mut metrics,
+                events: &mut events,
+                reroutes: Vec::new(),
+            };
+            scaler.on_tick(&mut ctx, &obs, 0.0);
+        }
+        assert!(cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs) > 12);
+    }
+}

@@ -1,0 +1,288 @@
+//! The hourly forecast + optimization loop (§6.3), plus the telemetry
+//! store it reads from.
+//!
+//! Every control epoch: take the trailing 15-minute input-TPS history per
+//! (model, region), forecast the next hour with the [`Forecaster`]
+//! (PJRT-compiled seasonal-AR in production), add the β NIW-headroom
+//! buffer (10% of last hour's NIW load), and solve the §5 capacity ILP
+//! per model.  The resulting δ plans feed the Scaling Logic (§6.4).
+
+use std::collections::BTreeMap;
+
+use crate::config::{ModelKind, Region, ScalingParams, Time};
+use crate::forecast::Forecaster;
+use crate::opt::capacity::{optimize_capacity, CapacityInputs};
+use crate::perf::PerfTable;
+
+/// 15-minute-bucketed input-TPS telemetry per (model, region), split into
+/// IW (the forecast target) and NIW (the buffer input).
+pub struct Telemetry {
+    pub bucket_secs: Time,
+    keys: Vec<(ModelKind, Region)>,
+    iw_tokens: BTreeMap<(ModelKind, Region), Vec<f64>>,
+    niw_tokens: BTreeMap<(ModelKind, Region), Vec<f64>>,
+    /// History buckets prepended before t=0 (forecaster warm-up).
+    pub warmup_len: usize,
+}
+
+impl Telemetry {
+    pub fn new(models: &[ModelKind], bucket_secs: Time) -> Self {
+        let mut keys = Vec::new();
+        for &m in models {
+            for r in Region::ALL {
+                keys.push((m, r));
+            }
+        }
+        let zero: BTreeMap<_, _> = keys.iter().map(|&k| (k, Vec::new())).collect();
+        Telemetry {
+            bucket_secs,
+            keys,
+            iw_tokens: zero.clone(),
+            niw_tokens: zero,
+            warmup_len: 0,
+        }
+    }
+
+    /// Seed pre-trace history (expected TPS per bucket, newest last).
+    /// `warmup[k][b]` is TPS for key `k` at bucket `b` (oldest first).
+    pub fn warmup(&mut self, iw_tps: &BTreeMap<(ModelKind, Region), Vec<f64>>) {
+        let mut len = 0;
+        for (k, series) in iw_tps {
+            let tokens: Vec<f64> = series.iter().map(|tps| tps * self.bucket_secs).collect();
+            len = tokens.len();
+            self.iw_tokens.insert(*k, tokens.clone());
+            self.niw_tokens.insert(*k, vec![0.0; tokens.len()]);
+        }
+        self.warmup_len = len;
+    }
+
+    fn bucket_index(&self, now: Time) -> usize {
+        self.warmup_len + (now / self.bucket_secs) as usize
+    }
+
+    /// Record one request's input tokens at its arrival time.
+    pub fn record(&mut self, now: Time, model: ModelKind, region: Region, input_tokens: u32, interactive: bool) {
+        let idx = self.bucket_index(now);
+        let map = if interactive { &mut self.iw_tokens } else { &mut self.niw_tokens };
+        let v = map.entry((model, region)).or_default();
+        if v.len() <= idx {
+            v.resize(idx + 1, 0.0);
+        }
+        v[idx] += input_tokens as f64;
+    }
+
+    /// IW input-TPS history for one key, up to (excluding) bucket at `now`.
+    pub fn history_tps(&self, key: (ModelKind, Region), now: Time) -> Vec<f64> {
+        let end = self.bucket_index(now);
+        let v = self.iw_tokens.get(&key).map(|v| v.as_slice()).unwrap_or(&[]);
+        (0..end)
+            .map(|i| v.get(i).copied().unwrap_or(0.0) / self.bucket_secs)
+            .collect()
+    }
+
+    /// Observed IW input TPS over the most recent complete bucket.
+    pub fn recent_tps(&self, key: (ModelKind, Region), now: Time) -> f64 {
+        let idx = self.bucket_index(now);
+        let v = match self.iw_tokens.get(&key) {
+            Some(v) => v,
+            None => return 0.0,
+        };
+        // Use the previous full bucket; fall back to the live one.
+        let i = idx.saturating_sub(1);
+        v.get(i).copied().unwrap_or(0.0) / self.bucket_secs
+    }
+
+    /// Observed TPS for all keys (LT-UA's gap check).
+    pub fn recent_tps_all(&self, now: Time) -> BTreeMap<(ModelKind, Region), f64> {
+        self.keys.iter().map(|&k| (k, self.recent_tps(k, now))).collect()
+    }
+
+    /// NIW input tokens over the trailing hour (β buffer input).
+    pub fn niw_tokens_last_hour(&self, key: (ModelKind, Region), now: Time) -> f64 {
+        let end = self.bucket_index(now);
+        let per_hour = (3600.0 / self.bucket_secs) as usize;
+        let start = end.saturating_sub(per_hour);
+        let v = match self.niw_tokens.get(&key) {
+            Some(v) => v,
+            None => return 0.0,
+        };
+        (start..end).map(|i| v.get(i).copied().unwrap_or(0.0)).sum()
+    }
+
+    pub fn keys(&self) -> &[(ModelKind, Region)] {
+        &self.keys
+    }
+}
+
+/// One epoch's scaling plan entry: (model, region, δ, forecast peak TPS).
+pub type EpochPlan = Vec<(ModelKind, Region, i64, f64)>;
+
+/// Run one forecast + ILP epoch (§6.3).
+///
+/// `current_counts` are the allocated instance counts per (model, region);
+/// `theta` (per-instance input TPS) comes from the perf table.  Returns
+/// the δ plan plus diagnostics (forecast MAPE is tracked by the caller).
+pub fn run_epoch(
+    telemetry: &Telemetry,
+    forecaster: &mut dyn Forecaster,
+    perf: &PerfTable,
+    params: &ScalingParams,
+    current_counts: &BTreeMap<(ModelKind, Region), usize>,
+    now: Time,
+) -> EpochPlan {
+    let keys = telemetry.keys().to_vec();
+    let history: Vec<Vec<f64>> = keys.iter().map(|&k| telemetry.history_tps(k, now)).collect();
+    let forecasts = forecaster.forecast(&history);
+
+    // Group per model (the ILP decouples across models).
+    let mut plan = EpochPlan::new();
+    let models: Vec<ModelKind> = {
+        let mut ms: Vec<ModelKind> = keys.iter().map(|&(m, _)| m).collect();
+        ms.dedup();
+        ms.sort();
+        ms.dedup();
+        ms
+    };
+    for model in models {
+        let profile = perf.profile(model);
+        let mut current = Vec::new();
+        let mut forecast_tps = Vec::new();
+        let mut region_order = Vec::new();
+        for (i, &(m, r)) in keys.iter().enumerate() {
+            if m != model {
+                continue;
+            }
+            region_order.push(r);
+            current.push(vec![current_counts.get(&(m, r)).copied().unwrap_or(0) as f64]);
+            // β buffer: 10% of last hour's NIW load as TPS headroom (§6.3).
+            let beta = params.niw_buffer_frac * telemetry.niw_tokens_last_hour((m, r), now) / 3600.0;
+            forecast_tps.push(forecasts[i].iter().map(|&f| f + beta).collect::<Vec<f64>>());
+        }
+        let inputs = CapacityInputs {
+            current,
+            tps_per_instance: vec![profile.input_tps_capacity()],
+            forecast_tps: forecast_tps.clone(),
+            vm_cost: vec![perf.gpu.dollars_per_hour()],
+            start_cost: vec![perf.gpu.dollars_per_hour()
+                * (params.local_redeploy_secs / 3600.0)],
+            epsilon: params.epsilon,
+            min_instances: params.min_instances as f64,
+            max_instances: params.max_instances as f64,
+        };
+        match optimize_capacity(&inputs) {
+            Some(cap_plan) => {
+                for (j, &r) in region_order.iter().enumerate() {
+                    let peak = forecast_tps[j].iter().copied().fold(0.0, f64::max);
+                    plan.push((model, r, cap_plan.deltas[j][0], peak));
+                }
+            }
+            None => {
+                // Demand beyond max capacity: clamp every region to max.
+                for (j, &r) in region_order.iter().enumerate() {
+                    let cur = current_counts.get(&(model, r)).copied().unwrap_or(0) as i64;
+                    let peak = forecast_tps[j].iter().copied().fold(0.0, f64::max);
+                    plan.push((model, r, params.max_instances as i64 - cur, peak));
+                }
+            }
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuKind;
+    use crate::forecast::SeasonalNaive;
+
+    #[test]
+    fn telemetry_buckets_and_tps() {
+        let mut t = Telemetry::new(&[ModelKind::Llama2_70B], 900.0);
+        let key = (ModelKind::Llama2_70B, Region::EastUs);
+        t.record(10.0, key.0, key.1, 900, true);
+        t.record(20.0, key.0, key.1, 900, true);
+        t.record(901.0, key.0, key.1, 1800, true);
+        let hist = t.history_tps(key, 1800.0);
+        assert_eq!(hist.len(), 2);
+        assert!((hist[0] - 2.0).abs() < 1e-9);
+        assert!((hist[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warmup_prepends_history() {
+        let mut t = Telemetry::new(&[ModelKind::Llama2_70B], 900.0);
+        let key = (ModelKind::Llama2_70B, Region::EastUs);
+        let mut warm = BTreeMap::new();
+        warm.insert(key, vec![5.0; 96]);
+        t.warmup(&warm);
+        t.record(100.0, key.0, key.1, 4500, true);
+        let hist = t.history_tps(key, 900.0);
+        // 96 warm-up buckets plus the just-completed live bucket.
+        assert_eq!(hist.len(), 97);
+        assert!((hist[0] - 5.0).abs() < 1e-9);
+        assert!((hist[96] - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn niw_last_hour_window() {
+        let mut t = Telemetry::new(&[ModelKind::Llama2_70B], 900.0);
+        let key = (ModelKind::Llama2_70B, Region::EastUs);
+        t.record(100.0, key.0, key.1, 1000, false);   // bucket 0
+        t.record(4000.0, key.0, key.1, 2000, false);  // bucket 4
+        // At t=7200 (bucket 8), the last-hour window is buckets 4..8.
+        assert!((t.niw_tokens_last_hour(key, 7200.0) - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn epoch_plan_scales_for_forecast_load() {
+        let models = [ModelKind::Llama2_70B];
+        let mut telemetry = Telemetry::new(&models, 900.0);
+        // Steady 20k-TPS IW demand in East over 2 days of history
+        // (θ for Llama2-70B on H100 derives to ≈3.1k input TPS).
+        let key = (ModelKind::Llama2_70B, Region::EastUs);
+        let mut warm = BTreeMap::new();
+        for r in Region::ALL {
+            let tps = if r == Region::EastUs { 20_000.0 } else { 50.0 };
+            warm.insert((ModelKind::Llama2_70B, r), vec![tps; 192]);
+        }
+        telemetry.warmup(&warm);
+        let perf = PerfTable::new(GpuKind::H100x8, &models);
+        let params = ScalingParams::default();
+        let mut forecaster = SeasonalNaive::new(96, 4);
+        let mut counts = BTreeMap::new();
+        for r in Region::ALL {
+            counts.insert((ModelKind::Llama2_70B, r), 2usize);
+        }
+        let plan = run_epoch(&telemetry, &mut forecaster, &perf, &params, &counts, 0.0);
+        assert_eq!(plan.len(), 3);
+        // θ ≈ 3.1k ⇒ East local floor ceil(0.6·20000/θ) = 4 (delta ≥ 2
+        // over the current 2), global cover ≈ 7 instances.
+        let east = plan.iter().find(|p| p.1 == Region::EastUs).unwrap();
+        assert!(east.2 >= 2, "east delta {}", east.2);
+        let total: i64 = plan.iter().map(|p| p.2 + 2).sum();
+        assert!(total >= 7, "total {total}");
+        let _ = key;
+    }
+
+    #[test]
+    fn epoch_plan_scales_in_when_idle() {
+        let models = [ModelKind::Llama32_3B];
+        let mut telemetry = Telemetry::new(&models, 900.0);
+        let mut warm = BTreeMap::new();
+        for r in Region::ALL {
+            warm.insert((ModelKind::Llama32_3B, r), vec![10.0; 192]);
+        }
+        telemetry.warmup(&warm);
+        let perf = PerfTable::new(GpuKind::H100x8, &models);
+        let params = ScalingParams::default();
+        let mut forecaster = SeasonalNaive::new(96, 4);
+        let mut counts = BTreeMap::new();
+        for r in Region::ALL {
+            counts.insert((ModelKind::Llama32_3B, r), 20usize);
+        }
+        let plan = run_epoch(&telemetry, &mut forecaster, &perf, &params, &counts, 0.0);
+        for &(_, _, delta, _) in &plan {
+            assert_eq!(delta, -18, "idle endpoints drop to min_instances");
+        }
+    }
+}

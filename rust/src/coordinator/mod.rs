@@ -1,0 +1,20 @@
+//! Layer-3 coordination: SageServe's system contribution.
+//!
+//! * [`scheduler`] — instance-level request ordering: FCFS / EDF / PF /
+//!   DPA (§6.5).
+//! * [`router`] — global region routing and within-region JSQ instance
+//!   routing (§6.1).
+//! * [`queue_manager`] — asynchronous NIW admission with deadline aging
+//!   (§6.2).
+//! * [`autoscaler`] — Siloed and Unified-Reactive baselines, the LT-I /
+//!   LT-U / LT-UA predictive strategies (§6.4), and the Chiron SOTA
+//!   baseline [34].
+//! * [`controller`] — the hourly forecast + ILP loop (§6.3).
+
+pub mod autoscaler;
+pub mod controller;
+pub mod queue_manager;
+pub mod router;
+pub mod scheduler;
+
+pub use scheduler::SchedPolicy;

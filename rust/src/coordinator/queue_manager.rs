@@ -1,0 +1,189 @@
+//! The NIW Queue Manager (§6.2).
+//!
+//! NIW requests park here instead of hitting instances directly.  Each
+//! model endpoint signals its effective utilization; below 60% the manager
+//! releases one queued request to that (model, region), below 50% two.
+//! Requests aging past 10 h are upgraded to priority 0 and routed
+//! immediately like interactive traffic (deadline protection, 24 h SLA).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::config::{ModelKind, Region, ScalingParams, Time};
+use crate::trace::types::Request;
+
+/// Per-model NIW queues (region is chosen at release time).
+#[derive(Debug, Default)]
+pub struct QueueManager {
+    queues: BTreeMap<ModelKind, VecDeque<Request>>,
+    pub total_enqueued: u64,
+    pub total_released: u64,
+}
+
+impl QueueManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn enqueue(&mut self, req: Request) {
+        debug_assert!(!req.tier.is_interactive());
+        self.queues.entry(req.model).or_default().push_back(req);
+        self.total_enqueued += 1;
+    }
+
+    pub fn depth(&self, model: ModelKind) -> usize {
+        self.queues.get(&model).map(|q| q.len()).unwrap_or(0)
+    }
+
+    pub fn total_depth(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+
+    /// How many requests a utilization signal releases (§6.2 thresholds).
+    pub fn release_count(params: &ScalingParams, util: f64) -> usize {
+        if util < params.niw_release_util_2 {
+            2
+        } else if util < params.niw_release_util_1 {
+            1
+        } else {
+            0
+        }
+    }
+
+    /// Handle a capacity signal from a (model, region) endpoint: pop up to
+    /// `release_count(util)` requests for that model, destined for the
+    /// signalling region.
+    pub fn on_capacity_signal(
+        &mut self,
+        params: &ScalingParams,
+        model: ModelKind,
+        region: Region,
+        util: f64,
+    ) -> Vec<(Request, Region)> {
+        let n = Self::release_count(params, util);
+        let mut out = Vec::new();
+        if let Some(q) = self.queues.get_mut(&model) {
+            for _ in 0..n {
+                match q.pop_front() {
+                    Some(r) => out.push((r, region)),
+                    None => break,
+                }
+            }
+        }
+        self.total_released += out.len() as u64;
+        out
+    }
+
+    /// Aging scan (§6.2): requests older than the aging threshold are
+    /// upgraded to priority 0 and must be routed immediately (the caller
+    /// routes them like IW traffic).
+    pub fn pop_aged(&mut self, params: &ScalingParams, now: Time) -> Vec<Request> {
+        let mut out = Vec::new();
+        for q in self.queues.values_mut() {
+            while let Some(front) = q.front() {
+                if now - front.arrival > params.niw_aging_secs {
+                    out.push(q.pop_front().unwrap());
+                } else {
+                    break; // FIFO queues: the front is the oldest
+                }
+            }
+        }
+        self.total_released += out.len() as u64;
+        out
+    }
+
+    /// Drain everything (end-of-run flush so no request is lost).
+    pub fn drain_all(&mut self) -> Vec<Request> {
+        let mut out = Vec::new();
+        for q in self.queues.values_mut() {
+            out.extend(q.drain(..));
+        }
+        self.total_released += out.len() as u64;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Tier;
+    use crate::trace::types::AppKind;
+
+    fn niw(id: u64, arrival: Time, model: ModelKind) -> Request {
+        Request {
+            id,
+            arrival,
+            model,
+            origin: Region::EastUs,
+            tier: Tier::Niw,
+            app: AppKind::DocSummary,
+            input_tokens: 1000,
+            output_tokens: 500,
+        }
+    }
+
+    #[test]
+    fn thresholds_release_counts() {
+        let p = ScalingParams::default();
+        assert_eq!(QueueManager::release_count(&p, 0.70), 0);
+        assert_eq!(QueueManager::release_count(&p, 0.59), 1);
+        assert_eq!(QueueManager::release_count(&p, 0.49), 2);
+    }
+
+    #[test]
+    fn capacity_signal_pops_fifo_for_model() {
+        let p = ScalingParams::default();
+        let mut qm = QueueManager::new();
+        qm.enqueue(niw(1, 0.0, ModelKind::Bloom176B));
+        qm.enqueue(niw(2, 1.0, ModelKind::Bloom176B));
+        qm.enqueue(niw(3, 2.0, ModelKind::Llama2_70B));
+        let rel = qm.on_capacity_signal(&p, ModelKind::Bloom176B, Region::WestUs, 0.45);
+        assert_eq!(rel.len(), 2);
+        assert_eq!(rel[0].0.id, 1);
+        assert_eq!(rel[0].1, Region::WestUs);
+        assert_eq!(qm.depth(ModelKind::Bloom176B), 0);
+        assert_eq!(qm.depth(ModelKind::Llama2_70B), 1);
+    }
+
+    #[test]
+    fn no_release_when_util_high() {
+        let p = ScalingParams::default();
+        let mut qm = QueueManager::new();
+        qm.enqueue(niw(1, 0.0, ModelKind::Bloom176B));
+        let rel = qm.on_capacity_signal(&p, ModelKind::Bloom176B, Region::EastUs, 0.8);
+        assert!(rel.is_empty());
+        assert_eq!(qm.depth(ModelKind::Bloom176B), 1);
+    }
+
+    #[test]
+    fn aging_pops_only_old_requests() {
+        let p = ScalingParams::default();
+        let mut qm = QueueManager::new();
+        qm.enqueue(niw(1, 0.0, ModelKind::Bloom176B));
+        qm.enqueue(niw(2, 30_000.0, ModelKind::Bloom176B));
+        // now = 10h + 1s after the first arrival.
+        let aged = qm.pop_aged(&p, 36_001.0);
+        assert_eq!(aged.len(), 1);
+        assert_eq!(aged[0].id, 1);
+        assert_eq!(qm.depth(ModelKind::Bloom176B), 1);
+    }
+
+    #[test]
+    fn drain_flushes_everything() {
+        let mut qm = QueueManager::new();
+        qm.enqueue(niw(1, 0.0, ModelKind::Bloom176B));
+        qm.enqueue(niw(2, 0.0, ModelKind::Llama31_8B));
+        assert_eq!(qm.drain_all().len(), 2);
+        assert_eq!(qm.total_depth(), 0);
+    }
+
+    #[test]
+    fn counters_track_flow() {
+        let p = ScalingParams::default();
+        let mut qm = QueueManager::new();
+        qm.enqueue(niw(1, 0.0, ModelKind::Bloom176B));
+        qm.enqueue(niw(2, 0.0, ModelKind::Bloom176B));
+        qm.on_capacity_signal(&p, ModelKind::Bloom176B, Region::EastUs, 0.55);
+        assert_eq!(qm.total_enqueued, 2);
+        assert_eq!(qm.total_released, 1);
+    }
+}

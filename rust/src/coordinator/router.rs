@@ -1,0 +1,183 @@
+//! Routing logic (§6.1): global region selection by effective memory
+//! utilization, then within-region instance selection by
+//! join-the-shortest-queue on remaining tokens.
+
+use crate::config::{ModelKind, Region, RoutingParams, Tier};
+use crate::sim::cluster::{Cluster, InstanceId};
+use crate::sim::instance::InstState;
+
+/// Global routing for interactive requests (§6.1): first preferred region
+/// (origin, then the others in index order) whose effective memory
+/// utilization is under the threshold; otherwise the least-utilized one.
+pub fn route_region(
+    cluster: &Cluster,
+    params: &RoutingParams,
+    model: ModelKind,
+    origin: Region,
+) -> Region {
+    let mut preference: Vec<Region> = vec![origin];
+    for r in Region::ALL {
+        if r != origin {
+            preference.push(r);
+        }
+    }
+    for &r in &preference {
+        if cluster.effective_util(model, r) < params.region_util_threshold {
+            return r;
+        }
+    }
+    // All saturated: least utilized wins.
+    preference
+        .into_iter()
+        .min_by(|&a, &b| {
+            cluster
+                .effective_util(model, a)
+                .partial_cmp(&cluster.effective_util(model, b))
+                .unwrap()
+        })
+        .unwrap()
+}
+
+/// Instance selection within a region: JSQ over admitting instances whose
+/// pool can serve the tier (minimum pending tokens, §6.1).  Falls back to
+/// provisioning instances (they queue until ready) when nothing is active.
+pub fn route_instance(
+    cluster: &Cluster,
+    model: ModelKind,
+    region: Region,
+    tier: Tier,
+) -> Option<InstanceId> {
+    let ep = cluster.endpoints.get(&(model, region))?;
+    let eligible = |state_ok: fn(&InstState) -> bool| {
+        ep.instances
+            .iter()
+            .copied()
+            .filter(|&i| {
+                let inst = &cluster.instances[i];
+                state_ok(&inst.state)
+                    && if tier.is_interactive() {
+                        inst.pool.serves_iw()
+                    } else {
+                        inst.pool.serves_niw()
+                    }
+            })
+            .min_by_key(|&i| cluster.instances[i].pending_tokens())
+    };
+    eligible(|s| matches!(s, InstState::Active))
+        .or_else(|| eligible(|s| matches!(s, InstState::Provisioning { .. })))
+}
+
+/// Extra latency charged when a request is served outside its origin
+/// region (§2.1: ~50 ms inter-region).
+pub fn routing_latency(params: &RoutingParams, origin: Region, served: Region) -> f64 {
+    if origin == served {
+        0.0
+    } else {
+        params.inter_region_latency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuKind, ScalingParams};
+    use crate::perf::PerfTable;
+    use crate::sim::cluster::PoolTag;
+
+    fn cluster() -> Cluster {
+        Cluster::new(
+            &[ModelKind::Llama2_70B],
+            PerfTable::new(GpuKind::H100x8, &[ModelKind::Llama2_70B]),
+            ScalingParams::default(),
+            &[(PoolTag::Unified, 2)],
+            4,
+        )
+    }
+
+    fn saturate(c: &mut Cluster, region: Region) {
+        for &id in c.endpoints[&(ModelKind::Llama2_70B, region)].instances.clone().iter() {
+            let cap = c.instances[id].kv_capacity;
+            c.instances[id].kv_used = (cap as f64 * 0.9) as u64;
+        }
+    }
+
+    #[test]
+    fn prefers_origin_when_under_threshold() {
+        let c = cluster();
+        let r = route_region(&c, &RoutingParams::default(), ModelKind::Llama2_70B, Region::WestUs);
+        assert_eq!(r, Region::WestUs);
+    }
+
+    #[test]
+    fn spills_to_next_region_when_origin_hot() {
+        let mut c = cluster();
+        saturate(&mut c, Region::EastUs);
+        let r = route_region(&c, &RoutingParams::default(), ModelKind::Llama2_70B, Region::EastUs);
+        assert_ne!(r, Region::EastUs);
+    }
+
+    #[test]
+    fn all_hot_picks_least_utilized() {
+        let mut c = cluster();
+        for region in Region::ALL {
+            saturate(&mut c, region);
+        }
+        // Make Central slightly cooler.
+        let id = c.endpoints[&(ModelKind::Llama2_70B, Region::CentralUs)].instances[0];
+        c.instances[id].kv_used = 0;
+        let r = route_region(&c, &RoutingParams::default(), ModelKind::Llama2_70B, Region::EastUs);
+        assert_eq!(r, Region::CentralUs);
+    }
+
+    #[test]
+    fn jsq_picks_emptiest_instance() {
+        let mut c = cluster();
+        let ids = c.active_instances(ModelKind::Llama2_70B, Region::EastUs);
+        c.instances[ids[0]].kv_used = 1000;
+        c.instances[ids[0]].push_waiting(crate::trace::types::Request {
+            id: 9,
+            arrival: 0.0,
+            model: ModelKind::Llama2_70B,
+            origin: Region::EastUs,
+            tier: Tier::IwF,
+            app: crate::trace::types::AppKind::Chat,
+            input_tokens: 5000,
+            output_tokens: 100,
+        });
+        let pick = route_instance(&c, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF).unwrap();
+        assert_eq!(pick, ids[1]);
+    }
+
+    #[test]
+    fn pool_filter_respected() {
+        let mut c = Cluster::new(
+            &[ModelKind::Llama2_70B],
+            PerfTable::new(GpuKind::H100x8, &[ModelKind::Llama2_70B]),
+            ScalingParams::default(),
+            &[(PoolTag::SiloIw, 2), (PoolTag::SiloNiw, 1)],
+            0,
+        );
+        let _ = &mut c;
+        let iw = route_instance(&c, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF).unwrap();
+        assert_eq!(c.instances[iw].pool, PoolTag::SiloIw);
+        let niw = route_instance(&c, ModelKind::Llama2_70B, Region::EastUs, Tier::Niw).unwrap();
+        assert_eq!(c.instances[niw].pool, PoolTag::SiloNiw);
+    }
+
+    #[test]
+    fn falls_back_to_provisioning_instances() {
+        let mut c = cluster();
+        for &id in c.endpoints[&(ModelKind::Llama2_70B, Region::EastUs)].instances.clone().iter() {
+            c.instances[id].state = InstState::Provisioning { until: 100.0 };
+        }
+        let pick = route_instance(&c, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF);
+        assert!(pick.is_some());
+    }
+
+    #[test]
+    fn latency_charged_cross_region_only() {
+        let p = RoutingParams::default();
+        assert_eq!(routing_latency(&p, Region::EastUs, Region::EastUs), 0.0);
+        assert!(routing_latency(&p, Region::EastUs, Region::WestUs) > 0.0);
+    }
+}

@@ -1,0 +1,204 @@
+//! Instance-level scheduling policies (§6.5).
+//!
+//! The scheduler orders an instance's waiting queue; the batcher then
+//! admits in that order until GPU memory is exhausted.  `d_r` is the
+//! remaining time to the request's TTFT deadline (negative = expired).
+
+use crate::config::{Tier, Time};
+use crate::trace::types::Request;
+
+/// The four policies evaluated in Fig 15.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SchedPolicy {
+    /// First-come-first-served (baseline).
+    Fcfs,
+    /// Earliest deadline first; expired deadlines jump the queue.
+    Edf,
+    /// All IW-F (FCFS among themselves) before any IW-N.
+    Pf,
+    /// Deadline-and-priority aware with thresholds `tau_n` (severe
+    /// expiry) and `tau_p` (urgency window).
+    Dpa { tau_n: Time, tau_p: Time },
+}
+
+impl SchedPolicy {
+    /// Default DPA thresholds used in the evaluation.
+    pub fn dpa_default() -> SchedPolicy {
+        SchedPolicy::Dpa { tau_n: 30.0, tau_p: 2.0 }
+    }
+
+    /// Full sort key: (§6.1 NIW priority, policy class, policy primary,
+    /// arrival, id).  Arrival + id make the order total and deterministic.
+    fn key(&self, r: &Request, now: Time) -> (u8, u8, f64, f64, u64) {
+        let prio = niw_priority(r, now);
+        let (class, primary) = match self {
+            SchedPolicy::Fcfs => (0u8, r.arrival),
+            SchedPolicy::Edf => (0u8, r.ttft_slack(now)),
+            SchedPolicy::Pf => ((r.tier != Tier::IwF) as u8, r.arrival),
+            SchedPolicy::Dpa { tau_n, tau_p } => {
+                (dpa_class(r, now, *tau_n, *tau_p), r.arrival)
+            }
+        };
+        (prio, class, primary, r.arrival, r.id)
+    }
+
+    fn cmp(&self, a: &Request, b: &Request, now: Time) -> std::cmp::Ordering {
+        let ka = self.key(a, now);
+        let kb = self.key(b, now);
+        ka.0.cmp(&kb.0)
+            .then(ka.1.cmp(&kb.1))
+            .then(ka.2.partial_cmp(&kb.2).unwrap_or(std::cmp::Ordering::Equal))
+            .then(ka.3.partial_cmp(&kb.3).unwrap_or(std::cmp::Ordering::Equal))
+            .then(ka.4.cmp(&kb.4))
+    }
+
+    /// Order `queue` in-place so that position 0 is served first.
+    ///
+    /// Regardless of policy, the §6.1 priority rule applies first:
+    /// priority-0 requests (all IW, plus NIW whose age exceeds the 10 h
+    /// aging threshold) come before priority-1 (fresh NIW).
+    pub fn order(&self, queue: &mut [Request], now: Time) {
+        queue.sort_by(|a, b| self.cmp(a, b, now));
+    }
+
+    /// Order only the serving head: the `k` highest-priority requests end
+    /// up sorted at the front (O(n + k log k) — the admission path only
+    /// consumes the head, so deep overload queues stay cheap to manage).
+    pub fn order_head(&self, queue: &mut Vec<Request>, now: Time, k: usize) {
+        if queue.len() <= k {
+            self.order(queue, now);
+            return;
+        }
+        queue.select_nth_unstable_by(k, |a, b| self.cmp(a, b, now));
+        self.order(&mut queue[..k], now);
+    }
+}
+
+/// §6.1 priority: 0 for interactive and aged NIW, 1 for fresh NIW.
+fn niw_priority(r: &Request, now: Time) -> u8 {
+    if r.tier.is_interactive() || now - r.arrival > 10.0 * 3600.0 {
+        0
+    } else {
+        1
+    }
+}
+
+/// DPA ordering classes (§6.5): (1) severely expired, (2) urgent IW-F,
+/// (3) urgent IW-N, (4) non-urgent IW-F, (5) non-urgent IW-N,
+/// (6) recently expired.  NIW requests (priority-1 until aged) sort after
+/// interactive traffic within their class by mapping to class 7 unless
+/// severely expired.
+fn dpa_class(r: &Request, now: Time, tau_n: Time, tau_p: Time) -> u8 {
+    let d = r.ttft_slack(now);
+    if d < -tau_n {
+        return 1; // severely expired: starvation guard
+    }
+    if !r.tier.is_interactive() {
+        return 7; // default-priority NIW rides behind IW classes
+    }
+    if d < 0.0 {
+        6 // recently expired
+    } else if d <= tau_p {
+        if r.tier == Tier::IwF {
+            2
+        } else {
+            3
+        }
+    } else if r.tier == Tier::IwF {
+        4
+    } else {
+        5
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelKind, Region};
+    use crate::trace::types::AppKind;
+
+    fn req(id: u64, arrival: Time, tier: Tier) -> Request {
+        Request {
+            id,
+            arrival,
+            model: ModelKind::Llama2_70B,
+            origin: Region::EastUs,
+            tier,
+            app: AppKind::Chat,
+            input_tokens: 100,
+            output_tokens: 10,
+        }
+    }
+
+    fn ids(q: &[Request]) -> Vec<u64> {
+        q.iter().map(|r| r.id).collect()
+    }
+
+    #[test]
+    fn fcfs_orders_by_arrival() {
+        let mut q = vec![req(2, 5.0, Tier::IwN), req(1, 1.0, Tier::IwF), req(3, 9.0, Tier::IwF)];
+        SchedPolicy::Fcfs.order(&mut q, 10.0);
+        assert_eq!(ids(&q), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn edf_puts_tightest_deadline_first() {
+        // At now=10: IW-F arrived t=9.5 has slack 0.5; IW-N arrived t=0 has
+        // slack 50; expired IW-F arrived t=5 has slack -4.
+        let mut q = vec![req(1, 0.0, Tier::IwN), req(2, 9.5, Tier::IwF), req(3, 5.0, Tier::IwF)];
+        SchedPolicy::Edf.order(&mut q, 10.0);
+        assert_eq!(ids(&q), vec![3, 2, 1]);
+    }
+
+    #[test]
+    fn edf_breaks_simultaneous_arrivals_by_tier() {
+        // Same arrival: IW-F has the stricter TTFT ⇒ first (§6.5).
+        let mut q = vec![req(1, 0.0, Tier::IwN), req(2, 0.0, Tier::IwF)];
+        SchedPolicy::Edf.order(&mut q, 0.1);
+        assert_eq!(ids(&q), vec![2, 1]);
+    }
+
+    #[test]
+    fn pf_is_absolute_tier_priority() {
+        let mut q = vec![req(1, 0.0, Tier::IwN), req(2, 100.0, Tier::IwF), req(3, 50.0, Tier::IwN)];
+        SchedPolicy::Pf.order(&mut q, 100.0);
+        assert_eq!(ids(&q), vec![2, 1, 3]);
+    }
+
+    #[test]
+    fn dpa_severely_expired_first() {
+        let tau_n = 30.0;
+        // now=100: id1 IW-N arrived 0 → slack -40+60.. compute: slack = 0+60-100 = -40 < -30 severe.
+        // id2 IW-F arrived 99.5 → slack 0.5 urgent. id3 IW-F arrived 90 → slack -9 recent-expired.
+        let mut q = vec![
+            req(3, 90.0, Tier::IwF),
+            req(1, 0.0, Tier::IwN),
+            req(2, 99.5, Tier::IwF),
+        ];
+        SchedPolicy::Dpa { tau_n, tau_p: 2.0 }.order(&mut q, 100.0);
+        assert_eq!(ids(&q), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn dpa_urgent_iwf_before_urgent_iwn() {
+        // now=0: IW-F slack 1.0 (≤ tau_p=2), IW-N slack 60 (> tau_p ⇒ class 5).
+        // Craft an urgent IW-N: arrival -59 ⇒ slack 1.
+        let mut q = vec![req(1, -59.0, Tier::IwN), req(2, 0.0, Tier::IwF)];
+        SchedPolicy::Dpa { tau_n: 30.0, tau_p: 2.0 }.order(&mut q, 0.0);
+        assert_eq!(ids(&q), vec![2, 1]);
+    }
+
+    #[test]
+    fn dpa_niw_rides_behind_iw() {
+        let mut q = vec![req(1, 0.0, Tier::Niw), req(2, 5.0, Tier::IwN)];
+        SchedPolicy::Dpa { tau_n: 30.0, tau_p: 2.0 }.order(&mut q, 6.0);
+        assert_eq!(ids(&q), vec![2, 1]);
+    }
+
+    #[test]
+    fn ordering_is_stable_for_equal_keys() {
+        let mut q = vec![req(1, 1.0, Tier::IwF), req(2, 1.0, Tier::IwF)];
+        SchedPolicy::Pf.order(&mut q, 2.0);
+        assert_eq!(ids(&q), vec![1, 2]);
+    }
+}

@@ -1,0 +1,137 @@
+//! The experiment harness: one entry per table/figure of the paper's
+//! evaluation (see DESIGN.md §5 for the full index).
+//!
+//! Every experiment prints the paper-comparable rows to stdout and writes
+//! CSV series into the output directory.  Absolute numbers differ from
+//! the paper (synthetic traces, CPU-simulated cluster — DESIGN.md §1);
+//! the *shape* — who wins, by roughly what factor — is the reproduction
+//! target, and EXPERIMENTS.md records paper-vs-measured for each.
+
+pub mod burst;
+pub mod characterization;
+pub mod fidelity;
+pub mod ilp_runtime;
+pub mod scalability;
+pub mod scheduling;
+pub mod strategies;
+pub mod week;
+
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::PathBuf;
+
+/// Common experiment options (CLI-provided).
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    pub out_dir: PathBuf,
+    /// Trace volume multiplier (1.0 = paper scale, ≈10 M req/day).
+    pub scale: f64,
+    /// Use the PJRT forecaster artifact instead of the native replica.
+    pub pjrt: bool,
+    pub artifacts_dir: String,
+    pub seed: u64,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions {
+            out_dir: PathBuf::from("results"),
+            // Default keeps every experiment minutes-fast; pass --scale to
+            // push toward the paper's full 10 M req/day.
+            scale: 0.2,
+            pjrt: false,
+            artifacts_dir: "artifacts".into(),
+            seed: 42,
+        }
+    }
+}
+
+impl ExpOptions {
+    pub fn csv(&self, name: &str, header: &str, rows: &[String]) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.out_dir)
+            .with_context(|| format!("create {}", self.out_dir.display()))?;
+        let path = self.out_dir.join(name);
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{header}")?;
+        for r in rows {
+            writeln!(f, "{r}")?;
+        }
+        println!("  wrote {}", path.display());
+        Ok(path)
+    }
+}
+
+/// Known experiment ids, in run order for `exp all`.
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "fig1", "fig3", "fig4", "fig5", "fig6", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
+    "fig14", "fig15", "fig16a", "fig16b", "nov24", "ablations", "ilp",
+];
+
+/// Dispatch one experiment id.
+pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
+    println!("━━━ experiment {id} ━━━");
+    match id {
+        "fig1" => characterization::fig1(opts),
+        "fig3" => characterization::fig3(opts),
+        "fig4" => characterization::fig4(opts),
+        "fig5" => characterization::fig5(opts),
+        "fig6" => characterization::fig6(opts),
+        "fig8" => strategies::fig8_table1(opts),
+        "fig9" => fidelity::fig9(opts),
+        "fig10" => characterization::fig10(opts),
+        "fig11" | "fig12" | "fig13" => strategies::fig11_12_13(opts),
+        "fig14" => scalability::fig14(opts),
+        "fig15" => scheduling::fig15(opts),
+        "fig16a" => burst::fig16a(opts),
+        "fig16b" => week::fig16b(opts),
+        "nov24" => strategies::nov24_validation(opts),
+        "ablations" => strategies::ablations(opts),
+        "ilp" => ilp_runtime::solver_table(opts),
+        "forecast-accuracy" => ilp_runtime::forecast_accuracy(opts),
+        "all" => {
+            // fig11/12/13 share one run; dedup here.
+            let mut seen_strategies = false;
+            for &e in ALL_EXPERIMENTS {
+                if matches!(e, "fig11" | "fig12" | "fig13") {
+                    if seen_strategies {
+                        continue;
+                    }
+                    seen_strategies = true;
+                }
+                run(e, opts)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment '{other}' (try: {:?})", ALL_EXPERIMENTS),
+    }
+}
+
+/// Render a simple aligned table to stdout.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n{title}");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line: Vec<String> =
+        header.iter().enumerate().map(|(i, h)| format!("{:<w$}", h, w = widths[i])).collect();
+    println!("  {}", line.join("  "));
+    println!("  {}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+    for row in rows {
+        let line: Vec<String> = row
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect();
+        println!("  {}", line.join("  "));
+    }
+}
+
+/// Where a path under the out-dir lives (for tests).
+pub fn out_file(opts: &ExpOptions, name: &str) -> PathBuf {
+    opts.out_dir.join(name)
+}

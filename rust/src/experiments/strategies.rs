@@ -1,0 +1,330 @@
+//! Strategy-comparison experiments: Fig 8 + Table 1 (Siloed vs Unified),
+//! Figs 11–13 (Reactive vs LT-* vs Chiron), the Nov-2024 validation
+//! (§7.2.7) and the hardware / tier-mix ablations (§7.2.8).
+
+use anyhow::Result;
+
+use crate::config::{Epoch, GpuKind, ModelKind, Region, Tier, HOUR};
+use crate::experiments::{print_table, ExpOptions};
+use crate::sim::engine::{run_simulation, SimConfig, Simulation, Strategy};
+use crate::trace::generator::TraceConfig;
+
+fn base_cfg(opts: &ExpOptions, epoch: Epoch, days: f64, strategy: Strategy) -> SimConfig {
+    // The Nov-2024 epoch carries 1/5 the Jul-2025 volume; compensate the
+    // scale so Nov experiments exercise the same scaling dynamics (the
+    // paper's Nov cluster was sized for its own load — all comparisons
+    // are strategy-relative).
+    let scale = match epoch {
+        Epoch::Nov2024 => opts.scale * 5.0,
+        Epoch::Jul2025 => opts.scale,
+    };
+    SimConfig {
+        trace: TraceConfig {
+            epoch,
+            days,
+            scale,
+            seed: opts.seed,
+            // Start on the peak weekday: Wednesday (0 = Monday).
+            start_weekday: 2,
+            ..Default::default()
+        },
+        strategy,
+        pjrt_forecaster: opts.pjrt,
+        artifacts_dir: opts.artifacts_dir.clone(),
+        ..Default::default()
+    }
+}
+
+/// Fig 8 + Table 1 — Siloed vs Unified-Reactive on the Nov-2024 West-US
+/// Tuesday trace (4 models, 8×A100, 20 instances/model).
+pub fn fig8_table1(opts: &ExpOptions) -> Result<()> {
+    let mut results = Vec::new();
+    for strategy in [Strategy::Siloed, Strategy::Reactive] {
+        let mut cfg = base_cfg(opts, Epoch::Nov2024, 1.0, strategy);
+        cfg.trace.start_weekday = 1; // Tuesday
+        cfg.gpu = GpuKind::A100x8;
+        let sim = run_simulation(cfg);
+        results.push((strategy, sim));
+    }
+
+    // (a) instance counts over time (15-min samples) + instance-hours.
+    let mut rows = Vec::new();
+    let mut ih_table = Vec::new();
+    for (strategy, sim) in &results {
+        let end = sim.end_time();
+        for &m in &sim.cfg.trace.models {
+            let ledger = sim
+                .metrics
+                .instances
+                .iter()
+                .filter(|((lm, lr), _)| *lm == m && *lr == Region::WestUs)
+                .map(|(_, l)| l)
+                .next();
+            if let Some(l) = ledger {
+                for (t, c) in l.sample(end, 900.0) {
+                    rows.push(format!("{},{m},{:.2},{c}", strategy.name(), t / HOUR));
+                }
+            }
+            let ih: f64 = sim
+                .metrics
+                .instances
+                .iter()
+                .filter(|((lm, lr), _)| *lm == m && *lr == Region::WestUs)
+                .map(|(_, l)| l.instance_hours(end))
+                .sum();
+            ih_table.push(vec![strategy.name().into(), m.to_string(), format!("{ih:.1}")]);
+        }
+    }
+    opts.csv("fig8a_instance_counts_westus.csv", "strategy,model,hour,instances", &rows)?;
+    print_table("Fig 8a — West-US instance-hours per model", &["strategy", "model", "inst-h"], &ih_table);
+
+    let total_ih = |sim: &Simulation| -> f64 {
+        let end = sim.end_time();
+        sim.metrics
+            .instances
+            .iter()
+            .filter(|((_, r), _)| *r == Region::WestUs)
+            .map(|(_, l)| l.instance_hours(end))
+            .sum()
+    };
+    let siloed_ih = total_ih(&results[0].1);
+    let unified_ih = total_ih(&results[1].1);
+    let spot_h: f64 = results[1].1.metrics.spot_hours(results[1].1.end_time());
+    println!(
+        "\n  West-US totals: Siloed {siloed_ih:.1} inst-h vs Unified {unified_ih:.1} inst-h \
+         ({:.1}% fewer; paper: 34.5% fewer).  Unified donated {spot_h:.0} instance-hours to spot.",
+        (1.0 - unified_ih / siloed_ih) * 100.0
+    );
+
+    // (b) memory utilization.
+    let mut util_rows = Vec::new();
+    for (strategy, sim) in &results {
+        for &m in &sim.cfg.trace.models {
+            let u = sim.metrics.mean_util(m);
+            util_rows.push(format!("{},{m},{u:.4}", strategy.name()));
+        }
+    }
+    opts.csv("fig8b_memory_util.csv", "strategy,model,mean_util", &util_rows)?;
+
+    // Table 1 — p95 TTFT and E2E per model under both strategies.
+    // Interactive traffic only: NIW is *designed* to defer (queue-manager
+    // release / 24 h deadline), so its queueing time would swamp a joint
+    // p95 without being an SLA signal.
+    let mut table = Vec::new();
+    let mut rows = Vec::new();
+    for &m in &results[0].1.cfg.trace.models {
+        let mut line = vec![m.to_string()];
+        for (strategy, sim) in &results {
+            let s = crate::metrics::LatencySummary::from_outcomes(
+                sim.metrics
+                    .outcomes
+                    .iter()
+                    .filter(|o| o.model == m && o.tier.is_interactive()),
+            );
+            line.push(format!("{:.1}", s.ttft_p95));
+            line.push(format!("{:.1}", s.e2e_p95));
+            rows.push(format!("{},{m},{:.3},{:.3}", strategy.name(), s.ttft_p95, s.e2e_p95));
+        }
+        table.push(line);
+    }
+    opts.csv("table1_latency_p95.csv", "strategy,model,ttft_p95,e2e_p95", &rows)?;
+    print_table(
+        "Table 1 — IW p95 latency (s): [siloed ttft, siloed e2e, unified ttft, unified e2e] \
+         (paper: unified within 12% of siloed TTFT, E2E near-identical)",
+        &["model", "sil ttft", "sil e2e", "uni ttft", "uni e2e"],
+        &table,
+    );
+    Ok(())
+}
+
+/// The shared Fig 11/12/13 run: all five strategies on the Jul-2025 peak
+/// day, 4 models, 3 regions.
+pub fn fig11_12_13(opts: &ExpOptions) -> Result<()> {
+    let strategies = [Strategy::Reactive, Strategy::LtI, Strategy::LtU, Strategy::LtUa, Strategy::Chiron];
+    let mut sims = Vec::new();
+    for &s in &strategies {
+        let cfg = base_cfg(opts, Epoch::Jul2025, 1.0, s);
+        println!("  running {} ...", s.name());
+        sims.push(run_simulation(cfg));
+    }
+    let focus = ModelKind::Llama2_70B;
+
+    // ---- Fig 11: hourly instance counts + instance-hours (Llama-2) ----
+    let mut rows = Vec::new();
+    let mut table = Vec::new();
+    let mut reactive_ih = 0.0;
+    for sim in &sims {
+        let end = sim.end_time();
+        let name = sim.cfg.strategy.name();
+        // Aggregated across regions, sampled hourly.
+        let mut hourly = vec![0usize; (end / HOUR) as usize + 1];
+        for ((m, _), ledger) in &sim.metrics.instances {
+            if *m != focus {
+                continue;
+            }
+            for (h, slot) in hourly.iter_mut().enumerate() {
+                *slot += ledger.count_at(h as f64 * HOUR);
+            }
+        }
+        for (h, c) in hourly.iter().enumerate() {
+            rows.push(format!("{name},{h},{c}"));
+        }
+        let ih = sim.metrics.model_instance_hours(focus, end);
+        if sim.cfg.strategy == Strategy::Reactive {
+            reactive_ih = ih;
+        }
+        let savings = if sim.cfg.strategy == Strategy::Reactive || reactive_ih == 0.0 {
+            "—".to_string()
+        } else {
+            format!("{:+.1}%", (ih / reactive_ih - 1.0) * 100.0)
+        };
+        table.push(vec![name.into(), format!("{ih:.2}"), savings]);
+    }
+    opts.csv("fig11_instance_hours_llama2.csv", "strategy,hour,instances", &rows)?;
+    print_table(
+        "Fig 11 — Llama-2 instance-hours, 3 regions, peak day \
+         (paper: Reactive 362, LT-I 274 (-24%), LT-U 291 (-20%), LT-UA 277 (-23%), Chiron 1146)",
+        &["strategy", "inst-hours", "vs reactive"],
+        &table,
+    );
+    // Dollar extrapolation as in §7.2.1.
+    if reactive_ih > 0.0 {
+        let lt_ua_ih: f64 = sims
+            .iter()
+            .find(|s| s.cfg.strategy == Strategy::LtUa)
+            .map(|s| s.metrics.model_instance_hours(focus, s.end_time()))
+            .unwrap_or(reactive_ih);
+        let saved_per_day = (reactive_ih - lt_ua_ih).max(0.0);
+        let dollars = saved_per_day * 98.32 * 3.0 * 4.0 * 7.0 / opts.scale.max(1e-9);
+        println!(
+            "  extrapolated full-scale savings ≈ ${:.2}M/week (paper: ≈$0.6M/week, $2.5M/month)",
+            dollars / 1e6
+        );
+    }
+
+    // ---- Fig 12: per-region instance-hours + memory utilization ----
+    let mut rows = Vec::new();
+    for sim in &sims {
+        let end = sim.end_time();
+        for region in Region::ALL {
+            let ih: f64 = sim
+                .metrics
+                .instances
+                .iter()
+                .filter(|((m, r), _)| *m == focus && *r == region)
+                .map(|(_, l)| l.instance_hours(end))
+                .sum();
+            rows.push(format!("{},{region},{ih:.2}", sim.cfg.strategy.name()));
+        }
+    }
+    opts.csv("fig12a_per_region_instance_hours.csv", "strategy,region,inst_hours", &rows)?;
+    let mut rows = Vec::new();
+    for sim in &sims {
+        rows.push(format!("{},{:.4}", sim.cfg.strategy.name(), sim.metrics.mean_util(focus)));
+    }
+    opts.csv("fig12b_memory_util.csv", "strategy,mean_util", &rows)?;
+
+    // ---- Fig 13a: p75 latency; 13b: GPU-hours wasted on scaling ----
+    let mut rows = Vec::new();
+    let mut table = Vec::new();
+    for sim in &sims {
+        let iw = crate::metrics::LatencySummary::from_outcomes(
+            sim.metrics.outcomes.iter().filter(|o| o.model == focus && o.tier.is_interactive()),
+        );
+        rows.push(format!(
+            "{},{:.3},{:.3}",
+            sim.cfg.strategy.name(),
+            iw.ttft_p75,
+            iw.e2e_p75
+        ));
+        let waste = sim.metrics.scaling_waste.total_gpu_hours();
+        let events = sim.metrics.scaling_waste.total_events();
+        table.push(vec![
+            sim.cfg.strategy.name().into(),
+            format!("{:.2}", iw.ttft_p75),
+            format!("{:.2}", iw.e2e_p75),
+            format!("{waste:.2}"),
+            events.to_string(),
+        ]);
+    }
+    opts.csv("fig13a_latency_p75.csv", "strategy,ttft_p75,e2e_p75", &rows)?;
+    let mut rows = Vec::new();
+    for sim in &sims {
+        for (cause, (n, secs)) in &sim.metrics.scaling_waste.by_cause {
+            rows.push(format!("{},{cause},{n},{:.2}", sim.cfg.strategy.name(), secs / 3600.0));
+        }
+    }
+    opts.csv("fig13b_scaling_waste.csv", "strategy,cause,events,gpu_hours", &rows)?;
+    print_table(
+        "Fig 13 — p75 latency (IW, Llama-2) and scaling waste \
+         (paper: LT-* cut wasted GPU-hours ~70%)",
+        &["strategy", "ttft p75 (s)", "e2e p75 (s)", "waste (GPU-h)", "scale events"],
+        &table,
+    );
+    Ok(())
+}
+
+/// §7.2.7 — Nov-2024 peak-day validation (paper: 302 / 227 / 248 / 233
+/// instance-hours for Reactive / LT-I / LT-U / LT-UA).
+pub fn nov24_validation(opts: &ExpOptions) -> Result<()> {
+    let strategies = [Strategy::Reactive, Strategy::LtI, Strategy::LtU, Strategy::LtUa];
+    let mut table = Vec::new();
+    let mut rows = Vec::new();
+    let mut reactive_ih = 0.0;
+    for &s in &strategies {
+        let mut cfg = base_cfg(opts, Epoch::Nov2024, 1.0, s);
+        cfg.trace.start_weekday = 1;
+        let sim = run_simulation(cfg);
+        let ih = sim.metrics.model_instance_hours(ModelKind::Llama2_70B, sim.end_time());
+        if s == Strategy::Reactive {
+            reactive_ih = ih;
+        }
+        let rel = if reactive_ih > 0.0 { format!("{:+.1}%", (ih / reactive_ih - 1.0) * 100.0) } else { "—".into() };
+        rows.push(format!("{},{ih:.2}", s.name()));
+        table.push(vec![s.name().into(), format!("{ih:.2}"), rel]);
+    }
+    opts.csv("nov24_instance_hours.csv", "strategy,inst_hours", &rows)?;
+    print_table(
+        "§7.2.7 — Nov-2024 Llama-2 instance-hours (paper: 302/227/248/233, ≈25% savings)",
+        &["strategy", "inst-hours", "vs reactive"],
+        &table,
+    );
+    Ok(())
+}
+
+/// §7.2.8 — ablations: A100 hardware; IW:NIW ratios 9:1 and 1:1.
+pub fn ablations(opts: &ExpOptions) -> Result<()> {
+    let mut table = Vec::new();
+    let mut rows = Vec::new();
+    let mut run_pair = |label: &str, mutate: &dyn Fn(&mut SimConfig)| -> Result<()> {
+        let mut ihs = Vec::new();
+        for s in [Strategy::Reactive, Strategy::LtUa] {
+            let mut cfg = base_cfg(opts, Epoch::Jul2025, 1.0, s);
+            mutate(&mut cfg);
+            let sim = run_simulation(cfg);
+            ihs.push(sim.metrics.model_instance_hours(ModelKind::Llama2_70B, sim.end_time()));
+        }
+        let saving = (1.0 - ihs[1] / ihs[0]) * 100.0;
+        rows.push(format!("{label},{:.2},{:.2},{saving:.1}", ihs[0], ihs[1]));
+        table.push(vec![
+            label.to_string(),
+            format!("{:.1}", ihs[0]),
+            format!("{:.1}", ihs[1]),
+            format!("{saving:.1}%"),
+        ]);
+        Ok(())
+    };
+    run_pair("h100-baseline", &|_| {})?;
+    run_pair("a100", &|cfg| cfg.gpu = GpuKind::A100x8)?;
+    run_pair("iw-niw-9to1", &|cfg| cfg.trace.iw_niw_ratio = Some(9.0))?;
+    run_pair("iw-niw-1to1", &|cfg| cfg.trace.iw_niw_ratio = Some(1.0))?;
+    opts.csv("ablations.csv", "setting,reactive_ih,ltua_ih,savings_pct", &rows)?;
+    print_table(
+        "§7.2.8 — ablations, LT-UA vs Reactive Llama-2 instance-hours \
+         (paper: A100 -28.2%, 9:1 -26.3%, 1:1 -22%)",
+        &["setting", "reactive", "lt-ua", "savings"],
+        &table,
+    );
+    let _ = Tier::IwF; // silence unused import lint paths in some configs
+    Ok(())
+}

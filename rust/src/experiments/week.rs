@@ -1,0 +1,84 @@
+//! §7.2.7 / Fig 16b — week-long validation: p95 TTFT/E2E in 3-hour bins
+//! across a full week (diurnal + weekday/weekend patterns).
+
+use anyhow::Result;
+
+use crate::config::{Epoch, ModelKind, HOUR};
+use crate::experiments::{print_table, ExpOptions};
+use crate::metrics::LatencySummary;
+use crate::sim::engine::{run_simulation, SimConfig, Strategy};
+use crate::trace::generator::TraceConfig;
+
+pub fn fig16b(opts: &ExpOptions) -> Result<()> {
+    let mut rows = Vec::new();
+    let mut summary_table = Vec::new();
+    for strategy in [Strategy::Reactive, Strategy::LtU, Strategy::LtUa] {
+        let cfg = SimConfig {
+            trace: TraceConfig {
+                epoch: Epoch::Jul2025,
+                days: 7.0,
+                scale: opts.scale,
+                seed: opts.seed,
+                start_weekday: 0,
+                ..Default::default()
+            },
+            strategy,
+            pjrt_forecaster: opts.pjrt,
+            artifacts_dir: opts.artifacts_dir.clone(),
+            ..Default::default()
+        };
+        println!("  running {} over a week ...", strategy.name());
+        let sim = run_simulation(cfg);
+        let end = sim.end_time();
+        let bin = 3.0 * HOUR;
+        let mut t = 0.0;
+        let mut worst = (0.0f64, 0.0f64);
+        while t < end {
+            let window: Vec<_> = sim
+                .metrics
+                .outcomes
+                .iter()
+                .filter(|o| {
+                    o.model == ModelKind::Llama2_70B
+                        && o.tier.is_interactive()
+                        && o.arrival >= t
+                        && o.arrival < t + bin
+                })
+                .collect();
+            if window.len() > 10 {
+                let s = LatencySummary::from_outcomes(window.into_iter());
+                rows.push(format!(
+                    "{},{:.1},{:.3},{:.3}",
+                    sim.cfg.strategy.name(),
+                    t / HOUR,
+                    s.ttft_p95,
+                    s.e2e_p95
+                ));
+                worst = (worst.0.max(s.ttft_p95), worst.1.max(s.e2e_p95));
+            }
+            t += bin;
+        }
+        let overall = LatencySummary::from_outcomes(
+            sim.metrics
+                .outcomes
+                .iter()
+                .filter(|o| o.model == ModelKind::Llama2_70B && o.tier.is_interactive()),
+        );
+        let ih = sim.metrics.model_instance_hours(ModelKind::Llama2_70B, end);
+        summary_table.push(vec![
+            sim.cfg.strategy.name().into(),
+            format!("{:.2}", overall.ttft_p95),
+            format!("{:.2}", worst.0),
+            format!("{:.2}", worst.1),
+            format!("{ih:.1}"),
+        ]);
+    }
+    opts.csv("fig16b_week_latency_3h.csv", "strategy,hour,p95_ttft,p95_e2e", &rows)?;
+    print_table(
+        "Fig 16b — week-long Llama-2 IW latency (paper: Reactive inferior; \
+         LT-U ≈ LT-UA on weekdays, LT-UA better at weekend transitions)",
+        &["strategy", "p95 TTFT", "worst-bin TTFT", "worst-bin E2E", "inst-h (week)"],
+        &summary_table,
+    );
+    Ok(())
+}

@@ -1,0 +1,358 @@
+//! Load forecasting (§6.3): the `Forecaster` trait plus three
+//! implementations —
+//!
+//! * [`PjrtForecaster`] — the production path: the AOT-compiled Layer-2
+//!   seasonal-AR graph (with its Layer-1 Pallas recursion kernel) executed
+//!   via PJRT once per control epoch.
+//! * [`NativeArForecaster`] — a pure-Rust replica of the same pipeline
+//!   (seasonal differencing → CSS AR(p) fit → iterated forecast).  Used by
+//!   tests, by artifact-less environments, and to cross-validate the PJRT
+//!   path bit-for-bit at f32 tolerance.
+//! * [`SeasonalNaive`] — ŷ[t+h] = mean of y at the same phase on previous
+//!   days; the forecasting baseline.
+
+use crate::runtime::ForecastExecutable;
+
+/// Multi-series TPS forecaster.  `history` is `[series][t]` (time
+/// ascending, 15-minute buckets); returns `[series][h]`.
+pub trait Forecaster {
+    fn horizon(&self) -> usize;
+    fn forecast(&mut self, history: &[Vec<f64>]) -> Vec<Vec<f64>>;
+    fn name(&self) -> &'static str;
+}
+
+/// Seasonal-naive baseline: average the same phase over the last `k` days.
+pub struct SeasonalNaive {
+    pub season: usize,
+    pub horizon: usize,
+    pub days_averaged: usize,
+}
+
+impl SeasonalNaive {
+    pub fn new(season: usize, horizon: usize) -> Self {
+        SeasonalNaive { season, horizon, days_averaged: 3 }
+    }
+}
+
+impl Forecaster for SeasonalNaive {
+    fn horizon(&self) -> usize {
+        self.horizon
+    }
+
+    fn name(&self) -> &'static str {
+        "seasonal-naive"
+    }
+
+    fn forecast(&mut self, history: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        history
+            .iter()
+            .map(|series| {
+                let t = series.len();
+                (0..self.horizon)
+                    .map(|h| {
+                        let mut acc = 0.0;
+                        let mut n = 0usize;
+                        for d in 1..=self.days_averaged {
+                            let idx = t as i64 + h as i64 - (d * self.season) as i64;
+                            if idx >= 0 && (idx as usize) < t {
+                                acc += series[idx as usize];
+                                n += 1;
+                            }
+                        }
+                        if n == 0 {
+                            *series.last().unwrap_or(&0.0)
+                        } else {
+                            (acc / n as f64).max(0.0)
+                        }
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+/// Pure-Rust seasonal-AR pipeline — the same math as
+/// `python/compile/forecast_graph.py` (seasonal difference, ridge CSS fit,
+/// iterated forecast, seasonal re-integration).
+pub struct NativeArForecaster {
+    pub season: usize,
+    pub order: usize,
+    pub horizon: usize,
+    pub ridge: f64,
+}
+
+impl NativeArForecaster {
+    pub fn new(season: usize, order: usize, horizon: usize) -> Self {
+        NativeArForecaster { season, order, horizon, ridge: 1e-3 }
+    }
+
+    /// CSS AR(p) fit on one differenced series.  Returns (coefs newest-lag
+    /// -first, intercept).
+    fn fit(&self, diff: &[f64]) -> (Vec<f64>, f64) {
+        let p = self.order;
+        let rows = diff.len().saturating_sub(p);
+        let n = p + 1;
+        // Normal equations: gram = X'X + ridge·I, rhs = X'y with
+        // X[t, i] = diff[t + p - 1 - i], y[t] = diff[t + p].
+        let mut gram = vec![0.0f64; n * n];
+        let mut rhs = vec![0.0f64; n];
+        for t in 0..rows {
+            let y = diff[t + p];
+            for i in 0..p {
+                let xi = diff[t + p - 1 - i];
+                rhs[i] += xi * y;
+                for j in i..p {
+                    gram[i * n + j] += xi * diff[t + p - 1 - j];
+                }
+                gram[i * n + p] += xi; // intercept column
+            }
+            rhs[p] += y;
+            gram[p * n + p] += 1.0;
+        }
+        // Mirror the upper triangle and add ridge.
+        for i in 0..n {
+            for j in 0..i {
+                gram[i * n + j] = gram[j * n + i];
+            }
+            gram[i * n + i] += self.ridge;
+        }
+        let beta = solve_dense(&mut gram, &mut rhs, n);
+        (beta[..p].to_vec(), beta[p])
+    }
+}
+
+/// Gauss-Jordan with partial pivoting on a dense n×n system (in place).
+fn solve_dense(a: &mut [f64], b: &mut [f64], n: usize) -> Vec<f64> {
+    for col in 0..n {
+        // Pivot.
+        let mut piv = col;
+        for r in col + 1..n {
+            if a[r * n + col].abs() > a[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        if piv != col {
+            for c in 0..n {
+                a.swap(col * n + c, piv * n + c);
+            }
+            b.swap(col, piv);
+        }
+        let d = a[col * n + col];
+        if d.abs() < 1e-12 {
+            continue; // singular direction; ridge normally prevents this
+        }
+        for c in 0..n {
+            a[col * n + c] /= d;
+        }
+        b[col] /= d;
+        for r in 0..n {
+            if r != col {
+                let f = a[r * n + col];
+                if f != 0.0 {
+                    for c in 0..n {
+                        a[r * n + c] -= f * a[col * n + c];
+                    }
+                    b[r] -= f * b[col];
+                }
+            }
+        }
+    }
+    b.to_vec()
+}
+
+impl Forecaster for NativeArForecaster {
+    fn horizon(&self) -> usize {
+        self.horizon
+    }
+
+    fn name(&self) -> &'static str {
+        "native-seasonal-ar"
+    }
+
+    fn forecast(&mut self, history: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        let m = self.season;
+        let p = self.order;
+        history
+            .iter()
+            .map(|series| {
+                let t = series.len();
+                if t < m + p + 8 {
+                    // Not enough history: fall back to persistence.
+                    let last = *series.last().unwrap_or(&0.0);
+                    return vec![last.max(0.0); self.horizon];
+                }
+                let diff: Vec<f64> = (m..t).map(|i| series[i] - series[i - m]).collect();
+                let (coefs, icept) = self.fit(&diff);
+                // Iterated forecast on the differenced series.
+                let mut lags: Vec<f64> = diff[diff.len() - p..].iter().rev().copied().collect();
+                let mut out = Vec::with_capacity(self.horizon);
+                for h in 0..self.horizon {
+                    let mut nxt = icept;
+                    for i in 0..p {
+                        nxt += coefs[i] * lags[i];
+                    }
+                    // Seasonal re-integration: ŷ[T+h] = d̂ + y[T+h-m].
+                    let base = series[t + h - m];
+                    out.push((nxt + base).max(0.0));
+                    lags.rotate_right(1);
+                    lags[0] = nxt;
+                }
+                out
+            })
+            .collect()
+    }
+}
+
+/// PJRT-backed forecaster: pads/truncates the series set to the
+/// artifact's fixed `[S, T]` shape and executes the compiled graph.
+pub struct PjrtForecaster {
+    exe: ForecastExecutable,
+}
+
+impl PjrtForecaster {
+    pub fn load(artifacts_dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        Ok(PjrtForecaster { exe: ForecastExecutable::load(artifacts_dir)? })
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.exe.shape.n_series, self.exe.shape.history, self.exe.shape.horizon)
+    }
+}
+
+impl Forecaster for PjrtForecaster {
+    fn horizon(&self) -> usize {
+        self.exe.shape.horizon
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-seasonal-ar"
+    }
+
+    fn forecast(&mut self, history: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        let (s_max, t_fix, h) = (self.exe.shape.n_series, self.exe.shape.history, self.horizon());
+        assert!(
+            history.len() <= s_max,
+            "artifact supports {s_max} series, got {}",
+            history.len()
+        );
+        let mut flat = vec![0f32; s_max * t_fix];
+        for (s, series) in history.iter().enumerate() {
+            assert!(series.len() >= t_fix, "need {t_fix} history points, got {}", series.len());
+            let tail = &series[series.len() - t_fix..];
+            for (i, &v) in tail.iter().enumerate() {
+                flat[s * t_fix + i] = v as f32;
+            }
+        }
+        let out = self.exe.forecast(&flat).expect("pjrt forecast");
+        history
+            .iter()
+            .enumerate()
+            .map(|(s, _)| (0..h).map(|i| out[s * h + i] as f64).collect())
+            .collect()
+    }
+}
+
+/// Mean absolute percentage error of a forecast against actuals.
+pub fn mape(forecast: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(forecast.len(), actual.len());
+    let mut acc = 0.0;
+    for (f, a) in forecast.iter().zip(actual) {
+        acc += (f - a).abs() / a.abs().max(1.0);
+    }
+    acc / forecast.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diurnal(series: usize, len: usize, season: usize) -> Vec<Vec<f64>> {
+        (0..series)
+            .map(|s| {
+                (0..len)
+                    .map(|t| {
+                        let phase = 2.0 * std::f64::consts::PI * (t % season) as f64 / season as f64;
+                        100.0 * (s + 1) as f64 * (1.0 + 0.5 * phase.sin())
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn seasonal_naive_repeats_phase() {
+        let hist = diurnal(2, 96 * 4, 96);
+        let mut f = SeasonalNaive::new(96, 4);
+        let out = f.forecast(&hist);
+        // Clean periodic signal: prediction equals the same phase yesterday.
+        for h in 0..4 {
+            let expect = hist[0][96 * 3 + h];
+            assert!((out[0][h] - expect).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn native_ar_accurate_on_diurnal() {
+        let season = 96;
+        let full = diurnal(3, season * 7 + 4, season);
+        let hist: Vec<Vec<f64>> = full.iter().map(|s| s[..season * 7].to_vec()).collect();
+        let mut f = NativeArForecaster::new(season, 8, 4);
+        let out = f.forecast(&hist);
+        for s in 0..3 {
+            let actual = &full[s][season * 7..];
+            let err = mape(&out[s], actual);
+            assert!(err < 0.05, "series {s} mape {err}");
+        }
+    }
+
+    #[test]
+    fn native_ar_recovers_ar2_direction() {
+        // A trending series: forecasts should continue the trend rather
+        // than snap back.
+        let season = 8;
+        let len = 200;
+        let series: Vec<f64> = (0..len).map(|t| 100.0 + 0.5 * t as f64).collect();
+        let mut f = NativeArForecaster::new(season, 4, 3);
+        let out = f.forecast(&[series.clone()]);
+        let last = series[len - 1];
+        assert!(out[0][0] > last - 2.0, "forecast {:?} vs last {last}", out[0]);
+    }
+
+    #[test]
+    fn native_ar_nonnegative() {
+        let series = vec![vec![0.0; 800]];
+        let mut f = NativeArForecaster::new(96, 8, 4);
+        let out = f.forecast(&series);
+        assert!(out[0].iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn short_history_falls_back_to_persistence() {
+        let series = vec![vec![5.0; 20]];
+        let mut f = NativeArForecaster::new(96, 8, 4);
+        let out = f.forecast(&series);
+        assert_eq!(out[0], vec![5.0; 4]);
+    }
+
+    #[test]
+    fn solve_dense_identity() {
+        let mut a = vec![1.0, 0.0, 0.0, 1.0];
+        let mut b = vec![3.0, 4.0];
+        let x = solve_dense(&mut a, &mut b, 2);
+        assert_eq!(x, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn solve_dense_general() {
+        // [[2,1],[1,3]] x = [5,10] → x = [1, 3].
+        let mut a = vec![2.0, 1.0, 1.0, 3.0];
+        let mut b = vec![5.0, 10.0];
+        let x = solve_dense(&mut a, &mut b, 2);
+        assert!((x[0] - 1.0).abs() < 1e-9 && (x[1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mape_basic() {
+        assert!((mape(&[110.0], &[100.0]) - 0.1).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,36 @@
+//! # SageServe — forecast-aware auto-scaling for LLM serving (reproduction)
+//!
+//! A three-layer reproduction of *SageServe: Optimizing LLM Serving on Cloud
+//! Data Centers with Forecast Aware Auto-Scaling* (ACM 2025):
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: global/regional
+//!   request routing, the NIW queue manager, instance-level schedulers
+//!   (FCFS/EDF/PF/DPA), the forecast+ILP predictive autoscaler with its LT-I /
+//!   LT-U / LT-UA deferral strategies, the Siloed / Reactive / Chiron
+//!   baselines, and the SplitWise-style cloud-scale discrete-event simulator
+//!   everything is evaluated on.
+//! * **Layer 2 (python/compile, build-time only)** — the JAX graphs: a real
+//!   byte-level transformer LM (prefill + decode with KV caches) and the
+//!   seasonal-AR load-forecast pipeline, AOT-lowered to HLO text.
+//! * **Layer 1 (python/compile/kernels)** — Pallas kernels: tiled
+//!   online-softmax attention and the batched AR forecast recursion.
+//!
+//! Python never runs on the request path: [`runtime`] loads the AOT
+//! artifacts through PJRT and [`serve`] drives real batched inference from
+//! Rust.  See `DESIGN.md` for the systems inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod forecast;
+pub mod metrics;
+pub mod opt;
+pub mod perf;
+pub mod runtime;
+pub mod serve;
+pub mod sim;
+pub mod trace;
+pub mod util;
+
+pub use config::{GpuKind, ModelKind, Region, Tier};

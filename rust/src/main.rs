@@ -1,0 +1,249 @@
+//! `sageserve` CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands (hand-rolled parsing; this build is offline, no clap):
+//!
+//! ```text
+//! sageserve exp <id|all> [--out DIR] [--scale F] [--pjrt] [--seed N]
+//! sageserve simulate --strategy S [--days F] [--scale F] [--epoch E] [--policy P] [--pjrt]
+//! sageserve serve [--requests N] [--max-new N] [--artifacts DIR]
+//! sageserve trace --out FILE [--days F] [--scale F] [--epoch E]
+//! sageserve selftest [--artifacts DIR]
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+use sageserve::config::Epoch;
+use sageserve::coordinator::scheduler::SchedPolicy;
+use sageserve::experiments::{self, ExpOptions};
+use sageserve::sim::engine::{run_simulation, SimConfig, Strategy};
+use sageserve::trace::generator::{TraceConfig, TraceGenerator};
+use sageserve::trace::io::write_csv;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Split args into (positional, flags).  Flags take one value unless
+/// boolean (`--pjrt`).
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let bools = ["--pjrt"];
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if bools.contains(&a.as_str()) {
+                flags.insert(name.to_string(), "true".to_string());
+            } else if i + 1 < args.len() {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 1;
+            } else {
+                flags.insert(name.to_string(), String::new());
+            }
+        } else {
+            pos.push(a.clone());
+        }
+        i += 1;
+    }
+    (pos, flags)
+}
+
+fn parse_epoch(s: &str) -> Result<Epoch> {
+    match s {
+        "jul2025" | "jul" => Ok(Epoch::Jul2025),
+        "nov2024" | "nov" => Ok(Epoch::Nov2024),
+        other => bail!("unknown epoch '{other}' (jul2025|nov2024)"),
+    }
+}
+
+fn parse_policy(s: &str) -> Result<SchedPolicy> {
+    Ok(match s {
+        "fcfs" => SchedPolicy::Fcfs,
+        "edf" => SchedPolicy::Edf,
+        "pf" => SchedPolicy::Pf,
+        "dpa" => SchedPolicy::dpa_default(),
+        other => bail!("unknown policy '{other}' (fcfs|edf|pf|dpa)"),
+    })
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    let (pos, flags) = parse_flags(rest);
+    let f = |k: &str| flags.get(k).cloned();
+    let ff = |k: &str, d: f64| -> Result<f64> {
+        match flags.get(k) {
+            Some(v) => v.parse::<f64>().with_context(|| format!("--{k} {v}")),
+            None => Ok(d),
+        }
+    };
+
+    match cmd.as_str() {
+        "exp" => {
+            let id = pos.first().cloned().unwrap_or_else(|| "all".to_string());
+            let mut opts = ExpOptions::default();
+            if let Some(o) = f("out") {
+                opts.out_dir = o.into();
+            }
+            opts.scale = ff("scale", opts.scale)?;
+            opts.pjrt = flags.contains_key("pjrt");
+            if let Some(a) = f("artifacts") {
+                opts.artifacts_dir = a;
+            }
+            if let Some(s) = f("seed") {
+                opts.seed = s.parse()?;
+            }
+            experiments::run(&id, &opts)
+        }
+        "simulate" => {
+            let strategy = match f("strategy") {
+                Some(s) => Strategy::parse(&s)
+                    .with_context(|| format!("unknown strategy '{s}'"))?,
+                None => Strategy::LtUa,
+            };
+            let mut cfg = SimConfig {
+                strategy,
+                pjrt_forecaster: flags.contains_key("pjrt"),
+                ..Default::default()
+            };
+            cfg.trace.days = ff("days", 1.0)?;
+            cfg.trace.scale = ff("scale", 0.02)?;
+            if let Some(e) = f("epoch") {
+                cfg.trace.epoch = parse_epoch(&e)?;
+            }
+            if let Some(p) = f("policy") {
+                cfg.sched_policy = parse_policy(&p)?;
+            }
+            if let Some(a) = f("artifacts") {
+                cfg.artifacts_dir = a;
+            }
+            if let Some(t) = f("replay") {
+                cfg.replay_trace = Some(t.into());
+            }
+            println!(
+                "simulating {} day(s) at scale {} with strategy {} ...",
+                cfg.trace.days,
+                cfg.trace.scale,
+                strategy.name()
+            );
+            let sim = run_simulation(cfg);
+            report_simulation(&sim);
+            Ok(())
+        }
+        "serve" => {
+            use sageserve::runtime::tinylm::TinyLm;
+            use sageserve::serve::{synthetic_requests, Server};
+            let artifacts = f("artifacts").unwrap_or_else(|| "artifacts".to_string());
+            let n = ff("requests", 32.0)? as usize;
+            let max_new = ff("max-new", 32.0)? as usize;
+            let model = TinyLm::load(&artifacts)
+                .context("load tinylm artifacts (run `make artifacts`)")?;
+            println!(
+                "serving {n} byte-level requests on the PJRT-compiled transformer \
+                 (B={}, S={}, M={}) ...",
+                model.cfg.batch, model.cfg.prefill_len, model.cfg.max_len
+            );
+            let mut server = Server::new(model, SchedPolicy::Edf);
+            let outcomes = server.serve(synthetic_requests(n, 7, max_new))?;
+            let summary = Server::latency_summary(&outcomes);
+            println!(
+                "served {} requests: mean TTFT {:.3}s p95 TTFT {:.3}s mean E2E {:.3}s p95 E2E {:.3}s",
+                summary.count, summary.mean_ttft, summary.ttft_p95, summary.mean_e2e, summary.e2e_p95
+            );
+            println!(
+                "decode throughput {:.0} tok/s; prefill R² {:.3}, decode R² {:.3}",
+                server.decode_throughput(),
+                server.phase_r2("prefill").unwrap_or(f64::NAN),
+                server.phase_r2("decode").unwrap_or(f64::NAN),
+            );
+            Ok(())
+        }
+        "trace" => {
+            let out = f("out").context("--out FILE required")?;
+            let mut cfg = TraceConfig::default();
+            cfg.days = ff("days", 1.0)?;
+            cfg.scale = ff("scale", 0.01)?;
+            if let Some(e) = f("epoch") {
+                cfg.epoch = parse_epoch(&e)?;
+            }
+            if let Some(s) = f("seed") {
+                cfg.seed = s.parse()?;
+            }
+            let gen = TraceGenerator::new(cfg);
+            let n = write_csv(&out, gen.stream())?;
+            println!("wrote {n} requests to {out}");
+            Ok(())
+        }
+        "selftest" => {
+            let artifacts = f("artifacts").unwrap_or_else(|| "artifacts".to_string());
+            sageserve::runtime::selftest::run(&artifacts)
+        }
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `sageserve help`)"),
+    }
+}
+
+fn report_simulation(sim: &sageserve::sim::engine::Simulation) {
+    use sageserve::config::Tier;
+    let end = sim.end_time();
+    println!("completed {} requests ({} dropped)", sim.metrics.outcomes.len(), sim.metrics.dropped);
+    for tier in Tier::ALL {
+        let s = sim.metrics.latency_by_tier(tier);
+        if s.count == 0 {
+            continue;
+        }
+        println!(
+            "  {tier}: n={} ttft p50/p95 {:.2}/{:.2}s e2e p95 {:.2}s sla-viol {:.1}%",
+            s.count,
+            s.ttft_p50,
+            s.ttft_p95,
+            s.e2e_p95,
+            s.sla_violation_rate * 100.0
+        );
+    }
+    let mut total_ih = 0.0;
+    for &m in &sim.cfg.trace.models {
+        let ih = sim.metrics.model_instance_hours(m, end);
+        total_ih += ih;
+        println!("  {m}: {ih:.1} instance-hours, mean util {:.2}", sim.metrics.mean_util(m));
+    }
+    println!(
+        "  total {total_ih:.1} instance-hours; scaling waste {:.2} GPU-h over {} events; \
+         spot donated {:.1} inst-h",
+        sim.metrics.scaling_waste.total_gpu_hours(),
+        sim.metrics.scaling_waste.total_events(),
+        sim.metrics.spot_hours(end),
+    );
+}
+
+fn print_help() {
+    println!(
+        "sageserve — forecast-aware LLM serving (SageServe reproduction)
+
+USAGE:
+  sageserve exp <id|all> [--out DIR] [--scale F] [--pjrt] [--seed N]
+      regenerate paper figures/tables ({} ids; see DESIGN.md §5)
+  sageserve simulate [--strategy siloed|reactive|lt-i|lt-u|lt-ua|chiron]
+      [--days F] [--scale F] [--epoch jul2025|nov2024] [--policy fcfs|edf|pf|dpa]
+      [--pjrt] [--replay trace.csv]
+  sageserve serve [--requests N] [--max-new N] [--artifacts DIR]
+      real batched inference on the AOT transformer via PJRT
+  sageserve trace --out FILE [--days F] [--scale F] [--epoch E] [--seed N]
+      emit a synthetic workload trace (CSV)
+  sageserve selftest [--artifacts DIR]
+      verify the PJRT artifacts against golden outputs",
+        experiments::ALL_EXPERIMENTS.len()
+    );
+}

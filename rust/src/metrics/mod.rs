@@ -1,0 +1,317 @@
+//! Metrics: latency recorders, SLA accounting, instance-hour ledgers and
+//! the scaling-waste ledger — everything the evaluation figures consume.
+
+use std::collections::BTreeMap;
+
+use crate::config::{ModelKind, Region, Tier, Time, HOUR};
+use crate::trace::types::Request;
+
+/// Per-request outcome recorded at completion.
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    pub tier: Tier,
+    pub model: ModelKind,
+    pub region: Region,
+    /// Time to first token, seconds.
+    pub ttft: Time,
+    /// End-to-end latency, seconds.
+    pub e2e: Time,
+    pub arrival: Time,
+    pub input_tokens: u32,
+    pub output_tokens: u32,
+    /// True if the TTFT SLA (IW) or deadline (NIW) was met.
+    pub sla_met: bool,
+}
+
+/// Percentile over a non-empty f64 slice (nearest-rank on a sorted copy).
+pub fn percentile(values: &mut [f64], p: f64) -> f64 {
+    assert!(!values.is_empty(), "percentile of empty slice");
+    values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (values.len() - 1) as f64).round() as usize;
+    values[rank.min(values.len() - 1)]
+}
+
+/// Latency statistics for a set of outcomes.
+#[derive(Debug, Clone, Default)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub ttft_p50: f64,
+    pub ttft_p75: f64,
+    pub ttft_p95: f64,
+    pub ttft_p99: f64,
+    pub e2e_p50: f64,
+    pub e2e_p75: f64,
+    pub e2e_p95: f64,
+    pub mean_ttft: f64,
+    pub mean_e2e: f64,
+    pub sla_violation_rate: f64,
+}
+
+impl LatencySummary {
+    pub fn from_outcomes<'a>(outcomes: impl Iterator<Item = &'a RequestOutcome>) -> Self {
+        let mut ttft = Vec::new();
+        let mut e2e = Vec::new();
+        let mut violations = 0usize;
+        for o in outcomes {
+            ttft.push(o.ttft);
+            e2e.push(o.e2e);
+            if !o.sla_met {
+                violations += 1;
+            }
+        }
+        if ttft.is_empty() {
+            return LatencySummary::default();
+        }
+        let count = ttft.len();
+        let mean_ttft = ttft.iter().sum::<f64>() / count as f64;
+        let mean_e2e = e2e.iter().sum::<f64>() / count as f64;
+        LatencySummary {
+            count,
+            ttft_p50: percentile(&mut ttft, 50.0),
+            ttft_p75: percentile(&mut ttft, 75.0),
+            ttft_p95: percentile(&mut ttft, 95.0),
+            ttft_p99: percentile(&mut ttft, 99.0),
+            e2e_p50: percentile(&mut e2e, 50.0),
+            e2e_p75: percentile(&mut e2e, 75.0),
+            e2e_p95: percentile(&mut e2e, 95.0),
+            mean_ttft,
+            mean_e2e,
+            sla_violation_rate: violations as f64 / count as f64,
+        }
+    }
+}
+
+/// Step-function integrator: instance count over time → instance-hours
+/// (the area-under-curve metric of Fig 8/11).
+#[derive(Debug, Clone, Default)]
+pub struct InstanceHourLedger {
+    /// (time, count) change points, time-ordered.
+    pub points: Vec<(Time, usize)>,
+}
+
+impl InstanceHourLedger {
+    pub fn record(&mut self, t: Time, count: usize) {
+        if let Some(&(lt, lc)) = self.points.last() {
+            debug_assert!(t >= lt, "ledger time went backwards");
+            if lc == count {
+                return;
+            }
+        }
+        self.points.push((t, count));
+    }
+
+    /// Integrated instance-hours over [0, end].
+    pub fn instance_hours(&self, end: Time) -> f64 {
+        let mut total = 0.0;
+        for w in self.points.windows(2) {
+            let (t0, c) = w[0];
+            let (t1, _) = w[1];
+            total += c as f64 * (t1.min(end) - t0.min(end));
+        }
+        if let Some(&(t, c)) = self.points.last() {
+            if t < end {
+                total += c as f64 * (end - t);
+            }
+        }
+        total / HOUR
+    }
+
+    /// Count in effect at time `t`.
+    pub fn count_at(&self, t: Time) -> usize {
+        match self.points.iter().rev().find(|&&(pt, _)| pt <= t) {
+            Some(&(_, c)) => c,
+            None => 0,
+        }
+    }
+
+    /// Sample the step function at fixed intervals (for plotting).
+    pub fn sample(&self, end: Time, step: Time) -> Vec<(Time, usize)> {
+        let mut out = Vec::new();
+        let mut t = 0.0;
+        while t <= end {
+            out.push((t, self.count_at(t)));
+            t += step;
+        }
+        out
+    }
+}
+
+/// GPU-hours wasted on scaling: time VMs spend provisioning, by cause
+/// (Fig 13b's ledger).
+#[derive(Debug, Clone, Default)]
+pub struct ScalingWasteLedger {
+    /// cause → (events, wasted seconds).
+    pub by_cause: BTreeMap<String, (u64, Time)>,
+}
+
+impl ScalingWasteLedger {
+    pub fn record(&mut self, cause: &str, wasted_secs: Time) {
+        let e = self.by_cause.entry(cause.to_string()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += wasted_secs;
+    }
+
+    pub fn total_gpu_hours(&self) -> f64 {
+        self.by_cause.values().map(|&(_, s)| s).sum::<f64>() / HOUR
+    }
+
+    pub fn total_events(&self) -> u64 {
+        self.by_cause.values().map(|&(n, _)| n).sum()
+    }
+}
+
+/// Top-level metrics container for one simulation run.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub outcomes: Vec<RequestOutcome>,
+    /// (model, region) → active-instance ledger.
+    pub instances: BTreeMap<(ModelKind, Region), InstanceHourLedger>,
+    /// (model, region) → spot-donated-instance ledger.
+    pub spot_instances: BTreeMap<(ModelKind, Region), InstanceHourLedger>,
+    pub scaling_waste: ScalingWasteLedger,
+    /// Effective memory-utilization samples: (time, model, region, util).
+    pub util_samples: Vec<(Time, ModelKind, Region, f64)>,
+    /// Dropped/unserved requests (should stay 0 in healthy runs).
+    pub dropped: u64,
+}
+
+impl Metrics {
+    pub fn record_outcome(&mut self, req: &Request, region: Region, ttft: Time, e2e: Time) {
+        let sla_met = match req.tier.ttft_sla() {
+            Some(sla) => ttft <= sla,
+            None => match req.deadline() {
+                Some(d) => req.arrival + e2e <= d,
+                None => true,
+            },
+        };
+        self.outcomes.push(RequestOutcome {
+            tier: req.tier,
+            model: req.model,
+            region,
+            ttft,
+            e2e,
+            arrival: req.arrival,
+            input_tokens: req.input_tokens,
+            output_tokens: req.output_tokens,
+            sla_met,
+        });
+    }
+
+    pub fn latency_by_tier(&self, tier: Tier) -> LatencySummary {
+        LatencySummary::from_outcomes(self.outcomes.iter().filter(|o| o.tier == tier))
+    }
+
+    pub fn latency_by_model(&self, model: ModelKind) -> LatencySummary {
+        LatencySummary::from_outcomes(self.outcomes.iter().filter(|o| o.model == model))
+    }
+
+    pub fn latency_by_model_tier(&self, model: ModelKind, tier: Tier) -> LatencySummary {
+        LatencySummary::from_outcomes(
+            self.outcomes.iter().filter(|o| o.model == model && o.tier == tier),
+        )
+    }
+
+    /// Total instance-hours for a model across regions.
+    pub fn model_instance_hours(&self, model: ModelKind, end: Time) -> f64 {
+        self.instances
+            .iter()
+            .filter(|((m, _), _)| *m == model)
+            .map(|(_, l)| l.instance_hours(end))
+            .sum()
+    }
+
+    /// Total spot-donated instance-hours.
+    pub fn spot_hours(&self, end: Time) -> f64 {
+        self.spot_instances.values().map(|l| l.instance_hours(end)).sum()
+    }
+
+    /// Mean effective memory utilization for a model across samples.
+    pub fn mean_util(&self, model: ModelKind) -> f64 {
+        let vals: Vec<f64> = self
+            .util_samples
+            .iter()
+            .filter(|(_, m, _, _)| *m == model)
+            .map(|&(_, _, _, u)| u)
+            .collect();
+        if vals.is_empty() {
+            0.0
+        } else {
+            vals.iter().sum::<f64>() / vals.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut v = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&mut v, 50.0), 3.0);
+        assert_eq!(percentile(&mut v, 0.0), 1.0);
+        assert_eq!(percentile(&mut v, 100.0), 5.0);
+    }
+
+    #[test]
+    fn ledger_integrates_steps() {
+        let mut l = InstanceHourLedger::default();
+        l.record(0.0, 2);
+        l.record(3600.0, 4);
+        l.record(7200.0, 0);
+        // 2 inst × 1 h + 4 inst × 1 h = 6 instance-hours.
+        assert!((l.instance_hours(7200.0) - 6.0).abs() < 1e-9);
+        // Trailing segment extends to `end`.
+        l.record(7200.0, 1);
+        assert!((l.instance_hours(10_800.0) - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ledger_count_at() {
+        let mut l = InstanceHourLedger::default();
+        l.record(10.0, 3);
+        l.record(20.0, 5);
+        assert_eq!(l.count_at(5.0), 0);
+        assert_eq!(l.count_at(15.0), 3);
+        assert_eq!(l.count_at(25.0), 5);
+    }
+
+    #[test]
+    fn ledger_dedups_equal_counts() {
+        let mut l = InstanceHourLedger::default();
+        l.record(0.0, 2);
+        l.record(10.0, 2);
+        assert_eq!(l.points.len(), 1);
+    }
+
+    #[test]
+    fn sla_accounting() {
+        use crate::trace::types::AppKind;
+        let mut m = Metrics::default();
+        let req = Request {
+            id: 0,
+            arrival: 0.0,
+            model: ModelKind::Llama2_70B,
+            origin: Region::EastUs,
+            tier: Tier::IwF,
+            app: AppKind::Chat,
+            input_tokens: 100,
+            output_tokens: 10,
+        };
+        m.record_outcome(&req, Region::EastUs, 0.5, 2.0); // meets 1s TTFT
+        m.record_outcome(&req, Region::EastUs, 1.5, 3.0); // violates
+        let s = m.latency_by_tier(Tier::IwF);
+        assert_eq!(s.count, 2);
+        assert!((s.sla_violation_rate - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn waste_ledger_totals() {
+        let mut w = ScalingWasteLedger::default();
+        w.record("vm-provision", 600.0);
+        w.record("vm-provision", 600.0);
+        w.record("spot-reclaim", 60.0);
+        assert_eq!(w.total_events(), 3);
+        assert!((w.total_gpu_hours() - 1260.0 / 3600.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,219 @@
+//! Branch-and-bound integer programming over the simplex LP relaxation.
+//!
+//! Depth-first with best-incumbent pruning and most-fractional branching.
+//! The capacity problems this solves are small and near-integral (network
+//! structure), so the tree rarely exceeds a handful of nodes.
+
+use crate::opt::simplex::{solve, Cmp, LinProg, LpOutcome};
+
+/// An LP plus the set of variables required to be integral.
+#[derive(Debug, Clone)]
+pub struct IntLinProg {
+    pub lp: LinProg,
+    pub int_vars: Vec<usize>,
+}
+
+/// Search limits (defense against pathological instances).
+#[derive(Debug, Clone, Copy)]
+pub struct IlpLimits {
+    pub max_nodes: usize,
+    /// Relative optimality gap: a node is pruned when its relaxation
+    /// cannot beat the incumbent by more than `gap·|incumbent|` (the same
+    /// default class commercial MIP solvers use).
+    pub gap: f64,
+}
+
+impl Default for IlpLimits {
+    fn default() -> Self {
+        IlpLimits { max_nodes: 20_000, gap: 1e-4 }
+    }
+}
+
+const INT_TOL: f64 = 1e-6;
+
+/// Solve the ILP; returns (x, objective) or None if infeasible / node
+/// limit exhausted without an incumbent.
+pub fn solve_ilp(problem: &IntLinProg, limits: IlpLimits) -> Option<(Vec<f64>, f64)> {
+    // Each node = extra bound rows appended to the base LP.
+    let mut stack: Vec<Vec<(Vec<f64>, Cmp, f64)>> = vec![vec![]];
+    // Seed the incumbent by rounding the root relaxation *up* (covering
+    // structure ⇒ usually feasible) and re-solving with the integers
+    // pinned — one extra LP that prunes most of the tree.
+    let mut incumbent: Option<(Vec<f64>, f64)> = root_rounding_incumbent(problem);
+    let mut nodes = 0usize;
+
+    while let Some(extra) = stack.pop() {
+        nodes += 1;
+        if nodes > limits.max_nodes {
+            break;
+        }
+        let mut lp = problem.lp.clone();
+        lp.rows.extend(extra.iter().cloned());
+        let (x, obj) = match solve(&lp) {
+            LpOutcome::Optimal { x, obj } => (x, obj),
+            _ => continue, // infeasible or unbounded branch
+        };
+        if let Some((_, best)) = &incumbent {
+            let tol = (limits.gap * best.abs()).max(1e-9);
+            if obj >= *best - tol {
+                continue; // bound: can't meaningfully beat the incumbent
+            }
+        }
+        // Most-fractional branching variable.
+        let mut branch: Option<(usize, f64, f64)> = None; // (var, value, frac dist)
+        for &v in &problem.int_vars {
+            let frac = (x[v] - x[v].round()).abs();
+            if frac > INT_TOL {
+                let dist = (x[v].fract() - 0.5).abs();
+                match branch {
+                    None => branch = Some((v, x[v], dist)),
+                    Some((_, _, bd)) if dist < bd => branch = Some((v, x[v], dist)),
+                    _ => {}
+                }
+            }
+        }
+        match branch {
+            None => {
+                // Integral: round cleanly and accept as incumbent.
+                let mut xi = x;
+                for &v in &problem.int_vars {
+                    xi[v] = xi[v].round();
+                }
+                let obj = problem.lp.c.iter().zip(&xi).map(|(c, v)| c * v).sum();
+                match &incumbent {
+                    None => incumbent = Some((xi, obj)),
+                    Some((_, best)) if obj < *best => incumbent = Some((xi, obj)),
+                    _ => {}
+                }
+            }
+            Some((v, val, _)) => {
+                let mut unit = vec![0.0; problem.lp.n];
+                unit[v] = 1.0;
+                // x_v <= floor
+                let mut lo = extra.clone();
+                lo.push((unit.clone(), Cmp::Le, val.floor()));
+                // x_v >= ceil
+                let mut hi = extra;
+                hi.push((unit, Cmp::Ge, val.ceil()));
+                // DFS: push the branch nearer the LP value last (explored
+                // first) to find good incumbents early.
+                if val.fract() < 0.5 {
+                    stack.push(hi);
+                    stack.push(lo);
+                } else {
+                    stack.push(lo);
+                    stack.push(hi);
+                }
+            }
+        }
+    }
+    incumbent
+}
+
+/// Solve the root LP, round every integer variable up (ceil), and
+/// re-solve with them pinned.  For covering-style problems (all the
+/// capacity instances) the rounded point is feasible, giving B&B a strong
+/// initial bound at the cost of two LP solves.
+fn root_rounding_incumbent(problem: &IntLinProg) -> Option<(Vec<f64>, f64)> {
+    let root = match solve(&problem.lp) {
+        LpOutcome::Optimal { x, .. } => x,
+        _ => return None,
+    };
+    let mut lp = problem.lp.clone();
+    for &v in &problem.int_vars {
+        let mut unit = vec![0.0; lp.n];
+        unit[v] = 1.0;
+        lp.rows.push((unit, Cmp::Eq, root[v].ceil()));
+    }
+    match solve(&lp) {
+        LpOutcome::Optimal { x, obj } => Some((x, obj)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knapsack_like() {
+        // max 5a + 4b s.t. 6a + 4b <= 24, a + 2b <= 6, integer.
+        // LP optimum (3, 1.5) → -21; ILP optimum is a=4, b=0 → -20.
+        let p = IntLinProg {
+            lp: LinProg {
+                n: 2,
+                c: vec![-5.0, -4.0],
+                rows: vec![
+                    (vec![6.0, 4.0], Cmp::Le, 24.0),
+                    (vec![1.0, 2.0], Cmp::Le, 6.0),
+                ],
+            },
+            int_vars: vec![0, 1],
+        };
+        let (x, obj) = solve_ilp(&p, IlpLimits::default()).unwrap();
+        assert_eq!((x[0].round() as i64, x[1].round() as i64), (4, 0));
+        assert!((obj + 20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn already_integral_lp() {
+        let p = IntLinProg {
+            lp: LinProg {
+                n: 1,
+                c: vec![1.0],
+                rows: vec![(vec![1.0], Cmp::Ge, 3.0)],
+            },
+            int_vars: vec![0],
+        };
+        let (x, obj) = solve_ilp(&p, IlpLimits::default()).unwrap();
+        assert_eq!(x[0], 3.0);
+        assert!((obj - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fractional_lp_rounds_up_for_covering() {
+        // min x s.t. 3x >= 10 → LP 3.33, ILP 4.
+        let p = IntLinProg {
+            lp: LinProg {
+                n: 1,
+                c: vec![1.0],
+                rows: vec![(vec![3.0], Cmp::Ge, 10.0)],
+            },
+            int_vars: vec![0],
+        };
+        let (x, _) = solve_ilp(&p, IlpLimits::default()).unwrap();
+        assert_eq!(x[0], 4.0);
+    }
+
+    #[test]
+    fn infeasible_returns_none() {
+        let p = IntLinProg {
+            lp: LinProg {
+                n: 1,
+                c: vec![1.0],
+                rows: vec![
+                    (vec![1.0], Cmp::Le, 1.0),
+                    (vec![1.0], Cmp::Ge, 2.0),
+                ],
+            },
+            int_vars: vec![0],
+        };
+        assert!(solve_ilp(&p, IlpLimits::default()).is_none());
+    }
+
+    #[test]
+    fn mixed_integer_keeps_continuous_free() {
+        // min x + y s.t. x + y >= 2.5, x integer, y continuous.
+        let p = IntLinProg {
+            lp: LinProg {
+                n: 2,
+                c: vec![1.0, 1.0],
+                rows: vec![(vec![1.0, 1.0], Cmp::Ge, 2.5)],
+            },
+            int_vars: vec![0],
+        };
+        let (x, obj) = solve_ilp(&p, IlpLimits::default()).unwrap();
+        assert!((obj - 2.5).abs() < 1e-6);
+        assert!((x[0] - x[0].round()).abs() < 1e-9);
+    }
+}

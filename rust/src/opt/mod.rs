@@ -1,0 +1,17 @@
+//! The §5 optimization stack, built from scratch:
+//!
+//! * [`simplex`] — dense two-phase primal simplex with Bland's rule.
+//! * [`ilp`] — branch-and-bound integer programming on top of the LP
+//!   relaxation.
+//! * [`capacity`] — the SageServe instance-allocation problem: builds one
+//!   ILP per model (the formulation decouples across models — no
+//!   constraint in §5 couples different `i`) and returns the δ_{i,j,k}
+//!   instance-count changes.
+
+pub mod capacity;
+pub mod ilp;
+pub mod simplex;
+
+pub use capacity::{CapacityInputs, CapacityPlan, optimize_capacity};
+pub use ilp::{solve_ilp, IlpLimits, IntLinProg};
+pub use simplex::{Cmp, LinProg, LpOutcome};

@@ -1,0 +1,273 @@
+//! Performance model: SplitWise-style batch execution-time estimation
+//! per (model, GPU) — the simulator's analogue of the interpolation model
+//! the paper trains on real inference traces (§7.1, Fig 9).
+//!
+//! Two phases with distinct rooflines (per the SplitWise observation):
+//! * **prefill** — compute-bound: time ≈ overhead + tokens / prompt_tps.
+//! * **decode** — bandwidth-bound: per-iteration time grows with batch
+//!   size (weights re-read amortizes) and KV residency.
+//!
+//! Profiles are anchored to the numbers the paper publishes: Llama2-70B
+//! prompt TPS ≈ 21 000 on 8×H100 (Fig 9), instance input-TPS capacity
+//! quartiles of §2.1 (Llama2-70B 95–522 on H100, 68–293 on A100; Bloom
+//! 82–397 / 50–177), and A100 ≈ H100 / 1.8.  The KV-cache byte costs come
+//! from the published architectures (layers × kv-heads × head-dim).
+
+use crate::config::{GpuKind, ModelKind, Time};
+
+/// Static per-(model, GPU) performance profile.
+#[derive(Debug, Clone)]
+pub struct PerfProfile {
+    pub model: ModelKind,
+    pub gpu: GpuKind,
+    /// Prompt-phase throughput, tokens/sec for a saturated batch.
+    pub prompt_tps: f64,
+    /// Fixed per-batch prefill overhead (scheduling + kernel launch), sec.
+    pub prefill_overhead: Time,
+    /// Decode iteration base time (batch of 1), sec.
+    pub tbt_base: Time,
+    /// Decode iteration increment per concurrent sequence, sec.
+    pub tbt_per_seq: Time,
+    /// Decode iteration increment per MiB of resident KV, sec (captures
+    /// the bandwidth cost of attending over long contexts).
+    pub tbt_per_kv_mib: Time,
+    /// KV-cache bytes per token.
+    pub kv_bytes_per_token: u64,
+    /// Model weights resident size (GiB).
+    pub weights_gib: f64,
+    /// Max concurrent sequences (continuous-batching running cap).
+    pub max_batch: usize,
+    /// Published input-TPS capacity anchor (§2.1 quartiles) — kept for
+    /// reference/reporting; the ILP uses [`PerfProfile::input_tps_capacity`],
+    /// which is derived from this same batch-time model so that the
+    /// optimizer's instance counts match what the simulated instances can
+    /// actually sustain.
+    pub published_tps_anchor: f64,
+}
+
+/// Reference request used for capacity derivation (≈ the trace means:
+/// RAG-heavy inputs, sub-1k outputs).
+pub const REF_INPUT_TOKENS: u64 = 1_700;
+pub const REF_OUTPUT_TOKENS: u64 = 370;
+pub const REF_TOTAL_TOKENS: u64 = 3_000;
+
+/// Fraction of saturation throughput an instance is *planned* at (the
+/// queueing headroom that keeps p95 TTFT inside the SLA; ties the §5 θ to
+/// the ~60–70% utilization operating point of §4/§6).
+pub const CAPACITY_HEADROOM: f64 = 0.6;
+
+impl PerfProfile {
+    /// Look up the profile for a (model, GPU) pair.
+    pub fn get(model: ModelKind, gpu: GpuKind) -> PerfProfile {
+        // H100 anchors; A100 derates compute by 1.8× (paper's quartile
+        // ratios) and capacity accordingly.
+        let (prompt_tps, tbt_base, tbt_per_seq, kv_bytes, weights_gib, anchor) = match model {
+            // 70 layers × 14336 hidden × 2 (K+V) × 2 bytes ≈ 4.0 MiB/token.
+            ModelKind::Bloom176B => (9_000.0, 0.028, 0.0009, 4_014_080, 352.0, 397.0),
+            // GQA: 80 layers × 8 kv-heads × 128 dim × 2 × 2 ≈ 320 KiB/token.
+            ModelKind::Llama2_70B => (21_000.0, 0.020, 0.00055, 327_680, 140.0, 522.0),
+            // 32 layers × 8 × 128 × 2 × 2 = 128 KiB/token.
+            ModelKind::Llama31_8B => (120_000.0, 0.006, 0.00012, 131_072, 16.0, 3_000.0),
+            // 28 layers × 8 × 128 × 2 × 2 = 112 KiB/token.
+            ModelKind::Llama32_3B => (250_000.0, 0.004, 0.00008, 114_688, 6.0, 6_000.0),
+            // MoE: 109B params / 17B active — prompt throughput like a
+            // ~17B dense model, weights like a 109B one.
+            ModelKind::Llama4Scout => (80_000.0, 0.009, 0.00018, 196_608, 218.0, 2_200.0),
+            // The real PJRT-served model; profile measured by `serve`
+            // (Fig 9 experiment) — placeholders refined at runtime.
+            ModelKind::TinyLm => (40_000.0, 0.002, 0.0001, 16_384, 0.013, 10_000.0),
+        };
+        let derate = match gpu {
+            GpuKind::H100x8 => 1.0,
+            GpuKind::A100x8 => 1.8,
+        };
+        PerfProfile {
+            model,
+            gpu,
+            prompt_tps: prompt_tps / derate,
+            prefill_overhead: 0.015 * derate,
+            tbt_base: tbt_base * derate,
+            tbt_per_seq: tbt_per_seq * derate,
+            tbt_per_kv_mib: 2.0e-8 * derate,
+            kv_bytes_per_token: kv_bytes,
+            weights_gib,
+            max_batch: 64,
+            published_tps_anchor: anchor / derate,
+        }
+    }
+
+    /// The KV budget one instance *serves against* — the denominator of
+    /// the paper's effective-memory-utilization signal.  It is the HBM
+    /// capacity clipped to what the continuous-batching cap can actually
+    /// occupy, so utilization ≈ batch occupancy for small-KV models (where
+    /// compute saturates long before HBM) while staying genuinely
+    /// memory-bound for Bloom-class KV footprints.
+    pub fn serving_kv_budget(&self) -> u64 {
+        self.kv_capacity_tokens()
+            .min(self.max_batch as u64 * REF_TOTAL_TOKENS)
+    }
+
+    /// Concurrency at a full serving budget.
+    pub fn max_concurrency(&self) -> usize {
+        ((self.serving_kv_budget() / REF_TOTAL_TOKENS) as usize)
+            .clamp(1, self.max_batch)
+    }
+
+    /// Saturation throughput in *input* TPS for the reference request mix
+    /// (steady-state continuous batching at the full concurrency).
+    pub fn saturation_input_tps(&self) -> f64 {
+        let b = self.max_concurrency();
+        // Average resident KV ≈ half the reservation over a request's life.
+        let kv = b as u64 * REF_TOTAL_TOKENS / 2;
+        let per_req = self.prefill_time(REF_INPUT_TOKENS)
+            + REF_OUTPUT_TOKENS as f64 * self.decode_iter_time(b, kv);
+        (b as f64 / per_req) * REF_INPUT_TOKENS as f64
+    }
+
+    /// θ of §5: the input TPS one instance is planned at — saturation
+    /// derated by the SLA headroom.  Derived from the same batch-time
+    /// model the simulator executes, so ILP allocations and simulated
+    /// behaviour are self-consistent.
+    pub fn input_tps_capacity(&self) -> f64 {
+        CAPACITY_HEADROOM * self.saturation_input_tps()
+    }
+
+    /// KV capacity of one instance in tokens.
+    pub fn kv_capacity_tokens(&self) -> u64 {
+        let free_gib = (self.gpu.hbm_gib() - self.weights_gib).max(1.0);
+        (free_gib * (1u64 << 30) as f64 / self.kv_bytes_per_token as f64) as u64
+    }
+
+    /// Prefill time for a batch with `tokens` total prompt tokens.
+    pub fn prefill_time(&self, tokens: u64) -> Time {
+        if tokens == 0 {
+            return 0.0;
+        }
+        self.prefill_overhead + tokens as f64 / self.prompt_tps
+    }
+
+    /// One decode iteration for `batch` sequences with `kv_tokens` total
+    /// resident KV tokens.
+    pub fn decode_iter_time(&self, batch: usize, kv_tokens: u64) -> Time {
+        if batch == 0 {
+            return 0.0;
+        }
+        let kv_mib = kv_tokens as f64 * self.kv_bytes_per_token as f64 / (1u64 << 20) as f64;
+        self.tbt_base + self.tbt_per_seq * batch as f64 + self.tbt_per_kv_mib * kv_mib
+    }
+
+    /// Analytic end-to-end estimate for a single request at a given batch
+    /// level (used by tests and the Fig 9 fidelity study).
+    pub fn request_time(&self, input: u32, output: u32, batch: usize, kv_tokens: u64) -> Time {
+        self.prefill_time(input as u64)
+            + output as f64 * self.decode_iter_time(batch.max(1), kv_tokens)
+    }
+}
+
+/// Profile table for a simulation run (one GPU SKU per run — the paper
+/// assumes homogeneous hardware per experiment, §7.1).
+#[derive(Debug, Clone)]
+pub struct PerfTable {
+    pub gpu: GpuKind,
+    profiles: Vec<PerfProfile>,
+}
+
+impl PerfTable {
+    pub fn new(gpu: GpuKind, models: &[ModelKind]) -> Self {
+        let profiles = models.iter().map(|&m| PerfProfile::get(m, gpu)).collect();
+        PerfTable { gpu, profiles }
+    }
+
+    pub fn profile(&self, model: ModelKind) -> &PerfProfile {
+        self.profiles
+            .iter()
+            .find(|p| p.model == model)
+            .unwrap_or_else(|| panic!("no profile for {model}"))
+    }
+
+    pub fn models(&self) -> impl Iterator<Item = ModelKind> + '_ {
+        self.profiles.iter().map(|p| p.model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama2_h100_prompt_tps_matches_fig9() {
+        let p = PerfProfile::get(ModelKind::Llama2_70B, GpuKind::H100x8);
+        assert_eq!(p.prompt_tps, 21_000.0);
+        // 21k tokens of prompt ≈ 1 s + overhead.
+        let t = p.prefill_time(21_000);
+        assert!((t - 1.015).abs() < 1e-9);
+    }
+
+    #[test]
+    fn a100_derates_by_1_8() {
+        let h = PerfProfile::get(ModelKind::Llama2_70B, GpuKind::H100x8);
+        let a = PerfProfile::get(ModelKind::Llama2_70B, GpuKind::A100x8);
+        assert!((h.prompt_tps / a.prompt_tps - 1.8).abs() < 1e-9);
+        assert!(a.input_tps_capacity() < h.input_tps_capacity());
+        // Paper anchors: Llama2-70B Q3 ≈ 293 on A100 vs 522 on H100.
+        assert!((a.published_tps_anchor - 290.0).abs() < 10.0);
+    }
+
+    #[test]
+    fn derived_capacity_consistent_with_batch_model() {
+        // θ must equal headroom × saturation, and the instance must be
+        // able to serve θ with slack: serving the reference mix at θ
+        // implies concurrency below the max.
+        let p = PerfProfile::get(ModelKind::Llama2_70B, GpuKind::H100x8);
+        let theta = p.input_tps_capacity();
+        let sat = p.saturation_input_tps();
+        assert!((theta / sat - CAPACITY_HEADROOM).abs() < 1e-12);
+        assert!(theta > 100.0, "theta {theta}");
+        // Bloom is memory-bound: its budget is HBM-limited.
+        let b = PerfProfile::get(ModelKind::Bloom176B, GpuKind::A100x8);
+        assert!(b.serving_kv_budget() == b.kv_capacity_tokens());
+        // Llama's serving budget is batch-cap-limited, not HBM-limited.
+        assert!(p.serving_kv_budget() < p.kv_capacity_tokens());
+    }
+
+    #[test]
+    fn decode_time_grows_with_batch_and_kv() {
+        let p = PerfProfile::get(ModelKind::Llama2_70B, GpuKind::H100x8);
+        let t1 = p.decode_iter_time(1, 1_000);
+        let t32 = p.decode_iter_time(32, 1_000);
+        let t32kv = p.decode_iter_time(32, 1_000_000);
+        assert!(t1 < t32 && t32 < t32kv);
+    }
+
+    #[test]
+    fn bloom_kv_heavier_than_llama() {
+        let b = PerfProfile::get(ModelKind::Bloom176B, GpuKind::A100x8);
+        let l = PerfProfile::get(ModelKind::Llama2_70B, GpuKind::A100x8);
+        assert!(b.kv_bytes_per_token > 10 * l.kv_bytes_per_token);
+        assert!(b.kv_capacity_tokens() < l.kv_capacity_tokens());
+    }
+
+    #[test]
+    fn kv_capacity_positive_for_all_pairs() {
+        for m in ModelKind::EVAL5 {
+            for g in [GpuKind::H100x8, GpuKind::A100x8] {
+                let p = PerfProfile::get(m, g);
+                assert!(p.kv_capacity_tokens() > 10_000, "{m} on {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_cases() {
+        let p = PerfProfile::get(ModelKind::Llama31_8B, GpuKind::H100x8);
+        assert_eq!(p.prefill_time(0), 0.0);
+        assert_eq!(p.decode_iter_time(0, 0), 0.0);
+    }
+
+    #[test]
+    fn table_lookup() {
+        let t = PerfTable::new(GpuKind::H100x8, &ModelKind::EVAL4);
+        assert_eq!(t.profile(ModelKind::Bloom176B).model, ModelKind::Bloom176B);
+        assert_eq!(t.models().count(), 4);
+    }
+}

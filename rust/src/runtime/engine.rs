@@ -1,0 +1,83 @@
+//! Generic PJRT engine: one CPU client + a cache of compiled executables.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A PJRT client plus compiled-executable cache, keyed by artifact path.
+///
+/// Compilation happens once per artifact (at load, not on the hot path);
+/// `execute` is the only per-request call.
+pub struct Engine {
+    client: xla::PjRtClient,
+    executables: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Engine { client, executables: HashMap::new() })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it (cached by path).
+    pub fn load_hlo_text(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref().to_path_buf();
+        if self.executables.contains_key(&path) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))
+            .context("HLO text artifacts are produced by `make artifacts`")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        self.executables.insert(path, exe);
+        Ok(())
+    }
+
+    /// Execute a loaded artifact.  jax lowers with `return_tuple=True`, so
+    /// the single output is a tuple literal; this unpacks it into its
+    /// elements.
+    pub fn execute<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        path: impl AsRef<Path>,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(path.as_ref())
+            .ok_or_else(|| anyhow!("artifact not loaded: {}", path.as_ref().display()))?;
+        let result = exe
+            .execute::<L>(args)
+            .map_err(|e| anyhow!("execute {}: {e:?}", path.as_ref().display()))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("decompose tuple: {e:?}"))
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {:?} != data len {}", dims, data.len());
+    let lit = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims_i64).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {:?} != data len {}", dims, data.len());
+    let lit = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims_i64).map_err(|e| anyhow!("reshape: {e:?}"))
+}

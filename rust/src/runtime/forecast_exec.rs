@@ -1,0 +1,73 @@
+//! The hourly load-forecast executable (Layer 2 graph + Layer 1 kernel).
+//!
+//! `forecast.hlo.txt` maps a `[S, T]` trailing TPS history to a `[S, H]`
+//! forecast, where S = n_models × n_regions series at 15-minute resolution.
+//! The Autoscaler calls this once per control epoch — never per request.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+use super::engine::{literal_f32, Engine};
+use crate::util::json::Json;
+
+/// Shape constants mirrored from `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ForecastShape {
+    pub n_series: usize,
+    pub history: usize,
+    pub season: usize,
+    pub order: usize,
+    pub horizon: usize,
+}
+
+impl ForecastShape {
+    pub fn from_json(j: &Json) -> Result<ForecastShape> {
+        let u = |k: &str| -> Result<usize> {
+            j.req(k)?.as_usize().ok_or_else(|| anyhow!("field '{k}' not a number"))
+        };
+        Ok(ForecastShape {
+            n_series: u("n_series")?,
+            history: u("history")?,
+            season: u("season")?,
+            order: u("order")?,
+            horizon: u("horizon")?,
+        })
+    }
+}
+
+/// The compiled forecast graph.
+pub struct ForecastExecutable {
+    pub shape: ForecastShape,
+    engine: Engine,
+    path: PathBuf,
+}
+
+impl ForecastExecutable {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .context("open manifest.json (run `make artifacts`)")?;
+        let manifest = Json::parse(&text).context("parse manifest.json")?;
+        let shape = ForecastShape::from_json(manifest.req("forecast")?)?;
+        let mut engine = Engine::cpu()?;
+        let path = dir.join("forecast.hlo.txt");
+        engine.load_hlo_text(&path)?;
+        Ok(ForecastExecutable { shape, engine, path })
+    }
+
+    /// Forecast the next `horizon` steps for all series.
+    ///
+    /// `history` is row-major `[n_series, history]`, time ascending (newest
+    /// last).  Returns row-major `[n_series, horizon]`, clamped at >= 0 by
+    /// the graph.
+    pub fn forecast(&self, history: &[f32]) -> Result<Vec<f32>> {
+        let (s, t) = (self.shape.n_series, self.shape.history);
+        anyhow::ensure!(history.len() == s * t, "history must be [{s}, {t}]");
+        let lit = literal_f32(history, &[s, t])?;
+        let out = self.engine.execute(&self.path, &[lit])?;
+        anyhow::ensure!(out.len() == 1, "forecast returned {} outputs", out.len());
+        let vals = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        anyhow::ensure!(vals.len() == s * self.shape.horizon, "bad forecast size");
+        Ok(vals)
+    }
+}

@@ -1,0 +1,22 @@
+//! PJRT runtime: load and execute the AOT artifacts from Rust.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.  HLO
+//! *text* is the interchange format (jax ≥ 0.5 emits 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects in proto form; the text parser reassigns
+//! ids).  See `/opt/xla-example/README.md`.
+//!
+//! Submodules:
+//! * [`engine`] — generic executable cache around one PJRT client.
+//! * [`tinylm`] — the served transformer: weights blob + manifest loading,
+//!   prefill/decode execution.
+//! * [`forecast_exec`] — the hourly load-forecast executable.
+
+pub mod engine;
+pub mod forecast_exec;
+pub mod selftest;
+pub mod tinylm;
+
+pub use engine::Engine;
+pub use forecast_exec::ForecastExecutable;
+pub use tinylm::{TinyLm, TinyLmConfig};

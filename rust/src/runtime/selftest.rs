@@ -1,0 +1,124 @@
+//! Golden-output verification for the PJRT round trip.
+//!
+//! `python/compile/aot.py` runs the jitted jax graphs on fixed inputs and
+//! records samples in `artifacts/selftest.json`; this module executes the
+//! HLO artifacts on the same inputs through the Rust runtime and asserts
+//! the numbers match — proving the AOT bridge (HLO text, weight blob,
+//! argument ordering) is lossless end-to-end.
+
+use anyhow::{Context, Result};
+
+use crate::runtime::forecast_exec::ForecastExecutable;
+use crate::runtime::tinylm::TinyLm;
+use crate::util::json::Json;
+
+/// Maximum |a-b| tolerated between jax and PJRT-on-rust (both f32).
+const ATOL: f32 = 2e-3;
+
+pub fn run(artifacts_dir: &str) -> Result<()> {
+    let dir = std::path::Path::new(artifacts_dir);
+    let text = std::fs::read_to_string(dir.join("selftest.json"))
+        .context("open selftest.json (run `make artifacts`)")?;
+    let golden = Json::parse(&text)?;
+
+    // ---- tinylm prefill + greedy decode step ----
+    let model = TinyLm::load(dir)?;
+    let (b, s, vocab) = (model.cfg.batch, model.cfg.prefill_len, model.cfg.vocab);
+    let tokens: Vec<i32> = golden
+        .req("prefill_tokens")?
+        .as_f64_vec()
+        .context("prefill_tokens")?
+        .into_iter()
+        .map(|v| v as i32)
+        .collect();
+    anyhow::ensure!(tokens.len() == b * s, "token fixture shape");
+    let pre = model.prefill(&tokens)?;
+
+    let expect_head: Vec<f32> = golden
+        .req("prefill_last_logits_head")?
+        .as_f64_vec()
+        .context("logits head")?
+        .into_iter()
+        .map(|v| v as f32)
+        .collect();
+    let mut max_err = 0.0f32;
+    for lane in 0..b {
+        for k in 0..8 {
+            let got = pre.logits[(lane * s + (s - 1)) * vocab + k];
+            let want = expect_head[lane * 8 + k];
+            max_err = max_err.max((got - want).abs());
+        }
+    }
+    anyhow::ensure!(max_err < ATOL, "prefill logits diverge: max err {max_err}");
+    println!("prefill OK (max logit err {max_err:.2e})");
+
+    let greedy: Vec<i32> = golden
+        .req("greedy_next")?
+        .as_f64_vec()
+        .context("greedy_next")?
+        .into_iter()
+        .map(|v| v as i32)
+        .collect();
+    let mut got_greedy = Vec::with_capacity(b);
+    for lane in 0..b {
+        let row = &pre.logits[(lane * s + (s - 1)) * vocab..(lane * s + s) * vocab];
+        let mut best = 0;
+        let mut best_v = f32::NEG_INFINITY;
+        for (i, &v) in row.iter().enumerate() {
+            if v > best_v {
+                best_v = v;
+                best = i as i32;
+            }
+        }
+        got_greedy.push(best);
+    }
+    anyhow::ensure!(got_greedy == greedy, "greedy tokens diverge: {got_greedy:?} vs {greedy:?}");
+    println!("greedy continuation OK ({greedy:?})");
+
+    let pos = vec![s as i32; b];
+    let dec = model.decode(&greedy, &pos, &pre.cache)?;
+    let expect_dec: Vec<f32> = golden
+        .req("decode_logits_head")?
+        .as_f64_vec()
+        .context("decode head")?
+        .into_iter()
+        .map(|v| v as f32)
+        .collect();
+    let mut max_err = 0.0f32;
+    for lane in 0..b {
+        for k in 0..8 {
+            let got = dec.logits[lane * vocab + k];
+            let want = expect_dec[lane * 8 + k];
+            max_err = max_err.max((got - want).abs());
+        }
+    }
+    anyhow::ensure!(max_err < ATOL, "decode logits diverge: max err {max_err}");
+    println!("decode step OK (max logit err {max_err:.2e})");
+
+    // ---- forecast graph ----
+    let exe = ForecastExecutable::load(dir)?;
+    let hist: Vec<f32> = golden
+        .req("forecast_history")?
+        .as_f64_vec()
+        .context("forecast history")?
+        .into_iter()
+        .map(|v| v as f32)
+        .collect();
+    let expect: Vec<f32> = golden
+        .req("forecast_out")?
+        .as_f64_vec()
+        .context("forecast out")?
+        .into_iter()
+        .map(|v| v as f32)
+        .collect();
+    let got = exe.forecast(&hist)?;
+    anyhow::ensure!(got.len() == expect.len(), "forecast shape");
+    let mut max_rel = 0.0f32;
+    for (g, w) in got.iter().zip(&expect) {
+        max_rel = max_rel.max((g - w).abs() / w.abs().max(1.0));
+    }
+    anyhow::ensure!(max_rel < 1e-3, "forecast diverges: max rel err {max_rel}");
+    println!("forecast OK (max rel err {max_rel:.2e})");
+    println!("selftest PASSED — jax and rust-PJRT agree on all artifacts");
+    Ok(())
+}

@@ -1,0 +1,256 @@
+//! The served model: load the tinylm manifest/weights and run
+//! prefill/decode through PJRT.
+//!
+//! The Layer-2 graph takes its parameters as runtime inputs (not HLO
+//! constants) so the HLO text stays small; jax flattens the params dict in
+//! sorted-key order, which the manifest records as `hlo_param_order`.  This
+//! loader replays exactly that ordering.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+use super::engine::{literal_f32, literal_i32, Engine};
+use crate::util::json::Json;
+
+/// Architecture/shape constants mirrored from `manifest.json` (fixed at
+/// AOT time by `python/compile/aot.py`).
+#[derive(Debug, Clone)]
+pub struct TinyLmConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_len: usize,
+    pub batch: usize,
+    pub prefill_len: usize,
+    pub head_dim: usize,
+    pub seed: u64,
+    pub params: Vec<ParamEntry>,
+    pub hlo_param_order: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TinyLmConfig {
+    /// Parse the `tinylm` section of `manifest.json`.
+    pub fn from_json(j: &Json) -> Result<TinyLmConfig> {
+        let u = |k: &str| -> Result<usize> {
+            j.req(k)?.as_usize().ok_or_else(|| anyhow!("field '{k}' not a number"))
+        };
+        let params = j
+            .req("params")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("params not an array"))?
+            .iter()
+            .map(|e| {
+                Ok(ParamEntry {
+                    name: e.req("name")?.as_str().unwrap_or_default().to_string(),
+                    shape: e
+                        .req("shape")?
+                        .as_f64_vec()
+                        .ok_or_else(|| anyhow!("bad shape"))?
+                        .into_iter()
+                        .map(|v| v as usize)
+                        .collect(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let hlo_param_order = j
+            .req("hlo_param_order")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("hlo_param_order not an array"))?
+            .iter()
+            .map(|e| e.as_str().unwrap_or_default().to_string())
+            .collect();
+        Ok(TinyLmConfig {
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            d_ff: u("d_ff")?,
+            max_len: u("max_len")?,
+            batch: u("batch")?,
+            prefill_len: u("prefill_len")?,
+            head_dim: u("head_dim")?,
+            seed: u("seed")? as u64,
+            params,
+            hlo_param_order,
+        })
+    }
+}
+
+/// KV cache state for one serving batch: `[L, B*H, M, dh]` buffers.
+pub struct KvCache {
+    pub k: xla::Literal,
+    pub v: xla::Literal,
+}
+
+/// Prefill output: per-position logits plus the populated cache.
+pub struct PrefillOut {
+    /// `[B, S, vocab]` logits, flattened row-major.
+    pub logits: Vec<f32>,
+    pub cache: KvCache,
+}
+
+/// Decode output: next-token logits plus the updated cache.
+pub struct DecodeOut {
+    /// `[B, vocab]` logits, flattened row-major.
+    pub logits: Vec<f32>,
+    pub cache: KvCache,
+}
+
+/// The AOT-compiled transformer: weights pinned as literals, prefill and
+/// decode executables compiled once.
+pub struct TinyLm {
+    pub cfg: TinyLmConfig,
+    engine: Engine,
+    prefill_path: PathBuf,
+    decode_path: PathBuf,
+    /// Parameter literals in HLO argument order (sorted by name).
+    weights: Vec<xla::Literal>,
+}
+
+impl TinyLm {
+    /// Load manifest, weights blob and both HLO artifacts from
+    /// `artifacts/`.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        Self::load_inner(artifacts_dir.as_ref(), None)
+    }
+
+    /// Load a (prefill_len, max_len) shape variant exported for the Fig 9
+    /// fidelity study.  Shares the base weights; only the HLO differs.
+    pub fn load_variant(
+        artifacts_dir: impl AsRef<Path>,
+        prefill_len: usize,
+        max_len: usize,
+    ) -> Result<Self> {
+        Self::load_inner(artifacts_dir.as_ref(), Some((prefill_len, max_len)))
+    }
+
+    fn load_inner(dir: &Path, variant: Option<(usize, usize)>) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("open {} (run `make artifacts`)", manifest_path.display()))?;
+        let manifest = Json::parse(&text).context("parse manifest.json")?;
+        let mut cfg = TinyLmConfig::from_json(manifest.req("tinylm")?)?;
+        if let Some((s, m)) = variant {
+            cfg.prefill_len = s;
+            cfg.max_len = m;
+        }
+
+        // Weights blob: flat little-endian f32 in *manifest* order; the HLO
+        // executable wants them in *sorted-name* order.
+        let blob_path = dir.join("tinylm_params.bin");
+        let mut raw = Vec::new();
+        std::fs::File::open(&blob_path)
+            .with_context(|| format!("open {}", blob_path.display()))?
+            .read_to_end(&mut raw)?;
+        let mut by_name: HashMap<&str, xla::Literal> = HashMap::new();
+        let mut offset = 0usize;
+        for entry in &cfg.params {
+            let n: usize = entry.shape.iter().product();
+            let bytes = n * 4;
+            anyhow::ensure!(offset + bytes <= raw.len(), "weights blob truncated at {}", entry.name);
+            let mut vals = vec![0f32; n];
+            for (i, chunk) in raw[offset..offset + bytes].chunks_exact(4).enumerate() {
+                vals[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            }
+            by_name.insert(entry.name.as_str(), literal_f32(&vals, &entry.shape)?);
+            offset += bytes;
+        }
+        anyhow::ensure!(offset == raw.len(), "weights blob has {} trailing bytes", raw.len() - offset);
+
+        let mut weights = Vec::with_capacity(cfg.hlo_param_order.len());
+        for name in &cfg.hlo_param_order {
+            let lit = by_name
+                .remove(name.as_str())
+                .ok_or_else(|| anyhow!("manifest missing param {name}"))?;
+            weights.push(lit);
+        }
+
+        let mut engine = Engine::cpu()?;
+        let (prefill_path, decode_path) = match variant {
+            None => (dir.join("tinylm_prefill.hlo.txt"), dir.join("tinylm_decode.hlo.txt")),
+            Some((s, m)) => (
+                dir.join(format!("tinylm_prefill_s{s}_m{m}.hlo.txt")),
+                dir.join(format!("tinylm_decode_s{s}_m{m}.hlo.txt")),
+            ),
+        };
+        engine.load_hlo_text(&prefill_path)?;
+        engine.load_hlo_text(&decode_path)?;
+        Ok(TinyLm { cfg, engine, prefill_path, decode_path, weights })
+    }
+
+    fn cache_dims(&self) -> [usize; 4] {
+        [
+            self.cfg.n_layers,
+            self.cfg.batch * self.cfg.n_heads,
+            self.cfg.max_len,
+            self.cfg.head_dim,
+        ]
+    }
+
+    /// Run prefill over a `[B, S]` token batch (right-padded with zeros).
+    pub fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut> {
+        let (b, s) = (self.cfg.batch, self.cfg.prefill_len);
+        anyhow::ensure!(tokens.len() == b * s, "tokens must be [{b}, {s}]");
+        let tok_lit = literal_i32(tokens, &[b, s])?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(self.weights.len() + 1);
+        args.extend(self.weights.iter());
+        args.push(&tok_lit);
+        let mut out = self.engine.execute(&self.prefill_path, &args)?;
+        anyhow::ensure!(out.len() == 3, "prefill returned {} outputs", out.len());
+        let v = out.pop().unwrap();
+        let k = out.pop().unwrap();
+        let logits = out.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        anyhow::ensure!(logits.len() == b * s * self.cfg.vocab, "bad logits size");
+        Ok(PrefillOut { logits, cache: KvCache { k, v } })
+    }
+
+    /// Run one decode step: token `token[i]` is written at `pos[i]` and the
+    /// model predicts position `pos[i] + 1` for every lane.
+    pub fn decode(&self, token: &[i32], pos: &[i32], cache: &KvCache) -> Result<DecodeOut> {
+        let b = self.cfg.batch;
+        anyhow::ensure!(token.len() == b && pos.len() == b, "token/pos must be [{b}]");
+        let dims = self.cache_dims();
+        for p in pos {
+            anyhow::ensure!((*p as usize) < dims[2], "pos {p} out of cache range");
+        }
+        let tok_lit = literal_i32(token, &[b])?;
+        let pos_lit = literal_i32(pos, &[b])?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(self.weights.len() + 4);
+        args.extend(self.weights.iter());
+        args.push(&tok_lit);
+        args.push(&pos_lit);
+        args.push(&cache.k);
+        args.push(&cache.v);
+        let mut out = self.engine.execute(&self.decode_path, &args)?;
+        anyhow::ensure!(out.len() == 3, "decode returned {} outputs", out.len());
+        let v = out.pop().unwrap();
+        let k = out.pop().unwrap();
+        let logits = out.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        anyhow::ensure!(logits.len() == b * self.cfg.vocab, "bad logits size");
+        Ok(DecodeOut { logits, cache: KvCache { k, v } })
+    }
+
+    /// Greedy next token per lane from `[B, vocab]` logits.
+    pub fn argmax(&self, logits: &[f32]) -> Vec<i32> {
+        logits
+            .chunks_exact(self.cfg.vocab)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}

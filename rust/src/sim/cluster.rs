@@ -1,0 +1,453 @@
+//! Cluster substrate: regions, model endpoints, VM budgets, the spot pool
+//! and provisioning delays (§2.3).
+//!
+//! Scale-out sources, fastest first (§6.4):
+//! 1. a spot instance already hosting the same model type (≈1 min),
+//! 2. a spot instance of another model type — weights must be redeployed
+//!    (≈10 min local),
+//! 3. a fresh VM from the regional budget (≈10 min local; 2 h if the
+//!    weights are not in the region's repository).
+//!
+//! Scale-in drains the least-loaded instance and donates it to the spot
+//! pool (§2.3: a lost-opportunity sink that SageServe tries to shrink).
+
+use std::collections::BTreeMap;
+
+use crate::config::{ModelKind, Region, ScalingParams, Time};
+use crate::metrics::Metrics;
+use crate::perf::PerfTable;
+use crate::sim::instance::{InstState, InstanceSim};
+
+pub type InstanceId = usize;
+
+/// Which workload pool an instance belongs to.  `Unified` strategies use
+/// one pool; the Siloed baseline splits IW/NIW (§4); Chiron uses its
+/// interactive/mixed/batch trio [34].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum PoolTag {
+    Unified,
+    SiloIw,
+    SiloNiw,
+    ChironInteractive,
+    ChironMixed,
+    ChironBatch,
+}
+
+impl PoolTag {
+    /// May this pool serve interactive requests?
+    pub fn serves_iw(self) -> bool {
+        !matches!(self, PoolTag::SiloNiw | PoolTag::ChironBatch)
+    }
+
+    /// May this pool serve non-interactive requests?
+    pub fn serves_niw(self) -> bool {
+        !matches!(self, PoolTag::SiloIw | PoolTag::ChironInteractive)
+    }
+}
+
+/// Per-(model, region) endpoint bookkeeping.
+#[derive(Debug, Default, Clone)]
+pub struct Endpoint {
+    /// Instances allocated to this endpoint (any state except Spot).
+    pub instances: Vec<InstanceId>,
+    /// Last reactive scaling event (cooldown enforcement).
+    pub last_scale: Time,
+    /// LT-U / LT-UA deferred target from the last control epoch.
+    pub target: Option<usize>,
+    /// Forecast max TPS for the current hour (LT-UA gap checks).
+    pub forecast_tps: f64,
+}
+
+/// The multi-region cluster state.
+pub struct Cluster {
+    pub instances: Vec<InstanceSim>,
+    pub endpoints: BTreeMap<(ModelKind, Region), Endpoint>,
+    /// Donated instances per region (still hosting their last model).
+    pub spot_pool: BTreeMap<Region, Vec<InstanceId>>,
+    /// Remaining un-allocated VMs per region.
+    pub vm_budget: [usize; 3],
+    /// Models whose weights are present in each region's repository
+    /// (missing ⇒ 2 h remote redeploy).
+    pub local_weights: BTreeMap<Region, Vec<ModelKind>>,
+    pub perf: PerfTable,
+    pub params: ScalingParams,
+}
+
+impl Cluster {
+    /// Build a cluster with `initial_per_endpoint` active instances per
+    /// (model, region) pool tag, plus `vm_budget_per_region` spare VMs.
+    pub fn new(
+        models: &[ModelKind],
+        perf: PerfTable,
+        params: ScalingParams,
+        pools: &[(PoolTag, usize)],
+        vm_budget_per_region: usize,
+    ) -> Self {
+        let mut cluster = Cluster {
+            instances: Vec::new(),
+            endpoints: BTreeMap::new(),
+            spot_pool: Region::ALL.iter().map(|&r| (r, Vec::new())).collect(),
+            vm_budget: [vm_budget_per_region; 3],
+            local_weights: Region::ALL.iter().map(|&r| (r, models.to_vec())).collect(),
+            perf,
+            params,
+        };
+        for &model in models {
+            for region in Region::ALL {
+                cluster.endpoints.insert((model, region), Endpoint::default());
+                for &(pool, count) in pools {
+                    for _ in 0..count {
+                        cluster.spawn_instance(model, region, pool, InstState::Active);
+                    }
+                }
+            }
+        }
+        cluster
+    }
+
+    fn spawn_instance(
+        &mut self,
+        model: ModelKind,
+        region: Region,
+        pool: PoolTag,
+        state: InstState,
+    ) -> InstanceId {
+        let id = self.instances.len();
+        let kv_cap = self.perf.profile(model).serving_kv_budget();
+        self.instances
+            .push(InstanceSim::new(id, model, region, pool, state, kv_cap));
+        self.endpoints.get_mut(&(model, region)).unwrap().instances.push(id);
+        id
+    }
+
+    /// Active (serving) instance ids for an endpoint.
+    pub fn active_instances(&self, model: ModelKind, region: Region) -> Vec<InstanceId> {
+        self.endpoints
+            .get(&(model, region))
+            .map(|e| {
+                e.instances
+                    .iter()
+                    .copied()
+                    .filter(|&i| self.instances[i].state == InstState::Active)
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Allocated instance count (provisioning + active + draining) — what
+    /// the instance-hour ledgers integrate.
+    pub fn allocated_count(&self, model: ModelKind, region: Region) -> usize {
+        self.endpoints.get(&(model, region)).map(|e| e.instances.len()).unwrap_or(0)
+    }
+
+    /// Effective memory utilization across active instances (§6.1).
+    pub fn effective_util(&self, model: ModelKind, region: Region) -> f64 {
+        let mut used = 0u64;
+        let mut cap = 0u64;
+        for &i in &self.endpoints[&(model, region)].instances {
+            let inst = &self.instances[i];
+            if inst.state == InstState::Active {
+                used += inst.kv_used;
+                cap += inst.kv_capacity;
+            }
+        }
+        if cap == 0 {
+            1.0 // no serving capacity ⇒ saturated for routing purposes
+        } else {
+            used as f64 / cap as f64
+        }
+    }
+
+    /// Effective utilization counting queued-but-unadmitted work too —
+    /// the signal the Queue Manager drains against, so a release loop
+    /// sees its own effect immediately (§6.2).
+    pub fn effective_util_with_waiting(&self, model: ModelKind, region: Region) -> f64 {
+        let mut used = 0u64;
+        let mut cap = 0u64;
+        for &i in &self.endpoints[&(model, region)].instances {
+            let inst = &self.instances[i];
+            if inst.state == InstState::Active {
+                used += inst.kv_used;
+                used += inst.waiting_tokens();
+                cap += inst.kv_capacity;
+            }
+        }
+        if cap == 0 {
+            1.0
+        } else {
+            used as f64 / cap as f64
+        }
+    }
+
+    /// Waiting + running tokens across an endpoint (backpressure signal).
+    pub fn pending_tokens(&self, model: ModelKind, region: Region) -> u64 {
+        self.endpoints[&(model, region)]
+            .instances
+            .iter()
+            .map(|&i| self.instances[i].pending_tokens())
+            .sum()
+    }
+
+    /// Scale out one instance, choosing the fastest source (§6.4).
+    /// Returns `(instance id, ready time)`; records provisioning waste.
+    pub fn scale_out(
+        &mut self,
+        model: ModelKind,
+        region: Region,
+        pool: PoolTag,
+        now: Time,
+        metrics: &mut Metrics,
+    ) -> Option<(InstanceId, Time)> {
+        if self.allocated_count(model, region) >= self.params.max_instances {
+            return None;
+        }
+        // 1. same-model spot instance in this region.
+        let spot = self.spot_pool.get_mut(&region).unwrap();
+        if let Some(pos) = spot.iter().position(|&i| self.instances[i].model == model) {
+            let id = spot.remove(pos);
+            let ready = now + self.params.spot_reclaim_secs;
+            metrics.scaling_waste.record("spot-same-model", self.params.spot_reclaim_secs);
+            self.reassign(id, model, region, pool, ready);
+            return Some((id, ready));
+        }
+        // 2. cross-model spot instance (weights redeploy).
+        if let Some(pos) = {
+            let spot = &self.spot_pool[&region];
+            spot.iter().position(|&i| self.instances[i].model != model)
+        } {
+            let id = self.spot_pool.get_mut(&region).unwrap().remove(pos);
+            let old_model = self.instances[id].model;
+            let ready = now + self.params.local_redeploy_secs;
+            metrics
+                .scaling_waste
+                .record("spot-cross-model", self.params.local_redeploy_secs);
+            // Remove from the old endpoint's roster if still listed.
+            if let Some(ep) = self.endpoints.get_mut(&(old_model, region)) {
+                ep.instances.retain(|&x| x != id);
+            }
+            self.reassign(id, model, region, pool, ready);
+            return Some((id, ready));
+        }
+        // 3. fresh VM from the regional budget.
+        if self.vm_budget[region.index()] > 0 {
+            self.vm_budget[region.index()] -= 1;
+            let local = self.local_weights[&region].contains(&model);
+            let delay = if local {
+                self.params.local_redeploy_secs
+            } else {
+                self.params.remote_redeploy_secs
+            };
+            metrics.scaling_waste.record(
+                if local { "vm-local-deploy" } else { "vm-remote-deploy" },
+                delay,
+            );
+            let id = self.spawn_instance(model, region, pool, InstState::Provisioning {
+                until: now + delay,
+            });
+            return Some((id, now + delay));
+        }
+        None
+    }
+
+    fn reassign(&mut self, id: InstanceId, model: ModelKind, region: Region, pool: PoolTag, ready: Time) {
+        let kv_cap = self.perf.profile(model).serving_kv_budget();
+        let inst = &mut self.instances[id];
+        debug_assert!(inst.batch.is_empty() && inst.waiting.is_empty());
+        inst.model = model;
+        inst.pool = pool;
+        inst.kv_capacity = kv_cap;
+        inst.kv_used = 0;
+        inst.state = InstState::Provisioning { until: ready };
+        let ep = self.endpoints.get_mut(&(model, region)).unwrap();
+        if !ep.instances.contains(&id) {
+            ep.instances.push(id);
+        }
+    }
+
+    /// Scale in: drain the least-loaded active instance in a pool.  The
+    /// instance converts to spot once its batch empties (engine calls
+    /// [`Cluster::finish_drain`]).  Returns the drained instance id.
+    pub fn scale_in(
+        &mut self,
+        model: ModelKind,
+        region: Region,
+        pool_filter: Option<PoolTag>,
+    ) -> Option<InstanceId> {
+        let ep = self.endpoints.get(&(model, region))?;
+        let candidates: Vec<InstanceId> = ep
+            .instances
+            .iter()
+            .copied()
+            .filter(|&i| {
+                let inst = &self.instances[i];
+                inst.state == InstState::Active
+                    && pool_filter.map_or(true, |p| inst.pool == p)
+            })
+            .collect();
+        // Keep the robustness floor (min_instances) per endpoint, and at
+        // least one active instance per pool (a siloed NIW pool must not
+        // drain to zero and strand its tier).
+        let active_total = self
+            .endpoints[&(model, region)]
+            .instances
+            .iter()
+            .filter(|&&i| self.instances[i].state == InstState::Active)
+            .count();
+        if active_total <= self.params.min_instances {
+            return None;
+        }
+        if pool_filter.is_some() {
+            // Pool-scoped scale-in (Siloed/Chiron): the robustness floor
+            // applies per pool — §4's Fig 8 observation that Siloed holds
+            // 2 IW + 2 NIW instances where Unified shares 2.
+            if candidates.len() <= self.params.min_instances {
+                return None;
+            }
+        }
+        let id = candidates
+            .into_iter()
+            .min_by_key(|&i| self.instances[i].pending_tokens())?;
+        self.instances[id].state = InstState::Draining;
+        Some(id)
+    }
+
+    /// Move a fully drained instance to the spot pool.
+    pub fn finish_drain(&mut self, id: InstanceId) {
+        let inst = &mut self.instances[id];
+        debug_assert!(inst.batch.is_empty());
+        // Re-queue any stragglers left in its waiting queue (engine
+        // re-routes them); state flip happens regardless.
+        inst.state = InstState::Spot;
+        inst.kv_used = 0;
+        let (model, region) = (inst.model, inst.region);
+        if let Some(ep) = self.endpoints.get_mut(&(model, region)) {
+            ep.instances.retain(|&x| x != id);
+        }
+        self.spot_pool.get_mut(&region).unwrap().push(id);
+    }
+
+    /// Instances currently donated to spot, per region.
+    pub fn spot_count(&self, region: Region) -> usize {
+        self.spot_pool[&region].len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuKind;
+
+    fn cluster() -> Cluster {
+        Cluster::new(
+            &ModelKind::EVAL4,
+            PerfTable::new(GpuKind::A100x8, &ModelKind::EVAL4),
+            ScalingParams::default(),
+            &[(PoolTag::Unified, 3)],
+            10,
+        )
+    }
+
+    #[test]
+    fn initial_layout() {
+        let c = cluster();
+        assert_eq!(c.instances.len(), 4 * 3 * 3);
+        for &m in &ModelKind::EVAL4 {
+            for r in Region::ALL {
+                assert_eq!(c.active_instances(m, r).len(), 3);
+            }
+        }
+    }
+
+    #[test]
+    fn scale_in_then_out_uses_spot_fast_path() {
+        let mut c = cluster();
+        let mut metrics = Metrics::default();
+        let id = c.scale_in(ModelKind::Llama2_70B, Region::EastUs, None).unwrap();
+        c.finish_drain(id);
+        assert_eq!(c.spot_count(Region::EastUs), 1);
+        let (id2, ready) = c
+            .scale_out(ModelKind::Llama2_70B, Region::EastUs, PoolTag::Unified, 100.0, &mut metrics)
+            .unwrap();
+        assert_eq!(id, id2);
+        assert!((ready - 160.0).abs() < 1e-9); // 1 min spot reclaim
+        assert_eq!(c.spot_count(Region::EastUs), 0);
+    }
+
+    #[test]
+    fn cross_model_spot_costs_redeploy() {
+        let mut c = cluster();
+        let mut metrics = Metrics::default();
+        let id = c.scale_in(ModelKind::Bloom176B, Region::WestUs, None).unwrap();
+        c.finish_drain(id);
+        let (id2, ready) = c
+            .scale_out(ModelKind::Llama2_70B, Region::WestUs, PoolTag::Unified, 0.0, &mut metrics)
+            .unwrap();
+        assert_eq!(id, id2);
+        assert!((ready - 600.0).abs() < 1e-9); // 10 min redeploy
+        assert_eq!(c.instances[id2].model, ModelKind::Llama2_70B);
+        // KV capacity switched to the new model's profile.
+        assert_eq!(
+            c.instances[id2].kv_capacity,
+            c.perf.profile(ModelKind::Llama2_70B).serving_kv_budget()
+        );
+    }
+
+    #[test]
+    fn fresh_vm_consumes_budget() {
+        let mut c = cluster();
+        let mut metrics = Metrics::default();
+        let before = c.vm_budget[Region::EastUs.index()];
+        let (_id, ready) = c
+            .scale_out(ModelKind::Llama31_8B, Region::EastUs, PoolTag::Unified, 0.0, &mut metrics)
+            .unwrap();
+        assert_eq!(c.vm_budget[Region::EastUs.index()], before - 1);
+        assert!((ready - 600.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn remote_weights_cost_2h() {
+        let mut c = cluster();
+        c.local_weights.get_mut(&Region::WestUs).unwrap().retain(|&m| m != ModelKind::Bloom176B);
+        let mut metrics = Metrics::default();
+        let (_, ready) = c
+            .scale_out(ModelKind::Bloom176B, Region::WestUs, PoolTag::Unified, 0.0, &mut metrics)
+            .unwrap();
+        assert!((ready - 7200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn min_instances_floor_respected() {
+        let mut c = cluster();
+        // 3 active; min is 2 ⇒ only one scale-in allowed.
+        assert!(c.scale_in(ModelKind::Llama2_70B, Region::EastUs, None).is_some());
+        assert!(c.scale_in(ModelKind::Llama2_70B, Region::EastUs, None).is_none());
+    }
+
+    #[test]
+    fn max_instances_cap_respected() {
+        let mut c = cluster();
+        let mut metrics = Metrics::default();
+        let mut added = 0;
+        while c
+            .scale_out(ModelKind::Llama32_3B, Region::CentralUs, PoolTag::Unified, 0.0, &mut metrics)
+            .is_some()
+        {
+            added += 1;
+            assert!(added < 100, "runaway scale-out");
+        }
+        // 3 initial + 10 regional VM budget = 13, still under the
+        // max_instances cap of 20 — the budget binds first here.
+        let got = c.allocated_count(ModelKind::Llama32_3B, Region::CentralUs);
+        assert_eq!(got, 13);
+        assert!(got <= c.params.max_instances);
+    }
+
+    #[test]
+    fn no_capacity_reports_saturated_util() {
+        let mut c = cluster();
+        for &id in c.endpoints[&(ModelKind::Bloom176B, Region::WestUs)].instances.clone().iter() {
+            c.instances[id].state = InstState::Draining;
+        }
+        assert_eq!(c.effective_util(ModelKind::Bloom176B, Region::WestUs), 1.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! Discrete-event queue: a binary heap ordered by (time, sequence number).
+//!
+//! The sequence number makes ordering total and deterministic — two events
+//! at the same timestamp pop in push order, which keeps simulations
+//! reproducible run-to-run.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::config::Time;
+use crate::sim::cluster::InstanceId;
+
+/// Everything that can happen in the simulation besides request arrivals
+/// (arrivals are merged in from the streaming trace iterator by the
+/// engine, so a 10M-request trace never has to sit in the heap).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Event {
+    /// An instance finished its current decode chunk.
+    ChunkDone { instance: InstanceId },
+    /// A provisioning instance becomes ready to serve.
+    ProvisionDone { instance: InstanceId },
+    /// Hourly forecast + ILP control epoch (§6.3).
+    ControlEpoch,
+    /// Fine-grained periodic tick: LT-U/LT-UA progression, utilization
+    /// sampling, reactive re-checks.
+    ScaleTick,
+    /// Queue-manager aging scan (§6.2).
+    QmTick,
+}
+
+#[derive(Debug)]
+struct Entry {
+    time: Time,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for a min-heap on (time, seq).
+        other
+            .time
+            .partial_cmp(&self.time)
+            .expect("NaN event time")
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, time: Time, event: Event) {
+        debug_assert!(time.is_finite(), "non-finite event time");
+        self.heap.push(Entry { time, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Time of the earliest pending event.
+    pub fn peek_time(&self) -> Option<Time> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn pop(&mut self) -> Option<(Time, Event)> {
+        self.heap.pop().map(|e| (e.time, e.event))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, Event::ControlEpoch);
+        q.push(1.0, Event::ScaleTick);
+        q.push(2.0, Event::QmTick);
+        assert_eq!(q.pop().unwrap().0, 1.0);
+        assert_eq!(q.pop().unwrap().0, 2.0);
+        assert_eq!(q.pop().unwrap().0, 3.0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn ties_pop_in_push_order() {
+        let mut q = EventQueue::new();
+        q.push(1.0, Event::ChunkDone { instance: 7 });
+        q.push(1.0, Event::ChunkDone { instance: 9 });
+        assert_eq!(q.pop().unwrap().1, Event::ChunkDone { instance: 7 });
+        assert_eq!(q.pop().unwrap().1, Event::ChunkDone { instance: 9 });
+    }
+
+    #[test]
+    fn peek_matches_pop() {
+        let mut q = EventQueue::new();
+        q.push(5.5, Event::ControlEpoch);
+        assert_eq!(q.peek_time(), Some(5.5));
+        assert_eq!(q.pop().unwrap().0, 5.5);
+        assert_eq!(q.peek_time(), None);
+    }
+}

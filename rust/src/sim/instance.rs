@@ -1,0 +1,477 @@
+//! One LLM model instance: chunked continuous batching over a KV-memory
+//! budget — the simulator's unit of compute (one SplitWise instance).
+//!
+//! Execution model: the instance runs *decode chunks* of up to
+//! `CHUNK_ITERS` iterations.  At each chunk boundary it (1) retires
+//! sequences that finished during the chunk (their completion timestamps
+//! were computed exactly when the chunk was scheduled — batches are
+//! non-preemptible, §2.3), (2) admits new requests from its waiting queue
+//! in scheduler-policy order while KV memory lasts, running their prefill
+//! at the head of the next chunk, and (3) schedules the next chunk using
+//! the perf model's prefill + per-iteration decode times.
+//!
+//! Memory accounting reserves input+output tokens at admission (vLLM-style
+//! conservative reservation), which makes `kv_used / kv_capacity` — the
+//! paper's *effective memory utilization* — a faithful load proxy.
+
+use crate::config::{ModelKind, Region, Time};
+use crate::perf::PerfProfile;
+use crate::sim::cluster::{InstanceId, PoolTag};
+use crate::trace::types::Request;
+
+/// Decode iterations per scheduling chunk.  Smaller = finer-grained
+/// admission (closer to true continuous batching — and a mid-chunk
+/// arrival's extra TTFT wait is bounded by one chunk) but more events.
+/// 8 iterations ≈ 0.2–0.4 s of decode for the 70B-class profiles, well
+/// under the 1 s IW-F TTFT SLA.
+pub const CHUNK_ITERS: u32 = 8;
+
+/// Max sequences decoding concurrently (vLLM-style running cap).
+pub const MAX_BATCH: usize = 64;
+
+/// Instance lifecycle (§2.3 provisioning, §6.4 scaling, spot donation).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InstState {
+    /// VM allocated, model loading; unusable until `until`.
+    Provisioning { until: Time },
+    /// Serving traffic.
+    Active,
+    /// No new admissions; converts to spot when the batch drains.
+    Draining,
+    /// Donated to the spot pool (serving external traffic, reclaimable).
+    Spot,
+}
+
+/// A running sequence.
+#[derive(Debug, Clone)]
+pub struct ActiveSeq {
+    pub req: Request,
+    /// Output tokens still to generate at the *start* of the current chunk.
+    pub remaining: u32,
+    /// Reserved KV tokens (input + output).
+    pub kv_reserved: u64,
+    /// When this sequence's prefill completed (TTFT reference).
+    pub prefill_done: Time,
+    /// Region that actually served it (for metrics).
+    pub served_region: Region,
+    /// Set when the completion outcome was already recorded mid-chunk.
+    pub completed_at: Option<Time>,
+}
+
+/// One simulated model instance.
+#[derive(Debug)]
+pub struct InstanceSim {
+    pub id: InstanceId,
+    pub model: ModelKind,
+    pub region: Region,
+    pub pool: PoolTag,
+    pub state: InstState,
+    pub batch: Vec<ActiveSeq>,
+    pub waiting: Vec<Request>,
+    /// Cached Σ total_tokens over `waiting` (JSQ signal; O(1) reads).
+    waiting_tokens: u64,
+    /// Reserved KV tokens (running batch).
+    pub kv_used: u64,
+    pub kv_capacity: u64,
+    /// True when a ChunkDone event is in flight for this instance.
+    pub chunk_scheduled: bool,
+    /// End time of the chunk currently executing.
+    pub busy_until: Time,
+}
+
+/// What a scheduled chunk will do — produced by [`InstanceSim::plan_chunk`]
+/// so the engine can record completions/TTFTs with exact timestamps.
+#[derive(Debug, Default)]
+pub struct ChunkPlan {
+    /// Chunk wall-clock duration.
+    pub duration: Time,
+    /// (batch index, completion time) for sequences finishing mid-chunk.
+    pub completions: Vec<(usize, Time)>,
+    /// (request id, prefill-done time) for sequences admitted this chunk.
+    pub prefills: Vec<(u64, Time)>,
+}
+
+impl InstanceSim {
+    pub fn new(
+        id: InstanceId,
+        model: ModelKind,
+        region: Region,
+        pool: PoolTag,
+        state: InstState,
+        kv_capacity: u64,
+    ) -> Self {
+        InstanceSim {
+            id,
+            model,
+            region,
+            pool,
+            state,
+            batch: Vec::new(),
+            waiting: Vec::new(),
+            waiting_tokens: 0,
+            kv_used: 0,
+            kv_capacity,
+            chunk_scheduled: false,
+            busy_until: 0.0,
+        }
+    }
+
+    /// The paper's effective memory utilization: reserved KV over KV
+    /// capacity (weights excluded from both sides).
+    pub fn effective_util(&self) -> f64 {
+        self.kv_used as f64 / self.kv_capacity.max(1) as f64
+    }
+
+    /// Tokens still queued + running (the JSQ routing signal, §6.1).
+    /// O(batch) — the waiting side is a cached counter.
+    pub fn pending_tokens(&self) -> u64 {
+        let running: u64 = self.batch.iter().map(|s| s.remaining as u64).sum();
+        self.waiting_tokens + running
+    }
+
+    /// Sum of queued (unadmitted) tokens — cached.
+    pub fn waiting_tokens(&self) -> u64 {
+        self.waiting_tokens
+    }
+
+    /// Enqueue a request (keeps the token counter coherent).
+    pub fn push_waiting(&mut self, req: Request) {
+        self.waiting_tokens += req.total_tokens();
+        self.waiting.push(req);
+    }
+
+    /// Drain the whole waiting queue (re-routing on drain/scale-in).
+    pub fn take_waiting(&mut self) -> Vec<Request> {
+        self.waiting_tokens = 0;
+        std::mem::take(&mut self.waiting)
+    }
+
+    pub fn is_admitting(&self) -> bool {
+        matches!(self.state, InstState::Active)
+    }
+
+    /// Retire sequences whose completion fell inside the finished chunk.
+    /// Returns the retired sequences (outcomes were already recorded).
+    pub fn retire_completed(&mut self) -> Vec<ActiveSeq> {
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.batch.len() {
+            if self.batch[i].completed_at.is_some() {
+                let seq = self.batch.swap_remove(i);
+                self.kv_used = self.kv_used.saturating_sub(seq.kv_reserved);
+                done.push(seq);
+            } else {
+                i += 1;
+            }
+        }
+        done
+    }
+
+    /// Fraction of the KV budget fresh (priority-1) NIW admissions may
+    /// fill — spare-capacity serving that must not crowd out IW (§6.2).
+    pub const NIW_ADMIT_CAP: f64 = 0.60;
+
+    /// Admit from `waiting` (already in scheduler-policy order) while
+    /// memory, batch slots and the per-chunk prefill budget last.
+    ///
+    /// * `prefill_budget_tokens` bounds the prompt tokens admitted into
+    ///   one chunk, so a bulk admission cannot stall co-admitted IW TTFT
+    ///   (the paper's NIW chunking — §6.2).
+    /// * Fresh NIW (still priority 1 at `now`) only fills up to
+    ///   [`Self::NIW_ADMIT_CAP`] of the KV budget; IW and aged NIW use it
+    ///   all.
+    pub fn admit(&mut self, now: Time, prefill_budget_tokens: u64) -> Vec<Request> {
+        // Scan the (policy-ordered) head for the admissible prefix, then
+        // drain it in one pass — O(prefix) instead of O(Q) per admission.
+        let mut take = 0usize;
+        let mut prefill_tokens = 0u64;
+        let mut kv_used = self.kv_used;
+        while take < self.waiting.len() && self.batch.len() + take < MAX_BATCH {
+            let head = &self.waiting[take];
+            let need = head.total_tokens();
+            // An oversized request on an empty batch is served anyway with
+            // a truncated reservation (never wedge the queue).
+            let oversized = self.batch.is_empty() && take == 0 && need > self.kv_capacity;
+            if !oversized && kv_used + need > self.kv_capacity {
+                break; // non-preemptible batch: wait for memory (§2.3)
+            }
+            let fresh_niw =
+                !head.tier.is_interactive() && now - head.arrival <= 10.0 * 3600.0;
+            if fresh_niw
+                && (kv_used + need) as f64 > Self::NIW_ADMIT_CAP * self.kv_capacity as f64
+            {
+                break; // NIW only rides on spare capacity (queue is
+                       // priority-partitioned, so nothing IW is behind it)
+            }
+            if take > 0 && prefill_tokens + head.input_tokens as u64 > prefill_budget_tokens {
+                break; // prefill chunking: bound per-chunk prompt work
+            }
+            prefill_tokens += head.input_tokens as u64;
+            kv_used += need.min(self.kv_capacity);
+            take += 1;
+        }
+        self.kv_used = kv_used.min(self.kv_capacity.max(self.kv_used));
+        let admitted: Vec<Request> = self.waiting.drain(..take).collect();
+        let drained: u64 = admitted.iter().map(|r| r.total_tokens()).sum();
+        self.waiting_tokens = self.waiting_tokens.saturating_sub(drained);
+        admitted
+    }
+
+    /// Plan the next chunk at time `now`: prefill all `admitted`, then run
+    /// up to [`CHUNK_ITERS`] decode iterations for the whole batch.
+    ///
+    /// Pushes the admitted requests into `batch` and returns the plan with
+    /// exact completion/prefill timestamps.  Returns `None` if the batch
+    /// is empty (instance goes idle).
+    pub fn plan_chunk(
+        &mut self,
+        now: Time,
+        admitted: Vec<Request>,
+        perf: &PerfProfile,
+    ) -> Option<ChunkPlan> {
+        let prefill_tokens: u64 = admitted.iter().map(|r| r.input_tokens as u64).sum();
+        let prefill_time = perf.prefill_time(prefill_tokens);
+        let prefill_done = now + prefill_time;
+        let mut plan = ChunkPlan::default();
+        for req in admitted {
+            plan.prefills.push((req.id, prefill_done));
+            self.batch.push(ActiveSeq {
+                kv_reserved: req.total_tokens(),
+                remaining: req.output_tokens.max(1),
+                prefill_done,
+                served_region: self.region,
+                completed_at: None,
+                req,
+            });
+        }
+        if self.batch.is_empty() {
+            self.chunk_scheduled = false;
+            return None;
+        }
+
+        let batch_n = self.batch.len();
+        let tbt = perf.decode_iter_time(batch_n, self.kv_used);
+        let max_remaining = self
+            .batch
+            .iter()
+            .filter(|s| s.completed_at.is_none())
+            .map(|s| s.remaining)
+            .max()
+            .unwrap_or(0);
+        let iters = max_remaining.min(CHUNK_ITERS);
+        for (i, seq) in self.batch.iter_mut().enumerate() {
+            if seq.completed_at.is_some() {
+                continue; // retired at the next chunk boundary
+            }
+            if seq.remaining <= iters {
+                let t_done = prefill_done + seq.remaining as f64 * tbt;
+                seq.completed_at = Some(t_done);
+                seq.remaining = 0;
+                plan.completions.push((i, t_done));
+            } else {
+                seq.remaining -= iters;
+            }
+        }
+        plan.duration = prefill_time + iters as f64 * tbt;
+        self.busy_until = now + plan.duration;
+        self.chunk_scheduled = true;
+        Some(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuKind, Region, Tier};
+    use crate::trace::types::AppKind;
+
+    fn perf() -> PerfProfile {
+        PerfProfile::get(ModelKind::Llama2_70B, GpuKind::H100x8)
+    }
+
+    fn req(id: u64, input: u32, output: u32) -> Request {
+        Request {
+            id,
+            arrival: 0.0,
+            model: ModelKind::Llama2_70B,
+            origin: Region::EastUs,
+            tier: Tier::IwF,
+            app: AppKind::Chat,
+            input_tokens: input,
+            output_tokens: output,
+        }
+    }
+
+    fn inst() -> InstanceSim {
+        InstanceSim::new(0, ModelKind::Llama2_70B, Region::EastUs, PoolTag::Unified,
+                         InstState::Active, 100_000)
+    }
+
+    #[test]
+    fn admit_respects_memory() {
+        let mut i = inst();
+        i.push_waiting(req(1, 60_000, 10_000));
+        i.push_waiting(req(2, 40_000, 10_000)); // would exceed 100k
+        let admitted = i.admit(0.0, u64::MAX);
+        assert_eq!(admitted.len(), 1);
+        assert_eq!(i.kv_used, 70_000);
+        assert_eq!(i.waiting.len(), 1);
+    }
+
+    #[test]
+    fn admit_respects_batch_cap() {
+        let mut i = inst();
+        for n in 0..(MAX_BATCH + 10) {
+            i.push_waiting(req(n as u64, 10, 10));
+        }
+        let admitted = i.admit(0.0, u64::MAX);
+        assert_eq!(admitted.len(), MAX_BATCH);
+    }
+
+    #[test]
+    fn short_request_completes_within_first_chunk() {
+        let mut i = inst();
+        i.push_waiting(req(1, 1000, 6)); // 6 < CHUNK_ITERS
+        let adm = i.admit(0.0, u64::MAX);
+        let plan = i.plan_chunk(0.0, adm, &perf()).unwrap();
+        assert_eq!(plan.completions.len(), 1);
+        let p = perf();
+        let expect_prefill = p.prefill_time(1000);
+        let tbt = p.decode_iter_time(1, 1006);
+        let expect_done = expect_prefill + 6.0 * tbt;
+        assert!((plan.completions[0].1 - expect_done).abs() < 1e-9);
+        // Chunk runs only as long as the longest remaining need.
+        assert!((plan.duration - expect_done).abs() < 1e-9);
+    }
+
+    #[test]
+    fn long_request_spans_chunks() {
+        let mut i = inst();
+        i.push_waiting(req(1, 1000, 200));
+        let adm = i.admit(0.0, u64::MAX);
+        let plan = i.plan_chunk(0.0, adm, &perf()).unwrap();
+        assert!(plan.completions.is_empty());
+        assert_eq!(i.batch[0].remaining, 200 - CHUNK_ITERS);
+        // Next chunks (no admissions) keep decoding.
+        let plan2 = i.plan_chunk(plan.duration, vec![], &perf()).unwrap();
+        assert!(plan2.prefills.is_empty());
+        assert_eq!(i.batch[0].remaining, 200 - 2 * CHUNK_ITERS);
+        // Drive to completion exactly like the engine: retire then plan.
+        // ceil(200 / CHUNK_ITERS) chunks to finish.
+        let mut chunks = 2;
+        loop {
+            i.retire_completed();
+            match i.plan_chunk(10.0, vec![], &perf()) {
+                Some(p) => {
+                    chunks += 1;
+                    if !p.completions.is_empty() {
+                        break;
+                    }
+                }
+                None => panic!("batch drained without completing"),
+            }
+            assert!(chunks < 40, "did not converge");
+        }
+        assert_eq!(chunks as u32, (200 + CHUNK_ITERS - 1) / CHUNK_ITERS);
+    }
+
+    #[test]
+    fn retire_frees_memory() {
+        let mut i = inst();
+        i.push_waiting(req(1, 100, 8)); // completes within one chunk
+        let adm = i.admit(0.0, u64::MAX);
+        assert_eq!(i.kv_used, 108);
+        i.plan_chunk(0.0, adm, &perf()).unwrap();
+        let done = i.retire_completed();
+        assert_eq!(done.len(), 1);
+        assert_eq!(i.kv_used, 0);
+        assert!(i.batch.is_empty());
+    }
+
+    #[test]
+    fn empty_batch_goes_idle() {
+        let mut i = inst();
+        assert!(i.plan_chunk(0.0, vec![], &perf()).is_none());
+        assert!(!i.chunk_scheduled);
+    }
+
+    fn niw_req(id: u64, arrival: f64, input: u32, output: u32) -> Request {
+        Request {
+            id,
+            arrival,
+            model: ModelKind::Llama2_70B,
+            origin: Region::EastUs,
+            tier: Tier::Niw,
+            app: AppKind::DocSummary,
+            input_tokens: input,
+            output_tokens: output,
+        }
+    }
+
+    #[test]
+    fn fresh_niw_capped_at_spare_capacity() {
+        let mut i = inst(); // capacity 100k
+        // Three fresh NIW requests of 25k each: the third would push past
+        // the 60% cap and must stay queued.
+        for n in 0..3 {
+            i.push_waiting(niw_req(n, 0.0, 20_000, 5_000));
+        }
+        let admitted = i.admit(100.0, u64::MAX);
+        assert_eq!(admitted.len(), 2);
+        assert_eq!(i.kv_used, 50_000);
+        assert_eq!(i.waiting.len(), 1);
+    }
+
+    #[test]
+    fn aged_niw_uses_full_capacity() {
+        let mut i = inst();
+        for n in 0..3 {
+            i.push_waiting(niw_req(n, 0.0, 20_000, 5_000));
+        }
+        // 11 hours later the requests are priority 0 (aged past 10 h).
+        let admitted = i.admit(11.0 * 3600.0, u64::MAX);
+        assert_eq!(admitted.len(), 3);
+    }
+
+    #[test]
+    fn iw_ignores_niw_cap() {
+        let mut i = inst();
+        for n in 0..3 {
+            i.push_waiting(req(n, 20_000, 5_000)); // IW-F
+        }
+        let admitted = i.admit(0.0, u64::MAX);
+        assert_eq!(admitted.len(), 3);
+    }
+
+    #[test]
+    fn prefill_budget_chunks_admissions() {
+        let mut i = inst();
+        for n in 0..4 {
+            i.push_waiting(req(n, 10_000, 100));
+        }
+        // Budget of 15k prompt tokens: first request always admitted,
+        // second would exceed ⇒ chunked to one per call.
+        let admitted = i.admit(0.0, 15_000);
+        assert_eq!(admitted.len(), 1);
+        let admitted = i.admit(0.0, 15_000);
+        assert_eq!(admitted.len(), 1);
+    }
+
+    #[test]
+    fn oversized_request_served_with_truncated_reservation() {
+        let mut i = inst();
+        i.push_waiting(req(1, 90_000, 20_000)); // 110k > 100k capacity
+        let admitted = i.admit(0.0, u64::MAX);
+        assert_eq!(admitted.len(), 1);
+        assert!(i.kv_used <= i.kv_capacity);
+    }
+
+    #[test]
+    fn util_is_kv_fraction() {
+        let mut i = inst();
+        i.push_waiting(req(1, 30_000, 20_000));
+        let adm = i.admit(0.0, u64::MAX);
+        i.plan_chunk(0.0, adm, &perf()).unwrap();
+        assert!((i.effective_util() - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,20 @@
+//! The cloud-scale discrete-event simulator (our SplitWise extension —
+//! §7.1 of the paper).
+//!
+//! * [`event`] — time-ordered event queue.
+//! * [`instance`] — one LLM model instance: continuous batching in decode
+//!   chunks, KV-memory accounting, the effective-utilization signal.
+//! * [`cluster`] — regions, endpoints, VM budgets, the spot pool, and
+//!   provisioning delays.
+//! * [`engine`] — the simulation loop wiring traces, routing, the queue
+//!   manager, autoscalers and metrics together.
+
+pub mod cluster;
+pub mod engine;
+pub mod event;
+pub mod instance;
+
+pub use cluster::{Cluster, InstanceId, PoolTag};
+pub use engine::{SimConfig, Simulation, Strategy};
+pub use event::{Event, EventQueue};
+pub use instance::{InstState, InstanceSim};

@@ -1,0 +1,638 @@
+//! Paper-calibrated synthetic workload generator (substitute for the
+//! proprietary O365 traces — DESIGN.md §1).
+//!
+//! Calibration targets, all from §3 of the paper:
+//! * Jul-2025: ≈10 M requests/day at `scale = 1.0`, tier mix IW-F 45% /
+//!   IW-N 27% / NIW 28% (IW together 72%).
+//! * Nov-2024: ≈1/5 the Jul-2025 volume, IW:NIW = 3:1, no IW-F/IW-N split
+//!   (all interactive traffic is emitted as IW-N).
+//! * IW tiers: strong diurnal periodicity (early-afternoon US peak),
+//!   weekends quiescing; IW-N additionally grows through the week for
+//!   Model B (Wed/Thu/Fri > Mon/Tue).
+//! * NIW: aperiodic, stable through the week, negligible in West US.
+//! * Region amplitudes E > C > W; Bloom (Model A) 4× East-vs-West for
+//!   IW-F; Llama-2 (Model B) peaks in Central (IW-F) and West (IW-N).
+//! * Token counts: log-normal; most inputs > 1 k, most outputs < 1 k
+//!   (Fig 10); the eval-framework app on Model C in Central US NIW issues
+//!   bulk requests with much higher TPS/request.
+//! * Random 5–15 min bursts (~2/day per region) at 2–4× base rate;
+//!   1-minute-scale arrival noise comes free from Poisson sampling.
+
+use crate::util::rng::Rng;
+
+use crate::config::{Epoch, ModelKind, Region, Tier, Time, DAY, HOUR, MINUTE};
+use crate::trace::types::{AppKind, Request};
+
+/// Generator parameters.  `..Default::default()` reproduces the Jul-2025
+/// evaluation setup with the four open-source models.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub epoch: Epoch,
+    pub models: Vec<ModelKind>,
+    /// Trace length in days.
+    pub days: f64,
+    /// Linear volume multiplier.  1.0 ≈ 10 M req/day (Jul-2025).
+    /// Experiments default to smaller scales for runtime; the shape is
+    /// scale-invariant.
+    pub scale: f64,
+    pub seed: u64,
+    /// Day-of-week of t=0 (0 = Monday).
+    pub start_weekday: usize,
+    /// Inject random traffic bursts (disable for forecast-friendly runs).
+    pub bursts: bool,
+    /// Multiply the burst amplitude (Fig 16a uses 8× synthetic spikes).
+    pub burst_amplitude: f64,
+    /// Burst duration range in minutes (default 5–15; Fig 16a stretches
+    /// bursts so they overlap LT-UA's end-of-hour correction window).
+    pub burst_minutes: (f64, f64),
+    /// Override the IW:NIW request-count ratio, e.g. `Some(9.0)` for the
+    /// 9:1 ablation of §7.2.8.  `None` keeps the epoch default.
+    pub iw_niw_ratio: Option<f64>,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            epoch: Epoch::Jul2025,
+            models: ModelKind::EVAL4.to_vec(),
+            days: 1.0,
+            scale: 1.0,
+            seed: 42,
+            start_weekday: 0,
+            bursts: true,
+            burst_amplitude: 1.0,
+            burst_minutes: (5.0, 15.0),
+            iw_niw_ratio: None,
+        }
+    }
+}
+
+/// Total mean requests/second across everything, before shape factors.
+fn epoch_base_rps(epoch: Epoch) -> f64 {
+    match epoch {
+        Epoch::Jul2025 => 10.0e6 / DAY, // ≈115.7 RPS (≈10M/day)
+        Epoch::Nov2024 => 2.0e6 / DAY,  // 5× smaller, 7 months earlier
+    }
+}
+
+/// Tier shares of the total request count.
+fn tier_share(epoch: Epoch, tier: Tier, iw_niw_ratio: Option<f64>) -> f64 {
+    // Default splits; see module docs.
+    let (iwf, iwn, niw) = match epoch {
+        Epoch::Jul2025 => (0.45, 0.27, 0.28),
+        Epoch::Nov2024 => (0.0, 0.75, 0.25),
+    };
+    let (iwf, iwn, niw) = match iw_niw_ratio {
+        None => (iwf, iwn, niw),
+        Some(r) => {
+            // Re-split keeping the IW-F:IW-N proportion within IW.
+            let iw = r / (r + 1.0);
+            let f_frac = if iwf + iwn > 0.0 { iwf / (iwf + iwn) } else { 0.0 };
+            (iw * f_frac, iw * (1.0 - f_frac), 1.0 - iw)
+        }
+    };
+    match tier {
+        Tier::IwF => iwf,
+        Tier::IwN => iwn,
+        Tier::Niw => niw,
+    }
+}
+
+/// Region share for a tier (E > C > W for IW; West NIW negligible).
+fn region_share(tier: Tier, region: Region) -> f64 {
+    match (tier, region) {
+        (Tier::Niw, Region::EastUs) => 0.50,
+        (Tier::Niw, Region::CentralUs) => 0.45,
+        (Tier::Niw, Region::WestUs) => 0.05,
+        (_, Region::EastUs) => 0.45,
+        (_, Region::CentralUs) => 0.30,
+        (_, Region::WestUs) => 0.25,
+    }
+}
+
+/// Model share within (tier, region).  Indexed by ModelKind::index();
+/// Llama4Scout (index 4) gets a share only when included (§7.2.5) — the
+/// table is renormalized over the configured model set.
+fn model_weight(model: ModelKind, tier: Tier, region: Region) -> f64 {
+    let r = region.index();
+    match model {
+        // Model A: biggest model, dominates East (4× West for IW-F).
+        ModelKind::Bloom176B => match tier {
+            Tier::IwF => [0.44, 0.18, 0.20][r],
+            Tier::IwN => [0.35, 0.20, 0.15][r],
+            Tier::Niw => [0.30, 0.15, 0.20][r],
+        },
+        // Model B: peaks in Central for IW-F and West for IW-N.
+        ModelKind::Llama2_70B => match tier {
+            Tier::IwF => [0.22, 0.42, 0.34][r],
+            Tier::IwN => [0.25, 0.30, 0.45][r],
+            Tier::Niw => [0.25, 0.20, 0.30][r],
+        },
+        // Model C: the eval-framework bulk workload lives in Central NIW.
+        ModelKind::Llama31_8B => match tier {
+            Tier::IwF => [0.20, 0.25, 0.33][r],
+            Tier::IwN => [0.22, 0.28, 0.25][r],
+            Tier::Niw => [0.25, 0.50, 0.30][r],
+        },
+        ModelKind::Llama32_3B => match tier {
+            Tier::IwF => [0.14, 0.15, 0.22][r],
+            Tier::IwN => [0.18, 0.22, 0.15][r],
+            Tier::Niw => [0.20, 0.15, 0.20][r],
+        },
+        ModelKind::Llama4Scout => 0.15, // uniform share when present
+        ModelKind::TinyLm => 0.0,
+    }
+}
+
+/// Diurnal multiplier (mean 1.0 over a week) — von-Mises-style bump
+/// peaking at 13:30 with business-hours mass, plus weekend quiescing.
+fn diurnal(tier: Tier, t: Time, start_weekday: usize) -> f64 {
+    let day = (t / DAY).floor() as i64;
+    let weekday = ((start_weekday as i64 + day) % 7 + 7) % 7; // 0 = Mon
+    let hour = (t % DAY) / HOUR;
+    match tier {
+        Tier::Niw => 1.0, // flat through the week (§3)
+        _ => {
+            let kappa = 1.6f64;
+            let phase = 2.0 * std::f64::consts::PI * (hour - 13.5) / 24.0;
+            let bump = (kappa * (phase.cos() - 1.0)).exp();
+            // normalize bump mean over 24h ≈ 0.318 for kappa=1.6
+            let shape = 0.20 + 2.51 * bump;
+            let weekend = if weekday >= 5 {
+                if tier == Tier::IwF {
+                    0.25
+                } else {
+                    0.35
+                }
+            } else {
+                1.0
+            };
+            shape * weekend
+        }
+    }
+}
+
+/// Mid-week growth for Model B IW-N (Wed/Thu/Fri > Mon/Tue — §3).
+fn weekday_model_factor(model: ModelKind, tier: Tier, t: Time, start_weekday: usize) -> f64 {
+    if model == ModelKind::Llama2_70B && tier == Tier::IwN {
+        let day = (t / DAY).floor() as i64;
+        let weekday = ((start_weekday as i64 + day) % 7 + 7) % 7;
+        match weekday {
+            0 | 1 => 0.85,
+            2 | 3 | 4 => 1.15,
+            _ => 1.0,
+        }
+    } else {
+        1.0
+    }
+}
+
+/// A randomly scheduled traffic burst.
+#[derive(Debug, Clone)]
+struct Burst {
+    start: Time,
+    end: Time,
+    factor: f64,
+    region: Region,
+    tier: Tier,
+}
+
+/// App mix per tier (Fig 6a: RAG 41.2% of all requests).
+fn app_mix(tier: Tier) -> &'static [(AppKind, f64)] {
+    match tier {
+        Tier::IwF => &[
+            (AppKind::Rag, 0.55),
+            (AppKind::Chat, 0.15),
+            (AppKind::EmailSuggest, 0.10),
+            (AppKind::CodeGen, 0.07),
+            (AppKind::Moderation, 0.05),
+            (AppKind::InsightsGen, 0.05),
+            (AppKind::MeetingRecap, 0.03),
+        ],
+        Tier::IwN => &[
+            (AppKind::Rag, 0.45),
+            (AppKind::InsightsGen, 0.18),
+            (AppKind::ContentCreation, 0.13),
+            (AppKind::MeetingRecap, 0.10),
+            (AppKind::DocSummary, 0.09),
+            (AppKind::Chat, 0.05),
+        ],
+        Tier::Niw => &[
+            (AppKind::DocSummary, 0.28),
+            (AppKind::EvalFramework, 0.25),
+            (AppKind::ContentCreation, 0.18),
+            (AppKind::InsightsGen, 0.14),
+            (AppKind::Rag, 0.15),
+        ],
+    }
+}
+
+/// The generator: deterministic for a given config (seeded ChaCha8).
+pub struct TraceGenerator {
+    pub cfg: TraceConfig,
+    bursts: Vec<Burst>,
+    model_norm: Vec<f64>, // per (tier, region): sum of model weights
+}
+
+impl TraceGenerator {
+    pub fn new(cfg: TraceConfig) -> Self {
+        let mut rng = Rng::seed_from_u64(cfg.seed ^ 0xb00b5);
+        let mut bursts = Vec::new();
+        if cfg.bursts {
+            for region in Region::ALL {
+                for tier in [Tier::IwF, Tier::IwN] {
+                    // ~2 bursts per day per (region, IW tier).
+                    let n = (2.0 * cfg.days).round() as usize;
+                    for _ in 0..n {
+                        let start = rng.range(0.0, cfg.days * DAY);
+                        let dur = rng.range(cfg.burst_minutes.0 * MINUTE,
+                                            cfg.burst_minutes.1 * MINUTE);
+                        let factor = rng.range(2.0, 4.0) * cfg.burst_amplitude;
+                        bursts.push(Burst { start, end: start + dur, factor, region, tier });
+                    }
+                }
+            }
+        }
+        let mut model_norm = vec![0.0; Tier::ALL.len() * Region::ALL.len()];
+        for tier in Tier::ALL {
+            for region in Region::ALL {
+                let s: f64 = cfg.models.iter().map(|&m| model_weight(m, tier, region)).sum();
+                model_norm[tier.index() * 3 + region.index()] = s.max(1e-12);
+            }
+        }
+        TraceGenerator { cfg, bursts, model_norm }
+    }
+
+    fn burst_factor(&self, region: Region, tier: Tier, t: Time) -> f64 {
+        let mut f = 1.0f64;
+        for b in &self.bursts {
+            if b.region == region && b.tier == tier && t >= b.start && t < b.end {
+                f = f.max(b.factor);
+            }
+        }
+        f
+    }
+
+    /// Expected arrival rate (requests/sec) for one stream at time `t`.
+    /// Also used to synthesize pre-trace history for forecaster warm-up.
+    pub fn rate(&self, model: ModelKind, region: Region, tier: Tier, t: Time) -> f64 {
+        let share = tier_share(self.cfg.epoch, tier, self.cfg.iw_niw_ratio)
+            * region_share(tier, region)
+            * model_weight(model, tier, region)
+            / self.model_norm[tier.index() * 3 + region.index()];
+        epoch_base_rps(self.cfg.epoch)
+            * self.cfg.scale
+            * share
+            * diurnal(tier, t, self.cfg.start_weekday)
+            * weekday_model_factor(model, tier, t, self.cfg.start_weekday)
+            * self.burst_factor(region, tier, t)
+    }
+
+    /// Mean total tokens per request for one stream (for TPS estimates).
+    pub fn mean_tokens(&self, model: ModelKind, tier: Tier) -> f64 {
+        TraceGenerator::mean_tokens_exact(model, tier)
+    }
+
+    /// Generate the full trace as a time-ordered iterator.
+    ///
+    /// Arrivals are sampled per-minute per stream as Poisson counts with
+    /// uniform placement inside the minute — this yields exact
+    /// non-homogeneous-Poisson statistics at 1-minute rate resolution and
+    /// keeps memory at O(requests per minute).
+    pub fn stream(&self) -> TraceStream<'_> {
+        TraceStream {
+            generator: self,
+            rng: Rng::seed_from_u64(self.cfg.seed),
+            minute: 0,
+            total_minutes: (self.cfg.days * DAY / MINUTE).ceil() as u64,
+            bucket: Vec::new(),
+            bucket_pos: 0,
+            next_id: 0,
+        }
+    }
+
+    /// Convenience: collect the whole trace (small scales only).
+    pub fn collect(&self) -> Vec<Request> {
+        self.stream().collect()
+    }
+}
+
+impl TraceGenerator {
+    /// Exact per-(model, tier) mean total tokens from the (mu, sigma)
+    /// parameters (LogNormal mean = exp(mu + sigma²/2)).
+    pub fn mean_tokens_exact(model: ModelKind, tier: Tier) -> f64 {
+        let mut total = 0.0;
+        for &(app, w) in app_mix(tier) {
+            let (imu, isig, omu, osig) = token_params(model, app);
+            total += w * ((imu + isig * isig / 2.0).exp() + (omu + osig * osig / 2.0).exp());
+        }
+        total
+    }
+}
+
+/// (input mu, input sigma, output mu, output sigma) in ln-space.
+fn token_params(model: ModelKind, app: AppKind) -> (f64, f64, f64, f64) {
+    let (imu, isig, omu, osig) = match app {
+        AppKind::Rag => (7.8, 0.7, 5.6, 0.8),
+        AppKind::EvalFramework => (8.9, 0.6, 7.3, 0.7),
+        AppKind::DocSummary => (8.3, 0.8, 6.2, 0.6),
+        AppKind::Chat => (7.0, 0.9, 5.9, 0.9),
+        AppKind::EmailSuggest => (6.6, 0.7, 4.6, 0.7),
+        AppKind::Moderation => (6.9, 0.8, 3.2, 0.6),
+        _ => (7.4, 0.8, 5.8, 0.8),
+    };
+    let shift = match model {
+        ModelKind::Llama32_3B => -0.35,
+        ModelKind::Llama31_8B => -0.15,
+        _ => 0.0,
+    };
+    (imu + shift, isig, omu, osig)
+}
+
+/// Streaming iterator over the trace, minute-bucketed.
+pub struct TraceStream<'a> {
+    generator: &'a TraceGenerator,
+    rng: Rng,
+    minute: u64,
+    total_minutes: u64,
+    bucket: Vec<Request>,
+    bucket_pos: usize,
+    next_id: u64,
+}
+
+impl TraceStream<'_> {
+    fn fill_bucket(&mut self) {
+        self.bucket.clear();
+        self.bucket_pos = 0;
+        let g = self.generator;
+        let t0 = self.minute as f64 * MINUTE;
+        let t_mid = t0 + 0.5 * MINUTE;
+        for tier in Tier::ALL {
+            for region in Region::ALL {
+                for &model in &g.cfg.models {
+                    let lambda = g.rate(model, region, tier, t_mid) * MINUTE;
+                    if lambda <= 0.0 {
+                        continue;
+                    }
+                    let n = self.rng.poisson(lambda) as usize;
+                    for _ in 0..n {
+                        let arrival = t0 + self.rng.range(0.0, MINUTE);
+                        let app = sample_app(tier, &mut self.rng);
+                        let (imu, isig, omu, osig) = token_params(model, app);
+                        let input = self.rng.lognormal(imu, isig);
+                        let output = self.rng.lognormal(omu, osig);
+                        self.bucket.push(Request {
+                            id: 0, // assigned after sorting for arrival order
+                            arrival,
+                            model,
+                            origin: region,
+                            tier,
+                            app,
+                            input_tokens: (input.clamp(16.0, 128_000.0)) as u32,
+                            output_tokens: (output.clamp(1.0, 32_000.0)) as u32,
+                        });
+                    }
+                }
+            }
+        }
+        self.bucket
+            .sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        for r in &mut self.bucket {
+            r.id = self.next_id;
+            self.next_id += 1;
+        }
+    }
+}
+
+fn sample_app(tier: Tier, rng: &mut Rng) -> AppKind {
+    let mix = app_mix(tier);
+    let total: f64 = mix.iter().map(|&(_, w)| w).sum();
+    let mut x = rng.range(0.0, total);
+    for &(app, w) in mix {
+        if x < w {
+            return app;
+        }
+        x -= w;
+    }
+    mix.last().unwrap().0
+}
+
+impl Iterator for TraceStream<'_> {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        loop {
+            if self.bucket_pos < self.bucket.len() {
+                let r = self.bucket[self.bucket_pos].clone();
+                self.bucket_pos += 1;
+                return Some(r);
+            }
+            if self.minute >= self.total_minutes {
+                return None;
+            }
+            self.fill_bucket();
+            self.minute += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> TraceConfig {
+        TraceConfig { days: 1.0, scale: 0.01, bursts: false, ..Default::default() }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let g1 = TraceGenerator::new(small_cfg());
+        let g2 = TraceGenerator::new(small_cfg());
+        let a: Vec<_> = g1.stream().take(500).collect();
+        let b: Vec<_> = g2.stream().take(500).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn arrivals_sorted_and_ids_sequential() {
+        let g = TraceGenerator::new(small_cfg());
+        let reqs = g.collect();
+        assert!(reqs.len() > 1000, "got {}", reqs.len());
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+            assert_eq!(w[0].id + 1, w[1].id);
+        }
+    }
+
+    #[test]
+    fn volume_calibration_within_10pct() {
+        // 1 day at scale 0.01 of 10M/day ⇒ ≈100k requests.
+        let g = TraceGenerator::new(small_cfg());
+        let n = g.stream().count() as f64;
+        assert!((n - 100_000.0).abs() < 10_000.0, "n = {n}");
+    }
+
+    #[test]
+    fn tier_mix_matches_paper() {
+        let g = TraceGenerator::new(small_cfg());
+        let mut counts = [0usize; 3];
+        for r in g.stream() {
+            counts[r.tier.index()] += 1;
+        }
+        let total: usize = counts.iter().sum();
+        let iw = (counts[0] + counts[1]) as f64 / total as f64;
+        assert!((iw - 0.72).abs() < 0.03, "IW share {iw}");
+        assert!(counts[0] > counts[1], "IW-F should dominate");
+    }
+
+    #[test]
+    fn nov_epoch_has_no_iwf_and_3to1_ratio() {
+        let cfg = TraceConfig { epoch: Epoch::Nov2024, ..small_cfg() };
+        let g = TraceGenerator::new(cfg);
+        let mut counts = [0usize; 3];
+        for r in g.stream() {
+            counts[r.tier.index()] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        let ratio = counts[1] as f64 / counts[2] as f64;
+        assert!((ratio - 3.0).abs() < 0.4, "IW:NIW = {ratio}");
+    }
+
+    #[test]
+    fn east_exceeds_west_for_iwf() {
+        let g = TraceGenerator::new(small_cfg());
+        let mut east = 0usize;
+        let mut west = 0usize;
+        for r in g.stream() {
+            if r.tier == Tier::IwF {
+                match r.origin {
+                    Region::EastUs => east += 1,
+                    Region::WestUs => west += 1,
+                    _ => {}
+                }
+            }
+        }
+        assert!(east as f64 > 1.4 * west as f64, "east {east} west {west}");
+    }
+
+    #[test]
+    fn bloom_east_4x_west_iwf() {
+        let g = TraceGenerator::new(TraceConfig { scale: 0.05, ..small_cfg() });
+        let mut east = 0usize;
+        let mut west = 0usize;
+        for r in g.stream() {
+            if r.tier == Tier::IwF && r.model == ModelKind::Bloom176B {
+                match r.origin {
+                    Region::EastUs => east += 1,
+                    Region::WestUs => west += 1,
+                    _ => {}
+                }
+            }
+        }
+        let ratio = east as f64 / west.max(1) as f64;
+        assert!(ratio > 3.0 && ratio < 5.5, "A east/west = {ratio}");
+    }
+
+    #[test]
+    fn diurnal_peak_vs_trough() {
+        let g = TraceGenerator::new(small_cfg());
+        let peak = g.rate(ModelKind::Llama2_70B, Region::EastUs, Tier::IwF, 13.5 * HOUR);
+        let trough = g.rate(ModelKind::Llama2_70B, Region::EastUs, Tier::IwF, 2.0 * HOUR);
+        assert!(peak > 4.0 * trough, "peak {peak} trough {trough}");
+        // NIW is flat.
+        let p = g.rate(ModelKind::Llama2_70B, Region::EastUs, Tier::Niw, 13.5 * HOUR);
+        let q = g.rate(ModelKind::Llama2_70B, Region::EastUs, Tier::Niw, 2.0 * HOUR);
+        assert!((p - q).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weekend_quiesces_iw() {
+        let cfg = TraceConfig { days: 7.0, ..small_cfg() };
+        let g = TraceGenerator::new(cfg);
+        let weekday = g.rate(ModelKind::Bloom176B, Region::EastUs, Tier::IwF, 13.0 * HOUR);
+        let weekend = g.rate(ModelKind::Bloom176B, Region::EastUs, Tier::IwF, 5.0 * DAY + 13.0 * HOUR);
+        assert!((weekend / weekday - 0.25).abs() < 0.01);
+    }
+
+    #[test]
+    fn token_cdf_shape_fig10() {
+        let g = TraceGenerator::new(small_cfg());
+        let reqs: Vec<_> = g.stream().take(20_000).collect();
+        let over_1k_in =
+            reqs.iter().filter(|r| r.input_tokens > 1000).count() as f64 / reqs.len() as f64;
+        let under_1k_out =
+            reqs.iter().filter(|r| r.output_tokens < 1000).count() as f64 / reqs.len() as f64;
+        assert!(over_1k_in > 0.5, "majority inputs >1k: {over_1k_in}");
+        assert!(under_1k_out > 0.6, "most outputs <1k: {under_1k_out}");
+    }
+
+    #[test]
+    fn ratio_override_respected() {
+        let cfg = TraceConfig { iw_niw_ratio: Some(9.0), ..small_cfg() };
+        let g = TraceGenerator::new(cfg);
+        let mut iw = 0usize;
+        let mut niw = 0usize;
+        for r in g.stream() {
+            if r.tier == Tier::Niw {
+                niw += 1;
+            } else {
+                iw += 1;
+            }
+        }
+        let ratio = iw as f64 / niw as f64;
+        assert!((ratio - 9.0).abs() < 1.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn burst_raises_rate() {
+        let cfg = TraceConfig { bursts: true, ..small_cfg() };
+        let g = TraceGenerator::new(cfg);
+        let b = g.bursts.first().expect("bursts scheduled");
+        let mid = 0.5 * (b.start + b.end);
+        let with = g.rate(ModelKind::Bloom176B, b.region, b.tier, mid);
+        let g2 = TraceGenerator::new(TraceConfig { bursts: false, ..small_cfg() });
+        let without = g2.rate(ModelKind::Bloom176B, b.region, b.tier, mid);
+        assert!(with > 1.5 * without);
+    }
+
+    #[test]
+    fn rag_dominates_app_mix() {
+        // Full day (tier mix shifts overnight, so partial days skew NIW).
+        let g = TraceGenerator::new(small_cfg());
+        let mut rag = 0usize;
+        let mut total = 0usize;
+        for r in g.stream() {
+            total += 1;
+            rag += (r.app == AppKind::Rag) as usize;
+        }
+        let share = rag as f64 / total as f64;
+        assert!((share - 0.412).abs() < 0.06, "rag share {share}");
+    }
+
+    #[test]
+    fn expected_tps_consistent_with_samples() {
+        let g = TraceGenerator::new(TraceConfig { scale: 0.05, bursts: false, ..small_cfg() });
+        // Sum sampled tokens in a 1h window vs analytic expectation.
+        let (lo, hi) = (12.0 * HOUR, 13.0 * HOUR);
+        let mut sampled = 0.0f64;
+        for r in g.stream() {
+            if r.arrival >= lo && r.arrival < hi && r.tier == Tier::IwF {
+                sampled += r.total_tokens() as f64;
+            }
+            if r.arrival >= hi {
+                break;
+            }
+        }
+        let mut expected = 0.0;
+        for region in Region::ALL {
+            for &m in &g.cfg.models {
+                // midpoint rate × mean tokens × 3600
+                expected += g.rate(m, region, Tier::IwF, 12.5 * HOUR)
+                    * TraceGenerator::mean_tokens_exact(m, Tier::IwF)
+                    * HOUR;
+            }
+        }
+        let ratio = sampled / expected;
+        assert!(ratio > 0.7 && ratio < 1.3, "sampled/expected = {ratio}");
+    }
+}

@@ -1,0 +1,107 @@
+//! Trace persistence: CSV, one `Request` per line, with a header.
+//!
+//! The paper promises to publish its traces in a flat record format; we
+//! read/write the same records the generator produces so external traces
+//! can be swapped in without touching the simulator.
+
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use crate::trace::types::Request;
+
+pub const HEADER: &str = "id,arrival,model,region,tier,app,input_tokens,output_tokens";
+
+/// Write a trace to a CSV file (one request per line, arrival-ordered).
+pub fn write_csv(path: impl AsRef<Path>, requests: impl Iterator<Item = Request>) -> Result<u64> {
+    let file = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("create {}", path.as_ref().display()))?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "{HEADER}")?;
+    let mut n = 0u64;
+    for r in requests {
+        writeln!(w, "{}", r.to_csv())?;
+        n += 1;
+    }
+    w.flush()?;
+    Ok(n)
+}
+
+/// Read a trace eagerly.
+pub fn read_csv(path: impl AsRef<Path>) -> Result<Vec<Request>> {
+    read_csv_iter(path)?.collect()
+}
+
+/// Read a trace lazily (streaming, O(1) memory).
+pub fn read_csv_iter(path: impl AsRef<Path>) -> Result<impl Iterator<Item = Result<Request>>> {
+    let file = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let mut lines = BufReader::new(file).lines();
+    match lines.next() {
+        Some(Ok(h)) if h.trim() == HEADER => {}
+        Some(Ok(h)) => bail!("unexpected header: {h}"),
+        Some(Err(e)) => return Err(e.into()),
+        None => bail!("empty trace file"),
+    }
+    Ok(lines.map(|line| {
+        let line = line.context("read line")?;
+        Request::from_csv(&line).map_err(|e| anyhow::anyhow!("parse: {e}"))
+    }))
+}
+
+/// Unique temp-file path helper for tests (offline stand-in for the
+/// `tempfile` crate).
+pub fn temp_path(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "sageserve-{tag}-{}-{n}.csv",
+        std::process::id()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::generator::{TraceConfig, TraceGenerator};
+
+    #[test]
+    fn roundtrip_preserves_requests() {
+        let g = TraceGenerator::new(TraceConfig {
+            days: 0.05,
+            scale: 0.02,
+            bursts: false,
+            ..Default::default()
+        });
+        let orig: Vec<Request> = g.collect();
+        assert!(!orig.is_empty());
+        let path = temp_path("roundtrip");
+        let n = write_csv(&path, orig.iter().cloned()).unwrap();
+        assert_eq!(n as usize, orig.len());
+        let back = read_csv(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(orig.len(), back.len());
+        for (a, b) in orig.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.tier, b.tier);
+            assert!((a.arrival - b.arrival).abs() < 1e-5);
+            assert_eq!(a.input_tokens, b.input_tokens);
+        }
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(read_csv("/nonexistent/trace.csv").is_err());
+    }
+
+    #[test]
+    fn bad_header_is_error() {
+        let path = temp_path("badheader");
+        std::fs::write(&path, "nope\n1,2,3\n").unwrap();
+        let r = read_csv(&path);
+        std::fs::remove_file(&path).ok();
+        assert!(r.is_err());
+    }
+}

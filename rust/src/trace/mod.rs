@@ -1,0 +1,16 @@
+//! Workload traces: request types, the paper-calibrated synthetic
+//! generator, JSONL I/O and characterization statistics.
+//!
+//! The paper's traces are proprietary Microsoft O365 telemetry; per
+//! DESIGN.md §1 we substitute a parametric generator calibrated to every
+//! quantitative statement of the characterization study (§3) — tier mix,
+//! per-region amplitudes, diurnal/weekly periodicity, token-count CDFs,
+//! the 5× Nov-2024 → Jul-2025 growth, and the application mix of Fig 6a.
+
+pub mod generator;
+pub mod io;
+pub mod stats;
+pub mod types;
+
+pub use generator::{TraceConfig, TraceGenerator};
+pub use types::{AppKind, Request, RequestId};

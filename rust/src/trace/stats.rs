@@ -1,0 +1,180 @@
+//! Workload characterization statistics (§3, Figs 3–6, Fig 10).
+//!
+//! Pure aggregation over a request stream: RPS/TPS time series per
+//! (tier, model, region), token-count CDFs, and app leaderboards — the
+//! machinery behind the characterization experiments.
+
+use std::collections::BTreeMap;
+
+use crate::config::{ModelKind, Region, Tier, Time};
+use crate::trace::types::{AppKind, Request};
+
+/// One bucketed load series: requests and tokens per bucket.
+#[derive(Debug, Clone, Default)]
+pub struct LoadSeries {
+    pub bucket_secs: Time,
+    pub requests: Vec<u64>,
+    pub tokens: Vec<u64>,
+}
+
+impl LoadSeries {
+    pub fn new(bucket_secs: Time, horizon: Time) -> Self {
+        let n = (horizon / bucket_secs).ceil() as usize;
+        LoadSeries { bucket_secs, requests: vec![0; n], tokens: vec![0; n] }
+    }
+
+    pub fn add(&mut self, t: Time, tokens: u64) {
+        let idx = (t / self.bucket_secs) as usize;
+        if idx < self.requests.len() {
+            self.requests[idx] += 1;
+            self.tokens[idx] += tokens;
+        }
+    }
+
+    /// Requests per second in bucket `i`.
+    pub fn rps(&self, i: usize) -> f64 {
+        self.requests[i] as f64 / self.bucket_secs
+    }
+
+    /// Total tokens per second in bucket `i`.
+    pub fn tps(&self, i: usize) -> f64 {
+        self.tokens[i] as f64 / self.bucket_secs
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    pub fn peak_rps(&self) -> f64 {
+        (0..self.len()).map(|i| self.rps(i)).fold(0.0, f64::max)
+    }
+}
+
+/// Stream aggregator for the characterization study.
+pub struct WorkloadStats {
+    pub horizon: Time,
+    pub bucket_secs: Time,
+    /// (tier, model, region) → load series.
+    pub series: BTreeMap<(Tier, ModelKind, Region), LoadSeries>,
+    /// tier → cumulative series.
+    pub tier_series: BTreeMap<Tier, LoadSeries>,
+    /// app → (requests, tokens).
+    pub apps: BTreeMap<AppKind, (u64, u64)>,
+    /// model → sampled (input, output) token counts, decimated.
+    pub token_samples: BTreeMap<ModelKind, Vec<(u32, u32)>>,
+    pub total_requests: u64,
+    sample_stride: u64,
+}
+
+impl WorkloadStats {
+    pub fn new(horizon: Time, bucket_secs: Time) -> Self {
+        WorkloadStats {
+            horizon,
+            bucket_secs,
+            series: BTreeMap::new(),
+            tier_series: BTreeMap::new(),
+            apps: BTreeMap::new(),
+            token_samples: BTreeMap::new(),
+            total_requests: 0,
+            sample_stride: 7,
+        }
+    }
+
+    pub fn observe(&mut self, r: &Request) {
+        let tokens = r.total_tokens();
+        self.series
+            .entry((r.tier, r.model, r.origin))
+            .or_insert_with(|| LoadSeries::new(self.bucket_secs, self.horizon))
+            .add(r.arrival, tokens);
+        self.tier_series
+            .entry(r.tier)
+            .or_insert_with(|| LoadSeries::new(self.bucket_secs, self.horizon))
+            .add(r.arrival, tokens);
+        let e = self.apps.entry(r.app).or_insert((0, 0));
+        e.0 += 1;
+        e.1 += tokens;
+        if self.total_requests % self.sample_stride == 0 {
+            let v = self.token_samples.entry(r.model).or_default();
+            if v.len() < 200_000 {
+                v.push((r.input_tokens, r.output_tokens));
+            }
+        }
+        self.total_requests += 1;
+    }
+
+    /// Top applications by request count (Fig 6a).
+    pub fn top_apps(&self) -> Vec<(AppKind, u64, u64)> {
+        let mut v: Vec<_> = self.apps.iter().map(|(&a, &(r, t))| (a, r, t)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1));
+        v
+    }
+
+    /// Empirical CDF of a token column for a model (Fig 10).
+    /// Returns (sorted values, cumulative fraction).
+    pub fn token_cdf(&self, model: ModelKind, output: bool) -> (Vec<u32>, Vec<f64>) {
+        let samples = match self.token_samples.get(&model) {
+            Some(s) => s,
+            None => return (vec![], vec![]),
+        };
+        let mut vals: Vec<u32> =
+            samples.iter().map(|&(i, o)| if output { o } else { i }).collect();
+        vals.sort_unstable();
+        let n = vals.len() as f64;
+        let frac = (1..=vals.len()).map(|i| i as f64 / n).collect();
+        (vals, frac)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::generator::{TraceConfig, TraceGenerator};
+
+    fn stats_for(days: f64, scale: f64) -> WorkloadStats {
+        let g = TraceGenerator::new(TraceConfig { days, scale, bursts: false, ..Default::default() });
+        let mut st = WorkloadStats::new(days * 86_400.0, 900.0);
+        for r in g.stream() {
+            st.observe(&r);
+        }
+        st
+    }
+
+    #[test]
+    fn series_counts_sum_to_total() {
+        let st = stats_for(0.2, 0.01);
+        let sum: u64 = st.series.values().flat_map(|s| s.requests.iter()).sum();
+        assert_eq!(sum, st.total_requests);
+    }
+
+    #[test]
+    fn rag_tops_the_app_table() {
+        let st = stats_for(1.0, 0.005);
+        let top = st.top_apps();
+        assert_eq!(top[0].0, AppKind::Rag);
+        let share = top[0].1 as f64 / st.total_requests as f64;
+        assert!((share - 0.412).abs() < 0.06, "rag share {share}");
+    }
+
+    #[test]
+    fn token_cdf_monotone() {
+        let st = stats_for(0.1, 0.01);
+        let (vals, frac) = st.token_cdf(ModelKind::Llama2_70B, false);
+        assert!(!vals.is_empty());
+        assert!(vals.windows(2).all(|w| w[0] <= w[1]));
+        assert!((frac.last().unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn diurnal_visible_in_tier_series() {
+        let st = stats_for(1.0, 0.02);
+        let s = &st.tier_series[&Tier::IwF];
+        // peak bucket (≈13:30 → bucket 54 of 96) vs trough (≈02:00 → bucket 8)
+        let peak = s.rps(54);
+        let trough = s.rps(8);
+        assert!(peak > 3.0 * trough, "peak {peak} trough {trough}");
+    }
+}

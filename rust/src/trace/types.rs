@@ -1,0 +1,201 @@
+//! The request record — the unit every layer of the stack operates on.
+
+use crate::config::{ModelKind, Region, Tier, Time};
+
+pub type RequestId = u64;
+
+/// Top O365 application families (Fig 6a).  `Rag` alone contributes 41.2%
+/// of requests and drives the heavy-input token distribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum AppKind {
+    Rag,
+    InsightsGen,
+    ContentCreation,
+    Chat,
+    EvalFramework,
+    EmailSuggest,
+    CodeGen,
+    MeetingRecap,
+    DocSummary,
+    Moderation,
+}
+
+impl AppKind {
+    pub const ALL: [AppKind; 10] = [
+        AppKind::Rag,
+        AppKind::InsightsGen,
+        AppKind::ContentCreation,
+        AppKind::Chat,
+        AppKind::EvalFramework,
+        AppKind::EmailSuggest,
+        AppKind::CodeGen,
+        AppKind::MeetingRecap,
+        AppKind::DocSummary,
+        AppKind::Moderation,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AppKind::Rag => "rag-search",
+            AppKind::InsightsGen => "insights-gen",
+            AppKind::ContentCreation => "content-creation",
+            AppKind::Chat => "chat-assistant",
+            AppKind::EvalFramework => "eval-framework",
+            AppKind::EmailSuggest => "email-suggest",
+            AppKind::CodeGen => "code-gen",
+            AppKind::MeetingRecap => "meeting-recap",
+            AppKind::DocSummary => "doc-summary",
+            AppKind::Moderation => "moderation",
+        }
+    }
+}
+
+/// One inference request, as it appears in the trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: RequestId,
+    /// Arrival at the global router, seconds since trace start.
+    pub arrival: Time,
+    pub model: ModelKind,
+    /// The client's nearest region (the router may send it elsewhere).
+    pub origin: Region,
+    pub tier: Tier,
+    pub app: AppKind,
+    pub input_tokens: u32,
+    pub output_tokens: u32,
+}
+
+impl Request {
+    /// Total tokens processed for this request (the TPS unit of §2.1).
+    pub fn total_tokens(&self) -> u64 {
+        self.input_tokens as u64 + self.output_tokens as u64
+    }
+
+    /// Absolute completion deadline (NIW only).
+    pub fn deadline(&self) -> Option<Time> {
+        self.tier.deadline().map(|d| self.arrival + d)
+    }
+
+    /// Remaining time to the TTFT deadline at `now` (`d_r` of §6.5).
+    /// NIW requests fall back to their completion deadline.
+    pub fn ttft_slack(&self, now: Time) -> Time {
+        let sla = self.tier.ttft_sla().unwrap_or_else(|| self.tier.deadline().unwrap_or(f64::MAX));
+        self.arrival + sla - now
+    }
+
+    /// CSV record (the trace interchange format — see `trace::io`).
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{:.6},{},{},{},{},{},{}",
+            self.id,
+            self.arrival,
+            self.model,
+            self.origin,
+            self.tier,
+            self.app.name(),
+            self.input_tokens,
+            self.output_tokens
+        )
+    }
+
+    /// Parse one CSV record (inverse of [`Request::to_csv`]).
+    pub fn from_csv(line: &str) -> Result<Request, String> {
+        let parts: Vec<&str> = line.trim_end().split(',').collect();
+        if parts.len() != 8 {
+            return Err(format!("expected 8 fields, got {}", parts.len()));
+        }
+        Ok(Request {
+            id: parts[0].parse().map_err(|e| format!("id: {e}"))?,
+            arrival: parts[1].parse().map_err(|e| format!("arrival: {e}"))?,
+            model: parse_model(parts[2]).ok_or_else(|| format!("model '{}'", parts[2]))?,
+            origin: parse_region(parts[3]).ok_or_else(|| format!("region '{}'", parts[3]))?,
+            tier: parse_tier(parts[4]).ok_or_else(|| format!("tier '{}'", parts[4]))?,
+            app: parse_app(parts[5]).ok_or_else(|| format!("app '{}'", parts[5]))?,
+            input_tokens: parts[6].parse().map_err(|e| format!("input: {e}"))?,
+            output_tokens: parts[7].parse().map_err(|e| format!("output: {e}"))?,
+        })
+    }
+}
+
+/// Parse a model display name back to the enum.
+pub fn parse_model(s: &str) -> Option<ModelKind> {
+    use crate::config::ModelKind::*;
+    Some(match s {
+        "bloom-176b" => Bloom176B,
+        "llama2-70b" => Llama2_70B,
+        "llama3.1-8b" => Llama31_8B,
+        "llama3.2-3b" => Llama32_3B,
+        "llama4-scout" => Llama4Scout,
+        "tinylm" => TinyLm,
+        _ => return None,
+    })
+}
+
+/// Parse a region display name back to the enum.
+pub fn parse_region(s: &str) -> Option<Region> {
+    Some(match s {
+        "eastus" => Region::EastUs,
+        "centralus" => Region::CentralUs,
+        "westus" => Region::WestUs,
+        _ => return None,
+    })
+}
+
+/// Parse a tier display name back to the enum.
+pub fn parse_tier(s: &str) -> Option<Tier> {
+    Some(match s {
+        "IW-F" => Tier::IwF,
+        "IW-N" => Tier::IwN,
+        "NIW" => Tier::Niw,
+        _ => return None,
+    })
+}
+
+/// Parse an application name back to the enum.
+pub fn parse_app(s: &str) -> Option<AppKind> {
+    AppKind::ALL.into_iter().find(|a| a.name() == s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(tier: Tier) -> Request {
+        Request {
+            id: 1,
+            arrival: 100.0,
+            model: ModelKind::Llama2_70B,
+            origin: Region::EastUs,
+            tier,
+            app: AppKind::Chat,
+            input_tokens: 1000,
+            output_tokens: 200,
+        }
+    }
+
+    #[test]
+    fn total_tokens_sums_both_directions() {
+        assert_eq!(req(Tier::IwF).total_tokens(), 1200);
+    }
+
+    #[test]
+    fn slack_counts_down() {
+        let r = req(Tier::IwF);
+        assert!((r.ttft_slack(100.0) - 1.0).abs() < 1e-9);
+        assert!(r.ttft_slack(102.0) < 0.0);
+    }
+
+    #[test]
+    fn niw_deadline_is_24h() {
+        let r = req(Tier::Niw);
+        assert_eq!(r.deadline(), Some(100.0 + 86_400.0));
+        assert!(r.ttft_slack(100.0) > 86_000.0);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let r = req(Tier::IwN);
+        let line = r.to_csv();
+        assert_eq!(Request::from_csv(&line).unwrap(), r);
+    }
+}

@@ -1,0 +1,99 @@
+//! Minimal bench harness for `cargo bench` binaries (offline replacement
+//! for `criterion`): warmup, timed iterations, mean / p50 / p95 report.
+
+use std::time::Instant;
+
+/// Timing summary for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10} iters   mean {:>12}   p50 {:>12}   p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly: a warmup pass, then timed passes until either
+/// `max_iters` or ~2 s of measurement, whichever first.  The closure's
+/// return value is black-boxed to keep the optimizer honest.
+pub fn bench<T>(name: &str, max_iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warmup.
+    for _ in 0..2.min(max_iters) {
+        std::hint::black_box(f());
+    }
+    let budget_ns = 2e9;
+    let mut samples = Vec::new();
+    let started = Instant::now();
+    for _ in 0..max_iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if started.elapsed().as_nanos() as f64 > budget_ns && samples.len() >= 5 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let result = BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        p50_ns: samples[n / 2],
+        p95_ns: samples[(n as f64 * 0.95) as usize % n.max(1)],
+    };
+    result.report();
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 50, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,20 @@
+//! In-tree replacements for the usual crate ecosystem (this build
+//! environment is fully offline — see Cargo.toml):
+//!
+//! * [`rng`] — xoshiro256++ PRNG plus normal / log-normal / Poisson
+//!   samplers (replaces `rand`/`rand_distr`).
+//! * [`json`] — a small recursive-descent JSON parser and writer
+//!   (replaces `serde_json`; used for the AOT manifest, the golden
+//!   self-test fixtures, and results output).
+//! * [`bench`] — a minimal timing harness for `cargo bench` binaries
+//!   (replaces `criterion`).
+//! * [`proptest`] — seeded random-input sweep helper for property-style
+//!   tests.
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,49 @@
+//! Property-test helper (offline replacement for `proptest`): run a
+//! property over many seeded random cases and report the first failing
+//! seed so failures are reproducible.
+
+use crate::util::rng::Rng;
+
+/// Run `prop(rng, case_index)` for `cases` deterministic cases.  Panics
+/// with the failing case's seed on the first property violation (the
+/// property itself should panic/assert on failure).
+pub fn run_cases(base_seed: u64, cases: usize, mut prop: impl FnMut(&mut Rng, usize)) {
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9e3779b97f4a7c15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::seed_from_u64(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!("property failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        run_cases(1, 50, |rng, _| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn reports_failing_case() {
+        run_cases(2, 50, |rng, _| {
+            assert!(rng.f64() < 0.9, "drew a large value");
+        });
+    }
+}

@@ -1,0 +1,207 @@
+//! Deterministic PRNG + distribution samplers (offline replacement for
+//! `rand` / `rand_distr`).
+//!
+//! Core generator: xoshiro256++ seeded via SplitMix64 — fast, high
+//! quality, and stable across platforms so simulations are reproducible
+//! byte-for-byte from a seed.
+
+/// xoshiro256++ PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        // SplitMix64 expansion (the reference seeding procedure).
+        let mut sm = seed;
+        let mut next_sm = move || {
+            sm = sm.wrapping_add(0x9e3779b97f4a7c15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+            z ^ (z >> 31)
+        };
+        let s = [next_sm(), next_sm(), next_sm(), next_sm()];
+        Rng { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [lo, hi).
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(hi > lo);
+        lo + self.next_u64() % (hi - lo)
+    }
+
+    /// Standard normal via Box-Muller (one value per call; simple > fast).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = (1.0 - self.f64()).max(1e-300); // avoid ln(0)
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with given mean / standard deviation.
+    pub fn normal_ms(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Log-normal with ln-space parameters (mu, sigma).
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Poisson sample.  Knuth's product method for small λ; for large λ
+    /// the normal approximation with continuity correction (the error is
+    /// far below the workload-model noise floor for λ > 30).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+                if k > 10_000 {
+                    return k; // numeric guard
+                }
+            }
+        } else {
+            let x = self.normal_ms(lambda, lambda.sqrt());
+            x.round().max(0.0) as u64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::seed_from_u64(7);
+        let mut b = Rng::seed_from_u64(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::seed_from_u64(1);
+        let mut b = Rng::seed_from_u64(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_mean_and_bounds() {
+        let mut r = Rng::seed_from_u64(3);
+        let n = 100_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            acc += x;
+        }
+        assert!((acc / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed_from_u64(4);
+        let n = 200_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            m1 += x;
+            m2 += x * x;
+        }
+        let mean = m1 / n as f64;
+        let var = m2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn lognormal_mean_matches_formula() {
+        let (mu, sigma) = (7.0f64, 0.8f64);
+        let mut r = Rng::seed_from_u64(5);
+        let n = 200_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            acc += r.lognormal(mu, sigma);
+        }
+        let expect = (mu + sigma * sigma / 2.0).exp();
+        let got = acc / n as f64;
+        assert!((got / expect - 1.0).abs() < 0.03, "got {got} expect {expect}");
+    }
+
+    #[test]
+    fn poisson_small_lambda_moments() {
+        let mut r = Rng::seed_from_u64(6);
+        let lambda = 4.2;
+        let n = 100_000;
+        let mut acc = 0u64;
+        for _ in 0..n {
+            acc += r.poisson(lambda);
+        }
+        let mean = acc as f64 / n as f64;
+        assert!((mean - lambda).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn poisson_large_lambda_moments() {
+        let mut r = Rng::seed_from_u64(7);
+        let lambda = 250.0;
+        let n = 50_000;
+        let (mut m1, mut m2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = r.poisson(lambda) as f64;
+            m1 += x;
+            m2 += x * x;
+        }
+        let mean = m1 / n as f64;
+        let var = m2 / n as f64 - mean * mean;
+        assert!((mean / lambda - 1.0).abs() < 0.01, "mean {mean}");
+        assert!((var / lambda - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn poisson_zero_lambda() {
+        let mut r = Rng::seed_from_u64(8);
+        assert_eq!(r.poisson(0.0), 0);
+    }
+}

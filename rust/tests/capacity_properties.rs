@@ -1,0 +1,103 @@
+//! Property tests on the §5 capacity optimizer: every returned plan must
+//! satisfy the formulation's constraints exactly, across many random
+//! instances (in-tree proptest harness).
+
+use sageserve::opt::capacity::{optimize_capacity, synthetic_inputs, CapacityInputs};
+use sageserve::util::proptest::run_cases;
+
+fn check_plan_feasible(inp: &CapacityInputs, deltas: &[Vec<i64>]) {
+    let r = inp.current.len();
+    let g = inp.tps_per_instance.len();
+    let x = |j: usize, k: usize| inp.current[j][k] + deltas[j][k] as f64;
+
+    // Bounds.
+    for j in 0..r {
+        for k in 0..g {
+            assert!(x(j, k) >= inp.min_instances - 1e-9, "min bound at ({j},{k})");
+            assert!(x(j, k) <= inp.max_instances + 1e-9, "max bound at ({j},{k})");
+            assert!(deltas[j][k] as f64 >= -inp.current[j][k] - 1e-9, "δ ≥ -n");
+        }
+    }
+    // Local floor: Σ_k x θ_k ≥ ε · max_w ρ_j(w).
+    for j in 0..r {
+        let cap: f64 = (0..g).map(|k| x(j, k) * inp.tps_per_instance[k]).sum();
+        let peak = inp.forecast_tps[j].iter().copied().fold(0.0, f64::max);
+        assert!(
+            cap + 1e-6 >= inp.epsilon * peak,
+            "local floor at region {j}: cap {cap} < ε·peak {}",
+            inp.epsilon * peak
+        );
+    }
+    // Global cover: Σ_jk x θ_k ≥ max_w Σ_j ρ_j(w).
+    let windows = inp.forecast_tps[0].len();
+    let mut global_peak = 0.0f64;
+    for w in 0..windows {
+        global_peak = global_peak.max((0..r).map(|j| inp.forecast_tps[j][w]).sum());
+    }
+    let total: f64 =
+        (0..r).flat_map(|j| (0..g).map(move |k| (j, k))).map(|(j, k)| x(j, k) * inp.tps_per_instance[k]).sum();
+    assert!(total + 1e-6 >= global_peak, "global cover: {total} < {global_peak}");
+}
+
+#[test]
+fn plans_satisfy_all_constraints() {
+    run_cases(0xCAFE, 40, |rng, _| {
+        let regions = 2 + (rng.next_u64() % 4) as usize;
+        let gpus = 1 + (rng.next_u64() % 2) as usize;
+        let inp = synthetic_inputs(regions, gpus, rng.next_u64());
+        if let Some(plan) = optimize_capacity(&inp) {
+            check_plan_feasible(&inp, &plan.deltas);
+        }
+    });
+}
+
+#[test]
+fn plans_are_deterministic() {
+    for seed in [3u64, 17, 99] {
+        let inp = synthetic_inputs(3, 1, seed);
+        let a = optimize_capacity(&inp).unwrap();
+        let b = optimize_capacity(&inp).unwrap();
+        assert_eq!(a.deltas, b.deltas, "seed {seed}");
+    }
+}
+
+#[test]
+fn near_optimality_vs_exhaustive_small() {
+    // 1 region × 1 GPU: brute-force the integer optimum and compare.
+    run_cases(0xBEEF, 25, |rng, _| {
+        let theta = 100.0 + rng.range(0.0, 400.0);
+        let current = (2.0 + rng.range(0.0, 8.0)).floor();
+        let peak = rng.range(0.0, 6000.0);
+        let inp = CapacityInputs {
+            current: vec![vec![current]],
+            tps_per_instance: vec![theta],
+            forecast_tps: vec![vec![peak]],
+            vm_cost: vec![98.0],
+            start_cost: vec![16.0],
+            epsilon: 0.6,
+            min_instances: 2.0,
+            max_instances: 20.0,
+        };
+        let Some(plan) = optimize_capacity(&inp) else {
+            // Infeasible ⇒ demand beyond max capacity.
+            assert!(peak > 20.0 * theta);
+            return;
+        };
+        // Brute force over x in [2, 20].
+        let mut best = f64::INFINITY;
+        for x in 2..=20i64 {
+            let xf = x as f64;
+            if xf * theta + 1e-9 < 0.6 * peak || xf * theta + 1e-9 < peak {
+                continue;
+            }
+            let delta = xf - current;
+            let obj = 98.0 * delta + 16.0 * delta.max(0.0);
+            best = best.min(obj);
+        }
+        assert!(
+            plan.objective <= best + best.abs() * 2e-4 + 1e-6,
+            "objective {} vs brute-force {best}",
+            plan.objective
+        );
+    });
+}

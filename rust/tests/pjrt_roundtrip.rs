@@ -1,0 +1,89 @@
+//! Integration: the full AOT bridge — jax-lowered HLO text executed by
+//! the Rust PJRT runtime, validated against golden outputs recorded by
+//! the Python side at export time.
+//!
+//! Requires `make artifacts`; tests are skipped (with a notice) when the
+//! artifacts directory is missing so `cargo test` stays green pre-build.
+
+use sageserve::coordinator::scheduler::SchedPolicy;
+use sageserve::runtime::tinylm::TinyLm;
+use sageserve::serve::{synthetic_requests, Server};
+
+fn artifacts_dir() -> Option<String> {
+    for dir in ["artifacts", "../artifacts"] {
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            return Some(dir.to_string());
+        }
+    }
+    eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+    None
+}
+
+#[test]
+fn selftest_golden_outputs() {
+    let Some(dir) = artifacts_dir() else { return };
+    sageserve::runtime::selftest::run(&dir).expect("golden outputs must match");
+}
+
+#[test]
+fn forecast_artifact_matches_native_pipeline() {
+    let Some(dir) = artifacts_dir() else { return };
+    use sageserve::forecast::{Forecaster, NativeArForecaster, PjrtForecaster};
+    let mut pjrt = PjrtForecaster::load(&dir).expect("load forecast artifact");
+    let (s_max, t_fix, _h) = pjrt.shape();
+    // Diurnal synthetic series matching the artifact's fixed shape.
+    let history: Vec<Vec<f64>> = (0..s_max)
+        .map(|s| {
+            (0..t_fix)
+                .map(|t| {
+                    let phase = 2.0 * std::f64::consts::PI * (t % 96) as f64 / 96.0;
+                    100.0 * (s + 1) as f64 * (1.0 + 0.5 * phase.sin())
+                })
+                .collect()
+        })
+        .collect();
+    let got = pjrt.forecast(&history);
+    let mut native = NativeArForecaster::new(96, 8, 4);
+    let want = native.forecast(&history);
+    for (s, (g, w)) in got.iter().zip(&want).enumerate() {
+        for (i, (a, b)) in g.iter().zip(w).enumerate() {
+            let rel = (a - b).abs() / b.abs().max(1.0);
+            assert!(rel < 5e-2, "series {s} step {i}: pjrt {a} native {b}");
+        }
+    }
+}
+
+#[test]
+fn served_generation_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let run = || {
+        let model = TinyLm::load(&dir).unwrap();
+        let mut server = Server::new(model, SchedPolicy::Edf);
+        let outcomes = server.serve(synthetic_requests(8, 5, 12)).unwrap();
+        outcomes
+            .into_iter()
+            .map(|o| (o.id, o.generated))
+            .collect::<Vec<_>>()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "greedy decoding through PJRT must be deterministic");
+    assert!(a.iter().all(|(_, g)| g.len() == 12));
+}
+
+#[test]
+fn serving_reports_sane_latencies() {
+    let Some(dir) = artifacts_dir() else { return };
+    let model = TinyLm::load(&dir).unwrap();
+    let mut server = Server::new(model, SchedPolicy::Edf);
+    let outcomes = server.serve(synthetic_requests(16, 9, 8)).unwrap();
+    assert_eq!(outcomes.len(), 16);
+    for o in &outcomes {
+        assert!(o.ttft > 0.0 && o.ttft.is_finite());
+        assert!(o.e2e >= o.ttft);
+        assert_eq!(o.generated.len(), 8);
+    }
+    // Second wave must start after the first (wave batching).
+    let summary = Server::latency_summary(&outcomes);
+    assert!(summary.e2e_p95 < 120.0, "runaway latency {}", summary.e2e_p95);
+}

@@ -1,0 +1,176 @@
+//! Property-style integration tests over the simulator: conservation,
+//! SLA/latency invariants, autoscaler bounds and determinism across many
+//! seeded configurations (in-tree proptest harness — offline build).
+
+use sageserve::config::{Epoch, ModelKind, Tier};
+use sageserve::coordinator::scheduler::SchedPolicy;
+use sageserve::sim::engine::{run_simulation, SimConfig, Strategy};
+use sageserve::trace::generator::{TraceConfig, TraceGenerator};
+use sageserve::util::proptest::run_cases;
+
+fn quick(strategy: Strategy, seed: u64, scale: f64) -> SimConfig {
+    SimConfig {
+        trace: TraceConfig {
+            days: 0.08,
+            scale,
+            seed,
+            bursts: seed % 2 == 0,
+            epoch: if seed % 3 == 0 { Epoch::Nov2024 } else { Epoch::Jul2025 },
+            models: vec![ModelKind::Llama2_70B, ModelKind::Llama31_8B],
+            ..Default::default()
+        },
+        strategy,
+        initial_instances: 4,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn conservation_across_strategies_and_seeds() {
+    run_cases(0xC0, 10, |rng, case| {
+        let strategies = [
+            Strategy::Reactive,
+            Strategy::Siloed,
+            Strategy::LtI,
+            Strategy::LtU,
+            Strategy::LtUa,
+            Strategy::Chiron,
+        ];
+        let strategy = strategies[case % strategies.len()];
+        let seed = rng.next_u64() % 1000;
+        let cfg = quick(strategy, seed, 0.004);
+        let total = TraceGenerator::new(cfg.trace.clone()).stream().count();
+        let sim = run_simulation(cfg);
+        assert_eq!(
+            sim.metrics.outcomes.len() + sim.metrics.dropped as usize,
+            total,
+            "strategy {} seed {seed}: requests lost",
+            strategy.name()
+        );
+        assert_eq!(sim.metrics.dropped, 0, "strategy {} dropped", strategy.name());
+    });
+}
+
+#[test]
+fn latency_invariants_hold() {
+    run_cases(0x11, 6, |rng, _| {
+        let seed = rng.next_u64() % 1000;
+        let sim = run_simulation(quick(Strategy::LtUa, seed, 0.004));
+        for o in &sim.metrics.outcomes {
+            assert!(o.ttft > 0.0 && o.ttft.is_finite(), "seed {seed}");
+            assert!(o.e2e >= o.ttft - 1e-9, "seed {seed}: e2e {} < ttft {}", o.e2e, o.ttft);
+        }
+    });
+}
+
+#[test]
+fn instance_counts_respect_bounds() {
+    run_cases(0xB0, 6, |rng, case| {
+        let strategies = [Strategy::Reactive, Strategy::LtI, Strategy::LtUa];
+        let strategy = strategies[case % strategies.len()];
+        let seed = rng.next_u64() % 1000;
+        let cfg = quick(strategy, seed, 0.01);
+        let max = cfg.scaling.max_instances;
+        let sim = run_simulation(cfg);
+        for ((m, r), ledger) in &sim.metrics.instances {
+            for &(_, count) in &ledger.points {
+                assert!(
+                    count <= max,
+                    "{} {m} {r}: count {count} above max {max}",
+                    strategy.name()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn determinism_full_stack() {
+    let run = |seed| {
+        let sim = run_simulation(quick(Strategy::LtUa, seed, 0.006));
+        let mut sig = (sim.metrics.outcomes.len() as f64, 0.0, 0.0);
+        for o in &sim.metrics.outcomes {
+            sig.1 += o.ttft;
+            sig.2 += o.e2e;
+        }
+        sig
+    };
+    for seed in [1u64, 7, 13] {
+        let a = run(seed);
+        let b = run(seed);
+        assert_eq!(a.0, b.0, "seed {seed}");
+        assert!((a.1 - b.1).abs() < 1e-6 && (a.2 - b.2).abs() < 1e-6, "seed {seed}");
+    }
+}
+
+#[test]
+fn niw_meets_deadlines_even_when_queued() {
+    let sim = run_simulation(quick(Strategy::LtU, 3, 0.006));
+    let niw: Vec<_> = sim.metrics.outcomes.iter().filter(|o| o.tier == Tier::Niw).collect();
+    assert!(!niw.is_empty());
+    let met = niw.iter().filter(|o| o.sla_met).count() as f64 / niw.len() as f64;
+    assert!(met > 0.95, "NIW deadline hit-rate {met}");
+}
+
+#[test]
+fn scheduler_policies_all_run_clean() {
+    for policy in [SchedPolicy::Fcfs, SchedPolicy::Edf, SchedPolicy::Pf, SchedPolicy::dpa_default()] {
+        let mut cfg = quick(Strategy::LtUa, 11, 0.006);
+        cfg.sched_policy = policy;
+        let sim = run_simulation(cfg);
+        assert!(sim.metrics.dropped == 0);
+        assert!(!sim.metrics.outcomes.is_empty());
+    }
+}
+
+#[test]
+fn replayed_trace_matches_generated_run() {
+    // Write the generator's trace to CSV, replay it through the engine,
+    // and require identical outcomes to the generated run — proving the
+    // published-trace path is lossless.
+    let cfg = quick(Strategy::LtUa, 5, 0.006);
+    let generated = run_simulation(quick(Strategy::LtUa, 5, 0.006));
+
+    let path = sageserve::trace::io::temp_path("replay");
+    let gen = TraceGenerator::new(cfg.trace.clone());
+    sageserve::trace::io::write_csv(&path, gen.stream()).unwrap();
+    let mut replay_cfg = quick(Strategy::LtUa, 5, 0.006);
+    replay_cfg.replay_trace = Some(path.clone());
+    let replayed = run_simulation(replay_cfg);
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(generated.metrics.outcomes.len(), replayed.metrics.outcomes.len());
+    let sum = |sim: &sageserve::sim::engine::Simulation| -> f64 {
+        sim.metrics.outcomes.iter().map(|o| o.e2e).sum()
+    };
+    // CSV stores arrivals at µs precision; latencies match to that noise.
+    let (a, b) = (sum(&generated), sum(&replayed));
+    assert!((a - b).abs() / a.max(1.0) < 1e-3, "generated {a} vs replayed {b}");
+}
+
+#[test]
+fn unified_beats_siloed_on_instance_hours() {
+    // The §4 motivating claim, at small scale: same trace, same thresholds,
+    // unified pool uses no more instance-hours than siloed.
+    let mk = |strategy| {
+        let mut cfg = quick(strategy, 21, 0.02);
+        cfg.trace.days = 0.25;
+        cfg.initial_instances = 10;
+        let sim = run_simulation(cfg);
+        let end = sim.end_time();
+        let total: f64 = sim
+            .metrics
+            .instances
+            .values()
+            .map(|l| l.instance_hours(end))
+            .sum();
+        (total, sim.metrics.outcomes.len())
+    };
+    let (siloed, n1) = mk(Strategy::Siloed);
+    let (unified, n2) = mk(Strategy::Reactive);
+    assert_eq!(n1, n2);
+    assert!(
+        unified <= siloed * 1.05,
+        "unified {unified:.1} should not exceed siloed {siloed:.1}"
+    );
+}
