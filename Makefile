@@ -1,0 +1,33 @@
+# SageServe — build / test / bench entry points.
+#
+# `make check` is the CI gate: tier-1 build + tests plus a bench smoke
+# run (SAGESERVE_BENCH_QUICK=1 caps iterations) that refreshes
+# BENCH_sim.json at the repo root, so the simulator-throughput
+# trajectory stays machine-readable across PRs.  See PERF.md for how to
+# read and regenerate the numbers.
+
+CARGO_DIR := rust
+
+.PHONY: check build test bench bench-quick clean
+
+check: build test bench-quick
+
+build:
+	cd $(CARGO_DIR) && cargo build --release
+
+test:
+	cd $(CARGO_DIR) && cargo test -q
+
+# Full-length benches (several minutes): end-to-end simulator throughput
+# + the routing/aggregate hot path.  Writes ../BENCH_sim.json.
+bench:
+	cd $(CARGO_DIR) && SAGESERVE_BENCH_OUT=../BENCH_sim.json cargo bench --bench simulator
+	cd $(CARGO_DIR) && cargo bench --bench router_hotpath
+
+# Smoke mode: same benches, capped iterations — still emits BENCH_sim.json.
+bench-quick:
+	cd $(CARGO_DIR) && SAGESERVE_BENCH_QUICK=1 SAGESERVE_BENCH_OUT=../BENCH_sim.json cargo bench --bench simulator
+	cd $(CARGO_DIR) && SAGESERVE_BENCH_QUICK=1 cargo bench --bench router_hotpath
+
+clean:
+	cd $(CARGO_DIR) && cargo clean

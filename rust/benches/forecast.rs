@@ -11,7 +11,7 @@ use sageserve::coordinator::controller::{run_epoch, Telemetry};
 use sageserve::forecast::{Forecaster, NativeArForecaster, PjrtForecaster};
 use sageserve::perf::PerfTable;
 use sageserve::trace::generator::{TraceConfig, TraceGenerator};
-use sageserve::util::bench::bench;
+use sageserve::util::bench::{bench, quick_iters};
 
 fn history(models: &[ModelKind]) -> Vec<Vec<f64>> {
     let gen = TraceGenerator::new(TraceConfig { days: 7.0, scale: 0.2, ..Default::default() });
@@ -38,11 +38,11 @@ fn main() {
     let hist = history(&models);
 
     let mut native = NativeArForecaster::new(96, 8, 4);
-    bench("native seasonal-AR forecast (12 series)", 2_000, || native.forecast(&hist));
+    bench("native seasonal-AR forecast (12 series)", quick_iters(2_000, 20), || native.forecast(&hist));
 
     match PjrtForecaster::load("artifacts") {
         Ok(mut pjrt) => {
-            bench("PJRT seasonal-AR forecast (AOT artifact)", 200, || pjrt.forecast(&hist));
+            bench("PJRT seasonal-AR forecast (AOT artifact)", quick_iters(200, 5), || pjrt.forecast(&hist));
         }
         Err(_) => println!("(skip PJRT forecast bench: run `make artifacts`)"),
     }
@@ -65,7 +65,7 @@ fn main() {
         .flat_map(|&m| Region::ALL.into_iter().map(move |r| ((m, r), 6usize)))
         .collect();
     let mut fc = NativeArForecaster::new(96, 8, 4);
-    bench("full control epoch (forecast + 4 ILPs)", 500, || {
+    bench("full control epoch (forecast + 4 ILPs)", quick_iters(500, 5), || {
         run_epoch(&telemetry, &mut fc, &perf, &params, &counts, 0.0).len()
     });
     println!("\npaper reference: ~0.7 s forecast + ~1.5 s ILP per hourly epoch");

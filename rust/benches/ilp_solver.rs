@@ -3,12 +3,12 @@
 //! decomposition should beat both by orders of magnitude.
 
 use sageserve::opt::capacity::{optimize_capacity, synthetic_inputs};
-use sageserve::util::bench::bench;
+use sageserve::util::bench::{bench, quick_iters};
 
 fn main() {
     println!("ILP capacity solver (per-model decomposition; exact B&B)\n");
     for (l, r, g) in [(4usize, 3usize, 1usize), (8, 6, 2), (20, 20, 5)] {
-        bench(&format!("ilp l={l} r={r} g={g} (all {l} models)"), 50, || {
+        bench(&format!("ilp l={l} r={r} g={g} (all {l} models)"), quick_iters(50, 3), || {
             let mut total_delta = 0i64;
             for model in 0..l {
                 let inp = synthetic_inputs(r, g, model as u64 * 7919 + 1);

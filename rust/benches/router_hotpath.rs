@@ -1,6 +1,8 @@
 //! Bench: the routing hot path — per-request region selection + JSQ
-//! instance pick + scheduler ordering.  L3 must never be the bottleneck
-//! (DESIGN.md §Perf target: « 1 µs per decision).
+//! instance pick + scheduler ordering, plus the O(1) aggregate reads
+//! (effective utilization, waiting-aware utilization, pending tokens)
+//! that back them.  L3 must never be the bottleneck (DESIGN.md §Perf
+//! target: « 1 µs per decision).
 
 use sageserve::config::{GpuKind, ModelKind, Region, RoutingParams, ScalingParams, Tier};
 use sageserve::coordinator::router::{route_instance, route_region};
@@ -8,7 +10,7 @@ use sageserve::coordinator::scheduler::SchedPolicy;
 use sageserve::perf::PerfTable;
 use sageserve::sim::cluster::{Cluster, PoolTag};
 use sageserve::trace::generator::{TraceConfig, TraceGenerator};
-use sageserve::util::bench::bench;
+use sageserve::util::bench::{bench, quick_iters};
 
 fn main() {
     println!("router + scheduler hot path\n");
@@ -21,18 +23,33 @@ fn main() {
         40,
     );
     let routing = RoutingParams::default();
+    let hot = quick_iters(2_000_000, 50_000);
 
-    bench("route_region (3 regions, util scan)", 2_000_000, || {
+    bench("route_region (3 regions, O(1) agg reads)", hot, || {
         route_region(&cluster, &routing, ModelKind::Llama2_70B, Region::CentralUs)
     });
 
-    bench("route_instance (JSQ over 20 instances)", 2_000_000, || {
+    bench("route_instance (JSQ over 20 instances)", hot, || {
         route_instance(&cluster, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF)
     });
+
+    // The aggregate reads the engine hits on every routing decision,
+    // NIW-release iteration and utilization sample.
+    bench("effective_util (incremental)", hot, || {
+        cluster.effective_util(ModelKind::Llama2_70B, Region::EastUs)
+    });
+    bench("effective_util_with_waiting (incremental)", hot, || {
+        cluster.effective_util_with_waiting(ModelKind::Llama2_70B, Region::EastUs)
+    });
+    bench("pending_tokens (incremental)", hot, || {
+        cluster.pending_tokens(ModelKind::Llama2_70B, Region::EastUs)
+    });
+    bench("is_all_idle (busy counter)", hot, || cluster.is_all_idle());
 
     // Scheduler ordering on realistic queue depths.
     let gen = TraceGenerator::new(TraceConfig { days: 0.01, scale: 0.05, ..Default::default() });
     let queue: Vec<_> = gen.stream().take(64).collect();
+    let sched_iters = quick_iters(500_000, 20_000);
     for (name, policy) in [
         ("fcfs", SchedPolicy::Fcfs),
         ("edf", SchedPolicy::Edf),
@@ -40,7 +57,7 @@ fn main() {
         ("dpa", SchedPolicy::dpa_default()),
     ] {
         let q = queue.clone();
-        bench(&format!("scheduler order {} (64-deep queue)", name), 500_000, move || {
+        bench(&format!("scheduler order {} (64-deep queue)", name), sched_iters, move || {
             let mut q2 = q.clone();
             policy.order(&mut q2, 100.0);
             q2.len()

@@ -1,13 +1,31 @@
 //! Bench: end-to-end simulator throughput — simulated requests per
 //! wall-clock second across strategies (the number that bounds how big an
 //! experiment we can replay; the paper's full traces are 10M requests).
+//!
+//! Emits a machine-readable `BENCH_sim.json` (path override:
+//! `SAGESERVE_BENCH_OUT`) so the perf trajectory is comparable across
+//! PRs; `SAGESERVE_BENCH_QUICK=1` caps iterations for CI smoke runs.
+
+use std::collections::BTreeMap;
 
 use sageserve::sim::engine::{run_simulation, SimConfig, Strategy};
 use sageserve::trace::generator::{TraceConfig, TraceGenerator};
-use sageserve::util::bench::bench;
+use sageserve::util::bench::{bench, quick_iters, quick_mode};
+use sageserve::util::json::Json;
 
 fn main() {
     println!("simulator end-to-end throughput (0.1 day, 4 models, 3 regions)\n");
+    let iters = quick_iters(10, 2);
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+    report.insert(
+        "config".into(),
+        Json::Str("days=0.1 scale=0.05 models=EVAL4 regions=3".into()),
+    );
+    // Smoke runs are high-variance (2 iterations): mark them so the
+    // cross-PR perf trajectory never mistakes one for a full run.
+    report.insert("quick".into(), Json::Bool(quick_mode()));
+    report.insert("max_iters".into(), Json::Num(iters as f64));
+
     for strategy in [Strategy::Reactive, Strategy::LtUa, Strategy::Chiron] {
         let cfg = || SimConfig {
             trace: TraceConfig { days: 0.1, scale: 0.05, ..Default::default() },
@@ -15,21 +33,40 @@ fn main() {
             ..Default::default()
         };
         let n_requests = TraceGenerator::new(cfg().trace.clone()).stream().count();
-        let result = bench(&format!("simulate {} ({n_requests} reqs)", strategy.name()), 10, || {
+        let result = bench(&format!("simulate {} ({n_requests} reqs)", strategy.name()), iters, || {
             run_simulation(cfg()).metrics.outcomes.len()
         });
         let reqs_per_sec = n_requests as f64 / (result.mean_ns / 1e9);
         println!("    → {:.2} M simulated requests / wall-second\n", reqs_per_sec / 1e6);
+        let mut entry = BTreeMap::new();
+        entry.insert("n_requests".to_string(), Json::Num(n_requests as f64));
+        entry.insert("mean_ns".to_string(), Json::Num(result.mean_ns));
+        entry.insert("p50_ns".to_string(), Json::Num(result.p50_ns));
+        entry.insert("reqs_per_wall_sec".to_string(), Json::Num(reqs_per_sec));
+        report.insert(format!("simulate_{}", strategy.name()), Json::Obj(entry));
     }
 
     // Trace generation alone (the simulator's input pipeline).
     let cfg = TraceConfig { days: 0.1, scale: 0.05, ..Default::default() };
     let n = TraceGenerator::new(cfg.clone()).stream().count();
-    let r = bench(&format!("trace generation ({n} reqs)"), 10, || {
+    let r = bench(&format!("trace generation ({n} reqs)"), iters, || {
         TraceGenerator::new(cfg.clone()).stream().count()
     });
-    println!(
-        "    → {:.2} M generated requests / wall-second",
-        n as f64 / (r.mean_ns / 1e9) / 1e6
-    );
+    let gen_rps = n as f64 / (r.mean_ns / 1e9);
+    println!("    → {:.2} M generated requests / wall-second", gen_rps / 1e6);
+    let mut entry = BTreeMap::new();
+    entry.insert("n_requests".to_string(), Json::Num(n as f64));
+    entry.insert("mean_ns".to_string(), Json::Num(r.mean_ns));
+    entry.insert("reqs_per_wall_sec".to_string(), Json::Num(gen_rps));
+    report.insert("trace_generation".to_string(), Json::Obj(entry));
+
+    // Default to the tracked repo-root record regardless of cwd (cargo
+    // runs benches from the package root, which would otherwise leave a
+    // stray rust/BENCH_sim.json while the tracked file goes stale).
+    let out = std::env::var("SAGESERVE_BENCH_OUT")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sim.json").into());
+    match std::fs::write(&out, Json::Obj(report).to_string()) {
+        Ok(()) => println!("\n  wrote {out}"),
+        Err(e) => eprintln!("\n  could not write {out}: {e}"),
+    }
 }

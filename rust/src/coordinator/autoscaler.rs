@@ -21,7 +21,6 @@ use crate::config::{ModelKind, Region, ScalingParams, Tier, Time};
 use crate::metrics::Metrics;
 use crate::sim::cluster::{Cluster, PoolTag};
 use crate::sim::event::{Event, EventQueue};
-use crate::sim::instance::InstState;
 
 /// Scaling strategy selector (CLI-visible names).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -122,7 +121,7 @@ impl ScaleCtx<'_> {
             return false;
         };
         if self.cluster.instances[id].batch.is_empty() {
-            let stragglers = self.cluster.instances[id].take_waiting();
+            let stragglers = self.cluster.take_waiting(id);
             self.reroutes.extend(stragglers);
             self.cluster.finish_drain(id);
         }
@@ -197,23 +196,6 @@ impl Autoscaler {
         }
     }
 
-    fn pool_util(cluster: &Cluster, model: ModelKind, region: Region, pool: Option<PoolTag>) -> f64 {
-        let mut used = 0u64;
-        let mut cap = 0u64;
-        for &i in &cluster.endpoints[&(model, region)].instances {
-            let inst = &cluster.instances[i];
-            if inst.state == InstState::Active && pool.map_or(true, |p| inst.pool == p) {
-                used += inst.kv_used;
-                cap += inst.kv_capacity;
-            }
-        }
-        if cap == 0 {
-            1.0
-        } else {
-            used as f64 / cap as f64
-        }
-    }
-
     fn reactive_check(
         &mut self,
         ctx: &mut ScaleCtx,
@@ -225,7 +207,7 @@ impl Autoscaler {
         if !ctx.cooldown_ok(model, region, &self.params) {
             return;
         }
-        let util = Self::pool_util(ctx.cluster, model, region, filter);
+        let util = ctx.cluster.pool_util(model, region, filter);
         if util > self.params.scale_out_util {
             if ctx.scale_out(model, region, out_pool) {
                 ctx.touch_cooldown(model, region);
@@ -305,7 +287,7 @@ impl Autoscaler {
                 continue;
             }
             let allocated = ctx.cluster.allocated_count(model, region);
-            let util = Self::pool_util(ctx.cluster, model, region, None);
+            let util = ctx.cluster.pool_util(model, region, None);
             // Deferred progression toward the armed target (LT-U core).
             if allocated < target && util > self.params.scale_out_util {
                 if ctx.scale_out(model, region, PoolTag::Unified) {
@@ -355,14 +337,16 @@ impl Autoscaler {
             }
             let profile = ctx.cluster.perf.profile(model);
             // Estimated interactive queue delay from offline profile:
-            // pending tokens / (instances × profile TPS).
+            // pending tokens / (instances × profile TPS).  Both come
+            // straight from the per-pool aggregates — O(1) per endpoint.
             let mut pending = 0u64;
             let mut n_int = 0usize;
-            for &i in &ctx.cluster.endpoints[&(model, region)].instances {
-                let inst = &ctx.cluster.instances[i];
-                if inst.pool.serves_iw() && inst.state == InstState::Active {
-                    pending += inst.pending_tokens();
-                    n_int += 1;
+            let ep = &ctx.cluster.endpoints[&(model, region)];
+            for pool in PoolTag::ALL {
+                if pool.serves_iw() {
+                    let a = &ep.agg[pool.index()];
+                    pending += a.pending_tokens;
+                    n_int += a.count;
                 }
             }
             let capacity_tps = (n_int.max(1) as f64) * profile.prompt_tps;
@@ -382,8 +366,7 @@ impl Autoscaler {
             } else if smoothed < 0.05 * sla_budget {
                 // Conservative scale-in: only at very low pressure AND low
                 // utilization, and never below the initial interactive size.
-                let util = Self::pool_util(ctx.cluster, model, region,
-                                           Some(PoolTag::ChironInteractive));
+                let util = ctx.cluster.pool_util(model, region, Some(PoolTag::ChironInteractive));
                 if util < 0.15 && n_int > 10 {
                     if ctx.scale_in(model, region, Some(PoolTag::ChironInteractive)) {
                         ctx.touch_cooldown(model, region);
@@ -414,8 +397,10 @@ mod tests {
     }
 
     fn load_instances(cluster: &mut Cluster, frac: f64) {
-        for inst in &mut cluster.instances {
-            inst.kv_used = (inst.kv_capacity as f64 * frac) as u64;
+        for id in 0..cluster.instances.len() {
+            cluster.mutate(id, |inst| {
+                inst.kv_used = (inst.kv_capacity as f64 * frac) as u64;
+            });
         }
     }
 
@@ -478,9 +463,11 @@ mod tests {
     fn siloed_scales_only_the_signalling_pool() {
         let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::Siloed, 15);
         // Saturate only the NIW silo.
-        for inst in &mut cluster.instances {
-            if inst.pool == PoolTag::SiloNiw {
-                inst.kv_used = (inst.kv_capacity as f64 * 0.95) as u64;
+        for id in 0..cluster.instances.len() {
+            if cluster.instances[id].pool == PoolTag::SiloNiw {
+                cluster.mutate(id, |inst| {
+                    inst.kv_used = (inst.kv_capacity as f64 * 0.95) as u64;
+                });
             }
         }
         let mut ctx = ScaleCtx { now: 50.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
@@ -554,9 +541,9 @@ mod tests {
     fn chiron_scales_on_backpressure() {
         let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::Chiron, 12);
         // Pile pending tokens on interactive instances.
-        for inst in &mut cluster.instances {
-            if inst.pool == PoolTag::ChironInteractive {
-                inst.push_waiting(crate::trace::types::Request {
+        for id in 0..cluster.instances.len() {
+            if cluster.instances[id].pool == PoolTag::ChironInteractive {
+                cluster.push_waiting(id, crate::trace::types::Request {
                     id: 1,
                     arrival: 0.0,
                     model: ModelKind::Llama2_70B,

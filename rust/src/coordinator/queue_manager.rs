@@ -15,6 +15,9 @@ use crate::trace::types::Request;
 #[derive(Debug, Default)]
 pub struct QueueManager {
     queues: BTreeMap<ModelKind, VecDeque<Request>>,
+    /// Requests currently parked across all queues (kept incrementally —
+    /// the engine polls total depth every event-loop iteration).
+    depth_total: usize,
     pub total_enqueued: u64,
     pub total_released: u64,
 }
@@ -27,6 +30,7 @@ impl QueueManager {
     pub fn enqueue(&mut self, req: Request) {
         debug_assert!(!req.tier.is_interactive());
         self.queues.entry(req.model).or_default().push_back(req);
+        self.depth_total += 1;
         self.total_enqueued += 1;
     }
 
@@ -34,8 +38,9 @@ impl QueueManager {
         self.queues.get(&model).map(|q| q.len()).unwrap_or(0)
     }
 
+    /// Total parked requests — O(1) counter read.
     pub fn total_depth(&self) -> usize {
-        self.queues.values().map(|q| q.len()).sum()
+        self.depth_total
     }
 
     /// How many requests a utilization signal releases (§6.2 thresholds).
@@ -69,6 +74,7 @@ impl QueueManager {
                 }
             }
         }
+        self.depth_total -= out.len();
         self.total_released += out.len() as u64;
         out
     }
@@ -87,6 +93,7 @@ impl QueueManager {
                 }
             }
         }
+        self.depth_total -= out.len();
         self.total_released += out.len() as u64;
         out
     }
@@ -97,6 +104,7 @@ impl QueueManager {
         for q in self.queues.values_mut() {
             out.extend(q.drain(..));
         }
+        self.depth_total = 0;
         self.total_released += out.len() as u64;
         out
     }
@@ -185,5 +193,6 @@ mod tests {
         qm.on_capacity_signal(&p, ModelKind::Bloom176B, Region::EastUs, 0.55);
         assert_eq!(qm.total_enqueued, 2);
         assert_eq!(qm.total_released, 1);
+        assert_eq!(qm.total_depth(), 1, "O(1) depth counter stays coherent");
     }
 }

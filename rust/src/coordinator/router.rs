@@ -6,41 +6,56 @@ use crate::config::{ModelKind, Region, RoutingParams, Tier};
 use crate::sim::cluster::{Cluster, InstanceId};
 use crate::sim::instance::InstState;
 
+/// Fixed region-preference order: origin first, then the others in index
+/// order — a stack array, no per-request allocation.
+#[inline]
+fn preference_order(origin: Region) -> [Region; 3] {
+    let mut order = [origin; 3];
+    let mut k = 1;
+    for r in Region::ALL {
+        if r != origin {
+            order[k] = r;
+            k += 1;
+        }
+    }
+    order
+}
+
 /// Global routing for interactive requests (§6.1): first preferred region
 /// (origin, then the others in index order) whose effective memory
 /// utilization is under the threshold; otherwise the least-utilized one.
+/// One pass over three O(1) aggregate reads — allocation-free.
 pub fn route_region(
     cluster: &Cluster,
     params: &RoutingParams,
     model: ModelKind,
     origin: Region,
 ) -> Region {
-    let mut preference: Vec<Region> = vec![origin];
-    for r in Region::ALL {
-        if r != origin {
-            preference.push(r);
-        }
-    }
-    for &r in &preference {
-        if cluster.effective_util(model, r) < params.region_util_threshold {
+    let mut best = origin;
+    let mut best_util = f64::INFINITY;
+    for r in preference_order(origin) {
+        let util = cluster.effective_util(model, r);
+        if util < params.region_util_threshold {
             return r;
         }
+        // All saturated: least utilized wins.  Strict `<` keeps the
+        // *first* minimal region in preference order, matching the
+        // `min_by` this replaced (std returns the first equal minimum).
+        if util < best_util {
+            best = r;
+            best_util = util;
+        }
     }
-    // All saturated: least utilized wins.
-    preference
-        .into_iter()
-        .min_by(|&a, &b| {
-            cluster
-                .effective_util(model, a)
-                .partial_cmp(&cluster.effective_util(model, b))
-                .unwrap()
-        })
-        .unwrap()
+    best
 }
 
 /// Instance selection within a region: JSQ over admitting instances whose
 /// pool can serve the tier (minimum pending tokens, §6.1).  Falls back to
 /// provisioning instances (they queue until ready) when nothing is active.
+///
+/// One pass over the endpoint's cached tier-eligible roster, tracking the
+/// active and provisioning minima simultaneously; `pending_tokens` is an
+/// O(1) counter read, so the whole decision is allocation-free.
 pub fn route_instance(
     cluster: &Cluster,
     model: ModelKind,
@@ -48,23 +63,29 @@ pub fn route_instance(
     tier: Tier,
 ) -> Option<InstanceId> {
     let ep = cluster.endpoints.get(&(model, region))?;
-    let eligible = |state_ok: fn(&InstState) -> bool| {
-        ep.instances
-            .iter()
-            .copied()
-            .filter(|&i| {
-                let inst = &cluster.instances[i];
-                state_ok(&inst.state)
-                    && if tier.is_interactive() {
-                        inst.pool.serves_iw()
-                    } else {
-                        inst.pool.serves_niw()
-                    }
-            })
-            .min_by_key(|&i| cluster.instances[i].pending_tokens())
+    let eligible = if tier.is_interactive() {
+        &ep.iw_instances
+    } else {
+        &ep.niw_instances
     };
-    eligible(|s| matches!(s, InstState::Active))
-        .or_else(|| eligible(|s| matches!(s, InstState::Provisioning { .. })))
+    // Strict `<` keeps the *first* minimal instance, matching the
+    // `min_by_key` this replaced.
+    let mut best_active: Option<(u64, InstanceId)> = None;
+    let mut best_prov: Option<(u64, InstanceId)> = None;
+    for &i in eligible {
+        let inst = &cluster.instances[i];
+        let slot = match inst.state {
+            InstState::Active => &mut best_active,
+            InstState::Provisioning { .. } => &mut best_prov,
+            _ => continue,
+        };
+        let key = inst.pending_tokens();
+        match slot {
+            Some((bk, _)) if *bk <= key => {}
+            _ => *slot = Some((key, i)),
+        }
+    }
+    best_active.or(best_prov).map(|(_, i)| i)
 }
 
 /// Extra latency charged when a request is served outside its origin
@@ -95,9 +116,10 @@ mod tests {
     }
 
     fn saturate(c: &mut Cluster, region: Region) {
-        for &id in c.endpoints[&(ModelKind::Llama2_70B, region)].instances.clone().iter() {
-            let cap = c.instances[id].kv_capacity;
-            c.instances[id].kv_used = (cap as f64 * 0.9) as u64;
+        for id in c.endpoints[&(ModelKind::Llama2_70B, region)].instances.clone() {
+            c.mutate(id, |inst| {
+                inst.kv_used = (inst.kv_capacity as f64 * 0.9) as u64;
+            });
         }
     }
 
@@ -124,17 +146,29 @@ mod tests {
         }
         // Make Central slightly cooler.
         let id = c.endpoints[&(ModelKind::Llama2_70B, Region::CentralUs)].instances[0];
-        c.instances[id].kv_used = 0;
+        c.mutate(id, |inst| inst.kv_used = 0);
         let r = route_region(&c, &RoutingParams::default(), ModelKind::Llama2_70B, Region::EastUs);
         assert_eq!(r, Region::CentralUs);
+    }
+
+    #[test]
+    fn all_hot_tie_prefers_origin() {
+        // Equal utilization everywhere: the first minimal region in
+        // preference order (the origin) must win, matching `min_by`.
+        let mut c = cluster();
+        for region in Region::ALL {
+            saturate(&mut c, region);
+        }
+        let r = route_region(&c, &RoutingParams::default(), ModelKind::Llama2_70B, Region::WestUs);
+        assert_eq!(r, Region::WestUs);
     }
 
     #[test]
     fn jsq_picks_emptiest_instance() {
         let mut c = cluster();
         let ids = c.active_instances(ModelKind::Llama2_70B, Region::EastUs);
-        c.instances[ids[0]].kv_used = 1000;
-        c.instances[ids[0]].push_waiting(crate::trace::types::Request {
+        c.mutate(ids[0], |inst| inst.kv_used = 1000);
+        c.push_waiting(ids[0], crate::trace::types::Request {
             id: 9,
             arrival: 0.0,
             model: ModelKind::Llama2_70B,
@@ -167,8 +201,8 @@ mod tests {
     #[test]
     fn falls_back_to_provisioning_instances() {
         let mut c = cluster();
-        for &id in c.endpoints[&(ModelKind::Llama2_70B, Region::EastUs)].instances.clone().iter() {
-            c.instances[id].state = InstState::Provisioning { until: 100.0 };
+        for id in c.endpoints[&(ModelKind::Llama2_70B, Region::EastUs)].instances.clone() {
+            c.mutate(id, |inst| inst.state = InstState::Provisioning { until: 100.0 });
         }
         let pick = route_instance(&c, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF);
         assert!(pick.is_some());

@@ -14,6 +14,7 @@ pub mod ilp_runtime;
 pub mod scalability;
 pub mod scheduling;
 pub mod strategies;
+pub mod sweep;
 pub mod week;
 
 use anyhow::{Context, Result};

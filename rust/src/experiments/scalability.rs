@@ -30,14 +30,11 @@ pub fn fig14(opts: &ExpOptions) -> Result<()> {
         println!("  running {} with 5 models ...", strategy.name());
         let sim = run_simulation(cfg);
         let end = sim.end_time();
+        // IW only: NIW defers by design and would swamp the p95.  One
+        // grouping pass instead of a full outcome re-scan per model.
+        let by_model = sim.metrics.interactive_latency_by_model();
         for &m in &sim.cfg.trace.models {
-            // IW only: NIW defers by design and would swamp the p95.
-            let lat = crate::metrics::LatencySummary::from_outcomes(
-                sim.metrics
-                    .outcomes
-                    .iter()
-                    .filter(|o| o.model == m && o.tier.is_interactive()),
-            );
+            let lat = by_model.get(&m).cloned().unwrap_or_default();
             let ih = sim.metrics.model_instance_hours(m, end);
             let util = sim.metrics.mean_util(m);
             rows.push(format!(

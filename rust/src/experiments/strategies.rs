@@ -1,12 +1,18 @@
 //! Strategy-comparison experiments: Fig 8 + Table 1 (Siloed vs Unified),
 //! Figs 11–13 (Reactive vs LT-* vs Chiron), the Nov-2024 validation
 //! (§7.2.7) and the hardware / tier-mix ablations (§7.2.8).
+//!
+//! Every strategy×scenario grid here runs through the parallel sweep
+//! runner (`experiments::sweep`) — simulations are independent and
+//! deterministic, so the wall-clock drops to the slowest single run while
+//! the reported numbers stay identical to sequential execution.
 
 use anyhow::Result;
 
 use crate::config::{Epoch, GpuKind, ModelKind, Region, Tier, HOUR};
+use crate::experiments::sweep::{run_configs, RunResult};
 use crate::experiments::{print_table, ExpOptions};
-use crate::sim::engine::{run_simulation, SimConfig, Simulation, Strategy};
+use crate::sim::engine::{SimConfig, Strategy};
 use crate::trace::generator::TraceConfig;
 
 fn base_cfg(opts: &ExpOptions, epoch: Epoch, days: f64, strategy: Strategy) -> SimConfig {
@@ -38,22 +44,26 @@ fn base_cfg(opts: &ExpOptions, epoch: Epoch, days: f64, strategy: Strategy) -> S
 /// Fig 8 + Table 1 — Siloed vs Unified-Reactive on the Nov-2024 West-US
 /// Tuesday trace (4 models, 8×A100, 20 instances/model).
 pub fn fig8_table1(opts: &ExpOptions) -> Result<()> {
-    let mut results = Vec::new();
-    for strategy in [Strategy::Siloed, Strategy::Reactive] {
-        let mut cfg = base_cfg(opts, Epoch::Nov2024, 1.0, strategy);
-        cfg.trace.start_weekday = 1; // Tuesday
-        cfg.gpu = GpuKind::A100x8;
-        let sim = run_simulation(cfg);
-        results.push((strategy, sim));
-    }
+    let strategies = [Strategy::Siloed, Strategy::Reactive];
+    let cfgs: Vec<SimConfig> = strategies
+        .iter()
+        .map(|&strategy| {
+            let mut cfg = base_cfg(opts, Epoch::Nov2024, 1.0, strategy);
+            cfg.trace.start_weekday = 1; // Tuesday
+            cfg.gpu = GpuKind::A100x8;
+            cfg
+        })
+        .collect();
+    println!("  running {} strategies in parallel ...", cfgs.len());
+    let results = run_configs(cfgs);
 
     // (a) instance counts over time (15-min samples) + instance-hours.
     let mut rows = Vec::new();
     let mut ih_table = Vec::new();
-    for (strategy, sim) in &results {
-        let end = sim.end_time();
-        for &m in &sim.cfg.trace.models {
-            let ledger = sim
+    for r in &results {
+        let end = r.end_time;
+        for &m in &r.models {
+            let ledger = r
                 .metrics
                 .instances
                 .iter()
@@ -62,34 +72,33 @@ pub fn fig8_table1(opts: &ExpOptions) -> Result<()> {
                 .next();
             if let Some(l) = ledger {
                 for (t, c) in l.sample(end, 900.0) {
-                    rows.push(format!("{},{m},{:.2},{c}", strategy.name(), t / HOUR));
+                    rows.push(format!("{},{m},{:.2},{c}", r.strategy.name(), t / HOUR));
                 }
             }
-            let ih: f64 = sim
+            let ih: f64 = r
                 .metrics
                 .instances
                 .iter()
                 .filter(|((lm, lr), _)| *lm == m && *lr == Region::WestUs)
                 .map(|(_, l)| l.instance_hours(end))
                 .sum();
-            ih_table.push(vec![strategy.name().into(), m.to_string(), format!("{ih:.1}")]);
+            ih_table.push(vec![r.strategy.name().into(), m.to_string(), format!("{ih:.1}")]);
         }
     }
     opts.csv("fig8a_instance_counts_westus.csv", "strategy,model,hour,instances", &rows)?;
     print_table("Fig 8a — West-US instance-hours per model", &["strategy", "model", "inst-h"], &ih_table);
 
-    let total_ih = |sim: &Simulation| -> f64 {
-        let end = sim.end_time();
-        sim.metrics
+    let total_ih = |r: &RunResult| -> f64 {
+        r.metrics
             .instances
             .iter()
-            .filter(|((_, r), _)| *r == Region::WestUs)
-            .map(|(_, l)| l.instance_hours(end))
+            .filter(|((_, reg), _)| *reg == Region::WestUs)
+            .map(|(_, l)| l.instance_hours(r.end_time))
             .sum()
     };
-    let siloed_ih = total_ih(&results[0].1);
-    let unified_ih = total_ih(&results[1].1);
-    let spot_h: f64 = results[1].1.metrics.spot_hours(results[1].1.end_time());
+    let siloed_ih = total_ih(&results[0]);
+    let unified_ih = total_ih(&results[1]);
+    let spot_h: f64 = results[1].metrics.spot_hours(results[1].end_time);
     println!(
         "\n  West-US totals: Siloed {siloed_ih:.1} inst-h vs Unified {unified_ih:.1} inst-h \
          ({:.1}% fewer; paper: 34.5% fewer).  Unified donated {spot_h:.0} instance-hours to spot.",
@@ -98,10 +107,10 @@ pub fn fig8_table1(opts: &ExpOptions) -> Result<()> {
 
     // (b) memory utilization.
     let mut util_rows = Vec::new();
-    for (strategy, sim) in &results {
-        for &m in &sim.cfg.trace.models {
-            let u = sim.metrics.mean_util(m);
-            util_rows.push(format!("{},{m},{u:.4}", strategy.name()));
+    for r in &results {
+        for &m in &r.models {
+            let u = r.metrics.mean_util(m);
+            util_rows.push(format!("{},{m},{u:.4}", r.strategy.name()));
         }
     }
     opts.csv("fig8b_memory_util.csv", "strategy,model,mean_util", &util_rows)?;
@@ -109,21 +118,18 @@ pub fn fig8_table1(opts: &ExpOptions) -> Result<()> {
     // Table 1 — p95 TTFT and E2E per model under both strategies.
     // Interactive traffic only: NIW is *designed* to defer (queue-manager
     // release / 24 h deadline), so its queueing time would swamp a joint
-    // p95 without being an SLA signal.
+    // p95 without being an SLA signal.  One grouping pass per strategy
+    // instead of a full outcome re-scan per table cell.
+    let summaries: Vec<_> = results.iter().map(|r| r.metrics.interactive_latency_by_model()).collect();
     let mut table = Vec::new();
     let mut rows = Vec::new();
-    for &m in &results[0].1.cfg.trace.models {
+    for &m in &results[0].models {
         let mut line = vec![m.to_string()];
-        for (strategy, sim) in &results {
-            let s = crate::metrics::LatencySummary::from_outcomes(
-                sim.metrics
-                    .outcomes
-                    .iter()
-                    .filter(|o| o.model == m && o.tier.is_interactive()),
-            );
+        for (r, by_model) in results.iter().zip(&summaries) {
+            let s = by_model.get(&m).cloned().unwrap_or_default();
             line.push(format!("{:.1}", s.ttft_p95));
             line.push(format!("{:.1}", s.e2e_p95));
-            rows.push(format!("{},{m},{:.3},{:.3}", strategy.name(), s.ttft_p95, s.e2e_p95));
+            rows.push(format!("{},{m},{:.3},{:.3}", r.strategy.name(), s.ttft_p95, s.e2e_p95));
         }
         table.push(line);
     }
@@ -138,15 +144,13 @@ pub fn fig8_table1(opts: &ExpOptions) -> Result<()> {
 }
 
 /// The shared Fig 11/12/13 run: all five strategies on the Jul-2025 peak
-/// day, 4 models, 3 regions.
+/// day, 4 models, 3 regions — concurrently.
 pub fn fig11_12_13(opts: &ExpOptions) -> Result<()> {
     let strategies = [Strategy::Reactive, Strategy::LtI, Strategy::LtU, Strategy::LtUa, Strategy::Chiron];
-    let mut sims = Vec::new();
-    for &s in &strategies {
-        let cfg = base_cfg(opts, Epoch::Jul2025, 1.0, s);
-        println!("  running {} ...", s.name());
-        sims.push(run_simulation(cfg));
-    }
+    let cfgs: Vec<SimConfig> =
+        strategies.iter().map(|&s| base_cfg(opts, Epoch::Jul2025, 1.0, s)).collect();
+    println!("  running {} strategies in parallel ...", cfgs.len());
+    let sims = run_configs(cfgs);
     let focus = ModelKind::Llama2_70B;
 
     // ---- Fig 11: hourly instance counts + instance-hours (Llama-2) ----
@@ -154,8 +158,8 @@ pub fn fig11_12_13(opts: &ExpOptions) -> Result<()> {
     let mut table = Vec::new();
     let mut reactive_ih = 0.0;
     for sim in &sims {
-        let end = sim.end_time();
-        let name = sim.cfg.strategy.name();
+        let end = sim.end_time;
+        let name = sim.strategy.name();
         // Aggregated across regions, sampled hourly.
         let mut hourly = vec![0usize; (end / HOUR) as usize + 1];
         for ((m, _), ledger) in &sim.metrics.instances {
@@ -170,10 +174,10 @@ pub fn fig11_12_13(opts: &ExpOptions) -> Result<()> {
             rows.push(format!("{name},{h},{c}"));
         }
         let ih = sim.metrics.model_instance_hours(focus, end);
-        if sim.cfg.strategy == Strategy::Reactive {
+        if sim.strategy == Strategy::Reactive {
             reactive_ih = ih;
         }
-        let savings = if sim.cfg.strategy == Strategy::Reactive || reactive_ih == 0.0 {
+        let savings = if sim.strategy == Strategy::Reactive || reactive_ih == 0.0 {
             "—".to_string()
         } else {
             format!("{:+.1}%", (ih / reactive_ih - 1.0) * 100.0)
@@ -191,8 +195,8 @@ pub fn fig11_12_13(opts: &ExpOptions) -> Result<()> {
     if reactive_ih > 0.0 {
         let lt_ua_ih: f64 = sims
             .iter()
-            .find(|s| s.cfg.strategy == Strategy::LtUa)
-            .map(|s| s.metrics.model_instance_hours(focus, s.end_time()))
+            .find(|s| s.strategy == Strategy::LtUa)
+            .map(|s| s.metrics.model_instance_hours(focus, s.end_time))
             .unwrap_or(reactive_ih);
         let saved_per_day = (reactive_ih - lt_ua_ih).max(0.0);
         let dollars = saved_per_day * 98.32 * 3.0 * 4.0 * 7.0 / opts.scale.max(1e-9);
@@ -205,7 +209,7 @@ pub fn fig11_12_13(opts: &ExpOptions) -> Result<()> {
     // ---- Fig 12: per-region instance-hours + memory utilization ----
     let mut rows = Vec::new();
     for sim in &sims {
-        let end = sim.end_time();
+        let end = sim.end_time;
         for region in Region::ALL {
             let ih: f64 = sim
                 .metrics
@@ -214,13 +218,13 @@ pub fn fig11_12_13(opts: &ExpOptions) -> Result<()> {
                 .filter(|((m, r), _)| *m == focus && *r == region)
                 .map(|(_, l)| l.instance_hours(end))
                 .sum();
-            rows.push(format!("{},{region},{ih:.2}", sim.cfg.strategy.name()));
+            rows.push(format!("{},{region},{ih:.2}", sim.strategy.name()));
         }
     }
     opts.csv("fig12a_per_region_instance_hours.csv", "strategy,region,inst_hours", &rows)?;
     let mut rows = Vec::new();
     for sim in &sims {
-        rows.push(format!("{},{:.4}", sim.cfg.strategy.name(), sim.metrics.mean_util(focus)));
+        rows.push(format!("{},{:.4}", sim.strategy.name(), sim.metrics.mean_util(focus)));
     }
     opts.csv("fig12b_memory_util.csv", "strategy,mean_util", &rows)?;
 
@@ -228,19 +232,22 @@ pub fn fig11_12_13(opts: &ExpOptions) -> Result<()> {
     let mut rows = Vec::new();
     let mut table = Vec::new();
     for sim in &sims {
-        let iw = crate::metrics::LatencySummary::from_outcomes(
-            sim.metrics.outcomes.iter().filter(|o| o.model == focus && o.tier.is_interactive()),
-        );
+        let iw = sim
+            .metrics
+            .interactive_latency_by_model()
+            .get(&focus)
+            .cloned()
+            .unwrap_or_default();
         rows.push(format!(
             "{},{:.3},{:.3}",
-            sim.cfg.strategy.name(),
+            sim.strategy.name(),
             iw.ttft_p75,
             iw.e2e_p75
         ));
         let waste = sim.metrics.scaling_waste.total_gpu_hours();
         let events = sim.metrics.scaling_waste.total_events();
         table.push(vec![
-            sim.cfg.strategy.name().into(),
+            sim.strategy.name().into(),
             format!("{:.2}", iw.ttft_p75),
             format!("{:.2}", iw.e2e_p75),
             format!("{waste:.2}"),
@@ -251,7 +258,7 @@ pub fn fig11_12_13(opts: &ExpOptions) -> Result<()> {
     let mut rows = Vec::new();
     for sim in &sims {
         for (cause, (n, secs)) in &sim.metrics.scaling_waste.by_cause {
-            rows.push(format!("{},{cause},{n},{:.2}", sim.cfg.strategy.name(), secs / 3600.0));
+            rows.push(format!("{},{cause},{n},{:.2}", sim.strategy.name(), secs / 3600.0));
         }
     }
     opts.csv("fig13b_scaling_waste.csv", "strategy,cause,events,gpu_hours", &rows)?;
@@ -268,20 +275,27 @@ pub fn fig11_12_13(opts: &ExpOptions) -> Result<()> {
 /// instance-hours for Reactive / LT-I / LT-U / LT-UA).
 pub fn nov24_validation(opts: &ExpOptions) -> Result<()> {
     let strategies = [Strategy::Reactive, Strategy::LtI, Strategy::LtU, Strategy::LtUa];
+    let cfgs: Vec<SimConfig> = strategies
+        .iter()
+        .map(|&s| {
+            let mut cfg = base_cfg(opts, Epoch::Nov2024, 1.0, s);
+            cfg.trace.start_weekday = 1;
+            cfg
+        })
+        .collect();
+    println!("  running {} strategies in parallel ...", cfgs.len());
+    let results = run_configs(cfgs);
     let mut table = Vec::new();
     let mut rows = Vec::new();
     let mut reactive_ih = 0.0;
-    for &s in &strategies {
-        let mut cfg = base_cfg(opts, Epoch::Nov2024, 1.0, s);
-        cfg.trace.start_weekday = 1;
-        let sim = run_simulation(cfg);
-        let ih = sim.metrics.model_instance_hours(ModelKind::Llama2_70B, sim.end_time());
-        if s == Strategy::Reactive {
+    for r in &results {
+        let ih = r.metrics.model_instance_hours(ModelKind::Llama2_70B, r.end_time);
+        if r.strategy == Strategy::Reactive {
             reactive_ih = ih;
         }
         let rel = if reactive_ih > 0.0 { format!("{:+.1}%", (ih / reactive_ih - 1.0) * 100.0) } else { "—".into() };
-        rows.push(format!("{},{ih:.2}", s.name()));
-        table.push(vec![s.name().into(), format!("{ih:.2}"), rel]);
+        rows.push(format!("{},{ih:.2}", r.strategy.name()));
+        table.push(vec![r.strategy.name().into(), format!("{ih:.2}"), rel]);
     }
     opts.csv("nov24_instance_hours.csv", "strategy,inst_hours", &rows)?;
     print_table(
@@ -292,18 +306,34 @@ pub fn nov24_validation(opts: &ExpOptions) -> Result<()> {
     Ok(())
 }
 
-/// §7.2.8 — ablations: A100 hardware; IW:NIW ratios 9:1 and 1:1.
+/// §7.2.8 — ablations: A100 hardware; IW:NIW ratios 9:1 and 1:1.  All
+/// eight (setting × strategy) runs execute concurrently.
 pub fn ablations(opts: &ExpOptions) -> Result<()> {
-    let mut table = Vec::new();
-    let mut rows = Vec::new();
-    let mut run_pair = |label: &str, mutate: &dyn Fn(&mut SimConfig)| -> Result<()> {
-        let mut ihs = Vec::new();
+    type Mutator = Box<dyn Fn(&mut SimConfig)>;
+    let settings: Vec<(&str, Mutator)> = vec![
+        ("h100-baseline", Box::new(|_: &mut SimConfig| {})),
+        ("a100", Box::new(|cfg: &mut SimConfig| cfg.gpu = GpuKind::A100x8)),
+        ("iw-niw-9to1", Box::new(|cfg: &mut SimConfig| cfg.trace.iw_niw_ratio = Some(9.0))),
+        ("iw-niw-1to1", Box::new(|cfg: &mut SimConfig| cfg.trace.iw_niw_ratio = Some(1.0))),
+    ];
+    let mut cfgs = Vec::new();
+    for (_, mutate) in &settings {
         for s in [Strategy::Reactive, Strategy::LtUa] {
             let mut cfg = base_cfg(opts, Epoch::Jul2025, 1.0, s);
             mutate(&mut cfg);
-            let sim = run_simulation(cfg);
-            ihs.push(sim.metrics.model_instance_hours(ModelKind::Llama2_70B, sim.end_time()));
+            cfgs.push(cfg);
         }
+    }
+    println!("  running {} (setting × strategy) simulations in parallel ...", cfgs.len());
+    let results = run_configs(cfgs);
+
+    let mut table = Vec::new();
+    let mut rows = Vec::new();
+    for (pair, (label, _)) in results.chunks(2).zip(&settings) {
+        let ihs: Vec<f64> = pair
+            .iter()
+            .map(|r| r.metrics.model_instance_hours(ModelKind::Llama2_70B, r.end_time))
+            .collect();
         let saving = (1.0 - ihs[1] / ihs[0]) * 100.0;
         rows.push(format!("{label},{:.2},{:.2},{saving:.1}", ihs[0], ihs[1]));
         table.push(vec![
@@ -312,12 +342,7 @@ pub fn ablations(opts: &ExpOptions) -> Result<()> {
             format!("{:.1}", ihs[1]),
             format!("{saving:.1}%"),
         ]);
-        Ok(())
-    };
-    run_pair("h100-baseline", &|_| {})?;
-    run_pair("a100", &|cfg| cfg.gpu = GpuKind::A100x8)?;
-    run_pair("iw-niw-9to1", &|cfg| cfg.trace.iw_niw_ratio = Some(9.0))?;
-    run_pair("iw-niw-1to1", &|cfg| cfg.trace.iw_niw_ratio = Some(1.0))?;
+    }
     opts.csv("ablations.csv", "setting,reactive_ih,ltua_ih,savings_pct", &rows)?;
     print_table(
         "§7.2.8 — ablations, LT-UA vs Reactive Llama-2 instance-hours \

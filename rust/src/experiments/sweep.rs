@@ -1,0 +1,88 @@
+//! Parallel experiment sweep: run independent simulations on scoped
+//! threads and collect results in input order.
+//!
+//! The simulator is deterministic and shares no state between runs (each
+//! builds its own trace generator, cluster and forecaster from the
+//! config), so a parallel sweep produces results *identical* to running
+//! the same configs sequentially — asserted by
+//! `tests/perf_invariants.rs`.  `Simulation` itself stays on the worker
+//! thread (its boxed forecaster need not be `Send`); only the plain-data
+//! [`RunResult`] crosses back.
+//!
+//! Set `SAGESERVE_SEQUENTIAL=1` to force sequential execution (profiling
+//! a single run, or bisecting a suspected nondeterminism).
+
+use std::thread;
+
+use crate::config::ModelKind;
+use crate::metrics::Metrics;
+use crate::sim::engine::{run_simulation, SimConfig, Strategy};
+
+/// Run `f` over `items`, one scoped thread per item, results in input
+/// order.  A thread panic propagates to the caller.
+pub fn sweep<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let sequential = items.len() <= 1
+        || std::env::var("SAGESERVE_SEQUENTIAL").map_or(false, |v| !v.is_empty() && v != "0");
+    if sequential {
+        return items.into_iter().map(f).collect();
+    }
+    let f = &f;
+    thread::scope(|s| {
+        let handles: Vec<_> = items
+            .into_iter()
+            .map(|item| s.spawn(move || f(item)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("sweep worker panicked"))
+            .collect()
+    })
+}
+
+/// Everything the experiment reports read from a finished simulation,
+/// detached from the `Simulation` so it can cross threads.
+pub struct RunResult {
+    pub strategy: Strategy,
+    pub end_time: f64,
+    pub metrics: Metrics,
+    pub models: Vec<ModelKind>,
+}
+
+/// Run a batch of simulation configs concurrently (strategy×scenario
+/// grids of `fig8`/`fig11–13`/`ablations`/`week`).  Results are in config
+/// order and identical to sequential execution.
+pub fn run_configs(cfgs: Vec<SimConfig>) -> Vec<RunResult> {
+    sweep(cfgs, |cfg| {
+        let sim = run_simulation(cfg);
+        let end_time = sim.end_time();
+        RunResult {
+            strategy: sim.cfg.strategy,
+            end_time,
+            models: sim.cfg.trace.models.clone(),
+            metrics: sim.metrics,
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_preserves_input_order() {
+        let out = sweep((0..32).collect::<Vec<_>>(), |x| x * 2);
+        assert_eq!(out, (0..32).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sweep_handles_empty_and_single() {
+        let empty: Vec<i32> = Vec::new();
+        assert!(sweep(empty, |x: i32| x).is_empty());
+        assert_eq!(sweep(vec![7], |x| x + 1), vec![8]);
+    }
+}

@@ -1,19 +1,22 @@
 //! §7.2.7 / Fig 16b — week-long validation: p95 TTFT/E2E in 3-hour bins
-//! across a full week (diurnal + weekday/weekend patterns).
+//! across a full week (diurnal + weekday/weekend patterns).  The three
+//! strategy runs (the longest simulations in the suite) execute
+//! concurrently through the parallel sweep runner.
 
 use anyhow::Result;
 
 use crate::config::{Epoch, ModelKind, HOUR};
+use crate::experiments::sweep::run_configs;
 use crate::experiments::{print_table, ExpOptions};
 use crate::metrics::LatencySummary;
-use crate::sim::engine::{run_simulation, SimConfig, Strategy};
+use crate::sim::engine::{SimConfig, Strategy};
 use crate::trace::generator::TraceConfig;
 
 pub fn fig16b(opts: &ExpOptions) -> Result<()> {
-    let mut rows = Vec::new();
-    let mut summary_table = Vec::new();
-    for strategy in [Strategy::Reactive, Strategy::LtU, Strategy::LtUa] {
-        let cfg = SimConfig {
+    let strategies = [Strategy::Reactive, Strategy::LtU, Strategy::LtUa];
+    let cfgs: Vec<SimConfig> = strategies
+        .iter()
+        .map(|&strategy| SimConfig {
             trace: TraceConfig {
                 epoch: Epoch::Jul2025,
                 days: 7.0,
@@ -26,10 +29,15 @@ pub fn fig16b(opts: &ExpOptions) -> Result<()> {
             pjrt_forecaster: opts.pjrt,
             artifacts_dir: opts.artifacts_dir.clone(),
             ..Default::default()
-        };
-        println!("  running {} over a week ...", strategy.name());
-        let sim = run_simulation(cfg);
-        let end = sim.end_time();
+        })
+        .collect();
+    println!("  running {} week-long strategies in parallel ...", cfgs.len());
+    let results = run_configs(cfgs);
+
+    let mut rows = Vec::new();
+    let mut summary_table = Vec::new();
+    for sim in &results {
+        let end = sim.end_time;
         let bin = 3.0 * HOUR;
         let mut t = 0.0;
         let mut worst = (0.0f64, 0.0f64);
@@ -49,7 +57,7 @@ pub fn fig16b(opts: &ExpOptions) -> Result<()> {
                 let s = LatencySummary::from_outcomes(window.into_iter());
                 rows.push(format!(
                     "{},{:.1},{:.3},{:.3}",
-                    sim.cfg.strategy.name(),
+                    sim.strategy.name(),
                     t / HOUR,
                     s.ttft_p95,
                     s.e2e_p95
@@ -58,15 +66,15 @@ pub fn fig16b(opts: &ExpOptions) -> Result<()> {
             }
             t += bin;
         }
-        let overall = LatencySummary::from_outcomes(
-            sim.metrics
-                .outcomes
-                .iter()
-                .filter(|o| o.model == ModelKind::Llama2_70B && o.tier.is_interactive()),
-        );
+        let overall = sim
+            .metrics
+            .interactive_latency_by_model()
+            .get(&ModelKind::Llama2_70B)
+            .cloned()
+            .unwrap_or_default();
         let ih = sim.metrics.model_instance_hours(ModelKind::Llama2_70B, end);
         summary_table.push(vec![
-            sim.cfg.strategy.name().into(),
+            sim.strategy.name().into(),
             format!("{:.2}", overall.ttft_p95),
             format!("{:.2}", worst.0),
             format!("{:.2}", worst.1),

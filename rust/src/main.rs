@@ -213,6 +213,15 @@ fn report_simulation(sim: &sageserve::sim::engine::Simulation) {
             s.sla_violation_rate * 100.0
         );
     }
+    // Per (model, tier) cells in one grouping pass (multi-model runs).
+    if sim.cfg.trace.models.len() > 1 {
+        for ((m, tier), s) in &sim.metrics.latency_by_model_tier_all() {
+            println!(
+                "    {m}/{tier}: n={} ttft p95 {:.2}s e2e p95 {:.2}s",
+                s.count, s.ttft_p95, s.e2e_p95
+            );
+        }
+    }
     let mut total_ih = 0.0;
     for &m in &sim.cfg.trace.models {
         let ih = sim.metrics.model_instance_hours(m, end);

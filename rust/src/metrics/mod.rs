@@ -7,7 +7,7 @@ use crate::config::{ModelKind, Region, Tier, Time, HOUR};
 use crate::trace::types::Request;
 
 /// Per-request outcome recorded at completion.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RequestOutcome {
     pub tier: Tier,
     pub model: ModelKind,
@@ -23,12 +23,16 @@ pub struct RequestOutcome {
     pub sla_met: bool,
 }
 
-/// Percentile over a non-empty f64 slice (nearest-rank on a sorted copy).
+/// Percentile over a non-empty f64 slice (nearest-rank).  Uses quickselect
+/// (`select_nth_unstable_by`) instead of a full sort — O(n) per call, and
+/// each call re-selects so repeated percentiles over the same buffer stay
+/// correct regardless of the partial reorderings earlier calls left.
 pub fn percentile(values: &mut [f64], p: f64) -> f64 {
     assert!(!values.is_empty(), "percentile of empty slice");
-    values.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let rank = ((p / 100.0) * (values.len() - 1) as f64).round() as usize;
-    values[rank.min(values.len() - 1)]
+    let rank = rank.min(values.len() - 1);
+    let (_, v, _) = values.select_nth_unstable_by(rank, |a, b| a.partial_cmp(b).unwrap());
+    *v
 }
 
 /// Latency statistics for a set of outcomes.
@@ -59,6 +63,12 @@ impl LatencySummary {
                 violations += 1;
             }
         }
+        Self::from_parts(ttft, e2e, violations)
+    }
+
+    /// Summarize pre-collected latency vectors (the grouped single-pass
+    /// paths hand these over without re-scanning outcomes).
+    pub fn from_parts(mut ttft: Vec<f64>, mut e2e: Vec<f64>, violations: usize) -> Self {
         if ttft.is_empty() {
             return LatencySummary::default();
         }
@@ -83,7 +93,7 @@ impl LatencySummary {
 
 /// Step-function integrator: instance count over time → instance-hours
 /// (the area-under-curve metric of Fig 8/11).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct InstanceHourLedger {
     /// (time, count) change points, time-ordered.
     pub points: Vec<(Time, usize)>,
@@ -138,7 +148,7 @@ impl InstanceHourLedger {
 
 /// GPU-hours wasted on scaling: time VMs spend provisioning, by cause
 /// (Fig 13b's ledger).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ScalingWasteLedger {
     /// cause → (events, wasted seconds).
     pub by_cause: BTreeMap<String, (u64, Time)>,
@@ -160,8 +170,10 @@ impl ScalingWasteLedger {
     }
 }
 
-/// Top-level metrics container for one simulation run.
-#[derive(Debug, Default)]
+/// Top-level metrics container for one simulation run.  `PartialEq` backs
+/// the parallel-sweep equivalence test: two runs are "identical" iff every
+/// outcome, ledger point and sample matches exactly.
+#[derive(Debug, Default, PartialEq)]
 pub struct Metrics {
     pub outcomes: Vec<RequestOutcome>,
     /// (model, region) → active-instance ledger.
@@ -209,6 +221,48 @@ impl Metrics {
         LatencySummary::from_outcomes(
             self.outcomes.iter().filter(|o| o.model == model && o.tier == tier),
         )
+    }
+
+    /// Every (model, tier) latency summary in ONE pass over the outcomes.
+    /// The per-cell `latency_by_model_tier` filter re-scans the full
+    /// outcome list for each cell — quadratic across a report table; this
+    /// groups first, then summarizes each bucket.
+    pub fn latency_by_model_tier_all(&self) -> BTreeMap<(ModelKind, Tier), LatencySummary> {
+        let mut groups: BTreeMap<(ModelKind, Tier), (Vec<f64>, Vec<f64>, usize)> =
+            BTreeMap::new();
+        for o in &self.outcomes {
+            let g = groups.entry((o.model, o.tier)).or_default();
+            g.0.push(o.ttft);
+            g.1.push(o.e2e);
+            if !o.sla_met {
+                g.2 += 1;
+            }
+        }
+        groups
+            .into_iter()
+            .map(|(k, (ttft, e2e, v))| (k, LatencySummary::from_parts(ttft, e2e, v)))
+            .collect()
+    }
+
+    /// Interactive-traffic latency summaries per model, single grouping
+    /// pass (the experiment tables' common cell shape).
+    pub fn interactive_latency_by_model(&self) -> BTreeMap<ModelKind, LatencySummary> {
+        let mut groups: BTreeMap<ModelKind, (Vec<f64>, Vec<f64>, usize)> = BTreeMap::new();
+        for o in &self.outcomes {
+            if !o.tier.is_interactive() {
+                continue;
+            }
+            let g = groups.entry(o.model).or_default();
+            g.0.push(o.ttft);
+            g.1.push(o.e2e);
+            if !o.sla_met {
+                g.2 += 1;
+            }
+        }
+        groups
+            .into_iter()
+            .map(|(k, (ttft, e2e, v))| (k, LatencySummary::from_parts(ttft, e2e, v)))
+            .collect()
     }
 
     /// Total instance-hours for a model across regions.
@@ -303,6 +357,41 @@ mod tests {
         let s = m.latency_by_tier(Tier::IwF);
         assert_eq!(s.count, 2);
         assert!((s.sla_violation_rate - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grouped_summaries_match_filtered() {
+        use crate::trace::types::AppKind;
+        let mut m = Metrics::default();
+        for i in 0..40u64 {
+            let req = Request {
+                id: i,
+                arrival: i as f64,
+                model: if i % 2 == 0 { ModelKind::Llama2_70B } else { ModelKind::Bloom176B },
+                origin: Region::EastUs,
+                tier: if i % 3 == 0 { Tier::Niw } else { Tier::IwF },
+                app: AppKind::Chat,
+                input_tokens: 100,
+                output_tokens: 10,
+            };
+            m.record_outcome(&req, Region::EastUs, 0.1 + i as f64 * 0.07, 2.0 + i as f64);
+        }
+        let grouped = m.latency_by_model_tier_all();
+        for (&(model, tier), s) in &grouped {
+            let filtered = m.latency_by_model_tier(model, tier);
+            assert_eq!(s.count, filtered.count);
+            assert_eq!(s.ttft_p95, filtered.ttft_p95, "{model} {tier}");
+            assert_eq!(s.e2e_p50, filtered.e2e_p50, "{model} {tier}");
+            assert_eq!(s.sla_violation_rate, filtered.sla_violation_rate);
+        }
+        let iw = m.interactive_latency_by_model();
+        for (&model, s) in &iw {
+            let filtered = LatencySummary::from_outcomes(
+                m.outcomes.iter().filter(|o| o.model == model && o.tier.is_interactive()),
+            );
+            assert_eq!(s.count, filtered.count);
+            assert_eq!(s.ttft_p75, filtered.ttft_p75);
+        }
     }
 
     #[test]

@@ -10,13 +10,30 @@
 //!
 //! Scale-in drains the least-loaded instance and donates it to the spot
 //! pool (§2.3: a lost-opportunity sink that SageServe tries to shrink).
-
-use std::collections::BTreeMap;
+//!
+//! ## Incremental accounting
+//!
+//! Every per-endpoint quantity the hot path reads — effective memory
+//! utilization, waiting-aware utilization, pending tokens, active-instance
+//! counts, the engine's all-idle check — is maintained *incrementally* at
+//! the point of mutation instead of being recomputed by scanning
+//! instances.  All instance mutations flow through [`Cluster::mutate`]
+//! (or the specialised [`Cluster::plan_next_chunk`]), which snapshots the
+//! instance's contribution before the change and applies the delta to the
+//! owning endpoint's [`PoolAgg`] afterwards.  `effective_util`,
+//! `effective_util_with_waiting`, `pool_util`, `pending_tokens` and
+//! `is_all_idle` are therefore O(1) regardless of cluster size.
+//! [`Cluster::aggregates_consistent`] recounts everything from scratch
+//! for tests.
 
 use crate::config::{ModelKind, Region, ScalingParams, Time};
+use crate::coordinator::scheduler::SchedPolicy;
 use crate::metrics::Metrics;
 use crate::perf::PerfTable;
-use crate::sim::instance::{InstState, InstanceSim};
+use crate::sim::instance::{ChunkPlan, InstState, InstanceSim};
+use crate::trace::types::Request;
+use std::collections::BTreeMap;
+use std::ops::Index;
 
 pub type InstanceId = usize;
 
@@ -34,6 +51,27 @@ pub enum PoolTag {
 }
 
 impl PoolTag {
+    pub const ALL: [PoolTag; 6] = [
+        PoolTag::Unified,
+        PoolTag::SiloIw,
+        PoolTag::SiloNiw,
+        PoolTag::ChironInteractive,
+        PoolTag::ChironMixed,
+        PoolTag::ChironBatch,
+    ];
+
+    /// Dense index for per-pool aggregate slots.
+    pub fn index(self) -> usize {
+        match self {
+            PoolTag::Unified => 0,
+            PoolTag::SiloIw => 1,
+            PoolTag::SiloNiw => 2,
+            PoolTag::ChironInteractive => 3,
+            PoolTag::ChironMixed => 4,
+            PoolTag::ChironBatch => 5,
+        }
+    }
+
     /// May this pool serve interactive requests?
     pub fn serves_iw(self) -> bool {
         !matches!(self, PoolTag::SiloNiw | PoolTag::ChironBatch)
@@ -45,23 +83,144 @@ impl PoolTag {
     }
 }
 
+/// Incrementally-maintained sums over the *active* instances of one
+/// (endpoint, pool) — the O(1) backing store for every utilization and
+/// backpressure signal the routing/scaling hot path reads.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PoolAgg {
+    pub kv_used: u64,
+    pub kv_capacity: u64,
+    pub waiting_tokens: u64,
+    pub pending_tokens: u64,
+    pub count: usize,
+}
+
 /// Per-(model, region) endpoint bookkeeping.
 #[derive(Debug, Default, Clone)]
 pub struct Endpoint {
     /// Instances allocated to this endpoint (any state except Spot).
     pub instances: Vec<InstanceId>,
+    /// Roster cache: instances whose pool may serve interactive traffic
+    /// (same relative order as `instances` — JSQ tie-breaks match).
+    pub iw_instances: Vec<InstanceId>,
+    /// Roster cache: instances whose pool may serve NIW traffic.
+    pub niw_instances: Vec<InstanceId>,
     /// Last reactive scaling event (cooldown enforcement).
     pub last_scale: Time,
     /// LT-U / LT-UA deferred target from the last control epoch.
     pub target: Option<usize>,
     /// Forecast max TPS for the current hour (LT-UA gap checks).
     pub forecast_tps: f64,
+    /// Active-instance aggregates, one slot per [`PoolTag`].
+    pub agg: [PoolAgg; 6],
+}
+
+impl Endpoint {
+    /// Sum one field across the six pool slots (still O(1): six adds).
+    fn totals(&self) -> PoolAgg {
+        let mut t = PoolAgg::default();
+        for a in &self.agg {
+            t.kv_used += a.kv_used;
+            t.kv_capacity += a.kv_capacity;
+            t.waiting_tokens += a.waiting_tokens;
+            t.pending_tokens += a.pending_tokens;
+            t.count += a.count;
+        }
+        t
+    }
+}
+
+/// Dense (model, region) → [`Endpoint`] storage: a flat `Vec` plus an
+/// O(1) index grid, replacing the `BTreeMap` the per-request hot path
+/// used to walk.  The API mirrors the map it replaced (`get`, `get_mut`,
+/// `keys`, `values`, `iter`, `Index`), so call sites read the same.
+#[derive(Debug, Default)]
+pub struct EndpointMap {
+    keys: Vec<(ModelKind, Region)>,
+    eps: Vec<Endpoint>,
+    /// `lookup[model.index()][region.index()]` → slot in `eps`.
+    lookup: [[Option<u8>; 3]; 6],
+}
+
+impl EndpointMap {
+    #[inline]
+    fn slot(&self, model: ModelKind, region: Region) -> Option<usize> {
+        self.lookup[model.index()][region.index()].map(|s| s as usize)
+    }
+
+    pub fn insert(&mut self, key: (ModelKind, Region), ep: Endpoint) {
+        if let Some(s) = self.slot(key.0, key.1) {
+            self.eps[s] = ep;
+            return;
+        }
+        debug_assert!(self.eps.len() < u8::MAX as usize);
+        self.lookup[key.0.index()][key.1.index()] = Some(self.eps.len() as u8);
+        self.keys.push(key);
+        self.eps.push(ep);
+    }
+
+    #[inline]
+    pub fn get(&self, key: &(ModelKind, Region)) -> Option<&Endpoint> {
+        self.slot(key.0, key.1).map(|s| &self.eps[s])
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, key: &(ModelKind, Region)) -> Option<&mut Endpoint> {
+        match self.slot(key.0, key.1) {
+            Some(s) => Some(&mut self.eps[s]),
+            None => None,
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &(ModelKind, Region)> + '_ {
+        self.keys.iter()
+    }
+
+    pub fn values(&self) -> impl Iterator<Item = &Endpoint> + '_ {
+        self.eps.iter()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&(ModelKind, Region), &Endpoint)> + '_ {
+        self.keys.iter().zip(self.eps.iter())
+    }
+
+    pub fn len(&self) -> usize {
+        self.eps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.eps.is_empty()
+    }
+}
+
+impl<'a> Index<&'a (ModelKind, Region)> for EndpointMap {
+    type Output = Endpoint;
+
+    fn index(&self, key: &'a (ModelKind, Region)) -> &Endpoint {
+        self.get(key)
+            .unwrap_or_else(|| panic!("unknown endpoint ({}, {})", key.0, key.1))
+    }
+}
+
+/// What one instance contributes to its endpoint's aggregates — captured
+/// before a mutation, re-captured after, delta applied.
+#[derive(Debug, Clone, Copy)]
+struct InstSnapshot {
+    model: ModelKind,
+    region: Region,
+    pool: PoolTag,
+    active: bool,
+    busy: bool,
+    kv_used: u64,
+    kv_capacity: u64,
+    waiting_tokens: u64,
+    pending_tokens: u64,
 }
 
 /// The multi-region cluster state.
 pub struct Cluster {
     pub instances: Vec<InstanceSim>,
-    pub endpoints: BTreeMap<(ModelKind, Region), Endpoint>,
+    pub endpoints: EndpointMap,
     /// Donated instances per region (still hosting their last model).
     pub spot_pool: BTreeMap<Region, Vec<InstanceId>>,
     /// Remaining un-allocated VMs per region.
@@ -71,6 +230,9 @@ pub struct Cluster {
     pub local_weights: BTreeMap<Region, Vec<ModelKind>>,
     pub perf: PerfTable,
     pub params: ScalingParams,
+    /// Instances with a non-empty batch or waiting queue — the engine's
+    /// O(1) all-idle check.
+    busy_instances: usize,
 }
 
 impl Cluster {
@@ -85,12 +247,13 @@ impl Cluster {
     ) -> Self {
         let mut cluster = Cluster {
             instances: Vec::new(),
-            endpoints: BTreeMap::new(),
+            endpoints: EndpointMap::default(),
             spot_pool: Region::ALL.iter().map(|&r| (r, Vec::new())).collect(),
             vm_budget: [vm_budget_per_region; 3],
             local_weights: Region::ALL.iter().map(|&r| (r, models.to_vec())).collect(),
             perf,
             params,
+            busy_instances: 0,
         };
         for &model in models {
             for region in Region::ALL {
@@ -116,8 +279,149 @@ impl Cluster {
         let kv_cap = self.perf.profile(model).serving_kv_budget();
         self.instances
             .push(InstanceSim::new(id, model, region, pool, state, kv_cap));
-        self.endpoints.get_mut(&(model, region)).unwrap().instances.push(id);
+        self.roster_add(model, region, pool, id);
+        // A freshly spawned instance had no prior contribution: apply its
+        // delta against an empty "ghost" snapshot.
+        let ghost = InstSnapshot {
+            model,
+            region,
+            pool,
+            active: false,
+            busy: false,
+            kv_used: 0,
+            kv_capacity: 0,
+            waiting_tokens: 0,
+            pending_tokens: 0,
+        };
+        self.apply_delta(id, ghost);
         id
+    }
+
+    fn roster_add(&mut self, model: ModelKind, region: Region, pool: PoolTag, id: InstanceId) {
+        let ep = self.endpoints.get_mut(&(model, region)).unwrap();
+        if !ep.instances.contains(&id) {
+            ep.instances.push(id);
+            if pool.serves_iw() {
+                ep.iw_instances.push(id);
+            }
+            if pool.serves_niw() {
+                ep.niw_instances.push(id);
+            }
+        }
+    }
+
+    fn roster_remove(&mut self, model: ModelKind, region: Region, id: InstanceId) {
+        if let Some(ep) = self.endpoints.get_mut(&(model, region)) {
+            ep.instances.retain(|&x| x != id);
+            ep.iw_instances.retain(|&x| x != id);
+            ep.niw_instances.retain(|&x| x != id);
+        }
+    }
+
+    fn snapshot(&self, id: InstanceId) -> InstSnapshot {
+        let i = &self.instances[id];
+        InstSnapshot {
+            model: i.model,
+            region: i.region,
+            pool: i.pool,
+            active: i.state == InstState::Active,
+            busy: !i.batch.is_empty() || !i.waiting.is_empty(),
+            kv_used: i.kv_used,
+            kv_capacity: i.kv_capacity,
+            waiting_tokens: i.waiting_tokens(),
+            pending_tokens: i.pending_tokens(),
+        }
+    }
+
+    /// Subtract the before-contribution and add the after-contribution to
+    /// the owning endpoint's aggregates (a handful of integer ops).
+    fn apply_delta(&mut self, id: InstanceId, before: InstSnapshot) {
+        let after = self.snapshot(id);
+        if before.busy != after.busy {
+            if after.busy {
+                self.busy_instances += 1;
+            } else {
+                self.busy_instances -= 1;
+            }
+        }
+        if before.active {
+            let ep = self
+                .endpoints
+                .get_mut(&(before.model, before.region))
+                .expect("endpoint for active instance");
+            let a = &mut ep.agg[before.pool.index()];
+            a.kv_used -= before.kv_used;
+            a.kv_capacity -= before.kv_capacity;
+            a.waiting_tokens -= before.waiting_tokens;
+            a.pending_tokens -= before.pending_tokens;
+            a.count -= 1;
+        }
+        if after.active {
+            let ep = self
+                .endpoints
+                .get_mut(&(after.model, after.region))
+                .expect("endpoint for active instance");
+            let a = &mut ep.agg[after.pool.index()];
+            a.kv_used += after.kv_used;
+            a.kv_capacity += after.kv_capacity;
+            a.waiting_tokens += after.waiting_tokens;
+            a.pending_tokens += after.pending_tokens;
+            a.count += 1;
+        }
+    }
+
+    /// Run a mutating closure on one instance, keeping the endpoint
+    /// aggregates and the cluster-wide busy count coherent.  *Every*
+    /// mutation of an instance owned by a cluster must flow through here
+    /// (or through a Cluster method that does).
+    pub fn mutate<R>(&mut self, id: InstanceId, f: impl FnOnce(&mut InstanceSim) -> R) -> R {
+        let before = self.snapshot(id);
+        let out = f(&mut self.instances[id]);
+        self.apply_delta(id, before);
+        out
+    }
+
+    /// Enqueue a request on an instance (aggregate-coherent).
+    pub fn push_waiting(&mut self, id: InstanceId, req: Request) {
+        self.mutate(id, |inst| inst.push_waiting(req));
+    }
+
+    /// Drain an instance's waiting queue (aggregate-coherent).
+    pub fn take_waiting(&mut self, id: InstanceId) -> Vec<Request> {
+        self.mutate(id, |inst| inst.take_waiting())
+    }
+
+    /// Order the waiting queue, admit while memory lasts, and plan the
+    /// next decode chunk — the engine's per-chunk hot path, fused into
+    /// one aggregate-coherent call that borrows the perf profile instead
+    /// of cloning it.
+    pub fn plan_next_chunk(
+        &mut self,
+        id: InstanceId,
+        now: Time,
+        policy: &SchedPolicy,
+    ) -> Option<ChunkPlan> {
+        let before = self.snapshot(id);
+        let plan = {
+            let Cluster { instances, perf, .. } = self;
+            let inst = &mut instances[id];
+            // Scheduler policy orders the waiting queue (§6.5).
+            // Head-only ordering keeps overload queues O(n) to manage.
+            policy.order_head(&mut inst.waiting, now, 128);
+            let profile = perf.profile(inst.model);
+            // Per-chunk prefill budget ≈ 0.5 s of prompt throughput:
+            // bounds the TTFT impact of bulk admissions (NIW chunking,
+            // §6.2).
+            let prefill_budget = (profile.prompt_tps * 0.5) as u64;
+            let admitted = if inst.state == InstState::Active {
+                inst.admit(now, prefill_budget)
+            } else {
+                Vec::new()
+            };
+            inst.plan_chunk(now, admitted, profile)
+        };
+        self.apply_delta(id, before);
+        plan
     }
 
     /// Active (serving) instance ids for an endpoint.
@@ -140,52 +444,54 @@ impl Cluster {
         self.endpoints.get(&(model, region)).map(|e| e.instances.len()).unwrap_or(0)
     }
 
-    /// Effective memory utilization across active instances (§6.1).
+    /// Effective memory utilization across active instances (§6.1) —
+    /// O(1) from the incremental aggregates.
     pub fn effective_util(&self, model: ModelKind, region: Region) -> f64 {
-        let mut used = 0u64;
-        let mut cap = 0u64;
-        for &i in &self.endpoints[&(model, region)].instances {
-            let inst = &self.instances[i];
-            if inst.state == InstState::Active {
-                used += inst.kv_used;
-                cap += inst.kv_capacity;
-            }
-        }
-        if cap == 0 {
+        let t = self.endpoints[&(model, region)].totals();
+        if t.kv_capacity == 0 {
             1.0 // no serving capacity ⇒ saturated for routing purposes
         } else {
-            used as f64 / cap as f64
+            t.kv_used as f64 / t.kv_capacity as f64
         }
     }
 
     /// Effective utilization counting queued-but-unadmitted work too —
     /// the signal the Queue Manager drains against, so a release loop
-    /// sees its own effect immediately (§6.2).
+    /// sees its own effect immediately (§6.2).  O(1).
     pub fn effective_util_with_waiting(&self, model: ModelKind, region: Region) -> f64 {
-        let mut used = 0u64;
-        let mut cap = 0u64;
-        for &i in &self.endpoints[&(model, region)].instances {
-            let inst = &self.instances[i];
-            if inst.state == InstState::Active {
-                used += inst.kv_used;
-                used += inst.waiting_tokens();
-                cap += inst.kv_capacity;
-            }
-        }
-        if cap == 0 {
+        let t = self.endpoints[&(model, region)].totals();
+        if t.kv_capacity == 0 {
             1.0
         } else {
-            used as f64 / cap as f64
+            (t.kv_used + t.waiting_tokens) as f64 / t.kv_capacity as f64
         }
     }
 
-    /// Waiting + running tokens across an endpoint (backpressure signal).
+    /// Pool-scoped effective memory utilization (`None` ⇒ all pools) —
+    /// the reactive/Siloed/Chiron scaling signal.  O(1).
+    pub fn pool_util(&self, model: ModelKind, region: Region, pool: Option<PoolTag>) -> f64 {
+        let ep = &self.endpoints[&(model, region)];
+        let t = match pool {
+            Some(p) => ep.agg[p.index()],
+            None => ep.totals(),
+        };
+        if t.kv_capacity == 0 {
+            1.0
+        } else {
+            t.kv_used as f64 / t.kv_capacity as f64
+        }
+    }
+
+    /// Waiting + running tokens across an endpoint's active instances
+    /// (backpressure signal).  O(1).
     pub fn pending_tokens(&self, model: ModelKind, region: Region) -> u64 {
-        self.endpoints[&(model, region)]
-            .instances
-            .iter()
-            .map(|&i| self.instances[i].pending_tokens())
-            .sum()
+        self.endpoints[&(model, region)].totals().pending_tokens
+    }
+
+    /// True when no instance anywhere holds queued or running work — the
+    /// engine's per-event termination check, O(1) via the busy counter.
+    pub fn is_all_idle(&self) -> bool {
+        self.busy_instances == 0
     }
 
     /// Scale out one instance, choosing the fastest source (§6.4).
@@ -222,9 +528,7 @@ impl Cluster {
                 .scaling_waste
                 .record("spot-cross-model", self.params.local_redeploy_secs);
             // Remove from the old endpoint's roster if still listed.
-            if let Some(ep) = self.endpoints.get_mut(&(old_model, region)) {
-                ep.instances.retain(|&x| x != id);
-            }
+            self.roster_remove(old_model, region, id);
             self.reassign(id, model, region, pool, ready);
             return Some((id, ready));
         }
@@ -251,17 +555,18 @@ impl Cluster {
 
     fn reassign(&mut self, id: InstanceId, model: ModelKind, region: Region, pool: PoolTag, ready: Time) {
         let kv_cap = self.perf.profile(model).serving_kv_budget();
-        let inst = &mut self.instances[id];
-        debug_assert!(inst.batch.is_empty() && inst.waiting.is_empty());
-        inst.model = model;
-        inst.pool = pool;
-        inst.kv_capacity = kv_cap;
-        inst.kv_used = 0;
-        inst.state = InstState::Provisioning { until: ready };
-        let ep = self.endpoints.get_mut(&(model, region)).unwrap();
-        if !ep.instances.contains(&id) {
-            ep.instances.push(id);
-        }
+        // The instance comes from the spot pool (inactive, empty), so the
+        // aggregate delta is a no-op — but route it through `mutate` so
+        // the invariant holds by construction.
+        self.mutate(id, |inst| {
+            debug_assert!(inst.batch.is_empty() && inst.waiting.is_empty());
+            inst.model = model;
+            inst.pool = pool;
+            inst.kv_capacity = kv_cap;
+            inst.kv_used = 0;
+            inst.state = InstState::Provisioning { until: ready };
+        });
+        self.roster_add(model, region, pool, id);
     }
 
     /// Scale in: drain the least-loaded active instance in a pool.  The
@@ -274,61 +579,98 @@ impl Cluster {
         pool_filter: Option<PoolTag>,
     ) -> Option<InstanceId> {
         let ep = self.endpoints.get(&(model, region))?;
-        let candidates: Vec<InstanceId> = ep
-            .instances
-            .iter()
-            .copied()
-            .filter(|&i| {
-                let inst = &self.instances[i];
-                inst.state == InstState::Active
-                    && pool_filter.map_or(true, |p| inst.pool == p)
-            })
-            .collect();
         // Keep the robustness floor (min_instances) per endpoint, and at
         // least one active instance per pool (a siloed NIW pool must not
-        // drain to zero and strand its tier).
-        let active_total = self
-            .endpoints[&(model, region)]
-            .instances
-            .iter()
-            .filter(|&&i| self.instances[i].state == InstState::Active)
-            .count();
+        // drain to zero and strand its tier).  Counts come from the
+        // aggregates — O(1) instead of an instance scan.
+        let active_total = ep.totals().count;
         if active_total <= self.params.min_instances {
             return None;
         }
-        if pool_filter.is_some() {
+        if let Some(p) = pool_filter {
             // Pool-scoped scale-in (Siloed/Chiron): the robustness floor
             // applies per pool — §4's Fig 8 observation that Siloed holds
             // 2 IW + 2 NIW instances where Unified shares 2.
-            if candidates.len() <= self.params.min_instances {
+            if ep.agg[p.index()].count <= self.params.min_instances {
                 return None;
             }
         }
-        let id = candidates
-            .into_iter()
-            .min_by_key(|&i| self.instances[i].pending_tokens())?;
-        self.instances[id].state = InstState::Draining;
+        // Least-loaded eligible instance (first minimum, like min_by_key).
+        let mut best: Option<(u64, InstanceId)> = None;
+        for &i in &ep.instances {
+            let inst = &self.instances[i];
+            if inst.state != InstState::Active {
+                continue;
+            }
+            if pool_filter.map_or(false, |p| inst.pool != p) {
+                continue;
+            }
+            let key = inst.pending_tokens();
+            match best {
+                Some((bk, _)) if bk <= key => {}
+                _ => best = Some((key, i)),
+            }
+        }
+        let (_, id) = best?;
+        self.mutate(id, |inst| inst.state = InstState::Draining);
         Some(id)
     }
 
     /// Move a fully drained instance to the spot pool.
     pub fn finish_drain(&mut self, id: InstanceId) {
-        let inst = &mut self.instances[id];
-        debug_assert!(inst.batch.is_empty());
-        // Re-queue any stragglers left in its waiting queue (engine
-        // re-routes them); state flip happens regardless.
-        inst.state = InstState::Spot;
-        inst.kv_used = 0;
-        let (model, region) = (inst.model, inst.region);
-        if let Some(ep) = self.endpoints.get_mut(&(model, region)) {
-            ep.instances.retain(|&x| x != id);
-        }
+        // Draining → Spot is inactive on both sides: no aggregate delta,
+        // but keep the funnel for the busy/consistency invariants.
+        self.mutate(id, |inst| {
+            debug_assert!(inst.batch.is_empty());
+            inst.state = InstState::Spot;
+            inst.kv_used = 0;
+        });
+        let (model, region) = {
+            let inst = &self.instances[id];
+            (inst.model, inst.region)
+        };
+        self.roster_remove(model, region, id);
         self.spot_pool.get_mut(&region).unwrap().push(id);
     }
 
     /// Instances currently donated to spot, per region.
     pub fn spot_count(&self, region: Region) -> usize {
         self.spot_pool[&region].len()
+    }
+
+    /// Recompute every aggregate, roster cache and cached token counter
+    /// from scratch and compare with the incrementally-maintained values.
+    /// Test/debug support for the incremental-accounting refactor.
+    pub fn aggregates_consistent(&self) -> bool {
+        let mut ok = true;
+        for (_, ep) in self.endpoints.iter() {
+            let mut agg = [PoolAgg::default(); 6];
+            for &i in &ep.instances {
+                let inst = &self.instances[i];
+                let (waiting, running) = inst.recount_tokens();
+                // Cached per-instance counters match the raw queues.
+                ok &= waiting == inst.waiting_tokens();
+                ok &= waiting + running == inst.pending_tokens();
+                if inst.state == InstState::Active {
+                    let a = &mut agg[inst.pool.index()];
+                    a.kv_used += inst.kv_used;
+                    a.kv_capacity += inst.kv_capacity;
+                    a.waiting_tokens += waiting;
+                    a.pending_tokens += waiting + running;
+                    a.count += 1;
+                }
+                // Roster caches agree with pool eligibility.
+                ok &= ep.iw_instances.contains(&i) == inst.pool.serves_iw();
+                ok &= ep.niw_instances.contains(&i) == inst.pool.serves_niw();
+            }
+            ok &= agg == ep.agg;
+        }
+        let busy = self
+            .instances
+            .iter()
+            .filter(|i| !i.batch.is_empty() || !i.waiting.is_empty())
+            .count();
+        ok && busy == self.busy_instances
     }
 }
 
@@ -356,6 +698,8 @@ mod tests {
                 assert_eq!(c.active_instances(m, r).len(), 3);
             }
         }
+        assert!(c.aggregates_consistent());
+        assert!(c.is_all_idle());
     }
 
     #[test]
@@ -371,6 +715,7 @@ mod tests {
         assert_eq!(id, id2);
         assert!((ready - 160.0).abs() < 1e-9); // 1 min spot reclaim
         assert_eq!(c.spot_count(Region::EastUs), 0);
+        assert!(c.aggregates_consistent());
     }
 
     #[test]
@@ -390,6 +735,7 @@ mod tests {
             c.instances[id2].kv_capacity,
             c.perf.profile(ModelKind::Llama2_70B).serving_kv_budget()
         );
+        assert!(c.aggregates_consistent());
     }
 
     #[test]
@@ -445,9 +791,49 @@ mod tests {
     #[test]
     fn no_capacity_reports_saturated_util() {
         let mut c = cluster();
-        for &id in c.endpoints[&(ModelKind::Bloom176B, Region::WestUs)].instances.clone().iter() {
-            c.instances[id].state = InstState::Draining;
+        let ids = c.endpoints[&(ModelKind::Bloom176B, Region::WestUs)].instances.clone();
+        for id in ids {
+            c.mutate(id, |inst| inst.state = InstState::Draining);
         }
         assert_eq!(c.effective_util(ModelKind::Bloom176B, Region::WestUs), 1.0);
+        assert!(c.aggregates_consistent());
+    }
+
+    #[test]
+    fn aggregates_track_load_and_state_changes() {
+        use crate::config::Tier;
+        use crate::trace::types::AppKind;
+        let mut c = cluster();
+        let id = c.endpoints[&(ModelKind::Llama2_70B, Region::EastUs)].instances[0];
+        c.push_waiting(id, Request {
+            id: 1,
+            arrival: 0.0,
+            model: ModelKind::Llama2_70B,
+            origin: Region::EastUs,
+            tier: Tier::IwF,
+            app: AppKind::Chat,
+            input_tokens: 1000,
+            output_tokens: 200,
+        });
+        assert!(!c.is_all_idle());
+        assert!(c.aggregates_consistent());
+        let ep = &c.endpoints[&(ModelKind::Llama2_70B, Region::EastUs)];
+        assert_eq!(ep.totals().waiting_tokens, 1200);
+        assert_eq!(ep.totals().pending_tokens, 1200);
+
+        // Admission + chunk planning moves waiting → kv_used/running.
+        let plan = c.plan_next_chunk(id, 0.0, &SchedPolicy::Fcfs);
+        assert!(plan.is_some());
+        assert!(c.aggregates_consistent());
+        let ep = &c.endpoints[&(ModelKind::Llama2_70B, Region::EastUs)];
+        assert_eq!(ep.totals().waiting_tokens, 0);
+        assert_eq!(ep.totals().kv_used, 1200);
+
+        // Draining the instance removes its contribution entirely.
+        c.mutate(id, |inst| inst.state = InstState::Draining);
+        assert!(c.aggregates_consistent());
+        let ep = &c.endpoints[&(ModelKind::Llama2_70B, Region::EastUs)];
+        assert_eq!(ep.totals().kv_used, 0);
+        assert_eq!(ep.totals().count, 2);
     }
 }

@@ -90,8 +90,6 @@ pub struct Simulation {
     end_time: Time,
     epoch_start: Time,
     tick_count: u64,
-    /// Per-request extra latency (cross-region routing) keyed by id.
-    route_latency: BTreeMap<u64, f64>,
 }
 
 impl Simulation {
@@ -150,7 +148,6 @@ impl Simulation {
             end_time,
             epoch_start: 0.0,
             tick_count: 0,
-            route_latency: BTreeMap::new(),
             cfg,
         };
         // Seed ledgers with the initial allocation.
@@ -224,7 +221,8 @@ impl Simulation {
                 (None, None) => break,
             }
             // Termination: trace done and only periodic events remain.
-            if stream.peek().is_none() && self.all_idle() && self.qm.total_depth() == 0 {
+            // Both checks are O(1) counters — this runs every iteration.
+            if stream.peek().is_none() && self.cluster.is_all_idle() && self.qm.total_depth() == 0 {
                 break;
             }
         }
@@ -239,17 +237,10 @@ impl Simulation {
                 break;
             }
             self.handle_event(ev);
-            if self.all_idle() && self.qm.total_depth() == 0 {
+            if self.cluster.is_all_idle() && self.qm.total_depth() == 0 {
                 break;
             }
         }
-    }
-
-    fn all_idle(&self) -> bool {
-        self.cluster
-            .instances
-            .iter()
-            .all(|i| i.batch.is_empty() && i.waiting.is_empty())
     }
 
     // ------------------------------------------------------------------
@@ -296,11 +287,10 @@ impl Simulation {
     fn dispatch_to_region(&mut self, req: Request, region: Region) {
         match router::route_instance(&self.cluster, req.model, region, req.tier) {
             Some(id) => {
-                let latency = router::routing_latency(&self.cfg.routing, req.origin, region);
-                if latency > 0.0 {
-                    self.route_latency.insert(req.id, latency);
-                }
-                self.cluster.instances[id].push_waiting(req);
+                // Cross-region latency is recomputed at completion from
+                // the serving instance's region — no per-request side
+                // table to maintain on this path.
+                self.cluster.push_waiting(id, req);
                 self.kick_instance(id);
             }
             None => {
@@ -324,54 +314,37 @@ impl Simulation {
 
     fn start_chunk(&mut self, id: InstanceId) {
         let now = self.now;
-        let profile = self.cluster.perf.profile(self.cluster.instances[id].model).clone();
-        let inst = &mut self.cluster.instances[id];
-        // Scheduler policy orders the waiting queue (§6.5).
-        // Head-only ordering keeps overload queues O(n) to manage.
-        self.cfg.sched_policy.order_head(&mut inst.waiting, now, 128);
-        // Per-chunk prefill budget ≈ 0.5 s of prompt throughput: bounds
-        // the TTFT impact of bulk admissions (NIW chunking, §6.2).
-        let prefill_budget = (profile.prompt_tps * 0.5) as u64;
-        let admitted = if inst.state == InstState::Active {
-            inst.admit(now, prefill_budget)
-        } else {
-            vec![]
-        };
-        let plan = match inst.plan_chunk(now, admitted, &profile) {
+        // Ordering, admission and chunk planning are fused into one
+        // aggregate-coherent cluster call (no perf-profile clone).
+        let plan = match self.cluster.plan_next_chunk(id, now, &self.cfg.sched_policy) {
             Some(p) => p,
             None => return, // idle
         };
-        // Record TTFT/E2E outcomes with exact in-chunk timestamps.
-        let served_region = inst.region;
-        let mut outcomes = Vec::new();
+        // Record TTFT/E2E outcomes with exact in-chunk timestamps,
+        // reading the sequences in place (no per-completion clone).
+        // Cross-region latency is derived from where the request was
+        // actually served, replacing the old per-request side table.
+        let served_region = self.cluster.instances[id].region;
         for &(idx, t_done) in &plan.completions {
-            let seq = &inst.batch[idx];
-            outcomes.push((seq.req.clone(), seq.prefill_done, t_done));
+            let seq = &self.cluster.instances[id].batch[idx];
+            let extra = router::routing_latency(&self.cfg.routing, seq.req.origin, served_region);
+            let ttft = seq.prefill_done - seq.req.arrival + extra;
+            let e2e = t_done - seq.req.arrival + extra;
+            self.metrics.record_outcome(&seq.req, served_region, ttft, e2e);
         }
-        for (req, prefill_done, t_done) in outcomes {
-            let extra = self.route_latency.remove(&req.id).unwrap_or(0.0);
-            let ttft = prefill_done - req.arrival + extra;
-            let e2e = t_done - req.arrival + extra;
-            self.metrics.record_outcome(&req, served_region, ttft, e2e);
-        }
-        let duration = plan.duration;
-        self.events.push(now + duration, Event::ChunkDone { instance: id });
+        self.events.push(now + plan.duration, Event::ChunkDone { instance: id });
     }
 
     fn on_chunk_done(&mut self, id: InstanceId) {
-        {
-            let inst = &mut self.cluster.instances[id];
+        let (is_draining, batch_empty) = self.cluster.mutate(id, |inst| {
             inst.chunk_scheduled = false;
             inst.retire_completed();
-        }
+            (inst.state == InstState::Draining, inst.batch.is_empty())
+        });
         // Draining instance with an empty batch converts to spot; its
         // waiting queue (if any) is re-routed.
-        let (is_draining, batch_empty) = {
-            let inst = &self.cluster.instances[id];
-            (inst.state == InstState::Draining, inst.batch.is_empty())
-        };
         if is_draining && batch_empty {
-            let stragglers: Vec<Request> = self.cluster.instances[id].take_waiting();
+            let stragglers: Vec<Request> = self.cluster.take_waiting(id);
             let (model, region) = {
                 let i = &self.cluster.instances[id];
                 (i.model, i.region)
@@ -394,10 +367,11 @@ impl Simulation {
     }
 
     fn on_provision_done(&mut self, id: InstanceId) {
-        let inst = &mut self.cluster.instances[id];
-        if let InstState::Provisioning { .. } = inst.state {
-            inst.state = InstState::Active;
-        }
+        self.cluster.mutate(id, |inst| {
+            if let InstState::Provisioning { .. } = inst.state {
+                inst.state = InstState::Active;
+            }
+        });
         self.kick_instance(id);
     }
 
@@ -630,6 +604,16 @@ mod tests {
         let ih = sim.instance_hours(ModelKind::Llama2_70B);
         // 3 regions × ≤6 instances × 2.4h ≈ ≤43 instance-hours; min 2/region.
         assert!(ih > 1.0 && ih < 50.0, "instance-hours {ih}");
+    }
+
+    #[test]
+    fn cluster_accounting_stays_coherent() {
+        // The O(1) aggregate reads are only as good as the incremental
+        // bookkeeping behind them — recount from scratch after a run.
+        for strategy in [Strategy::Reactive, Strategy::LtU] {
+            let sim = run_quick(strategy);
+            assert!(sim.cluster.aggregates_consistent(), "{}", strategy.name());
+        }
     }
 
     #[test]

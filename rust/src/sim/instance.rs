@@ -70,6 +70,9 @@ pub struct InstanceSim {
     pub waiting: Vec<Request>,
     /// Cached Σ total_tokens over `waiting` (JSQ signal; O(1) reads).
     waiting_tokens: u64,
+    /// Cached Σ remaining over `batch` (the running half of the JSQ
+    /// signal; refreshed at chunk boundaries so reads stay O(1)).
+    running_tokens: u64,
     /// Reserved KV tokens (running batch).
     pub kv_used: u64,
     pub kv_capacity: u64,
@@ -109,6 +112,7 @@ impl InstanceSim {
             batch: Vec::new(),
             waiting: Vec::new(),
             waiting_tokens: 0,
+            running_tokens: 0,
             kv_used: 0,
             kv_capacity,
             chunk_scheduled: false,
@@ -123,15 +127,23 @@ impl InstanceSim {
     }
 
     /// Tokens still queued + running (the JSQ routing signal, §6.1).
-    /// O(batch) — the waiting side is a cached counter.
+    /// O(1) — both halves are cached counters.
     pub fn pending_tokens(&self) -> u64 {
-        let running: u64 = self.batch.iter().map(|s| s.remaining as u64).sum();
-        self.waiting_tokens + running
+        self.waiting_tokens + self.running_tokens
     }
 
     /// Sum of queued (unadmitted) tokens — cached.
     pub fn waiting_tokens(&self) -> u64 {
         self.waiting_tokens
+    }
+
+    /// Recompute the cached token counters from the raw queues — the
+    /// ground truth the incremental aggregates are checked against.
+    /// Returns `(waiting_tokens, running_tokens)`.
+    pub fn recount_tokens(&self) -> (u64, u64) {
+        let waiting: u64 = self.waiting.iter().map(|r| r.total_tokens()).sum();
+        let running: u64 = self.batch.iter().map(|s| s.remaining as u64).sum();
+        (waiting, running)
     }
 
     /// Enqueue a request (keeps the token counter coherent).
@@ -151,15 +163,18 @@ impl InstanceSim {
     }
 
     /// Retire sequences whose completion fell inside the finished chunk.
-    /// Returns the retired sequences (outcomes were already recorded).
-    pub fn retire_completed(&mut self) -> Vec<ActiveSeq> {
-        let mut done = Vec::new();
+    /// Returns how many were retired (outcomes were already recorded, so
+    /// the sequences themselves are dropped — no per-chunk allocation).
+    /// `running_tokens` is untouched: a completed sequence's `remaining`
+    /// was zeroed when its completion was planned.
+    pub fn retire_completed(&mut self) -> usize {
+        let mut done = 0;
         let mut i = 0;
         while i < self.batch.len() {
             if self.batch[i].completed_at.is_some() {
                 let seq = self.batch.swap_remove(i);
                 self.kv_used = self.kv_used.saturating_sub(seq.kv_reserved);
-                done.push(seq);
+                done += 1;
             } else {
                 i += 1;
             }
@@ -246,6 +261,7 @@ impl InstanceSim {
         }
         if self.batch.is_empty() {
             self.chunk_scheduled = false;
+            self.running_tokens = 0;
             return None;
         }
 
@@ -273,6 +289,9 @@ impl InstanceSim {
             }
         }
         plan.duration = prefill_time + iters as f64 * tbt;
+        // Refresh the cached running-token counter once per chunk (the
+        // admission pushes and per-sequence decrements above changed it).
+        self.running_tokens = self.batch.iter().map(|s| s.remaining as u64).sum();
         self.busy_until = now + plan.duration;
         self.chunk_scheduled = true;
         Some(plan)
@@ -383,9 +402,11 @@ mod tests {
         assert_eq!(i.kv_used, 108);
         i.plan_chunk(0.0, adm, &perf()).unwrap();
         let done = i.retire_completed();
-        assert_eq!(done.len(), 1);
+        assert_eq!(done, 1);
         assert_eq!(i.kv_used, 0);
         assert!(i.batch.is_empty());
+        assert_eq!(i.recount_tokens(), (0, 0));
+        assert_eq!(i.pending_tokens(), 0);
     }
 
     #[test]

@@ -26,6 +26,23 @@ impl BenchResult {
     }
 }
 
+/// True when `SAGESERVE_BENCH_QUICK` is set (CI smoke mode: cap
+/// iterations so the whole bench suite finishes in seconds while still
+/// emitting machine-readable numbers).
+pub fn quick_mode() -> bool {
+    std::env::var("SAGESERVE_BENCH_QUICK").map_or(false, |v| !v.is_empty() && v != "0")
+}
+
+/// Pick the iteration budget: `full` normally, `quick` under
+/// `SAGESERVE_BENCH_QUICK=1`.
+pub fn quick_iters(full: usize, quick: usize) -> usize {
+    if quick_mode() {
+        quick
+    } else {
+        full
+    }
+}
+
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.1} ns")

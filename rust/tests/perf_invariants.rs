@@ -1,0 +1,75 @@
+//! Pure-perf invariants for the simulator hot-path overhaul: the
+//! incremental cluster accounting must agree with a from-scratch recount
+//! at any point, and the parallel experiment sweep must produce metrics
+//! byte-identical to sequential execution.
+
+use sageserve::config::ModelKind;
+use sageserve::experiments::sweep::{run_configs, sweep};
+use sageserve::sim::engine::{quick_config, run_simulation, SimConfig, Strategy};
+
+fn quick(strategy: Strategy) -> SimConfig {
+    let mut cfg = quick_config(strategy, 0.05, 0.005);
+    cfg.scaling.max_instances = 10;
+    cfg
+}
+
+/// The incremental endpoint aggregates (per-pool KV, waiting/pending
+/// tokens, active counts, busy-instance counter, roster caches, cached
+/// per-instance token counters) must match a from-scratch recount after
+/// a full simulation run — across strategies with very different
+/// mutation mixes (reactive drains, queue-manager releases, Chiron
+/// pools).
+#[test]
+fn incremental_aggregates_match_recount() {
+    for strategy in [
+        Strategy::Reactive,
+        Strategy::Siloed,
+        Strategy::LtUa,
+        Strategy::Chiron,
+    ] {
+        let sim = run_simulation(quick(strategy));
+        assert!(
+            !sim.metrics.outcomes.is_empty(),
+            "{}: run produced no outcomes",
+            strategy.name()
+        );
+        assert!(
+            sim.cluster.aggregates_consistent(),
+            "{}: incremental aggregates drifted from recount",
+            strategy.name()
+        );
+    }
+}
+
+/// The parallel sweep must be a pure wall-clock optimization: identical
+/// per-strategy metrics (every outcome, every ledger point, every util
+/// sample) to running the same configs sequentially.
+#[test]
+fn parallel_sweep_identical_to_sequential() {
+    let strategies = [Strategy::Reactive, Strategy::LtUa, Strategy::Chiron];
+    let cfgs: Vec<SimConfig> = strategies.iter().map(|&s| quick(s)).collect();
+
+    let parallel = run_configs(cfgs);
+    let sequential: Vec<_> = strategies.iter().map(|&s| run_simulation(quick(s))).collect();
+
+    assert_eq!(parallel.len(), sequential.len());
+    for (p, s) in parallel.iter().zip(&sequential) {
+        assert_eq!(p.strategy, s.cfg.strategy, "result order must match input order");
+        assert!(
+            p.metrics == s.metrics,
+            "{}: parallel metrics differ from sequential",
+            p.strategy.name()
+        );
+        let ih_p = p.metrics.model_instance_hours(ModelKind::Llama2_70B, p.end_time);
+        let ih_s = s.instance_hours(ModelKind::Llama2_70B);
+        assert_eq!(ih_p, ih_s, "{}: instance-hours differ", p.strategy.name());
+    }
+}
+
+/// The generic sweep runner itself: order preservation under contention.
+#[test]
+fn sweep_runner_is_order_preserving() {
+    let items: Vec<u64> = (0..64).collect();
+    let out = sweep(items.clone(), |x| x * x);
+    assert_eq!(out, items.iter().map(|x| x * x).collect::<Vec<_>>());
+}
