@@ -46,19 +46,39 @@ fn main() {
         report.insert(format!("simulate_{}", strategy.name()), Json::Obj(entry));
     }
 
-    // Trace generation alone (the simulator's input pipeline).
+    // Trace generation alone (the simulator's input pipeline).  The
+    // headline `trace_generation` entry is the production path — the
+    // chunk-parallel materializer sweep grids replay from;
+    // `trace_generation_stream` times the same counter-seeded pipeline
+    // through the sequential minute-bucketed iterator (single-run
+    // engine path; also what a one-worker materialize costs).
     let cfg = TraceConfig { days: 0.1, scale: 0.05, ..Default::default() };
-    let n = TraceGenerator::new(cfg.clone()).stream().count();
-    let r = bench(&format!("trace generation ({n} reqs)"), iters, || {
-        TraceGenerator::new(cfg.clone()).stream().count()
-    });
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let n = TraceGenerator::new(cfg.clone()).materialize().len();
+    let r = bench(
+        &format!("trace generation, materialize x{workers} ({n} reqs)"),
+        iters,
+        || TraceGenerator::new(cfg.clone()).materialize().len(),
+    );
     let gen_rps = n as f64 / (r.mean_ns / 1e9);
-    println!("    → {:.2} M generated requests / wall-second", gen_rps / 1e6);
+    println!("    → {:.2} M generated requests / wall-second\n", gen_rps / 1e6);
     let mut entry = BTreeMap::new();
     entry.insert("n_requests".to_string(), Json::Num(n as f64));
     entry.insert("mean_ns".to_string(), Json::Num(r.mean_ns));
     entry.insert("reqs_per_wall_sec".to_string(), Json::Num(gen_rps));
+    entry.insert("workers".to_string(), Json::Num(workers as f64));
     report.insert("trace_generation".to_string(), Json::Obj(entry));
+
+    let r = bench(&format!("trace generation, sequential stream ({n} reqs)"), iters, || {
+        TraceGenerator::new(cfg.clone()).stream().count()
+    });
+    let stream_rps = n as f64 / (r.mean_ns / 1e9);
+    println!("    → {:.2} M generated requests / wall-second", stream_rps / 1e6);
+    let mut entry = BTreeMap::new();
+    entry.insert("n_requests".to_string(), Json::Num(n as f64));
+    entry.insert("mean_ns".to_string(), Json::Num(r.mean_ns));
+    entry.insert("reqs_per_wall_sec".to_string(), Json::Num(stream_rps));
+    report.insert("trace_generation_stream".to_string(), Json::Obj(entry));
 
     // Default to the tracked repo-root record regardless of cwd (cargo
     // runs benches from the package root, which would otherwise leave a

@@ -64,6 +64,17 @@ pub enum ModelKind {
 }
 
 impl ModelKind {
+    /// Every model variant, in [`ModelKind::index`] order (dense-table
+    /// iteration; guarded by a test).
+    pub const ALL: [ModelKind; 6] = [
+        ModelKind::Bloom176B,
+        ModelKind::Llama2_70B,
+        ModelKind::Llama31_8B,
+        ModelKind::Llama32_3B,
+        ModelKind::Llama4Scout,
+        ModelKind::TinyLm,
+    ];
+
     /// The four standard evaluation models (§7.1).
     pub const EVAL4: [ModelKind; 4] = [
         ModelKind::Bloom176B,
@@ -298,6 +309,13 @@ mod tests {
     fn region_index_roundtrip() {
         for r in Region::ALL {
             assert_eq!(Region::from_index(r.index()), r);
+        }
+    }
+
+    #[test]
+    fn model_index_matches_all_order() {
+        for (i, m) in ModelKind::ALL.into_iter().enumerate() {
+            assert_eq!(m.index(), i, "{m}");
         }
     }
 

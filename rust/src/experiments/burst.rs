@@ -1,19 +1,22 @@
 //! §7.2.7 / Fig 16a — burst management: 8× synthetic traffic spikes;
-//! LT-UA's forecast-gap override vs LT-I / LT-U.
+//! LT-UA's forecast-gap override vs LT-I / LT-U.  The three strategy
+//! runs share one pre-materialized trace and execute concurrently
+//! through the sweep runner.
 
 use anyhow::Result;
 
 use crate::config::{Epoch, ModelKind, Tier, HOUR};
+use crate::experiments::sweep::run_configs;
 use crate::experiments::{print_table, ExpOptions};
 use crate::metrics::LatencySummary;
-use crate::sim::engine::{run_simulation, SimConfig, Strategy};
+use crate::sim::engine::{SimConfig, Strategy};
 use crate::trace::generator::TraceConfig;
 
 pub fn fig16a(opts: &ExpOptions) -> Result<()> {
-    let mut rows = Vec::new();
-    let mut table = Vec::new();
-    for strategy in [Strategy::LtI, Strategy::LtU, Strategy::LtUa] {
-        let cfg = SimConfig {
+    let strategies = [Strategy::LtI, Strategy::LtU, Strategy::LtUa];
+    let cfgs: Vec<SimConfig> = strategies
+        .iter()
+        .map(|&strategy| SimConfig {
             trace: TraceConfig {
                 epoch: Epoch::Jul2025,
                 days: 1.0,
@@ -33,30 +36,22 @@ pub fn fig16a(opts: &ExpOptions) -> Result<()> {
             pjrt_forecaster: opts.pjrt,
             artifacts_dir: opts.artifacts_dir.clone(),
             ..Default::default()
-        };
-        println!("  running {} under 8x bursts ...", strategy.name());
-        let sim = run_simulation(cfg);
-        // Peak-window latency: worst 1-hour p95 TTFT across the day (IW).
-        let end = sim.end_time();
+        })
+        .collect();
+    println!("  running {} strategies under 8x bursts in parallel ...", cfgs.len());
+    let results = run_configs(cfgs);
+
+    let mut rows = Vec::new();
+    let mut table = Vec::new();
+    for sim in &results {
+        // Peak-window latency: worst 1-hour p95 TTFT across the day (IW),
+        // binned in one pass over the outcomes.
+        let end = sim.end_time;
         let mut worst_p95 = 0.0f64;
-        let mut h = 0.0;
-        while h < end {
-            let window: Vec<_> = sim
-                .metrics
-                .outcomes
-                .iter()
-                .filter(|o| {
-                    o.tier.is_interactive()
-                        && o.model == ModelKind::Llama2_70B
-                        && o.arrival >= h
-                        && o.arrival < h + HOUR
-                })
-                .collect();
-            if window.len() > 20 {
-                let s = LatencySummary::from_outcomes(window.into_iter());
+        for s in sim.metrics.interactive_latency_bins(ModelKind::Llama2_70B, HOUR, end) {
+            if s.count > 20 {
                 worst_p95 = worst_p95.max(s.ttft_p95);
             }
-            h += HOUR;
         }
         let overall = LatencySummary::from_outcomes(
             sim.metrics.outcomes.iter().filter(|o| o.tier == Tier::IwF),
@@ -65,11 +60,11 @@ pub fn fig16a(opts: &ExpOptions) -> Result<()> {
         let ih = sim.metrics.model_instance_hours(ModelKind::Llama2_70B, end);
         rows.push(format!(
             "{},{worst_p95:.3},{:.3},{util:.4},{ih:.2}",
-            sim.cfg.strategy.name(),
+            sim.strategy.name(),
             overall.ttft_p95
         ));
         table.push(vec![
-            sim.cfg.strategy.name().into(),
+            sim.strategy.name().into(),
             format!("{worst_p95:.2}"),
             format!("{:.2}", overall.ttft_p95),
             format!("{util:.2}"),

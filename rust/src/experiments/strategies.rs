@@ -5,7 +5,10 @@
 //! Every strategy×scenario grid here runs through the parallel sweep
 //! runner (`experiments::sweep`) — simulations are independent and
 //! deterministic, so the wall-clock drops to the slowest single run while
-//! the reported numbers stay identical to sequential execution.
+//! the reported numbers stay identical to sequential execution.  The
+//! runner also materializes each distinct trace exactly once and shares
+//! the arrival buffer across the grid's strategies (generate once,
+//! replay many — see `sweep::share_traces`).
 
 use anyhow::Result;
 

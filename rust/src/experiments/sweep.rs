@@ -1,25 +1,37 @@
-//! Parallel experiment sweep: run independent simulations on scoped
-//! threads and collect results in input order.
+//! Parallel experiment sweep: run independent simulations on a bounded
+//! worker pool of scoped threads and collect results in input order.
 //!
-//! The simulator is deterministic and shares no state between runs (each
-//! builds its own trace generator, cluster and forecaster from the
-//! config), so a parallel sweep produces results *identical* to running
-//! the same configs sequentially — asserted by
-//! `tests/perf_invariants.rs`.  `Simulation` itself stays on the worker
-//! thread (its boxed forecaster need not be `Send`); only the plain-data
-//! [`RunResult`] crosses back.
+//! The simulator is deterministic and shares no mutable state between
+//! runs (each builds its own cluster and forecaster from the config), so
+//! a parallel sweep produces results *identical* to running the same
+//! configs sequentially — asserted by `tests/perf_invariants.rs`.
+//! `Simulation` itself stays on the worker thread (its boxed forecaster
+//! need not be `Send`); only the plain-data [`RunResult`] crosses back.
+//!
+//! Two resource controls:
+//! * the pool is capped at `available_parallelism` workers, so grids
+//!   larger than the core count queue instead of oversubscribing;
+//! * [`share_traces`] pre-materializes each *distinct* trace config
+//!   once (chunk-parallel) and hands every strategy run the same
+//!   `Arc<[Request]>` buffer — a grid of S strategies over one scenario
+//!   generates its trace once, not S times.
 //!
 //! Set `SAGESERVE_SEQUENTIAL=1` to force sequential execution (profiling
 //! a single run, or bisecting a suspected nondeterminism).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread;
 
 use crate::config::ModelKind;
 use crate::metrics::Metrics;
 use crate::sim::engine::{run_simulation, SimConfig, Strategy};
+use crate::trace::generator::{TraceConfig, TraceGenerator};
+use crate::trace::types::Request;
 
-/// Run `f` over `items`, one scoped thread per item, results in input
-/// order.  A thread panic propagates to the caller.
+/// Run `f` over `items` on a worker pool capped at
+/// `available_parallelism`, results in input order.  A worker panic
+/// propagates to the caller (scoped threads re-raise on join).
 pub fn sweep<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
 where
     T: Send,
@@ -31,17 +43,32 @@ where
     if sequential {
         return items.into_iter().map(f).collect();
     }
-    let f = &f;
+    let n = items.len();
+    let workers = thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(n);
+    // Each slot is claimed exactly once via the atomic cursor; Mutexes
+    // carry items out to workers and results back without blocking
+    // (every lock is uncontended by construction).
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    let (f, slots_ref, results_ref, cursor_ref) = (&f, &slots, &results, &cursor);
     thread::scope(|s| {
-        let handles: Vec<_> = items
-            .into_iter()
-            .map(|item| s.spawn(move || f(item)))
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("sweep worker panicked"))
-            .collect()
-    })
+        for _ in 0..workers {
+            s.spawn(move || loop {
+                let i = cursor_ref.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = slots_ref[i].lock().unwrap().take().expect("slot claimed once");
+                let r = f(item);
+                *results_ref[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("sweep worker completed"))
+        .collect()
 }
 
 /// Everything the experiment reports read from a finished simulation,
@@ -53,10 +80,36 @@ pub struct RunResult {
     pub models: Vec<ModelKind>,
 }
 
+/// Pre-materialize each distinct trace config once and share the arrival
+/// buffer across every config that uses it (generate once, replay many).
+/// Configs already carrying a replay CSV or a shared buffer are left
+/// untouched.  Generation itself is chunk-parallel
+/// (`TraceGenerator::materialize`), and the buffer is byte-identical to
+/// the streaming path, so downstream metrics are unchanged.
+pub fn share_traces(cfgs: &mut [SimConfig]) {
+    let mut cache: Vec<(TraceConfig, Arc<[Request]>)> = Vec::new();
+    for cfg in cfgs.iter_mut() {
+        if cfg.replay_trace.is_some() || cfg.shared_trace.is_some() {
+            continue;
+        }
+        let buf = match cache.iter().find(|(tc, _)| *tc == cfg.trace) {
+            Some((_, buf)) => buf.clone(),
+            None => {
+                let buf = TraceGenerator::new(cfg.trace.clone()).materialize_shared();
+                cache.push((cfg.trace.clone(), buf.clone()));
+                buf
+            }
+        };
+        cfg.shared_trace = Some(buf);
+    }
+}
+
 /// Run a batch of simulation configs concurrently (strategy×scenario
-/// grids of `fig8`/`fig11–13`/`ablations`/`week`).  Results are in config
-/// order and identical to sequential execution.
-pub fn run_configs(cfgs: Vec<SimConfig>) -> Vec<RunResult> {
+/// grids of `fig8`/`fig11–13`/`fig16a`/`ablations`/`week`).  Each
+/// distinct trace is generated exactly once and shared; results are in
+/// config order and identical to sequential streaming execution.
+pub fn run_configs(mut cfgs: Vec<SimConfig>) -> Vec<RunResult> {
+    share_traces(&mut cfgs);
     sweep(cfgs, |cfg| {
         let sim = run_simulation(cfg);
         let end_time = sim.end_time();
@@ -84,5 +137,28 @@ mod tests {
         let empty: Vec<i32> = Vec::new();
         assert!(sweep(empty, |x: i32| x).is_empty());
         assert_eq!(sweep(vec![7], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn sweep_handles_more_items_than_cores() {
+        // Grids larger than the worker pool must still complete in order.
+        let items: Vec<u64> = (0..257).collect();
+        let out = sweep(items.clone(), |x| x + 1);
+        assert_eq!(out, items.iter().map(|x| x + 1).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn share_traces_dedups_identical_configs() {
+        use crate::sim::engine::quick_config;
+        let mut cfgs = vec![
+            quick_config(Strategy::Reactive, 0.02, 0.004),
+            quick_config(Strategy::LtUa, 0.02, 0.004),
+        ];
+        share_traces(&mut cfgs);
+        let a = cfgs[0].shared_trace.as_ref().expect("buffer set");
+        let b = cfgs[1].shared_trace.as_ref().expect("buffer set");
+        // Same TraceConfig ⇒ literally the same allocation.
+        assert!(Arc::ptr_eq(a, b));
+        assert!(!a.is_empty());
     }
 }

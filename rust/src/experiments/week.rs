@@ -8,7 +8,6 @@ use anyhow::Result;
 use crate::config::{Epoch, ModelKind, HOUR};
 use crate::experiments::sweep::run_configs;
 use crate::experiments::{print_table, ExpOptions};
-use crate::metrics::LatencySummary;
 use crate::sim::engine::{SimConfig, Strategy};
 use crate::trace::generator::TraceConfig;
 
@@ -39,32 +38,21 @@ pub fn fig16b(opts: &ExpOptions) -> Result<()> {
     for sim in &results {
         let end = sim.end_time;
         let bin = 3.0 * HOUR;
-        let mut t = 0.0;
         let mut worst = (0.0f64, 0.0f64);
-        while t < end {
-            let window: Vec<_> = sim
-                .metrics
-                .outcomes
-                .iter()
-                .filter(|o| {
-                    o.model == ModelKind::Llama2_70B
-                        && o.tier.is_interactive()
-                        && o.arrival >= t
-                        && o.arrival < t + bin
-                })
-                .collect();
-            if window.len() > 10 {
-                let s = LatencySummary::from_outcomes(window.into_iter());
+        // One pass over the outcomes for all 56 bins (the old per-bin
+        // filter re-scanned the full week of outcomes per bin).
+        let bins = sim.metrics.interactive_latency_bins(ModelKind::Llama2_70B, bin, end);
+        for (i, s) in bins.iter().enumerate() {
+            if s.count > 10 {
                 rows.push(format!(
                     "{},{:.1},{:.3},{:.3}",
                     sim.strategy.name(),
-                    t / HOUR,
+                    i as f64 * bin / HOUR,
                     s.ttft_p95,
                     s.e2e_p95
                 ));
                 worst = (worst.0.max(s.ttft_p95), worst.1.max(s.e2e_p95));
             }
-            t += bin;
         }
         let overall = sim
             .metrics

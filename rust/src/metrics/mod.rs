@@ -265,6 +265,44 @@ impl Metrics {
             .collect()
     }
 
+    /// Interactive-traffic latency summaries for one model in fixed
+    /// arrival-time bins over `[0, end)` — ONE pass over the outcomes
+    /// (the `week`/`burst` figures used to re-scan every outcome per
+    /// bin).  Returns one summary per bin, index `i` covering arrivals
+    /// in `[i*bin, (i+1)*bin)`; empty bins yield a default summary with
+    /// `count == 0`.
+    pub fn interactive_latency_bins(
+        &self,
+        model: ModelKind,
+        bin: Time,
+        end: Time,
+    ) -> Vec<LatencySummary> {
+        let n_bins = (end / bin).ceil().max(0.0) as usize;
+        if n_bins == 0 {
+            return Vec::new();
+        }
+        let mut groups: Vec<(Vec<f64>, Vec<f64>, usize)> = vec![Default::default(); n_bins];
+        for o in &self.outcomes {
+            if o.model != model || !o.tier.is_interactive() {
+                continue;
+            }
+            let b = (o.arrival / bin) as usize;
+            if b >= n_bins {
+                continue; // arrival past the last bin edge
+            }
+            let g = &mut groups[b];
+            g.0.push(o.ttft);
+            g.1.push(o.e2e);
+            if !o.sla_met {
+                g.2 += 1;
+            }
+        }
+        groups
+            .into_iter()
+            .map(|(ttft, e2e, v)| LatencySummary::from_parts(ttft, e2e, v))
+            .collect()
+    }
+
     /// Total instance-hours for a model across regions.
     pub fn model_instance_hours(&self, model: ModelKind, end: Time) -> f64 {
         self.instances
@@ -391,6 +429,41 @@ mod tests {
             );
             assert_eq!(s.count, filtered.count);
             assert_eq!(s.ttft_p75, filtered.ttft_p75);
+        }
+    }
+
+    #[test]
+    fn binned_summaries_match_filtered_windows() {
+        use crate::trace::types::AppKind;
+        let mut m = Metrics::default();
+        for i in 0..200u64 {
+            let req = Request {
+                id: i,
+                arrival: i as f64 * 7.3,
+                model: if i % 2 == 0 { ModelKind::Llama2_70B } else { ModelKind::Bloom176B },
+                origin: Region::EastUs,
+                tier: if i % 5 == 0 { Tier::Niw } else { Tier::IwF },
+                app: AppKind::Chat,
+                input_tokens: 100,
+                output_tokens: 10,
+            };
+            m.record_outcome(&req, Region::EastUs, 0.1 + (i % 13) as f64 * 0.2, 3.0 + i as f64);
+        }
+        let (bin, end) = (300.0, 200.0 * 7.3);
+        let bins = m.interactive_latency_bins(ModelKind::Llama2_70B, bin, end);
+        assert_eq!(bins.len(), (end / bin).ceil() as usize);
+        for (i, s) in bins.iter().enumerate() {
+            let t = i as f64 * bin;
+            let window = LatencySummary::from_outcomes(m.outcomes.iter().filter(|o| {
+                o.model == ModelKind::Llama2_70B
+                    && o.tier.is_interactive()
+                    && o.arrival >= t
+                    && o.arrival < t + bin
+            }));
+            assert_eq!(s.count, window.count, "bin {i}");
+            assert_eq!(s.ttft_p95, window.ttft_p95, "bin {i}");
+            assert_eq!(s.e2e_p95, window.e2e_p95, "bin {i}");
+            assert_eq!(s.sla_violation_rate, window.sla_violation_rate, "bin {i}");
         }
     }
 

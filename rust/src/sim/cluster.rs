@@ -176,6 +176,14 @@ impl EndpointMap {
         self.keys.iter()
     }
 
+    /// Key at a dense slot index (`0..len()`): the allocation-free
+    /// endpoint walk — callers iterate `0..len()` and read each key by
+    /// value instead of collecting a `Vec` of keys per tick.
+    #[inline]
+    pub fn key_at(&self, idx: usize) -> (ModelKind, Region) {
+        self.keys[idx]
+    }
+
     pub fn values(&self) -> impl Iterator<Item = &Endpoint> + '_ {
         self.eps.iter()
     }
@@ -700,6 +708,15 @@ mod tests {
         }
         assert!(c.aggregates_consistent());
         assert!(c.is_all_idle());
+    }
+
+    #[test]
+    fn endpoint_index_walk_matches_keys() {
+        let c = cluster();
+        assert_eq!(c.endpoints.len(), 12);
+        for (i, &k) in c.endpoints.keys().enumerate() {
+            assert_eq!(c.endpoints.key_at(i), k);
+        }
     }
 
     #[test]

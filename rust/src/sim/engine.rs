@@ -52,6 +52,12 @@ pub struct SimConfig {
     /// published-trace path; `trace` config still provides the forecaster
     /// warm-up rates and the drain horizon via `days`).
     pub replay_trace: Option<std::path::PathBuf>,
+    /// Replay a pre-materialized arrival buffer instead of streaming the
+    /// generator (the sweep path: one generation shared across every
+    /// strategy run — see `experiments::sweep::share_traces`).  Must be
+    /// byte-identical to what `trace` would generate; `trace` still
+    /// drives forecaster warm-up and the drain horizon.
+    pub shared_trace: Option<std::sync::Arc<[Request]>>,
 }
 
 impl Default for SimConfig {
@@ -68,6 +74,7 @@ impl Default for SimConfig {
             pjrt_forecaster: false,
             artifacts_dir: "artifacts".to_string(),
             replay_trace: None,
+            shared_trace: None,
         }
     }
 }
@@ -178,18 +185,20 @@ impl Simulation {
 
     /// Run the full trace plus a drain phase for in-flight work.
     pub fn run(&mut self) {
-        match self.cfg.replay_trace.clone() {
-            Some(path) => {
-                let reqs = crate::trace::io::read_csv(&path)
-                    .expect("read replay trace (CSV with header)");
-                self.run_stream(reqs.into_iter());
-            }
-            None => {
-                let gen = TraceGenerator::new(self.cfg.trace.clone());
-                // Borrow scope: the generator must outlive the stream.
-                let stream = gen.stream();
-                self.run_stream(stream);
-            }
+        if let Some(path) = self.cfg.replay_trace.clone() {
+            let reqs = crate::trace::io::read_csv(&path)
+                .expect("read replay trace (CSV with header)");
+            self.run_stream(reqs.into_iter());
+        } else if let Some(buf) = self.cfg.shared_trace.clone() {
+            // Borrowed pre-materialized buffer: `Request` is `Copy`, so
+            // replaying N strategies from one shared buffer allocates
+            // nothing per run.
+            self.run_stream(buf.iter().copied());
+        } else {
+            let gen = TraceGenerator::new(self.cfg.trace.clone());
+            // Borrow scope: the generator must outlive the stream.
+            let stream = gen.stream();
+            self.run_stream(stream);
         }
     }
 
@@ -412,9 +421,9 @@ impl Simulation {
         // drains at the endpoints' actual spare capacity; the
         // waiting-aware utilization makes the loop self-limiting.
         if self.cfg.strategy.uses_queue_manager() && self.qm.total_depth() > 0 {
-            let keys: Vec<(ModelKind, Region)> =
-                self.cluster.endpoints.keys().copied().collect();
-            for (model, region) in keys {
+            // Index-based endpoint walk: no per-tick key Vec.
+            for idx in 0..self.cluster.endpoints.len() {
+                let (model, region) = self.cluster.endpoints.key_at(idx);
                 loop {
                     if self.qm.depth(model) == 0 {
                         break;
@@ -435,9 +444,8 @@ impl Simulation {
 
         // Utilization samples for Fig 8b/12b/14a (every 15 min).
         if self.tick_count % UTIL_SAMPLE_EVERY == 0 {
-            let keys: Vec<(ModelKind, Region)> =
-                self.cluster.endpoints.keys().copied().collect();
-            for (model, region) in keys {
+            for idx in 0..self.cluster.endpoints.len() {
+                let (model, region) = self.cluster.endpoints.key_at(idx);
                 let util = self.cluster.effective_util(model, region);
                 self.metrics.util_samples.push((self.now, model, region, util));
             }

@@ -17,15 +17,34 @@
 //!   bulk requests with much higher TPS/request.
 //! * Random 5–15 min bursts (~2/day per region) at 2–4× base rate;
 //!   1-minute-scale arrival noise comes free from Poisson sampling.
+//!
+//! ## Pipeline architecture (PERF.md "input pipeline")
+//!
+//! Every arrival stream (tier × region × model) in every minute bucket
+//! draws from its own counter-seeded RNG
+//! (`Rng::seed_from_parts(seed, minute, stream)`), so a minute's
+//! requests are a pure function of `(config, minute)` — independent of
+//! generation order.  That makes three consumption modes byte-identical
+//! by construction:
+//! * [`TraceGenerator::stream`] — the lazy minute-bucketed iterator
+//!   (O(requests-per-minute) memory; single simulation runs);
+//! * [`TraceGenerator::materialize`] — chunk-parallel bulk generation
+//!   on scoped threads (sweep grids, `--scale 1.0` runs);
+//! * [`TraceGenerator::materialize_opts`] — same, with explicit chunk
+//!   size / worker count (tests assert all of them agree exactly).
+//!
+//! Per-request sampling is O(1): alias-table app mix, precomputed
+//! per-(model, app) token parameters, paired Box–Muller log-normals,
+//! PTRS Poisson for mid/large λ, and an interval-indexed burst factor.
 
-use crate::util::rng::Rng;
+use crate::util::rng::{AliasTable, Rng};
 
 use crate::config::{Epoch, ModelKind, Region, Tier, Time, DAY, HOUR, MINUTE};
 use crate::trace::types::{AppKind, Request};
 
 /// Generator parameters.  `..Default::default()` reproduces the Jul-2025
 /// evaluation setup with the four open-source models.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TraceConfig {
     pub epoch: Epoch,
     pub models: Vec<ModelKind>,
@@ -227,11 +246,61 @@ fn app_mix(tier: Tier) -> &'static [(AppKind, f64)] {
     }
 }
 
-/// The generator: deterministic for a given config (seeded ChaCha8).
+/// Alias-table app sampler for one tier.
+#[derive(Debug, Clone)]
+struct AppSampler {
+    apps: Vec<AppKind>,
+    alias: AliasTable,
+}
+
+impl AppSampler {
+    fn new(tier: Tier) -> Self {
+        let mix = app_mix(tier);
+        let weights: Vec<f64> = mix.iter().map(|&(_, w)| w).collect();
+        AppSampler {
+            apps: mix.iter().map(|&(a, _)| a).collect(),
+            alias: AliasTable::new(&weights),
+        }
+    }
+
+    #[inline]
+    fn sample(&self, rng: &mut Rng) -> AppKind {
+        self.apps[self.alias.sample(rng)]
+    }
+}
+
+/// Token-parameter table stride (one row per [`AppKind`]).
+const N_APPS: usize = AppKind::ALL.len();
+
+/// Default minute-chunk size for parallel materialization: small enough
+/// that the diurnal peak doesn't skew per-chunk work, large enough to
+/// amortize per-chunk overhead.
+const DEFAULT_CHUNK_MINUTES: u64 = 16;
+
+/// The generator: deterministic for a given config.  Arrival streams are
+/// counter-seeded per (minute, stream), so every consumption mode —
+/// streaming, bulk, chunk-parallel — produces the identical trace.
 pub struct TraceGenerator {
     pub cfg: TraceConfig,
     bursts: Vec<Burst>,
     model_norm: Vec<f64>, // per (tier, region): sum of model weights
+    /// Arrival streams in fixed (tier, region, model) order — the
+    /// per-minute generation order and the stream index space for
+    /// counter-based seeding.
+    streams: Vec<(Tier, Region, ModelKind)>,
+    /// Time-invariant λ prefactor per stream: base_rps × scale ×
+    /// tier/region/model shares (diurnal, weekday and burst factors are
+    /// applied per minute).
+    stream_base: Vec<f64>,
+    /// Alias-table app samplers, one per tier.
+    app_samplers: [AppSampler; 3],
+    /// Precomputed token parameters: `[model.index() * N_APPS + app.index()]`.
+    token_tbl: Vec<(f64, f64, f64, f64)>,
+    /// Piecewise-constant burst factor per (region, IW tier):
+    /// `[region.index() * 2 + tier.index()]`, each a time-sorted
+    /// `(segment_start, factor)` list starting at -∞ — binary-searched
+    /// by `burst_factor` instead of scanning every burst per call.
+    burst_segments: Vec<Vec<(Time, f64)>>,
 }
 
 impl TraceGenerator {
@@ -260,37 +329,152 @@ impl TraceGenerator {
                 model_norm[tier.index() * 3 + region.index()] = s.max(1e-12);
             }
         }
-        TraceGenerator { cfg, bursts, model_norm }
-    }
 
-    fn burst_factor(&self, region: Region, tier: Tier, t: Time) -> f64 {
-        let mut f = 1.0f64;
-        for b in &self.bursts {
-            if b.region == region && b.tier == tier && t >= b.start && t < b.end {
-                f = f.max(b.factor);
+        let app_samplers = [
+            AppSampler::new(Tier::IwF),
+            AppSampler::new(Tier::IwN),
+            AppSampler::new(Tier::Niw),
+        ];
+
+        let mut token_tbl = vec![(0.0, 0.0, 0.0, 0.0); ModelKind::ALL.len() * N_APPS];
+        for model in ModelKind::ALL {
+            for app in AppKind::ALL {
+                token_tbl[model.index() * N_APPS + app.index()] = token_params(model, app);
             }
         }
-        f
+
+        let burst_segments = build_burst_segments(&bursts);
+
+        let mut gen = TraceGenerator {
+            cfg,
+            bursts,
+            model_norm,
+            streams: Vec::new(),
+            stream_base: Vec::new(),
+            app_samplers,
+            token_tbl,
+            burst_segments,
+        };
+        // Fixed stream enumeration: tier-major, then region, then model —
+        // the same order the per-minute fill visits, and the index space
+        // for counter-based RNG streams.  Prefactors come from the same
+        // `stream_base_rate` that `rate()` uses (single λ source).
+        let models = gen.cfg.models.clone();
+        for tier in Tier::ALL {
+            for region in Region::ALL {
+                for &model in &models {
+                    gen.streams.push((tier, region, model));
+                    gen.stream_base.push(gen.stream_base_rate(model, region, tier));
+                }
+            }
+        }
+        gen
+    }
+
+    /// Trace length in whole minute buckets.
+    pub fn total_minutes(&self) -> u64 {
+        (self.cfg.days * DAY / MINUTE).ceil() as u64
+    }
+
+    /// Max burst factor covering `t` for (region, tier) — O(log bursts)
+    /// via the precomputed piecewise-constant segments.
+    fn burst_factor(&self, region: Region, tier: Tier, t: Time) -> f64 {
+        if tier == Tier::Niw || self.bursts.is_empty() {
+            return 1.0;
+        }
+        let seg = &self.burst_segments[region.index() * 2 + tier.index()];
+        let i = seg.partition_point(|&(start, _)| start <= t);
+        seg[i - 1].1
+    }
+
+    /// Time-invariant λ prefactor (requests/sec) for one stream:
+    /// base RPS × scale × tier/region/model shares.  The single source
+    /// for both `rate()` and the precomputed `stream_base` table.
+    fn stream_base_rate(&self, model: ModelKind, region: Region, tier: Tier) -> f64 {
+        let share = tier_share(self.cfg.epoch, tier, self.cfg.iw_niw_ratio)
+            * region_share(tier, region)
+            * model_weight(model, tier, region)
+            / self.model_norm[tier.index() * 3 + region.index()];
+        epoch_base_rps(self.cfg.epoch) * self.cfg.scale * share
+    }
+
+    /// Time-varying shape multiplier at `t`: diurnal × weekday-growth ×
+    /// burst.  Shared by `rate()` and the per-minute fill, so the λ
+    /// formula exists in exactly one place.
+    fn shape_factor(&self, model: ModelKind, region: Region, tier: Tier, t: Time) -> f64 {
+        diurnal(tier, t, self.cfg.start_weekday)
+            * weekday_model_factor(model, tier, t, self.cfg.start_weekday)
+            * self.burst_factor(region, tier, t)
     }
 
     /// Expected arrival rate (requests/sec) for one stream at time `t`.
     /// Also used to synthesize pre-trace history for forecaster warm-up.
     pub fn rate(&self, model: ModelKind, region: Region, tier: Tier, t: Time) -> f64 {
-        let share = tier_share(self.cfg.epoch, tier, self.cfg.iw_niw_ratio)
-            * region_share(tier, region)
-            * model_weight(model, tier, region)
-            / self.model_norm[tier.index() * 3 + region.index()];
-        epoch_base_rps(self.cfg.epoch)
-            * self.cfg.scale
-            * share
-            * diurnal(tier, t, self.cfg.start_weekday)
-            * weekday_model_factor(model, tier, t, self.cfg.start_weekday)
-            * self.burst_factor(region, tier, t)
+        self.stream_base_rate(model, region, tier) * self.shape_factor(model, region, tier, t)
     }
 
     /// Mean total tokens per request for one stream (for TPS estimates).
     pub fn mean_tokens(&self, model: ModelKind, tier: Tier) -> f64 {
         TraceGenerator::mean_tokens_exact(model, tier)
+    }
+
+    /// Generate one minute bucket into `out` (cleared first): Poisson
+    /// arrival counts per stream with uniform placement inside the
+    /// minute, sorted by arrival.  Request ids are left 0 — the caller
+    /// assigns them in final arrival order.  Pure function of
+    /// `(config, minute)`: every stream draws from its own
+    /// counter-seeded RNG.
+    fn fill_minute(&self, minute: u64, out: &mut Vec<Request>) {
+        out.clear();
+        let t0 = minute as f64 * MINUTE;
+        let t_mid = t0 + 0.5 * MINUTE;
+        for (s, &(tier, region, model)) in self.streams.iter().enumerate() {
+            let lambda =
+                self.stream_base[s] * self.shape_factor(model, region, tier, t_mid) * MINUTE;
+            if lambda <= 0.0 {
+                continue;
+            }
+            let mut rng = Rng::seed_from_parts(self.cfg.seed, minute, s as u64);
+            let n = rng.poisson(lambda);
+            if n == 0 {
+                continue;
+            }
+            let sampler = &self.app_samplers[tier.index()];
+            out.reserve(n as usize);
+            for _ in 0..n {
+                let arrival = t0 + rng.range(0.0, MINUTE);
+                let app = sampler.sample(&mut rng);
+                let (imu, isig, omu, osig) =
+                    self.token_tbl[model.index() * N_APPS + app.index()];
+                let input = rng.lognormal(imu, isig);
+                let output = rng.lognormal(omu, osig);
+                out.push(Request {
+                    id: 0, // assigned by the consumer in arrival order
+                    arrival,
+                    model,
+                    origin: region,
+                    tier,
+                    app,
+                    input_tokens: (input.clamp(16.0, 128_000.0)) as u32,
+                    output_tokens: (output.clamp(1.0, 32_000.0)) as u32,
+                });
+            }
+        }
+        // Deterministic regardless of generation path: the input order is
+        // a pure function of (config, minute), so the unstable sort is
+        // too.  Arrivals are continuous draws — ties are measure-zero.
+        out.sort_unstable_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    }
+
+    /// Generate a contiguous run of minute buckets (ids still 0).
+    fn fill_chunk(&self, first_minute: u64, last_minute: u64) -> Vec<Request> {
+        let mut out = Vec::new();
+        let mut bucket = Vec::new();
+        for minute in first_minute..last_minute {
+            self.fill_minute(minute, &mut bucket);
+            out.extend_from_slice(&bucket);
+        }
+        out
     }
 
     /// Generate the full trace as a time-ordered iterator.
@@ -302,19 +486,131 @@ impl TraceGenerator {
     pub fn stream(&self) -> TraceStream<'_> {
         TraceStream {
             generator: self,
-            rng: Rng::seed_from_u64(self.cfg.seed),
             minute: 0,
-            total_minutes: (self.cfg.days * DAY / MINUTE).ceil() as u64,
+            total_minutes: self.total_minutes(),
             bucket: Vec::new(),
             bucket_pos: 0,
             next_id: 0,
         }
     }
 
+    /// Materialize the whole trace with chunk-parallel generation
+    /// (scoped threads, one work unit per minute chunk).  Byte-identical
+    /// to `stream().collect()` — asserted by `tests/trace_pipeline.rs`.
+    pub fn materialize(&self) -> Vec<Request> {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        self.materialize_opts(DEFAULT_CHUNK_MINUTES, workers)
+    }
+
+    /// Materialize into a shareable buffer: one generation feeds every
+    /// strategy run of a sweep grid (`SimConfig::shared_trace`).
+    pub fn materialize_shared(&self) -> std::sync::Arc<[Request]> {
+        self.materialize().into()
+    }
+
+    /// [`TraceGenerator::materialize`] with explicit chunk size and
+    /// worker count.  The output does not depend on either parameter:
+    /// every (minute, stream) bucket has its own counter-seeded RNG, so
+    /// chunking only decides which thread computes it.
+    pub fn materialize_opts(&self, chunk_minutes: u64, workers: usize) -> Vec<Request> {
+        let total_minutes = self.total_minutes();
+        let chunk_minutes = chunk_minutes.max(1);
+        let n_chunks = ((total_minutes + chunk_minutes - 1) / chunk_minutes) as usize;
+        if n_chunks == 0 {
+            return Vec::new();
+        }
+        let chunk_bounds = |c: usize| -> (u64, u64) {
+            let lo = c as u64 * chunk_minutes;
+            (lo, (lo + chunk_minutes).min(total_minutes))
+        };
+        let workers = workers.max(1).min(n_chunks);
+        let mut chunk_bufs: Vec<Vec<Request>>;
+        if workers <= 1 {
+            chunk_bufs = (0..n_chunks)
+                .map(|c| {
+                    let (lo, hi) = chunk_bounds(c);
+                    self.fill_chunk(lo, hi)
+                })
+                .collect();
+        } else {
+            use std::sync::atomic::{AtomicUsize, Ordering};
+            use std::sync::Mutex;
+            let slots: Vec<Mutex<Vec<Request>>> =
+                (0..n_chunks).map(|_| Mutex::new(Vec::new())).collect();
+            let cursor = AtomicUsize::new(0);
+            let (slots_ref, cursor_ref) = (&slots, &cursor);
+            std::thread::scope(|s| {
+                for _ in 0..workers {
+                    s.spawn(move || loop {
+                        let c = cursor_ref.fetch_add(1, Ordering::Relaxed);
+                        if c >= n_chunks {
+                            break;
+                        }
+                        let (lo, hi) = chunk_bounds(c);
+                        *slots_ref[c].lock().unwrap() = self.fill_chunk(lo, hi);
+                    });
+                }
+            });
+            chunk_bufs = slots.into_iter().map(|m| m.into_inner().unwrap()).collect();
+        }
+        // Splice in chunk order and assign ids in final arrival order.
+        let total: usize = chunk_bufs.iter().map(|b| b.len()).sum();
+        let mut out = Vec::with_capacity(total);
+        let mut id = 0u64;
+        for buf in &mut chunk_bufs {
+            for mut r in buf.drain(..) {
+                r.id = id;
+                id += 1;
+                out.push(r);
+            }
+        }
+        out
+    }
+
     /// Convenience: collect the whole trace (small scales only).
     pub fn collect(&self) -> Vec<Request> {
         self.stream().collect()
     }
+}
+
+/// Build the piecewise-constant max-burst-factor segments per
+/// (region, IW tier).  Exact: between two consecutive breakpoints no
+/// burst starts or ends, so the max factor at the left edge holds for
+/// the whole half-open segment.
+fn build_burst_segments(bursts: &[Burst]) -> Vec<Vec<(Time, f64)>> {
+    let mut out = vec![Vec::new(); Region::ALL.len() * 2];
+    for region in Region::ALL {
+        for tier in [Tier::IwF, Tier::IwN] {
+            let mine: Vec<&Burst> = bursts
+                .iter()
+                .filter(|b| b.region == region && b.tier == tier)
+                .collect();
+            let seg = &mut out[region.index() * 2 + tier.index()];
+            seg.push((f64::NEG_INFINITY, 1.0));
+            if mine.is_empty() {
+                continue;
+            }
+            let mut cuts: Vec<Time> = Vec::with_capacity(mine.len() * 2);
+            for b in &mine {
+                cuts.push(b.start);
+                cuts.push(b.end);
+            }
+            cuts.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            cuts.dedup();
+            for &t in &cuts {
+                let mut f = 1.0f64;
+                for b in &mine {
+                    if t >= b.start && t < b.end {
+                        f = f.max(b.factor);
+                    }
+                }
+                if seg.last().map(|&(_, lf)| lf != f).unwrap_or(true) {
+                    seg.push((t, f));
+                }
+            }
+        }
+    }
+    out
 }
 
 impl TraceGenerator {
@@ -349,10 +645,11 @@ fn token_params(model: ModelKind, app: AppKind) -> (f64, f64, f64, f64) {
     (imu + shift, isig, omu, osig)
 }
 
-/// Streaming iterator over the trace, minute-bucketed.
+/// Streaming iterator over the trace, minute-bucketed.  Draws each
+/// minute through the same counter-seeded [`TraceGenerator::fill_minute`]
+/// as the parallel materializer, so the sequences are identical.
 pub struct TraceStream<'a> {
     generator: &'a TraceGenerator,
-    rng: Rng,
     minute: u64,
     total_minutes: u64,
     bucket: Vec<Request>,
@@ -362,59 +659,13 @@ pub struct TraceStream<'a> {
 
 impl TraceStream<'_> {
     fn fill_bucket(&mut self) {
-        self.bucket.clear();
+        self.generator.fill_minute(self.minute, &mut self.bucket);
         self.bucket_pos = 0;
-        let g = self.generator;
-        let t0 = self.minute as f64 * MINUTE;
-        let t_mid = t0 + 0.5 * MINUTE;
-        for tier in Tier::ALL {
-            for region in Region::ALL {
-                for &model in &g.cfg.models {
-                    let lambda = g.rate(model, region, tier, t_mid) * MINUTE;
-                    if lambda <= 0.0 {
-                        continue;
-                    }
-                    let n = self.rng.poisson(lambda) as usize;
-                    for _ in 0..n {
-                        let arrival = t0 + self.rng.range(0.0, MINUTE);
-                        let app = sample_app(tier, &mut self.rng);
-                        let (imu, isig, omu, osig) = token_params(model, app);
-                        let input = self.rng.lognormal(imu, isig);
-                        let output = self.rng.lognormal(omu, osig);
-                        self.bucket.push(Request {
-                            id: 0, // assigned after sorting for arrival order
-                            arrival,
-                            model,
-                            origin: region,
-                            tier,
-                            app,
-                            input_tokens: (input.clamp(16.0, 128_000.0)) as u32,
-                            output_tokens: (output.clamp(1.0, 32_000.0)) as u32,
-                        });
-                    }
-                }
-            }
-        }
-        self.bucket
-            .sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
         for r in &mut self.bucket {
             r.id = self.next_id;
             self.next_id += 1;
         }
     }
-}
-
-fn sample_app(tier: Tier, rng: &mut Rng) -> AppKind {
-    let mix = app_mix(tier);
-    let total: f64 = mix.iter().map(|&(_, w)| w).sum();
-    let mut x = rng.range(0.0, total);
-    for &(app, w) in mix {
-        if x < w {
-            return app;
-        }
-        x -= w;
-    }
-    mix.last().unwrap().0
 }
 
 impl Iterator for TraceStream<'_> {
@@ -423,7 +674,7 @@ impl Iterator for TraceStream<'_> {
     fn next(&mut self) -> Option<Request> {
         loop {
             if self.bucket_pos < self.bucket.len() {
-                let r = self.bucket[self.bucket_pos].clone();
+                let r = self.bucket[self.bucket_pos];
                 self.bucket_pos += 1;
                 return Some(r);
             }
@@ -462,6 +713,13 @@ mod tests {
             assert!(w[0].arrival <= w[1].arrival);
             assert_eq!(w[0].id + 1, w[1].id);
         }
+    }
+
+    #[test]
+    fn materialize_matches_stream() {
+        let g = TraceGenerator::new(TraceConfig { bursts: true, ..small_cfg() });
+        let streamed: Vec<_> = g.stream().collect();
+        assert_eq!(g.materialize(), streamed);
     }
 
     #[test]
@@ -593,6 +851,45 @@ mod tests {
         let g2 = TraceGenerator::new(TraceConfig { bursts: false, ..small_cfg() });
         let without = g2.rate(ModelKind::Bloom176B, b.region, b.tier, mid);
         assert!(with > 1.5 * without);
+    }
+
+    #[test]
+    fn burst_index_matches_linear_scan() {
+        // The interval-indexed burst factor must agree with the brute
+        // force max-over-bursts at arbitrary times, including overlap
+        // regions, burst edges and times outside every burst.
+        let cfg = TraceConfig { bursts: true, days: 3.0, ..small_cfg() };
+        let g = TraceGenerator::new(cfg);
+        assert!(!g.bursts.is_empty());
+        let brute = |region: Region, tier: Tier, t: Time| -> f64 {
+            let mut f = 1.0f64;
+            for b in &g.bursts {
+                if b.region == region && b.tier == tier && t >= b.start && t < b.end {
+                    f = f.max(b.factor);
+                }
+            }
+            f
+        };
+        let mut probes: Vec<Time> = Vec::new();
+        for b in &g.bursts {
+            probes.extend([b.start, b.end, 0.5 * (b.start + b.end), b.start - 1.0, b.end + 1.0]);
+        }
+        let mut t = -HOUR;
+        while t < 4.0 * DAY {
+            probes.push(t);
+            t += 977.0; // irregular stride: avoid aligning with bursts
+        }
+        for region in Region::ALL {
+            for tier in Tier::ALL {
+                for &t in &probes {
+                    assert_eq!(
+                        g.burst_factor(region, tier, t),
+                        brute(region, tier, t),
+                        "({region}, {tier}, {t})"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -34,6 +34,23 @@ impl AppKind {
         AppKind::Moderation,
     ];
 
+    /// Dense index (position in [`AppKind::ALL`]) for precomputed
+    /// per-(model, app) lookup tables.
+    pub fn index(self) -> usize {
+        match self {
+            AppKind::Rag => 0,
+            AppKind::InsightsGen => 1,
+            AppKind::ContentCreation => 2,
+            AppKind::Chat => 3,
+            AppKind::EvalFramework => 4,
+            AppKind::EmailSuggest => 5,
+            AppKind::CodeGen => 6,
+            AppKind::MeetingRecap => 7,
+            AppKind::DocSummary => 8,
+            AppKind::Moderation => 9,
+        }
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             AppKind::Rag => "rag-search",
@@ -50,8 +67,10 @@ impl AppKind {
     }
 }
 
-/// One inference request, as it appears in the trace.
-#[derive(Debug, Clone, PartialEq)]
+/// One inference request, as it appears in the trace.  `Copy` (48
+/// bytes of plain data) so the trace pipeline and the engine move
+/// requests by value instead of cloning.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Request {
     pub id: RequestId,
     /// Arrival at the global router, seconds since trace start.
@@ -170,6 +189,13 @@ mod tests {
             app: AppKind::Chat,
             input_tokens: 1000,
             output_tokens: 200,
+        }
+    }
+
+    #[test]
+    fn app_index_matches_all_order() {
+        for (i, app) in AppKind::ALL.into_iter().enumerate() {
+            assert_eq!(app.index(), i, "{}", app.name());
         }
     }
 

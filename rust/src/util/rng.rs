@@ -4,11 +4,37 @@
 //! Core generator: xoshiro256++ seeded via SplitMix64 — fast, high
 //! quality, and stable across platforms so simulations are reproducible
 //! byte-for-byte from a seed.
+//!
+//! Sampler notes (the trace pipeline's hot path — see PERF.md):
+//! * `normal` is a *paired* Box–Muller: both the cosine and sine halves
+//!   of each transform are consumed, halving the ln/sqrt/trig cost per
+//!   normal draw.
+//! * `poisson` uses Knuth's product method only below λ = 10; above
+//!   that it switches to Hörmann's PTRS transformed rejection — O(1)
+//!   expected draws for any λ, and exact (no normal approximation).
+//! * [`AliasTable`] gives O(1) discrete sampling for fixed weight
+//!   tables (Vose construction).
+//! * [`Rng::seed_from_parts`] derives statistically independent
+//!   counter-based streams from `(seed, chunk, stream)` — the basis of
+//!   the chunk-parallel trace generator, where every minute bucket of
+//!   every arrival stream gets its own RNG so generation order (and
+//!   thread count) cannot affect the output.
+
+/// SplitMix64 finalizer: a full-avalanche 64-bit mix.
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
 
 /// xoshiro256++ PRNG.
 #[derive(Debug, Clone)]
 pub struct Rng {
     s: [u64; 4],
+    /// Cached second half of the last Box–Muller transform.
+    spare_normal: Option<f64>,
 }
 
 impl Rng {
@@ -23,7 +49,18 @@ impl Rng {
             z ^ (z >> 31)
         };
         let s = [next_sm(), next_sm(), next_sm(), next_sm()];
-        Rng { s }
+        Rng { s, spare_normal: None }
+    }
+
+    /// Counter-based stream derivation: an independent generator for
+    /// every `(seed, chunk, stream)` triple.  Each coordinate passes
+    /// through a full-avalanche mix before combining, so neighbouring
+    /// chunks/streams land in unrelated regions of the seed space.
+    pub fn seed_from_parts(seed: u64, chunk: u64, stream: u64) -> Self {
+        let mut h = seed;
+        h = mix64(h ^ mix64(chunk.wrapping_add(0xd1b54a32d192ed03)));
+        h = mix64(h ^ mix64(stream.wrapping_add(0x2545f4914f6cdd1d)));
+        Rng::seed_from_u64(h)
     }
 
     #[inline]
@@ -61,11 +98,19 @@ impl Rng {
         lo + self.next_u64() % (hi - lo)
     }
 
-    /// Standard normal via Box-Muller (one value per call; simple > fast).
+    /// Standard normal via paired Box–Muller: each transform yields two
+    /// independent normals; the sine half is cached and returned by the
+    /// next call instead of being discarded.
     pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
         let u1 = (1.0 - self.f64()).max(1e-300); // avoid ln(0)
         let u2 = self.f64();
-        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
     }
 
     /// Normal with given mean / standard deviation.
@@ -78,14 +123,14 @@ impl Rng {
         (mu + sigma * self.normal()).exp()
     }
 
-    /// Poisson sample.  Knuth's product method for small λ; for large λ
-    /// the normal approximation with continuity correction (the error is
-    /// far below the workload-model noise floor for λ > 30).
+    /// Poisson sample.  Knuth's product method for small λ; Hörmann's
+    /// PTRS transformed rejection (exact, O(1) expected iterations) for
+    /// λ ≥ 10.
     pub fn poisson(&mut self, lambda: f64) -> u64 {
         if lambda <= 0.0 {
             return 0;
         }
-        if lambda < 30.0 {
+        if lambda < 10.0 {
             let l = (-lambda).exp();
             let mut k = 0u64;
             let mut p = 1.0;
@@ -100,8 +145,120 @@ impl Rng {
                 }
             }
         } else {
-            let x = self.normal_ms(lambda, lambda.sqrt());
-            x.round().max(0.0) as u64
+            self.poisson_ptrs(lambda)
+        }
+    }
+
+    /// PTRS: W. Hörmann, "The transformed rejection method for
+    /// generating Poisson random variables" (1993).  Valid for λ ≥ 10.
+    fn poisson_ptrs(&mut self, lambda: f64) -> u64 {
+        let slam = lambda.sqrt();
+        let loglam = lambda.ln();
+        let b = 0.931 + 2.53 * slam;
+        let a = -0.059 + 0.024_83 * b;
+        let inv_alpha = 1.1239 + 1.1328 / (b - 3.4);
+        let v_r = 0.9277 - 3.6224 / (b - 2.0);
+        loop {
+            let u = self.f64() - 0.5;
+            let v = self.f64();
+            let us = 0.5 - u.abs();
+            let k = ((2.0 * a / us + b) * u + lambda + 0.43).floor();
+            if us >= 0.07 && v <= v_r {
+                return k as u64;
+            }
+            if k < 0.0 || (us < 0.013 && v > us) {
+                continue;
+            }
+            if v.ln() + inv_alpha.ln() - (a / (us * us) + b).ln()
+                <= k * loglam - lambda - ln_factorial(k as u64)
+            {
+                return k as u64;
+            }
+        }
+    }
+}
+
+/// ln(k!) — exact product for small k, Stirling series (error < 1e-10
+/// for k ≥ 16) above.
+pub fn ln_factorial(k: u64) -> f64 {
+    if k < 16 {
+        let mut acc = 0.0;
+        for i in 2..=k {
+            acc += (i as f64).ln();
+        }
+        return acc;
+    }
+    let x = k as f64;
+    const HALF_LN_2PI: f64 = 0.918_938_533_204_672_8; // ln(2π)/2
+    (x + 0.5) * x.ln() - x + HALF_LN_2PI + 1.0 / (12.0 * x) - 1.0 / (360.0 * x * x * x)
+}
+
+/// O(1) discrete sampling over a fixed weight table (Vose's alias
+/// method).  Build once, sample with a single uniform draw — replaces
+/// per-call linear scans (which also re-summed the weights) on the
+/// trace generator's per-request app-mix path.
+#[derive(Debug, Clone)]
+pub struct AliasTable {
+    /// Acceptance threshold per column, pre-scaled to [0, 1].
+    prob: Vec<f64>,
+    /// Overflow target per column.
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    /// Build from (unnormalized) non-negative weights.  Panics on an
+    /// empty table or a non-positive total.
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "alias table needs at least one weight");
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "alias table needs positive total weight");
+        let mut scaled: Vec<f64> = weights.iter().map(|w| w * n as f64 / total).collect();
+        let mut prob = vec![1.0f64; n];
+        let mut alias: Vec<u32> = (0..n as u32).collect();
+        let mut small: Vec<usize> = Vec::with_capacity(n);
+        let mut large: Vec<usize> = Vec::with_capacity(n);
+        for (i, &s) in scaled.iter().enumerate() {
+            if s < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s] = scaled[s];
+            alias[s] = l as u32;
+            scaled[l] -= 1.0 - scaled[s];
+            if scaled[l] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // Leftovers (numeric drift) keep prob = 1.0: always accepted.
+        Self { prob, alias }
+    }
+
+    /// Number of columns (= number of weights).
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Draw an index with probability proportional to its weight.
+    /// One uniform: the integer part picks the column, the fractional
+    /// part decides accept-vs-alias.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let x = rng.f64() * self.prob.len() as f64;
+        let i = (x as usize).min(self.prob.len() - 1);
+        if x - i as f64 <= self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
         }
     }
 }
@@ -124,6 +281,20 @@ mod tests {
         let mut a = Rng::seed_from_u64(1);
         let mut b = Rng::seed_from_u64(2);
         assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn counter_streams_deterministic_and_distinct() {
+        let mut a = Rng::seed_from_parts(42, 3, 7);
+        let mut b = Rng::seed_from_parts(42, 3, 7);
+        for _ in 0..32 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // Neighbouring chunks/streams must diverge immediately.
+        let base = Rng::seed_from_parts(42, 3, 7).next_u64();
+        assert_ne!(base, Rng::seed_from_parts(42, 4, 7).next_u64());
+        assert_ne!(base, Rng::seed_from_parts(42, 3, 8).next_u64());
+        assert_ne!(base, Rng::seed_from_parts(43, 3, 7).next_u64());
     }
 
     #[test]
@@ -156,6 +327,31 @@ mod tests {
     }
 
     #[test]
+    fn paired_normals_are_uncorrelated() {
+        // The cached sine half must be independent of the cosine half it
+        // was generated with: near-zero correlation across pairs.
+        let mut r = Rng::seed_from_u64(9);
+        let n = 100_000;
+        let (mut sx, mut sy, mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal(); // cosine half
+            let y = r.normal(); // paired sine half
+            sx += x;
+            sy += y;
+            sxy += x * y;
+            sxx += x * x;
+            syy += y * y;
+        }
+        let nf = n as f64;
+        let cov = sxy / nf - (sx / nf) * (sy / nf);
+        let vx = sxx / nf - (sx / nf) * (sx / nf);
+        let vy = syy / nf - (sy / nf) * (sy / nf);
+        let corr = cov / (vx * vy).sqrt();
+        assert!(corr.abs() < 0.01, "pair correlation {corr}");
+        assert!((vx - 1.0).abs() < 0.02 && (vy - 1.0).abs() < 0.02);
+    }
+
+    #[test]
     fn lognormal_mean_matches_formula() {
         let (mu, sigma) = (7.0f64, 0.8f64);
         let mut r = Rng::seed_from_u64(5);
@@ -183,6 +379,27 @@ mod tests {
     }
 
     #[test]
+    fn poisson_midrange_ptrs_moments() {
+        // λ in the PTRS band (10 ≤ λ): mean and variance must both track
+        // λ — the old normal-approximation band started at 30, so 12.5
+        // and 35 exercise the new sampler on both sides of that line.
+        for &lambda in &[12.5f64, 35.0] {
+            let mut r = Rng::seed_from_u64(1234);
+            let n = 200_000;
+            let (mut m1, mut m2) = (0.0f64, 0.0f64);
+            for _ in 0..n {
+                let x = r.poisson(lambda) as f64;
+                m1 += x;
+                m2 += x * x;
+            }
+            let mean = m1 / n as f64;
+            let var = m2 / n as f64 - mean * mean;
+            assert!((mean / lambda - 1.0).abs() < 0.01, "λ={lambda} mean {mean}");
+            assert!((var / lambda - 1.0).abs() < 0.03, "λ={lambda} var {var}");
+        }
+    }
+
+    #[test]
     fn poisson_large_lambda_moments() {
         let mut r = Rng::seed_from_u64(7);
         let lambda = 250.0;
@@ -203,5 +420,47 @@ mod tests {
     fn poisson_zero_lambda() {
         let mut r = Rng::seed_from_u64(8);
         assert_eq!(r.poisson(0.0), 0);
+    }
+
+    #[test]
+    fn ln_factorial_matches_product() {
+        // Cross-check the Stirling branch against the exact product at
+        // the switchover and beyond.
+        for k in [0u64, 1, 5, 15, 16, 17, 40, 100] {
+            let exact: f64 = (2..=k).map(|i| (i as f64).ln()).sum();
+            assert!(
+                (ln_factorial(k) - exact).abs() < 1e-8,
+                "k={k}: {} vs {exact}",
+                ln_factorial(k)
+            );
+        }
+    }
+
+    #[test]
+    fn alias_table_matches_weights() {
+        let weights = [0.55, 0.15, 0.10, 0.07, 0.05, 0.05, 0.03];
+        let table = AliasTable::new(&weights);
+        assert_eq!(table.len(), weights.len());
+        let mut rng = Rng::seed_from_u64(11);
+        let n = 400_000;
+        let mut counts = vec![0usize; weights.len()];
+        for _ in 0..n {
+            counts[table.sample(&mut rng)] += 1;
+        }
+        let total: f64 = weights.iter().sum();
+        for (i, &w) in weights.iter().enumerate() {
+            let got = counts[i] as f64 / n as f64;
+            let want = w / total;
+            assert!((got - want).abs() < 0.005, "idx {i}: got {got} want {want}");
+        }
+    }
+
+    #[test]
+    fn alias_table_degenerate_single_weight() {
+        let table = AliasTable::new(&[3.0]);
+        let mut rng = Rng::seed_from_u64(12);
+        for _ in 0..100 {
+            assert_eq!(table.sample(&mut rng), 0);
+        }
     }
 }

@@ -41,9 +41,11 @@ fn incremental_aggregates_match_recount() {
     }
 }
 
-/// The parallel sweep must be a pure wall-clock optimization: identical
+/// The parallel sweep — worker pool AND shared pre-materialized arrival
+/// buffers — must be a pure wall-clock optimization: identical
 /// per-strategy metrics (every outcome, every ledger point, every util
-/// sample) to running the same configs sequentially.
+/// sample) to running the same configs sequentially with streaming
+/// trace generation.
 #[test]
 fn parallel_sweep_identical_to_sequential() {
     let strategies = [Strategy::Reactive, Strategy::LtUa, Strategy::Chiron];

@@ -1,0 +1,130 @@
+//! Invariants for the trace-pipeline overhaul: chunk-parallel generation
+//! must be byte-identical to sequential streaming for any chunk size and
+//! worker count, and a sweep replaying one shared pre-materialized
+//! buffer must produce metrics exactly equal to per-run streaming
+//! generation.
+
+use sageserve::config::Epoch;
+use sageserve::experiments::sweep::{run_configs, share_traces};
+use sageserve::sim::engine::{quick_config, run_simulation, SimConfig, Strategy};
+use sageserve::trace::generator::{TraceConfig, TraceGenerator};
+
+fn gen_cfg() -> TraceConfig {
+    TraceConfig {
+        days: 0.3,
+        scale: 0.01,
+        bursts: true, // exercise the interval-indexed burst factor too
+        seed: 1234,
+        ..Default::default()
+    }
+}
+
+/// The tentpole determinism claim: generation is a pure function of the
+/// config — chunking and threading decide only *which worker* computes a
+/// minute bucket, never its contents.
+#[test]
+fn chunk_parallel_identical_to_sequential() {
+    let g = TraceGenerator::new(gen_cfg());
+    let sequential: Vec<_> = g.stream().collect();
+    assert!(sequential.len() > 5_000, "trace too small: {}", sequential.len());
+    for chunk_minutes in [1u64, 7, 64, 100_000] {
+        for workers in [1usize, 2, 3, 8] {
+            let parallel = g.materialize_opts(chunk_minutes, workers);
+            assert_eq!(
+                parallel, sequential,
+                "chunk_minutes={chunk_minutes} workers={workers} diverged from stream"
+            );
+        }
+    }
+    // The default materializer too (whatever parallelism the host has).
+    assert_eq!(g.materialize(), sequential);
+}
+
+#[test]
+fn chunk_parallel_identical_across_epochs_and_ratios() {
+    // Config variations hit different sampler regimes (Nov has zero-rate
+    // IW-F streams; the ratio override reshapes tier λs).
+    for cfg in [
+        TraceConfig { epoch: Epoch::Nov2024, ..gen_cfg() },
+        TraceConfig { iw_niw_ratio: Some(9.0), bursts: false, ..gen_cfg() },
+        TraceConfig { days: 0.02, scale: 0.2, ..gen_cfg() },
+    ] {
+        let g = TraceGenerator::new(cfg);
+        let sequential: Vec<_> = g.stream().collect();
+        assert!(!sequential.is_empty());
+        assert_eq!(g.materialize_opts(13, 4), sequential);
+    }
+}
+
+/// Shared-buffer replay is a pure wall-clock/allocation optimization:
+/// every outcome, ledger point and util sample must match the streaming
+/// per-run generation exactly.
+#[test]
+fn shared_buffer_sweep_matches_streaming_generation() {
+    let strategies = [Strategy::Reactive, Strategy::LtUa];
+    let quick = |s: Strategy| {
+        let mut cfg = quick_config(s, 0.05, 0.005);
+        cfg.scaling.max_instances = 10;
+        cfg
+    };
+
+    // run_configs pre-materializes + shares internally.
+    let shared = run_configs(strategies.iter().map(|&s| quick(s)).collect());
+
+    for (r, &s) in shared.iter().zip(&strategies) {
+        let streamed = run_simulation(quick(s)); // no shared_trace: streams
+        assert!(
+            !r.metrics.outcomes.is_empty(),
+            "{}: sweep produced no outcomes",
+            s.name()
+        );
+        assert!(
+            r.metrics == streamed.metrics,
+            "{}: shared-buffer metrics differ from streaming generation",
+            s.name()
+        );
+    }
+}
+
+/// `share_traces` must generate each distinct trace config exactly once:
+/// same config ⇒ the same `Arc` allocation; different config ⇒ its own.
+#[test]
+fn share_traces_generates_each_config_once() {
+    let mut cfgs: Vec<SimConfig> = vec![
+        quick_config(Strategy::Reactive, 0.05, 0.004),
+        quick_config(Strategy::LtUa, 0.05, 0.004),
+        quick_config(Strategy::Chiron, 0.05, 0.004),
+        // A different scenario in the same grid gets its own buffer.
+        quick_config(Strategy::Reactive, 0.05, 0.008),
+    ];
+    share_traces(&mut cfgs);
+    let bufs: Vec<_> = cfgs
+        .iter()
+        .map(|c| c.shared_trace.as_ref().expect("buffer assigned"))
+        .collect();
+    assert!(std::sync::Arc::ptr_eq(bufs[0], bufs[1]));
+    assert!(std::sync::Arc::ptr_eq(bufs[0], bufs[2]));
+    assert!(!std::sync::Arc::ptr_eq(bufs[0], bufs[3]));
+    // And the shared buffer really is the config's trace.
+    let expect: Vec<_> = TraceGenerator::new(cfgs[0].trace.clone()).stream().collect();
+    assert_eq!(&bufs[0][..], &expect[..]);
+}
+
+/// The engine must accept the borrowed buffer directly (no re-generation
+/// hidden in the run path) and conserve every request in it.
+#[test]
+fn engine_replays_shared_buffer_losslessly() {
+    let mut cfg = quick_config(Strategy::Reactive, 0.05, 0.005);
+    cfg.scaling.max_instances = 10;
+    let buf = TraceGenerator::new(cfg.trace.clone()).materialize_shared();
+    let total = buf.len();
+    assert!(total > 100);
+    cfg.shared_trace = Some(buf);
+    let sim = run_simulation(cfg);
+    assert_eq!(
+        sim.metrics.outcomes.len() + sim.metrics.dropped as usize,
+        total,
+        "shared-buffer replay lost requests"
+    );
+    assert_eq!(sim.metrics.dropped, 0);
+}
