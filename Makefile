@@ -8,9 +8,13 @@
 
 CARGO_DIR := rust
 
-.PHONY: check build test bench bench-quick clean
+.PHONY: check verify build test bench bench-quick timing clean
 
 check: build test bench-quick
+
+# The verify flow: tier-1 build + tests plus the bench smoke that
+# refreshes BENCH_sim.json (see PERF.md "Verify flow").
+verify: check
 
 build:
 	cd $(CARGO_DIR) && cargo build --release
@@ -28,6 +32,19 @@ bench:
 bench-quick:
 	cd $(CARGO_DIR) && SAGESERVE_BENCH_QUICK=1 SAGESERVE_BENCH_OUT=../BENCH_sim.json cargo bench --bench simulator
 	cd $(CARGO_DIR) && SAGESERVE_BENCH_QUICK=1 cargo bench --bench router_hotpath
+
+# Paper-scale wall-clock per experiment (PERF.md records the numbers).
+# Each id runs once at --scale 1.0 under `time`; expect hours, not
+# minutes, for the week-long ids.
+TIMING_IDS := fig8 fig11 fig16a fig16b hetero
+timing:
+	cd $(CARGO_DIR) && cargo build --release
+	mkdir -p results-timing
+	for id in $(TIMING_IDS); do \
+		echo "=== $$id (--scale 1.0) ==="; \
+		/usr/bin/time -v $(CARGO_DIR)/target/release/sageserve exp $$id \
+			--scale 1.0 --out results-timing 2>&1 | tail -20; \
+	done
 
 clean:
 	cd $(CARGO_DIR) && cargo clean

@@ -51,32 +51,37 @@ fn main() -> anyhow::Result<()> {
         Box::new(NativeArForecaster::new(96, 8, 4))
     };
 
-    let perf = PerfTable::new(GpuKind::H100x8, &models);
+    // Plan over a heterogeneous H100+A100 fleet: the ILP's per-SKU
+    // columns (θ_{i,k}, α_k) pick where growth lands.
+    let gpus = [GpuKind::H100x8, GpuKind::A100x8];
+    let perf = PerfTable::for_fleet(&gpus, &models);
     let params = ScalingParams::default();
     let mut counts = BTreeMap::new();
     for &m in &models {
         for r in Region::ALL {
-            counts.insert((m, r), 6usize); // current deployment: 6 each
+            counts.insert((m, r), vec![6usize, 0]); // current: 6 H100 each
         }
     }
 
-    println!("\nhourly scaling plan (δ = instance-count change; ε = {}, β = {}%):\n",
+    println!("\nhourly scaling plan (δ per SKU; ε = {}, β = {}%):\n",
              params.epsilon, params.niw_buffer_frac * 100.0);
-    println!("{:<14} {:<10} {:>8} {:>8} {:>14}", "model", "region", "current", "delta", "forecast TPS");
+    println!("{:<14} {:<10} {:>8} {:>8} {:>8} {:>14}",
+             "model", "region", "current", "δ H100", "δ A100", "forecast TPS");
     let t0 = std::time::Instant::now();
-    let plan = run_epoch(&telemetry, forecaster.as_mut(), &perf, &params, &counts, 0.0);
+    let plan = run_epoch(&telemetry, forecaster.as_mut(), &perf, &gpus, &params, &counts, 0.0);
     let solve = t0.elapsed().as_secs_f64();
-    for (model, region, delta, tps) in &plan {
+    for entry in &plan {
         println!(
-            "{:<14} {:<10} {:>8} {:>+8} {:>14.0}",
-            model.to_string(),
-            region.to_string(),
-            counts[&(*model, *region)],
-            delta,
-            tps
+            "{:<14} {:<10} {:>8} {:>+8} {:>+8} {:>14.0}",
+            entry.model.to_string(),
+            entry.region.to_string(),
+            counts[&(entry.model, entry.region)].iter().sum::<usize>(),
+            entry.deltas[0],
+            entry.deltas[1],
+            entry.forecast_tps
         );
     }
-    let total_delta: i64 = plan.iter().map(|p| p.2).sum();
+    let total_delta: i64 = plan.iter().map(|p| p.delta_total()).sum();
     println!(
         "\nnet change: {total_delta:+} instances; forecast+ILP wall time {:.3} s \
          (paper quotes ~0.7 s ARIMA + ~1.5 s ILP per hour)",

@@ -60,13 +60,25 @@ fn main() {
     telemetry.warmup(&warm);
     let perf = PerfTable::new(GpuKind::H100x8, &models);
     let params = ScalingParams::default();
-    let counts: BTreeMap<(ModelKind, Region), usize> = models
+    let counts: BTreeMap<(ModelKind, Region), Vec<usize>> = models
         .iter()
-        .flat_map(|&m| Region::ALL.into_iter().map(move |r| ((m, r), 6usize)))
+        .flat_map(|&m| Region::ALL.into_iter().map(move |r| ((m, r), vec![6usize])))
         .collect();
     let mut fc = NativeArForecaster::new(96, 8, 4);
     bench("full control epoch (forecast + 4 ILPs)", quick_iters(500, 5), || {
-        run_epoch(&telemetry, &mut fc, &perf, &params, &counts, 0.0).len()
+        run_epoch(&telemetry, &mut fc, &perf, &[GpuKind::H100x8], &params, &counts, 0.0).len()
+    });
+
+    // The 2-SKU epoch: per-model ILPs now carry a [region][gpu] grid.
+    let fleet = [GpuKind::H100x8, GpuKind::A100x8];
+    let perf2 = PerfTable::for_fleet(&fleet, &models);
+    let counts2: BTreeMap<(ModelKind, Region), Vec<usize>> = models
+        .iter()
+        .flat_map(|&m| Region::ALL.into_iter().map(move |r| ((m, r), vec![3usize, 3usize])))
+        .collect();
+    let mut fc2 = NativeArForecaster::new(96, 8, 4);
+    bench("full control epoch, 2-SKU fleet (forecast + 4 ILPs)", quick_iters(500, 5), || {
+        run_epoch(&telemetry, &mut fc2, &perf2, &fleet, &params, &counts2, 0.0).len()
     });
     println!("\npaper reference: ~0.7 s forecast + ~1.5 s ILP per hourly epoch");
 }

@@ -8,6 +8,7 @@
 
 use std::collections::BTreeMap;
 
+use sageserve::config::{FleetSpec, GpuKind};
 use sageserve::sim::engine::{run_simulation, SimConfig, Strategy};
 use sageserve::trace::generator::{TraceConfig, TraceGenerator};
 use sageserve::util::bench::{bench, quick_iters, quick_mode};
@@ -44,6 +45,29 @@ fn main() {
         entry.insert("p50_ns".to_string(), Json::Num(result.p50_ns));
         entry.insert("reqs_per_wall_sec".to_string(), Json::Num(reqs_per_sec));
         report.insert(format!("simulate_{}", strategy.name()), Json::Obj(entry));
+    }
+
+    // Mixed H100/A100 fleet: exercises the per-SKU aggregates, the 2-SKU
+    // capacity ILP and the cost-ordered scaling paths end-to-end.
+    {
+        let cfg = || SimConfig {
+            trace: TraceConfig { days: 0.1, scale: 0.05, ..Default::default() },
+            strategy: Strategy::LtUa,
+            fleet: FleetSpec::mixed(&[(GpuKind::H100x8, 0.5), (GpuKind::A100x8, 0.5)]),
+            ..Default::default()
+        };
+        let n_requests = TraceGenerator::new(cfg().trace.clone()).stream().count();
+        let result = bench(&format!("simulate lt-ua mixed fleet ({n_requests} reqs)"), iters, || {
+            run_simulation(cfg()).metrics.outcomes.len()
+        });
+        let reqs_per_sec = n_requests as f64 / (result.mean_ns / 1e9);
+        println!("    → {:.2} M simulated requests / wall-second\n", reqs_per_sec / 1e6);
+        let mut entry = BTreeMap::new();
+        entry.insert("n_requests".to_string(), Json::Num(n_requests as f64));
+        entry.insert("mean_ns".to_string(), Json::Num(result.mean_ns));
+        entry.insert("p50_ns".to_string(), Json::Num(result.p50_ns));
+        entry.insert("reqs_per_wall_sec".to_string(), Json::Num(reqs_per_sec));
+        report.insert("simulate_lt-ua_mixed".to_string(), Json::Obj(entry));
     }
 
     // Trace generation alone (the simulator's input pipeline).  The

@@ -119,17 +119,37 @@ impl fmt::Display for ModelKind {
 }
 
 /// GPU SKUs (§2.1).  One *instance* is a whole 8-GPU VM.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum GpuKind {
     H100x8,
     A100x8,
 }
 
 impl GpuKind {
+    /// Number of SKUs — the dense per-SKU array width used by the
+    /// cluster aggregates and ledgers.
+    pub const COUNT: usize = 2;
+
+    /// Every SKU, in [`GpuKind::index`] order.
+    pub const ALL: [GpuKind; GpuKind::COUNT] = [GpuKind::H100x8, GpuKind::A100x8];
+
     pub fn index(self) -> usize {
         match self {
             GpuKind::H100x8 => 0,
             GpuKind::A100x8 => 1,
+        }
+    }
+
+    pub fn from_index(i: usize) -> GpuKind {
+        GpuKind::ALL[i]
+    }
+
+    /// CLI-friendly SKU name parsing.
+    pub fn parse(s: &str) -> Option<GpuKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "h100" | "h100x8" | "8xh100" => Some(GpuKind::H100x8),
+            "a100" | "a100x8" | "8xa100" => Some(GpuKind::A100x8),
+            _ => None,
         }
     }
 
@@ -153,6 +173,115 @@ impl fmt::Display for GpuKind {
             GpuKind::H100x8 => "8xH100",
             GpuKind::A100x8 => "8xA100",
         })
+    }
+}
+
+/// GPU fleet composition for one run — the §5 SKU axis `k`.  The fleet
+/// lists which SKUs the cluster may provision (the ILP's columns, the
+/// per-SKU delta axis, the ledger keys) and what fraction of the initial
+/// per-endpoint allocation each SKU hosts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    /// `(SKU, initial-allocation weight)`, fleet order.  Weights are
+    /// relative (normalized by their sum); SKUs must be distinct.
+    pub skus: Vec<(GpuKind, f64)>,
+}
+
+impl FleetSpec {
+    /// Single-SKU fleet — the paper's per-experiment assumption (§7.1)
+    /// and the degenerate case every pre-heterogeneity experiment runs.
+    pub fn homogeneous(gpu: GpuKind) -> Self {
+        FleetSpec { skus: vec![(gpu, 1.0)] }
+    }
+
+    /// Multi-SKU fleet with explicit initial-allocation weights.
+    pub fn mixed(skus: &[(GpuKind, f64)]) -> Self {
+        assert!(!skus.is_empty(), "fleet needs at least one SKU");
+        debug_assert!(
+            skus.iter()
+                .enumerate()
+                .all(|(i, &(g, _))| skus[..i].iter().all(|&(h, _)| h != g)),
+            "fleet SKUs must be distinct"
+        );
+        FleetSpec { skus: skus.to_vec() }
+    }
+
+    /// The SKUs available for provisioning, fleet order.
+    pub fn gpus(&self) -> Vec<GpuKind> {
+        self.skus.iter().map(|&(g, _)| g).collect()
+    }
+
+    pub fn is_homogeneous(&self) -> bool {
+        self.skus.len() == 1
+    }
+
+    /// The first SKU — the default for single-SKU call sites.
+    pub fn primary(&self) -> GpuKind {
+        self.skus[0].0
+    }
+
+    /// Split `total` instances across the fleet by weight
+    /// (largest-remainder apportionment; deterministic, sums to `total`,
+    /// ties favour earlier SKUs).
+    pub fn split(&self, total: usize) -> Vec<(GpuKind, usize)> {
+        let weight: f64 = self.skus.iter().map(|&(_, w)| w).sum();
+        let mut out: Vec<(GpuKind, usize)> =
+            self.skus.iter().map(|&(g, _)| (g, 0)).collect();
+        if weight <= 0.0 {
+            out[0].1 = total;
+            return out;
+        }
+        let mut rema: Vec<(usize, f64)> = Vec::with_capacity(self.skus.len());
+        let mut assigned = 0usize;
+        for (i, &(_, w)) in self.skus.iter().enumerate() {
+            let share = total as f64 * w / weight;
+            let base = share.floor() as usize;
+            out[i].1 = base;
+            assigned += base;
+            rema.push((i, share - base as f64));
+        }
+        rema.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        for k in 0..total.saturating_sub(assigned) {
+            out[rema[k % rema.len()].0].1 += 1;
+        }
+        out
+    }
+
+    /// Parse a CLI fleet spec: a SKU name (`h100`, `a100`), `mixed`
+    /// (50/50 H100+A100), or explicit weights (`h100:0.5,a100:0.5`).
+    pub fn parse(s: &str) -> Option<FleetSpec> {
+        match s.to_ascii_lowercase().as_str() {
+            "h100" | "h100x8" | "8xh100" => return Some(FleetSpec::homogeneous(GpuKind::H100x8)),
+            "a100" | "a100x8" | "8xa100" => return Some(FleetSpec::homogeneous(GpuKind::A100x8)),
+            "mixed" => {
+                return Some(FleetSpec::mixed(&[
+                    (GpuKind::H100x8, 0.5),
+                    (GpuKind::A100x8, 0.5),
+                ]))
+            }
+            _ => {}
+        }
+        let mut skus = Vec::new();
+        for part in s.split(',') {
+            let (name, frac) = part.split_once(':')?;
+            let gpu = GpuKind::parse(name.trim())?;
+            let w: f64 = frac.trim().parse().ok()?;
+            if !w.is_finite() || w < 0.0 || skus.iter().any(|&(g, _)| g == gpu) {
+                return None;
+            }
+            skus.push((gpu, w));
+        }
+        if skus.is_empty() {
+            None
+        } else {
+            Some(FleetSpec { skus })
+        }
+    }
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        FleetSpec::homogeneous(GpuKind::H100x8)
     }
 }
 
@@ -337,6 +466,48 @@ mod tests {
         assert_eq!(p.remote_redeploy_secs, 7200.0);
         assert_eq!(p.ua_over_factor, 5.0);
         assert_eq!(p.ua_under_factor, 0.5);
+    }
+
+    #[test]
+    fn gpu_index_roundtrip_and_parse() {
+        for (i, g) in GpuKind::ALL.into_iter().enumerate() {
+            assert_eq!(g.index(), i);
+            assert_eq!(GpuKind::from_index(i), g);
+        }
+        assert_eq!(GpuKind::parse("h100"), Some(GpuKind::H100x8));
+        assert_eq!(GpuKind::parse("8xA100"), Some(GpuKind::A100x8));
+        assert_eq!(GpuKind::parse("tpu"), None);
+    }
+
+    #[test]
+    fn fleet_split_is_exact_and_deterministic() {
+        let homo = FleetSpec::homogeneous(GpuKind::A100x8);
+        assert_eq!(homo.split(7), vec![(GpuKind::A100x8, 7)]);
+        assert!(homo.is_homogeneous());
+
+        let mixed = FleetSpec::mixed(&[(GpuKind::H100x8, 0.5), (GpuKind::A100x8, 0.5)]);
+        assert_eq!(mixed.split(4), vec![(GpuKind::H100x8, 2), (GpuKind::A100x8, 2)]);
+        // Odd totals: the tie goes to the earlier SKU.
+        assert_eq!(mixed.split(5), vec![(GpuKind::H100x8, 3), (GpuKind::A100x8, 2)]);
+        assert_eq!(mixed.split(0), vec![(GpuKind::H100x8, 0), (GpuKind::A100x8, 0)]);
+        let lopsided = FleetSpec::mixed(&[(GpuKind::H100x8, 1.0), (GpuKind::A100x8, 3.0)]);
+        assert_eq!(lopsided.split(8), vec![(GpuKind::H100x8, 2), (GpuKind::A100x8, 6)]);
+        for total in 0..40 {
+            let sum: usize = mixed.split(total).iter().map(|&(_, n)| n).sum();
+            assert_eq!(sum, total);
+        }
+    }
+
+    #[test]
+    fn fleet_parse_accepts_names_and_weights() {
+        assert_eq!(FleetSpec::parse("h100"), Some(FleetSpec::homogeneous(GpuKind::H100x8)));
+        let mixed = FleetSpec::parse("mixed").unwrap();
+        assert_eq!(mixed.gpus(), vec![GpuKind::H100x8, GpuKind::A100x8]);
+        let custom = FleetSpec::parse("a100:0.75,h100:0.25").unwrap();
+        assert_eq!(custom.primary(), GpuKind::A100x8);
+        assert_eq!(custom.split(4), vec![(GpuKind::A100x8, 3), (GpuKind::H100x8, 1)]);
+        assert_eq!(FleetSpec::parse("tpu"), None);
+        assert_eq!(FleetSpec::parse("h100:0.5,h100:0.5"), None);
     }
 
     #[test]

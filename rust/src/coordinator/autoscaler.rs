@@ -17,8 +17,10 @@
 
 use std::collections::BTreeMap;
 
-use crate::config::{ModelKind, Region, ScalingParams, Tier, Time};
+use crate::config::{GpuKind, ModelKind, Region, ScalingParams, Tier, Time};
+use crate::coordinator::controller::EpochPlanEntry;
 use crate::metrics::Metrics;
+use crate::perf::PerfTable;
 use crate::sim::cluster::{Cluster, PoolTag};
 use crate::sim::event::{Event, EventQueue};
 
@@ -101,9 +103,11 @@ pub struct ScaleCtx<'a> {
 }
 
 impl ScaleCtx<'_> {
-    /// Scale out one instance and schedule its ProvisionDone event.
-    fn scale_out(&mut self, model: ModelKind, region: Region, pool: PoolTag) -> bool {
-        let Some((id, ready)) = self.cluster.scale_out(model, region, pool, self.now, self.metrics)
+    /// Scale out one instance of an explicit SKU and schedule its
+    /// ProvisionDone event.
+    fn scale_out(&mut self, model: ModelKind, region: Region, pool: PoolTag, gpu: GpuKind) -> bool {
+        let Some((id, ready)) =
+            self.cluster.scale_out(model, region, pool, gpu, self.now, self.metrics)
         else {
             return false;
         };
@@ -112,12 +116,33 @@ impl ScaleCtx<'_> {
         true
     }
 
+    /// Scale out on the cheapest SKU (by α, $/h) that can source a VM —
+    /// the default when no per-SKU plan pins the SKU.  Deliberate
+    /// policy: cost order wins over source readiness, so a cheap fresh
+    /// VM (10 min) is preferred to an expensive same-SKU spot reclaim
+    /// (1 min) — the §5 α-ordering trades a slower ramp for fleet cost.
+    fn scale_out_cheapest(&mut self, model: ModelKind, region: Region, pool: PoolTag) -> bool {
+        let (order, n) = self.gpus_by_cost(false);
+        for &gpu in &order[..n] {
+            if self.scale_out(model, region, pool, gpu) {
+                return true;
+            }
+        }
+        false
+    }
+
     /// Begin draining one instance (it converts to spot when empty).
     /// Idle instances (no running batch) convert immediately — otherwise
     /// an idle endpoint would hold Draining instances forever, since only
     /// chunk completions trigger `finish_drain`.
-    fn scale_in(&mut self, model: ModelKind, region: Region, pool: Option<PoolTag>) -> bool {
-        let Some(id) = self.cluster.scale_in(model, region, pool) else {
+    fn scale_in(
+        &mut self,
+        model: ModelKind,
+        region: Region,
+        pool: Option<PoolTag>,
+        gpu: Option<GpuKind>,
+    ) -> bool {
+        let Some(id) = self.cluster.scale_in(model, region, pool, gpu) else {
             return false;
         };
         if self.cluster.instances[id].batch.is_empty() {
@@ -129,6 +154,28 @@ impl ScaleCtx<'_> {
         true
     }
 
+    /// Scale in from the most expensive SKU that has an eligible
+    /// instance — releasing dear silicon first minimizes fleet cost.
+    fn scale_in_dearest(&mut self, model: ModelKind, region: Region, pool: Option<PoolTag>) -> bool {
+        let (order, n) = self.gpus_by_cost(true);
+        for &gpu in &order[..n] {
+            if self.scale_in(model, region, pool, Some(gpu)) {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Fleet SKUs ordered by $/h (ascending, or descending when `desc`),
+    /// copied from the cluster's precomputed orders into a stack array —
+    /// allocation-free on the per-tick/per-request scaling paths.
+    fn gpus_by_cost(&self, desc: bool) -> ([GpuKind; GpuKind::COUNT], usize) {
+        let src = if desc { &self.cluster.gpus_cost_desc } else { &self.cluster.gpus_cost_asc };
+        let mut out = [GpuKind::H100x8; GpuKind::COUNT];
+        out[..src.len()].copy_from_slice(src);
+        (out, src.len())
+    }
+
     pub fn record_ledgers(&mut self, model: ModelKind, region: Region) {
         let allocated = self.cluster.allocated_count(model, region);
         self.metrics
@@ -136,6 +183,16 @@ impl ScaleCtx<'_> {
             .entry((model, region))
             .or_default()
             .record(self.now, allocated);
+        // Per-SKU GPU-hour attribution rides on the same change points.
+        let by_gpu = self.cluster.allocated_by_gpu(model, region);
+        for gi in 0..self.cluster.gpus.len() {
+            let gpu = self.cluster.gpus[gi];
+            self.metrics
+                .instances_by_gpu
+                .entry((model, region, gpu))
+                .or_default()
+                .record(self.now, by_gpu[gpu.index()]);
+        }
         let spot = self
             .cluster
             .spot_pool
@@ -209,40 +266,69 @@ impl Autoscaler {
         }
         let util = ctx.cluster.pool_util(model, region, filter);
         if util > self.params.scale_out_util {
-            if ctx.scale_out(model, region, out_pool) {
+            if ctx.scale_out_cheapest(model, region, out_pool) {
                 ctx.touch_cooldown(model, region);
             }
         } else if util < self.params.scale_in_util {
-            if ctx.scale_in(model, region, filter) {
+            if ctx.scale_in_dearest(model, region, filter) {
                 ctx.touch_cooldown(model, region);
             }
         }
     }
 
-    /// Hourly control epoch: arm or apply the ILP deltas (LT strategies).
-    /// `plans` carries (model, region, delta, forecast_peak_tps).
-    pub fn on_epoch(&mut self, ctx: &mut ScaleCtx, plans: &[(ModelKind, Region, i64, f64)]) {
+    /// Hourly control epoch: arm or apply the per-SKU ILP deltas (LT
+    /// strategies).  Execution order is cost-aware: positive deltas run
+    /// cheapest-SKU-first, negative deltas most-expensive-first.
+    pub fn on_epoch(&mut self, ctx: &mut ScaleCtx, plans: &[EpochPlanEntry]) {
         if !self.strategy.uses_forecast() {
             return;
         }
-        for &(model, region, delta, forecast_tps) in plans {
+        let gpus: Vec<GpuKind> = ctx.cluster.gpus.clone();
+        // SKU indices by ascending $/h (stable: ties keep fleet order).
+        let mut cost_order: Vec<usize> = (0..gpus.len()).collect();
+        cost_order.sort_by(|&a, &b| {
+            gpus[a].dollars_per_hour().partial_cmp(&gpus[b].dollars_per_hour()).unwrap()
+        });
+        for entry in plans {
+            let (model, region) = (entry.model, entry.region);
             let current = ctx.cluster.allocated_count(model, region) as i64;
-            let target = (current + delta).max(self.params.min_instances as i64) as usize;
+            let delta_total = entry.delta_total();
+            let target = (current + delta_total).max(self.params.min_instances as i64) as usize;
+            let alloc_by_gpu = ctx.cluster.allocated_by_gpu(model, region);
             {
                 let ep = ctx.cluster.endpoints.get_mut(&(model, region)).unwrap();
                 ep.target = Some(target);
-                ep.forecast_tps = forecast_tps;
+                ep.forecast_tps = entry.forecast_tps;
+                ep.target_by_gpu = [None; GpuKind::COUNT];
+                for (k, &gpu) in gpus.iter().enumerate() {
+                    let cur_k = alloc_by_gpu[gpu.index()] as i64;
+                    let delta_k = entry.deltas.get(k).copied().unwrap_or(0);
+                    ep.target_by_gpu[gpu.index()] = Some((cur_k + delta_k).max(0) as usize);
+                }
             }
             if self.strategy == Strategy::LtI {
-                // Immediate: jump straight to the recommended count.
-                for _ in 0..delta.max(0) {
-                    if !ctx.scale_out(model, region, PoolTag::Unified) {
-                        break;
+                // Immediate: jump straight to the recommended per-SKU
+                // counts.  Removals (dearest SKU first) run before
+                // additions (cheapest first) so a mixed-sign SKU-swap
+                // plan frees endpoint slots before filling them — at
+                // max_instances the additions would otherwise all fail
+                // and the swap would under-execute into a net shrink.
+                // Single-sign plans (every single-SKU plan) are
+                // unaffected by the ordering.
+                for &k in cost_order.iter().rev() {
+                    let d = entry.deltas.get(k).copied().unwrap_or(0);
+                    for _ in 0..(-d).max(0) {
+                        if !ctx.scale_in(model, region, None, Some(gpus[k])) {
+                            break;
+                        }
                     }
                 }
-                for _ in 0..(-delta).max(0) {
-                    if !ctx.scale_in(model, region, None) {
-                        break;
+                for &k in &cost_order {
+                    let d = entry.deltas.get(k).copied().unwrap_or(0);
+                    for _ in 0..d.max(0) {
+                        if !ctx.scale_out(model, region, PoolTag::Unified, gpus[k]) {
+                            break;
+                        }
                     }
                 }
             }
@@ -274,8 +360,10 @@ impl Autoscaler {
         observed_tps: &BTreeMap<(ModelKind, Region), f64>,
         epoch_elapsed: Time,
     ) {
-        let keys: Vec<(ModelKind, Region)> = ctx.cluster.endpoints.keys().copied().collect();
-        for (model, region) in keys {
+        // Index-based endpoint walk (`EndpointMap::key_at`): no per-tick
+        // key Vec — the endpoint set is fixed after construction.
+        for idx in 0..ctx.cluster.endpoints.len() {
+            let (model, region) = ctx.cluster.endpoints.key_at(idx);
             let (target, forecast_tps) = {
                 let ep = &ctx.cluster.endpoints[&(model, region)];
                 match ep.target {
@@ -290,13 +378,13 @@ impl Autoscaler {
             let util = ctx.cluster.pool_util(model, region, None);
             // Deferred progression toward the armed target (LT-U core).
             if allocated < target && util > self.params.scale_out_util {
-                if ctx.scale_out(model, region, PoolTag::Unified) {
+                if self.lt_scale_out_step(ctx, model, region) {
                     ctx.touch_cooldown(model, region);
                 }
                 continue;
             }
             if allocated > target && util < self.params.scale_in_util {
-                if ctx.scale_in(model, region, None) {
+                if self.lt_scale_in_step(ctx, model, region) {
                     ctx.touch_cooldown(model, region);
                 }
                 continue;
@@ -309,14 +397,14 @@ impl Autoscaler {
                 if forecast_tps > 0.0 {
                     let ratio = observed / forecast_tps;
                     if ratio >= self.params.ua_over_factor && allocated >= target {
-                        if ctx.scale_out(model, region, PoolTag::Unified) {
+                        if ctx.scale_out_cheapest(model, region, PoolTag::Unified) {
                             ctx.touch_cooldown(model, region);
                         }
                     } else if ratio <= self.params.ua_under_factor
                         && allocated <= target
                         && util < self.params.scale_in_util
                     {
-                        if ctx.scale_in(model, region, None) {
+                        if ctx.scale_in_dearest(model, region, None) {
                             ctx.touch_cooldown(model, region);
                         }
                     }
@@ -325,31 +413,97 @@ impl Autoscaler {
         }
     }
 
+    /// One LT-U progression step toward the armed per-SKU targets:
+    /// cheapest SKU still below its target first; if every per-SKU
+    /// target is met (reactive drift between epochs), cheapest SKU that
+    /// can source an instance.
+    fn lt_scale_out_step(&self, ctx: &mut ScaleCtx, model: ModelKind, region: Region) -> bool {
+        let (alloc, targets) = {
+            let ep = &ctx.cluster.endpoints[&(model, region)];
+            (ep.alloc_by_gpu, ep.target_by_gpu)
+        };
+        let (order, n) = ctx.gpus_by_cost(false);
+        for &gpu in &order[..n] {
+            if let Some(t) = targets[gpu.index()] {
+                if alloc[gpu.index()] < t && ctx.scale_out(model, region, PoolTag::Unified, gpu) {
+                    return true;
+                }
+            }
+        }
+        for &gpu in &order[..n] {
+            if ctx.scale_out(model, region, PoolTag::Unified, gpu) {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// One LT-U scale-in step: most-expensive SKU above its armed
+    /// per-SKU target first, then most-expensive with any eligible
+    /// instance.
+    fn lt_scale_in_step(&self, ctx: &mut ScaleCtx, model: ModelKind, region: Region) -> bool {
+        let (alloc, targets) = {
+            let ep = &ctx.cluster.endpoints[&(model, region)];
+            (ep.alloc_by_gpu, ep.target_by_gpu)
+        };
+        let (order, n) = ctx.gpus_by_cost(true);
+        for &gpu in &order[..n] {
+            if let Some(t) = targets[gpu.index()] {
+                if alloc[gpu.index()] > t && ctx.scale_in(model, region, None, Some(gpu)) {
+                    return true;
+                }
+            }
+        }
+        for &gpu in &order[..n] {
+            if ctx.scale_in(model, region, None, Some(gpu)) {
+                return true;
+            }
+        }
+        false
+    }
+
     /// Chiron: scale the interactive pool when estimated queueing delay
     /// breaches Θ × TTFT-SLA (backpressure, from offline profiles); the
-    /// batch pool when NIW backlog threatens deadlines.  Consolidation is
+    /// batch pool when the NIW backlog's estimated drain time threatens
+    /// the 24 h completion deadline.  Interactive consolidation stays
     /// conservative (that's the published behaviour we compare against).
     fn chiron_tick(&mut self, ctx: &mut ScaleCtx, _observed: &BTreeMap<(ModelKind, Region), f64>) {
-        let keys: Vec<(ModelKind, Region)> = ctx.cluster.endpoints.keys().copied().collect();
-        for (model, region) in keys {
+        // Index-based endpoint walk: no per-tick key Vec.
+        for idx in 0..ctx.cluster.endpoints.len() {
+            let (model, region) = ctx.cluster.endpoints.key_at(idx);
             if !ctx.cooldown_ok(model, region, &self.params) {
                 continue;
             }
-            let profile = ctx.cluster.perf.profile(model);
-            // Estimated interactive queue delay from offline profile:
-            // pending tokens / (instances × profile TPS).  Both come
-            // straight from the per-pool aggregates — O(1) per endpoint.
+            // Estimated interactive queue delay from offline profiles:
+            // pending tokens / Σ_k (instances_k × per-SKU profile TPS).
+            // Everything comes straight from the per-pool per-SKU
+            // aggregates — O(1) per endpoint.
             let mut pending = 0u64;
             let mut n_int = 0usize;
-            let ep = &ctx.cluster.endpoints[&(model, region)];
-            for pool in PoolTag::ALL {
-                if pool.serves_iw() {
+            let mut int_counts = [0usize; GpuKind::COUNT];
+            let mut niw_pending = 0u64;
+            let mut batch_counts = [0usize; GpuKind::COUNT];
+            {
+                let ep = &ctx.cluster.endpoints[&(model, region)];
+                for pool in PoolTag::ALL {
                     let a = &ep.agg[pool.index()];
-                    pending += a.pending_tokens;
-                    n_int += a.count;
+                    if pool.serves_iw() {
+                        pending += a.pending_tokens;
+                        n_int += a.count;
+                        for k in 0..GpuKind::COUNT {
+                            int_counts[k] += a.count_by_gpu[k];
+                        }
+                    }
+                    if matches!(pool, PoolTag::ChironMixed | PoolTag::ChironBatch) {
+                        niw_pending += a.pending_tokens;
+                        for k in 0..GpuKind::COUNT {
+                            batch_counts[k] += a.count_by_gpu[k];
+                        }
+                    }
                 }
             }
-            let capacity_tps = (n_int.max(1) as f64) * profile.prompt_tps;
+            let primary = ctx.cluster.gpus[0];
+            let capacity_tps = fleet_prompt_tps(&ctx.cluster.perf, model, &int_counts, primary);
             let est_delay = pending as f64 / capacity_tps;
             let key = (model, region);
             let smoothed = {
@@ -360,20 +514,60 @@ impl Autoscaler {
             // Strictest IW SLA = 1 s (IW-F); Θ = 0.6.
             let sla_budget = self.chiron_theta * 1.0;
             if smoothed > sla_budget {
-                if ctx.scale_out(model, region, PoolTag::ChironInteractive) {
+                if ctx.scale_out_cheapest(model, region, PoolTag::ChironInteractive) {
                     ctx.touch_cooldown(model, region);
+                    continue;
                 }
             } else if smoothed < 0.05 * sla_budget {
                 // Conservative scale-in: only at very low pressure AND low
                 // utilization, and never below the initial interactive size.
                 let util = ctx.cluster.pool_util(model, region, Some(PoolTag::ChironInteractive));
                 if util < 0.15 && n_int > 10 {
-                    if ctx.scale_in(model, region, Some(PoolTag::ChironInteractive)) {
+                    if ctx.scale_in_dearest(model, region, Some(PoolTag::ChironInteractive)) {
                         ctx.touch_cooldown(model, region);
+                        continue;
                     }
                 }
             }
+            // Deadline-driven batch-pool scale-out: if the NIW pools'
+            // backlog would take more than Θ × the 24 h deadline to
+            // drain at their profiled throughput, grow the batch pool
+            // now instead of waiting for backpressure (the fairer
+            // baseline the ROADMAP asked for).
+            let batch_tps = fleet_prompt_tps(&ctx.cluster.perf, model, &batch_counts, primary);
+            let est_drain = niw_pending as f64 / batch_tps;
+            let deadline = Tier::Niw.deadline().unwrap_or(24.0 * 3600.0);
+            if est_drain > self.chiron_theta * deadline {
+                if ctx.scale_out_cheapest(model, region, PoolTag::ChironBatch) {
+                    ctx.touch_cooldown(model, region);
+                }
+            }
         }
+    }
+}
+
+/// Σ_k counts_k × prompt-TPS(model, SKU_k): the fleet's aggregate
+/// profiled throughput for a set of per-SKU instance counts.  Falls back
+/// to one `fallback`-SKU instance when the set is empty (the pre-scaling
+/// "at least one instance" convention).
+fn fleet_prompt_tps(
+    perf: &PerfTable,
+    model: ModelKind,
+    counts: &[usize; GpuKind::COUNT],
+    fallback: GpuKind,
+) -> f64 {
+    let mut tps = 0.0;
+    let mut total = 0usize;
+    for k in 0..GpuKind::COUNT {
+        if counts[k] > 0 {
+            tps += counts[k] as f64 * perf.profile(model, GpuKind::from_index(k)).prompt_tps;
+            total += counts[k];
+        }
+    }
+    if total == 0 {
+        perf.profile(model, fallback).prompt_tps
+    } else {
+        tps
     }
 }
 
@@ -484,11 +678,20 @@ mod tests {
         assert_eq!(niw_pool.len(), 4); // 3 + 1 scaled out (15 → 12/3 split)
     }
 
+    fn plan1(delta: i64, forecast_tps: f64) -> Vec<EpochPlanEntry> {
+        vec![EpochPlanEntry {
+            model: ModelKind::Llama2_70B,
+            region: Region::EastUs,
+            deltas: vec![delta],
+            forecast_tps,
+        }]
+    }
+
     #[test]
     fn lt_i_applies_delta_immediately() {
         let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::LtI, 4);
         let mut ctx = ScaleCtx { now: 3600.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
-        scaler.on_epoch(&mut ctx, &[(ModelKind::Llama2_70B, Region::EastUs, 3, 1000.0)]);
+        scaler.on_epoch(&mut ctx, &plan1(3, 1000.0));
         assert_eq!(cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs), 7);
     }
 
@@ -496,7 +699,7 @@ mod tests {
     fn lt_u_defers_until_util_breach() {
         let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::LtU, 4);
         let mut ctx = ScaleCtx { now: 3600.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
-        scaler.on_epoch(&mut ctx, &[(ModelKind::Llama2_70B, Region::EastUs, 3, 1000.0)]);
+        scaler.on_epoch(&mut ctx, &plan1(3, 1000.0));
         // Target armed but nothing applied yet.
         assert_eq!(cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs), 4);
         // Low util tick: still nothing.
@@ -515,7 +718,7 @@ mod tests {
     fn lt_ua_overrides_on_forecast_gap() {
         let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::LtUa, 4);
         let mut ctx = ScaleCtx { now: 3600.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
-        scaler.on_epoch(&mut ctx, &[(ModelKind::Llama2_70B, Region::EastUs, 0, 100.0)]);
+        scaler.on_epoch(&mut ctx, &plan1(0, 100.0));
         // Observed TPS 8× the forecast, inside the last-20-min window, at
         // target count ⇒ scale out beyond the target.
         let mut obs = BTreeMap::new();
@@ -529,7 +732,7 @@ mod tests {
     fn lt_u_does_not_override_on_gap() {
         let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::LtU, 4);
         let mut ctx = ScaleCtx { now: 3600.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
-        scaler.on_epoch(&mut ctx, &[(ModelKind::Llama2_70B, Region::EastUs, 0, 100.0)]);
+        scaler.on_epoch(&mut ctx, &plan1(0, 100.0));
         let mut obs = BTreeMap::new();
         obs.insert((ModelKind::Llama2_70B, Region::EastUs), 800.0);
         let mut ctx = ScaleCtx { now: 7000.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
@@ -568,5 +771,55 @@ mod tests {
             scaler.on_tick(&mut ctx, &obs, 0.0);
         }
         assert!(cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs) > 12);
+    }
+
+    #[test]
+    fn chiron_batch_pool_scales_on_deadline_pressure() {
+        // 12/endpoint chiron split: 6 interactive / 3 mixed / 3 batch.
+        let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::Chiron, 12);
+        // Pile an NIW backlog on the batch pool that would take far more
+        // than Θ×24 h to drain at the profiled throughput (~70 k prompt
+        // TPS across the 6 NIW-serving instances ⇒ threshold ≈ 3.6 G
+        // tokens).
+        for id in 0..cluster.instances.len() {
+            if cluster.instances[id].pool == PoolTag::ChironBatch
+                && cluster.instances[id].region == Region::EastUs
+                && cluster.instances[id].model == ModelKind::Llama2_70B
+            {
+                for n in 0..20 {
+                    cluster.push_waiting(id, crate::trace::types::Request {
+                        id: n,
+                        arrival: 0.0,
+                        model: ModelKind::Llama2_70B,
+                        origin: Region::EastUs,
+                        tier: Tier::Niw,
+                        app: crate::trace::types::AppKind::DocSummary,
+                        input_tokens: 500_000_000,
+                        output_tokens: 1000,
+                    });
+                }
+            }
+        }
+        let before_batch = cluster.endpoints[&(ModelKind::Llama2_70B, Region::EastUs)]
+            .agg[PoolTag::ChironBatch.index()]
+            .count;
+        let obs = BTreeMap::new();
+        let mut ctx = ScaleCtx {
+            now: 100.0,
+            cluster: &mut cluster,
+            metrics: &mut metrics,
+            events: &mut events,
+            reroutes: Vec::new(),
+        };
+        scaler.on_tick(&mut ctx, &obs, 0.0);
+        // A fresh instance lands in Provisioning, so count it via the
+        // roster: one more ChironBatch instance allocated.
+        let after_batch = cluster.endpoints[&(ModelKind::Llama2_70B, Region::EastUs)]
+            .instances
+            .iter()
+            .filter(|&&i| cluster.instances[i].pool == PoolTag::ChironBatch)
+            .count();
+        assert_eq!(after_batch, before_batch + 1, "deadline pressure must grow the batch pool");
+        assert!(cluster.aggregates_consistent());
     }
 }

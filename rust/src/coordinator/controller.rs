@@ -9,7 +9,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::config::{ModelKind, Region, ScalingParams, Time};
+use crate::config::{GpuKind, ModelKind, Region, ScalingParams, Time};
 use crate::forecast::Forecaster;
 use crate::opt::capacity::{optimize_capacity, CapacityInputs};
 use crate::perf::PerfTable;
@@ -114,25 +114,47 @@ impl Telemetry {
     }
 }
 
-/// One epoch's scaling plan entry: (model, region, δ, forecast peak TPS).
-pub type EpochPlan = Vec<(ModelKind, Region, i64, f64)>;
+/// One epoch's scaling plan entry: per-SKU instance-count deltas for one
+/// (model, region), aligned with the GPU axis `run_epoch` was given.
+#[derive(Debug, Clone)]
+pub struct EpochPlanEntry {
+    pub model: ModelKind,
+    pub region: Region,
+    /// δ_{j,k} per GPU SKU, fleet order.
+    pub deltas: Vec<i64>,
+    /// Forecast peak input TPS for the hour (LT-UA gap checks).
+    pub forecast_tps: f64,
+}
 
-/// Run one forecast + ILP epoch (§6.3).
+impl EpochPlanEntry {
+    /// Net instance-count delta across SKUs.
+    pub fn delta_total(&self) -> i64 {
+        self.deltas.iter().sum()
+    }
+}
+
+pub type EpochPlan = Vec<EpochPlanEntry>;
+
+/// Run one forecast + ILP epoch (§6.3) over the full `[region][gpu]`
+/// capacity formulation of §5.
 ///
-/// `current_counts` are the allocated instance counts per (model, region);
-/// `theta` (per-instance input TPS) comes from the perf table.  Returns
-/// the δ plan plus diagnostics (forecast MAPE is tracked by the caller).
+/// `gpus` is the fleet's SKU axis; `current_counts` are the allocated
+/// instance counts per (model, region) split by SKU in the same order;
+/// θ_{i,k} (per-instance input TPS) comes from the perf table, α_k/σ_k
+/// from the SKU price sheet.  Returns the per-SKU δ plan.
 pub fn run_epoch(
     telemetry: &Telemetry,
     forecaster: &mut dyn Forecaster,
     perf: &PerfTable,
+    gpus: &[GpuKind],
     params: &ScalingParams,
-    current_counts: &BTreeMap<(ModelKind, Region), usize>,
+    current_counts: &BTreeMap<(ModelKind, Region), Vec<usize>>,
     now: Time,
 ) -> EpochPlan {
     let keys = telemetry.keys().to_vec();
     let history: Vec<Vec<f64>> = keys.iter().map(|&k| telemetry.history_tps(k, now)).collect();
     let forecasts = forecaster.forecast(&history);
+    let g = gpus.len();
 
     // Group per model (the ILP decouples across models).
     let mut plan = EpochPlan::new();
@@ -144,7 +166,6 @@ pub fn run_epoch(
         ms
     };
     for model in models {
-        let profile = perf.profile(model);
         let mut current = Vec::new();
         let mut forecast_tps = Vec::new();
         let mut region_order = Vec::new();
@@ -153,35 +174,64 @@ pub fn run_epoch(
                 continue;
             }
             region_order.push(r);
-            current.push(vec![current_counts.get(&(m, r)).copied().unwrap_or(0) as f64]);
+            current.push(match current_counts.get(&(m, r)) {
+                Some(v) => v.iter().map(|&c| c as f64).collect(),
+                None => vec![0.0; g],
+            });
             // β buffer: 10% of last hour's NIW load as TPS headroom (§6.3).
             let beta = params.niw_buffer_frac * telemetry.niw_tokens_last_hour((m, r), now) / 3600.0;
             forecast_tps.push(forecasts[i].iter().map(|&f| f + beta).collect::<Vec<f64>>());
         }
         let inputs = CapacityInputs {
             current,
-            tps_per_instance: vec![profile.input_tps_capacity()],
+            tps_per_instance: gpus.iter().map(|&k| perf.profile(model, k).input_tps_capacity()).collect(),
             forecast_tps: forecast_tps.clone(),
-            vm_cost: vec![perf.gpu.dollars_per_hour()],
-            start_cost: vec![perf.gpu.dollars_per_hour()
-                * (params.local_redeploy_secs / 3600.0)],
+            vm_cost: gpus.iter().map(|&k| k.dollars_per_hour()).collect(),
+            start_cost: gpus
+                .iter()
+                .map(|&k| k.dollars_per_hour() * (params.local_redeploy_secs / 3600.0))
+                .collect(),
             epsilon: params.epsilon,
-            min_instances: params.min_instances as f64,
+            // The ILP's lower bound applies per x_{j,k}; for a
+            // heterogeneous fleet that would force min_instances of
+            // *every* SKU in every region, so multi-SKU epochs bound at
+            // zero and rely on the executing layer's per-endpoint floor.
+            min_instances: if g == 1 { params.min_instances as f64 } else { 0.0 },
             max_instances: params.max_instances as f64,
         };
         match optimize_capacity(&inputs) {
             Some(cap_plan) => {
                 for (j, &r) in region_order.iter().enumerate() {
                     let peak = forecast_tps[j].iter().copied().fold(0.0, f64::max);
-                    plan.push((model, r, cap_plan.deltas[j][0], peak));
+                    plan.push(EpochPlanEntry {
+                        model,
+                        region: r,
+                        deltas: cap_plan.deltas[j].clone(),
+                        forecast_tps: peak,
+                    });
                 }
             }
             None => {
-                // Demand beyond max capacity: clamp every region to max.
+                // Demand beyond max capacity: clamp every region to max,
+                // growing on the cheapest SKU (the executing layer caps
+                // the endpoint total anyway).
+                let cheapest = (0..g)
+                    .min_by(|&a, &b| {
+                        gpus[a]
+                            .dollars_per_hour()
+                            .partial_cmp(&gpus[b].dollars_per_hour())
+                            .unwrap()
+                    })
+                    .unwrap_or(0);
                 for (j, &r) in region_order.iter().enumerate() {
-                    let cur = current_counts.get(&(model, r)).copied().unwrap_or(0) as i64;
+                    let cur: i64 = current_counts
+                        .get(&(model, r))
+                        .map(|v| v.iter().sum::<usize>() as i64)
+                        .unwrap_or(0);
                     let peak = forecast_tps[j].iter().copied().fold(0.0, f64::max);
-                    plan.push((model, r, params.max_instances as i64 - cur, peak));
+                    let mut deltas = vec![0i64; g];
+                    deltas[cheapest] = params.max_instances as i64 - cur;
+                    plan.push(EpochPlanEntry { model, region: r, deltas, forecast_tps: peak });
                 }
             }
         }
@@ -251,15 +301,17 @@ mod tests {
         let mut forecaster = SeasonalNaive::new(96, 4);
         let mut counts = BTreeMap::new();
         for r in Region::ALL {
-            counts.insert((ModelKind::Llama2_70B, r), 2usize);
+            counts.insert((ModelKind::Llama2_70B, r), vec![2usize]);
         }
-        let plan = run_epoch(&telemetry, &mut forecaster, &perf, &params, &counts, 0.0);
+        let plan = run_epoch(
+            &telemetry, &mut forecaster, &perf, &[GpuKind::H100x8], &params, &counts, 0.0,
+        );
         assert_eq!(plan.len(), 3);
         // θ ≈ 3.1k ⇒ East local floor ceil(0.6·20000/θ) = 4 (delta ≥ 2
         // over the current 2), global cover ≈ 7 instances.
-        let east = plan.iter().find(|p| p.1 == Region::EastUs).unwrap();
-        assert!(east.2 >= 2, "east delta {}", east.2);
-        let total: i64 = plan.iter().map(|p| p.2 + 2).sum();
+        let east = plan.iter().find(|p| p.region == Region::EastUs).unwrap();
+        assert!(east.delta_total() >= 2, "east delta {}", east.delta_total());
+        let total: i64 = plan.iter().map(|p| p.delta_total() + 2).sum();
         assert!(total >= 7, "total {total}");
         let _ = key;
     }
@@ -278,11 +330,46 @@ mod tests {
         let mut forecaster = SeasonalNaive::new(96, 4);
         let mut counts = BTreeMap::new();
         for r in Region::ALL {
-            counts.insert((ModelKind::Llama32_3B, r), 20usize);
+            counts.insert((ModelKind::Llama32_3B, r), vec![20usize]);
         }
-        let plan = run_epoch(&telemetry, &mut forecaster, &perf, &params, &counts, 0.0);
-        for &(_, _, delta, _) in &plan {
-            assert_eq!(delta, -18, "idle endpoints drop to min_instances");
+        let plan = run_epoch(
+            &telemetry, &mut forecaster, &perf, &[GpuKind::H100x8], &params, &counts, 0.0,
+        );
+        for entry in &plan {
+            assert_eq!(entry.delta_total(), -18, "idle endpoints drop to min_instances");
         }
+    }
+
+    /// The controller-layer mirror of `capacity.rs::prefers_cheaper_gpu`:
+    /// with a 2-SKU fleet, a demand surge lands on the SKU with the
+    /// better $-per-θ ratio (A100: α is 1.814× cheaper, θ exactly 1.8×
+    /// slower), and the expensive incumbents are released.
+    #[test]
+    fn epoch_prefers_cheaper_sku() {
+        let models = [ModelKind::Llama2_70B];
+        let mut telemetry = Telemetry::new(&models, 900.0);
+        let mut warm = BTreeMap::new();
+        for r in Region::ALL {
+            let tps = if r == Region::EastUs { 20_000.0 } else { 50.0 };
+            warm.insert((ModelKind::Llama2_70B, r), vec![tps; 192]);
+        }
+        telemetry.warmup(&warm);
+        let gpus = [GpuKind::H100x8, GpuKind::A100x8];
+        let perf = PerfTable::for_fleet(&gpus, &models);
+        let params = ScalingParams::default();
+        let mut forecaster = SeasonalNaive::new(96, 4);
+        let mut counts = BTreeMap::new();
+        for r in Region::ALL {
+            // Incumbents are all H100.
+            counts.insert((ModelKind::Llama2_70B, r), vec![2usize, 0usize]);
+        }
+        let plan = run_epoch(&telemetry, &mut forecaster, &perf, &gpus, &params, &counts, 0.0);
+        assert_eq!(plan.len(), 3);
+        let east = plan.iter().find(|p| p.region == Region::EastUs).unwrap();
+        assert_eq!(east.deltas.len(), 2);
+        // Growth goes to the cheaper-per-throughput A100 column; the
+        // H100 incumbents are not grown.
+        assert!(east.deltas[1] >= 4, "A100 delta {}", east.deltas[1]);
+        assert!(east.deltas[0] <= 0, "H100 delta {}", east.deltas[0]);
     }
 }

@@ -1,0 +1,94 @@
+//! `exp hetero` — the heterogeneous-fleet sweep over §5's GPU axis `k`:
+//! H100-only vs A100-only vs a 50/50 mixed fleet on the week-long
+//! Jul-2025 trace, all under LT-UA, through the shared parallel sweep
+//! runner (the three runs replay one pre-materialized trace).
+//!
+//! The capacity ILP prices SKUs by α_k and plans per-SKU throughput
+//! θ_{i,k}; execution is cheapest-SKU-first on scale-out and
+//! most-expensive-first on scale-in, so a mixed fleet should converge to
+//! the cheaper-per-throughput SKU and cost no more than the cheaper
+//! homogeneous fleet at equal SLA attainment.  Reported per fleet:
+//! per-SKU GPU-hours, total dollar cost, IW p95 TTFT and SLA attainment.
+
+use anyhow::Result;
+
+use crate::config::{Epoch, FleetSpec, GpuKind};
+use crate::experiments::sweep::run_configs;
+use crate::experiments::{print_table, ExpOptions};
+use crate::metrics::LatencySummary;
+use crate::sim::engine::{SimConfig, Strategy};
+use crate::trace::generator::TraceConfig;
+
+/// The fleets the sweep compares (also used by the integration tests).
+pub fn fleet_specs() -> Vec<(&'static str, FleetSpec)> {
+    vec![
+        ("h100-only", FleetSpec::homogeneous(GpuKind::H100x8)),
+        ("a100-only", FleetSpec::homogeneous(GpuKind::A100x8)),
+        (
+            "mixed-50-50",
+            FleetSpec::mixed(&[(GpuKind::H100x8, 0.5), (GpuKind::A100x8, 0.5)]),
+        ),
+    ]
+}
+
+pub fn hetero(opts: &ExpOptions) -> Result<()> {
+    let fleets = fleet_specs();
+    let cfgs: Vec<SimConfig> = fleets
+        .iter()
+        .map(|(_, fleet)| SimConfig {
+            trace: TraceConfig {
+                epoch: Epoch::Jul2025,
+                days: 7.0,
+                scale: opts.scale,
+                seed: opts.seed,
+                start_weekday: 0,
+                ..Default::default()
+            },
+            strategy: Strategy::LtUa,
+            fleet: fleet.clone(),
+            pjrt_forecaster: opts.pjrt,
+            artifacts_dir: opts.artifacts_dir.clone(),
+            ..Default::default()
+        })
+        .collect();
+    println!("  running {} fleet configurations over the week trace in parallel ...", cfgs.len());
+    let results = run_configs(cfgs);
+
+    let mut rows = Vec::new();
+    let mut table = Vec::new();
+    for ((label, _), r) in fleets.iter().zip(&results) {
+        let end = r.end_time;
+        let by_sku = r.metrics.gpu_hours_by_sku(end);
+        let h100_h = by_sku.get(&GpuKind::H100x8).copied().unwrap_or(0.0);
+        let a100_h = by_sku.get(&GpuKind::A100x8).copied().unwrap_or(0.0);
+        let cost = r.metrics.fleet_dollar_cost(end);
+        let iw = LatencySummary::from_outcomes(
+            r.metrics.outcomes.iter().filter(|o| o.tier.is_interactive()),
+        );
+        let attain = (1.0 - iw.sla_violation_rate) * 100.0;
+        rows.push(format!(
+            "{label},{h100_h:.2},{a100_h:.2},{cost:.0},{:.3},{attain:.2}",
+            iw.ttft_p95
+        ));
+        table.push(vec![
+            label.to_string(),
+            format!("{h100_h:.0}"),
+            format!("{a100_h:.0}"),
+            format!("${cost:.0}"),
+            format!("{:.2}", iw.ttft_p95),
+            format!("{attain:.2}%"),
+        ]);
+    }
+    opts.csv(
+        "hetero_fleet_cost.csv",
+        "fleet,h100_gpu_hours,a100_gpu_hours,dollar_cost,iw_ttft_p95,sla_attainment_pct",
+        &rows,
+    )?;
+    print_table(
+        "exp hetero — fleet cost/SLA trade-off, week trace, LT-UA \
+         (expected: mixed costs no more than the cheaper homogeneous fleet at equal SLA)",
+        &["fleet", "H100-h", "A100-h", "cost", "IW p95 TTFT (s)", "SLA attain"],
+        &table,
+    );
+    Ok(())
+}

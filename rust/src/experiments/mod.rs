@@ -10,6 +10,7 @@
 pub mod burst;
 pub mod characterization;
 pub mod fidelity;
+pub mod hetero;
 pub mod ilp_runtime;
 pub mod scalability;
 pub mod scheduling;
@@ -65,7 +66,7 @@ impl ExpOptions {
 /// Known experiment ids, in run order for `exp all`.
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1", "fig3", "fig4", "fig5", "fig6", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
-    "fig14", "fig15", "fig16a", "fig16b", "nov24", "ablations", "ilp",
+    "fig14", "fig15", "fig16a", "fig16b", "nov24", "ablations", "ilp", "hetero",
 ];
 
 /// Dispatch one experiment id.
@@ -88,6 +89,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
         "nov24" => strategies::nov24_validation(opts),
         "ablations" => strategies::ablations(opts),
         "ilp" => ilp_runtime::solver_table(opts),
+        "hetero" => hetero::hetero(opts),
         "forecast-accuracy" => ilp_runtime::forecast_accuracy(opts),
         "all" => {
             // fig11/12/13 share one run; dedup here.

@@ -12,7 +12,7 @@
 
 use anyhow::Result;
 
-use crate::config::{Epoch, GpuKind, ModelKind, Region, Tier, HOUR};
+use crate::config::{Epoch, FleetSpec, GpuKind, ModelKind, Region, Tier, HOUR};
 use crate::experiments::sweep::{run_configs, RunResult};
 use crate::experiments::{print_table, ExpOptions};
 use crate::sim::engine::{SimConfig, Strategy};
@@ -53,7 +53,7 @@ pub fn fig8_table1(opts: &ExpOptions) -> Result<()> {
         .map(|&strategy| {
             let mut cfg = base_cfg(opts, Epoch::Nov2024, 1.0, strategy);
             cfg.trace.start_weekday = 1; // Tuesday
-            cfg.gpu = GpuKind::A100x8;
+            cfg.fleet = FleetSpec::homogeneous(GpuKind::A100x8);
             cfg
         })
         .collect();
@@ -315,7 +315,9 @@ pub fn ablations(opts: &ExpOptions) -> Result<()> {
     type Mutator = Box<dyn Fn(&mut SimConfig)>;
     let settings: Vec<(&str, Mutator)> = vec![
         ("h100-baseline", Box::new(|_: &mut SimConfig| {})),
-        ("a100", Box::new(|cfg: &mut SimConfig| cfg.gpu = GpuKind::A100x8)),
+        ("a100", Box::new(|cfg: &mut SimConfig| {
+            cfg.fleet = FleetSpec::homogeneous(GpuKind::A100x8)
+        })),
         ("iw-niw-9to1", Box::new(|cfg: &mut SimConfig| cfg.trace.iw_niw_ratio = Some(9.0))),
         ("iw-niw-1to1", Box::new(|cfg: &mut SimConfig| cfg.trace.iw_niw_ratio = Some(1.0))),
     ];

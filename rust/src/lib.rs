@@ -33,4 +33,4 @@ pub mod sim;
 pub mod trace;
 pub mod util;
 
-pub use config::{GpuKind, ModelKind, Region, Tier};
+pub use config::{FleetSpec, GpuKind, ModelKind, Region, Tier};

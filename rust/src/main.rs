@@ -123,6 +123,11 @@ fn dispatch(args: &[String]) -> Result<()> {
             if let Some(p) = f("policy") {
                 cfg.sched_policy = parse_policy(&p)?;
             }
+            if let Some(v) = f("fleet") {
+                cfg.fleet = sageserve::config::FleetSpec::parse(&v).with_context(|| {
+                    format!("unknown fleet '{v}' (h100|a100|mixed or h100:0.5,a100:0.5)")
+                })?;
+            }
             if let Some(a) = f("artifacts") {
                 cfg.artifacts_dir = a;
             }
@@ -130,10 +135,16 @@ fn dispatch(args: &[String]) -> Result<()> {
                 cfg.replay_trace = Some(t.into());
             }
             println!(
-                "simulating {} day(s) at scale {} with strategy {} ...",
+                "simulating {} day(s) at scale {} with strategy {} on fleet [{}] ...",
                 cfg.trace.days,
                 cfg.trace.scale,
-                strategy.name()
+                strategy.name(),
+                cfg.fleet
+                    .gpus()
+                    .iter()
+                    .map(|g| g.to_string())
+                    .collect::<Vec<_>>()
+                    .join(", ")
             );
             let sim = run_simulation(cfg);
             report_simulation(&sim);
@@ -235,6 +246,17 @@ fn report_simulation(sim: &sageserve::sim::engine::Simulation) {
         sim.metrics.scaling_waste.total_events(),
         sim.metrics.spot_hours(end),
     );
+    // Per-SKU GPU-hours and dollar cost (the heterogeneous-fleet view).
+    let by_sku = sim.metrics.gpu_hours_by_sku(end);
+    if !by_sku.is_empty() {
+        let parts: Vec<String> =
+            by_sku.iter().map(|(g, h)| format!("{g} {h:.1} GPU-h")).collect();
+        println!(
+            "  fleet: {}; total cost ${:.0}",
+            parts.join(", "),
+            sim.metrics.fleet_dollar_cost(end)
+        );
+    }
 }
 
 fn print_help() {
@@ -246,7 +268,9 @@ USAGE:
       regenerate paper figures/tables ({} ids; see DESIGN.md §5)
   sageserve simulate [--strategy siloed|reactive|lt-i|lt-u|lt-ua|chiron]
       [--days F] [--scale F] [--epoch jul2025|nov2024] [--policy fcfs|edf|pf|dpa]
-      [--pjrt] [--replay trace.csv]
+      [--fleet h100|a100|mixed|h100:W,a100:W] [--pjrt] [--replay trace.csv]
+      (--fleet picks the GPU fleet; mixed fleets report per-SKU GPU-hours
+       and dollar cost — see also `exp hetero`)
   sageserve serve [--requests N] [--max-new N] [--artifacts DIR]
       real batched inference on the AOT transformer via PJRT
   sageserve trace --out FILE [--days F] [--scale F] [--epoch E] [--seed N]

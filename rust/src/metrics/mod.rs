@@ -3,7 +3,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::config::{ModelKind, Region, Tier, Time, HOUR};
+use crate::config::{GpuKind, ModelKind, Region, Tier, Time, HOUR};
 use crate::trace::types::Request;
 
 /// Per-request outcome recorded at completion.
@@ -178,6 +178,10 @@ pub struct Metrics {
     pub outcomes: Vec<RequestOutcome>,
     /// (model, region) → active-instance ledger.
     pub instances: BTreeMap<(ModelKind, Region), InstanceHourLedger>,
+    /// (model, region, GPU SKU) → allocated-instance ledger: the per-SKU
+    /// GPU-hour and dollar-cost attribution for heterogeneous fleets
+    /// (recorded at the same change points as `instances`).
+    pub instances_by_gpu: BTreeMap<(ModelKind, Region, GpuKind), InstanceHourLedger>,
     /// (model, region) → spot-donated-instance ledger.
     pub spot_instances: BTreeMap<(ModelKind, Region), InstanceHourLedger>,
     pub scaling_waste: ScalingWasteLedger,
@@ -315,6 +319,24 @@ impl Metrics {
     /// Total spot-donated instance-hours.
     pub fn spot_hours(&self, end: Time) -> f64 {
         self.spot_instances.values().map(|l| l.instance_hours(end)).sum()
+    }
+
+    /// GPU-hours (instance-hours) per SKU across all models and regions.
+    pub fn gpu_hours_by_sku(&self, end: Time) -> BTreeMap<GpuKind, f64> {
+        let mut out = BTreeMap::new();
+        for ((_, _, gpu), ledger) in &self.instances_by_gpu {
+            *out.entry(*gpu).or_insert(0.0) += ledger.instance_hours(end);
+        }
+        out
+    }
+
+    /// Total fleet dollar cost: per-SKU GPU-hours × the SKU's on-demand
+    /// $/h (α_k) — the §7.2.1 cost metric generalized to mixed fleets.
+    pub fn fleet_dollar_cost(&self, end: Time) -> f64 {
+        self.gpu_hours_by_sku(end)
+            .iter()
+            .map(|(gpu, hours)| gpu.dollars_per_hour() * hours)
+            .sum()
     }
 
     /// Mean effective memory utilization for a model across samples.
@@ -465,6 +487,25 @@ mod tests {
             assert_eq!(s.e2e_p95, window.e2e_p95, "bin {i}");
             assert_eq!(s.sla_violation_rate, window.sla_violation_rate, "bin {i}");
         }
+    }
+
+    #[test]
+    fn per_sku_hours_and_dollar_cost() {
+        let mut m = Metrics::default();
+        m.instances_by_gpu
+            .entry((ModelKind::Llama2_70B, Region::EastUs, GpuKind::H100x8))
+            .or_default()
+            .record(0.0, 2);
+        m.instances_by_gpu
+            .entry((ModelKind::Llama2_70B, Region::EastUs, GpuKind::A100x8))
+            .or_default()
+            .record(0.0, 4);
+        let by_sku = m.gpu_hours_by_sku(HOUR);
+        assert!((by_sku[&GpuKind::H100x8] - 2.0).abs() < 1e-9);
+        assert!((by_sku[&GpuKind::A100x8] - 4.0).abs() < 1e-9);
+        let cost = m.fleet_dollar_cost(HOUR);
+        let want = 2.0 * GpuKind::H100x8.dollars_per_hour() + 4.0 * GpuKind::A100x8.dollars_per_hour();
+        assert!((cost - want).abs() < 1e-9);
     }
 
     #[test]

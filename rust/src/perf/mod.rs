@@ -164,29 +164,71 @@ impl PerfProfile {
     }
 }
 
-/// Profile table for a simulation run (one GPU SKU per run — the paper
-/// assumes homogeneous hardware per experiment, §7.1).
+/// Profile table for a simulation run: one [`PerfProfile`] per
+/// (model, GPU SKU) pair in the fleet.  The §5 formulation is per-SKU
+/// (θ_{i,k}, α_k), so the table carries every SKU the cluster may
+/// provision; single-SKU runs are the degenerate one-column case.
 #[derive(Debug, Clone)]
 pub struct PerfTable {
-    pub gpu: GpuKind,
+    gpus: Vec<GpuKind>,
+    models: Vec<ModelKind>,
     profiles: Vec<PerfProfile>,
+    /// `lookup[model.index()][gpu.index()]` → slot in `profiles` (O(1)
+    /// hot-path lookup, mirroring `EndpointMap`).
+    lookup: [[Option<u8>; GpuKind::COUNT]; 6],
 }
 
 impl PerfTable {
+    /// Single-SKU table (the pre-heterogeneity construction).
     pub fn new(gpu: GpuKind, models: &[ModelKind]) -> Self {
-        let profiles = models.iter().map(|&m| PerfProfile::get(m, gpu)).collect();
-        PerfTable { gpu, profiles }
+        Self::for_fleet(&[gpu], models)
     }
 
-    pub fn profile(&self, model: ModelKind) -> &PerfProfile {
-        self.profiles
-            .iter()
-            .find(|p| p.model == model)
-            .unwrap_or_else(|| panic!("no profile for {model}"))
+    /// Table covering every (model, SKU) pair of a fleet.
+    pub fn for_fleet(gpus: &[GpuKind], models: &[ModelKind]) -> Self {
+        assert!(!gpus.is_empty(), "fleet needs at least one GPU SKU");
+        let mut t = PerfTable {
+            gpus: Vec::with_capacity(gpus.len()),
+            models: models.to_vec(),
+            profiles: Vec::with_capacity(models.len() * gpus.len()),
+            lookup: [[None; GpuKind::COUNT]; 6],
+        };
+        for &g in gpus {
+            if !t.gpus.contains(&g) {
+                t.gpus.push(g);
+            }
+        }
+        for &m in models {
+            for gi in 0..t.gpus.len() {
+                let g = t.gpus[gi];
+                debug_assert!(t.profiles.len() < u8::MAX as usize);
+                t.lookup[m.index()][g.index()] = Some(t.profiles.len() as u8);
+                t.profiles.push(PerfProfile::get(m, g));
+            }
+        }
+        t
+    }
+
+    pub fn profile(&self, model: ModelKind, gpu: GpuKind) -> &PerfProfile {
+        match self.lookup[model.index()][gpu.index()] {
+            Some(s) => &self.profiles[s as usize],
+            None => panic!("no profile for {model} on {gpu}"),
+        }
+    }
+
+    /// The fleet's SKUs, fleet order (the dense axis the controller's
+    /// per-SKU vectors align with).
+    pub fn gpus(&self) -> &[GpuKind] {
+        &self.gpus
+    }
+
+    /// The first SKU — what single-SKU call sites mean by "the GPU".
+    pub fn primary_gpu(&self) -> GpuKind {
+        self.gpus[0]
     }
 
     pub fn models(&self) -> impl Iterator<Item = ModelKind> + '_ {
-        self.profiles.iter().map(|p| p.model)
+        self.models.iter().copied()
     }
 }
 
@@ -267,7 +309,34 @@ mod tests {
     #[test]
     fn table_lookup() {
         let t = PerfTable::new(GpuKind::H100x8, &ModelKind::EVAL4);
-        assert_eq!(t.profile(ModelKind::Bloom176B).model, ModelKind::Bloom176B);
+        let p = t.profile(ModelKind::Bloom176B, GpuKind::H100x8);
+        assert_eq!(p.model, ModelKind::Bloom176B);
+        assert_eq!(p.gpu, GpuKind::H100x8);
         assert_eq!(t.models().count(), 4);
+        assert_eq!(t.gpus(), &[GpuKind::H100x8]);
+        assert_eq!(t.primary_gpu(), GpuKind::H100x8);
+    }
+
+    #[test]
+    fn fleet_table_covers_every_pair() {
+        let t = PerfTable::for_fleet(&[GpuKind::H100x8, GpuKind::A100x8], &ModelKind::EVAL4);
+        assert_eq!(t.gpus(), &[GpuKind::H100x8, GpuKind::A100x8]);
+        for m in ModelKind::EVAL4 {
+            for g in GpuKind::ALL {
+                let p = t.profile(m, g);
+                assert_eq!((p.model, p.gpu), (m, g));
+            }
+        }
+        // Per-SKU profiles differ (A100 derated) — the ILP's θ_{i,k}.
+        let h = t.profile(ModelKind::Llama2_70B, GpuKind::H100x8);
+        let a = t.profile(ModelKind::Llama2_70B, GpuKind::A100x8);
+        assert!(h.input_tps_capacity() > a.input_tps_capacity());
+    }
+
+    #[test]
+    #[should_panic(expected = "no profile")]
+    fn missing_pair_panics() {
+        let t = PerfTable::new(GpuKind::H100x8, &ModelKind::EVAL4);
+        let _ = t.profile(ModelKind::Llama2_70B, GpuKind::A100x8);
     }
 }

@@ -26,7 +26,7 @@
 //! [`Cluster::aggregates_consistent`] recounts everything from scratch
 //! for tests.
 
-use crate::config::{ModelKind, Region, ScalingParams, Time};
+use crate::config::{FleetSpec, GpuKind, ModelKind, Region, ScalingParams, Time};
 use crate::coordinator::scheduler::SchedPolicy;
 use crate::metrics::Metrics;
 use crate::perf::PerfTable;
@@ -93,6 +93,9 @@ pub struct PoolAgg {
     pub waiting_tokens: u64,
     pub pending_tokens: u64,
     pub count: usize,
+    /// Active-instance counts split by GPU SKU (Σ == `count`) — the O(1)
+    /// per-SKU signal the heterogeneity-aware scaling paths read.
+    pub count_by_gpu: [usize; GpuKind::COUNT],
 }
 
 /// Per-(model, region) endpoint bookkeeping.
@@ -111,8 +114,15 @@ pub struct Endpoint {
     pub target: Option<usize>,
     /// Forecast max TPS for the current hour (LT-UA gap checks).
     pub forecast_tps: f64,
+    /// LT-U / LT-UA per-SKU targets from the last control epoch, indexed
+    /// by `GpuKind::index` (only fleet SKUs are `Some`).
+    pub target_by_gpu: [Option<usize>; GpuKind::COUNT],
     /// Active-instance aggregates, one slot per [`PoolTag`].
     pub agg: [PoolAgg; 6],
+    /// Allocated (provisioning + active + draining) instance counts per
+    /// GPU SKU — the controller's per-SKU n_{j,k}, maintained by the
+    /// roster add/remove paths.  O(1) reads.
+    pub alloc_by_gpu: [usize; GpuKind::COUNT],
 }
 
 impl Endpoint {
@@ -125,6 +135,9 @@ impl Endpoint {
             t.waiting_tokens += a.waiting_tokens;
             t.pending_tokens += a.pending_tokens;
             t.count += a.count;
+            for k in 0..GpuKind::COUNT {
+                t.count_by_gpu[k] += a.count_by_gpu[k];
+            }
         }
         t
     }
@@ -217,6 +230,7 @@ struct InstSnapshot {
     model: ModelKind,
     region: Region,
     pool: PoolTag,
+    gpu: GpuKind,
     active: bool,
     busy: bool,
     kv_used: u64,
@@ -231,8 +245,17 @@ pub struct Cluster {
     pub endpoints: EndpointMap,
     /// Donated instances per region (still hosting their last model).
     pub spot_pool: BTreeMap<Region, Vec<InstanceId>>,
-    /// Remaining un-allocated VMs per region.
-    pub vm_budget: [usize; 3],
+    /// Remaining un-allocated VMs per `[region][gpu]` (fresh VMs are
+    /// provisioned on a specific SKU).
+    pub vm_budget: [[usize; GpuKind::COUNT]; 3],
+    /// The fleet's SKUs, fleet order — the per-SKU axis the controller's
+    /// `CapacityInputs` columns and `EpochPlan` deltas align with.
+    pub gpus: Vec<GpuKind>,
+    /// Fleet SKUs by ascending $/h (stable: cost ties keep fleet order),
+    /// computed once — the cheapest-first scale-out order.
+    pub gpus_cost_asc: Vec<GpuKind>,
+    /// `gpus_cost_asc` reversed — the most-expensive-first scale-in order.
+    pub gpus_cost_desc: Vec<GpuKind>,
     /// Models whose weights are present in each region's repository
     /// (missing ⇒ 2 h remote redeploy).
     pub local_weights: BTreeMap<Region, Vec<ModelKind>>,
@@ -244,7 +267,8 @@ pub struct Cluster {
 }
 
 impl Cluster {
-    /// Build a cluster with `initial_per_endpoint` active instances per
+    /// Build a homogeneous cluster (every instance on the perf table's
+    /// primary SKU) with `initial_per_endpoint` active instances per
     /// (model, region) pool tag, plus `vm_budget_per_region` spare VMs.
     pub fn new(
         models: &[ModelKind],
@@ -253,11 +277,43 @@ impl Cluster {
         pools: &[(PoolTag, usize)],
         vm_budget_per_region: usize,
     ) -> Self {
+        let fleet = FleetSpec::homogeneous(perf.primary_gpu());
+        Self::new_fleet(models, perf, params, pools, vm_budget_per_region, &fleet)
+    }
+
+    /// Build a cluster over an explicit GPU fleet: each pool's initial
+    /// count AND the per-region fresh-VM budget are split across SKUs by
+    /// the fleet weights, so a mixed fleet gets the same total resources
+    /// as a homogeneous one (fair cost comparisons).
+    pub fn new_fleet(
+        models: &[ModelKind],
+        perf: PerfTable,
+        params: ScalingParams,
+        pools: &[(PoolTag, usize)],
+        vm_budget_per_region: usize,
+        fleet: &FleetSpec,
+    ) -> Self {
+        let gpus = perf.gpus().to_vec();
+        let mut vm_budget = [[0usize; GpuKind::COUNT]; 3];
+        for (g, share) in fleet.split(vm_budget_per_region) {
+            debug_assert!(gpus.contains(&g), "fleet SKU missing from perf table");
+            for region in vm_budget.iter_mut() {
+                region[g.index()] = share;
+            }
+        }
+        let mut gpus_cost_asc = gpus.clone();
+        gpus_cost_asc
+            .sort_by(|a, b| a.dollars_per_hour().partial_cmp(&b.dollars_per_hour()).unwrap());
+        let mut gpus_cost_desc = gpus_cost_asc.clone();
+        gpus_cost_desc.reverse();
         let mut cluster = Cluster {
             instances: Vec::new(),
             endpoints: EndpointMap::default(),
             spot_pool: Region::ALL.iter().map(|&r| (r, Vec::new())).collect(),
-            vm_budget: [vm_budget_per_region; 3],
+            vm_budget,
+            gpus,
+            gpus_cost_asc,
+            gpus_cost_desc,
             local_weights: Region::ALL.iter().map(|&r| (r, models.to_vec())).collect(),
             perf,
             params,
@@ -267,8 +323,10 @@ impl Cluster {
             for region in Region::ALL {
                 cluster.endpoints.insert((model, region), Endpoint::default());
                 for &(pool, count) in pools {
-                    for _ in 0..count {
-                        cluster.spawn_instance(model, region, pool, InstState::Active);
+                    for (gpu, n) in fleet.split(count) {
+                        for _ in 0..n {
+                            cluster.spawn_instance(model, region, pool, gpu, InstState::Active);
+                        }
                     }
                 }
             }
@@ -281,12 +339,13 @@ impl Cluster {
         model: ModelKind,
         region: Region,
         pool: PoolTag,
+        gpu: GpuKind,
         state: InstState,
     ) -> InstanceId {
         let id = self.instances.len();
-        let kv_cap = self.perf.profile(model).serving_kv_budget();
+        let kv_cap = self.perf.profile(model, gpu).serving_kv_budget();
         self.instances
-            .push(InstanceSim::new(id, model, region, pool, state, kv_cap));
+            .push(InstanceSim::new(id, model, region, pool, gpu, state, kv_cap));
         self.roster_add(model, region, pool, id);
         // A freshly spawned instance had no prior contribution: apply its
         // delta against an empty "ghost" snapshot.
@@ -294,6 +353,7 @@ impl Cluster {
             model,
             region,
             pool,
+            gpu,
             active: false,
             busy: false,
             kv_used: 0,
@@ -306,9 +366,11 @@ impl Cluster {
     }
 
     fn roster_add(&mut self, model: ModelKind, region: Region, pool: PoolTag, id: InstanceId) {
+        let gpu = self.instances[id].gpu;
         let ep = self.endpoints.get_mut(&(model, region)).unwrap();
         if !ep.instances.contains(&id) {
             ep.instances.push(id);
+            ep.alloc_by_gpu[gpu.index()] += 1;
             if pool.serves_iw() {
                 ep.iw_instances.push(id);
             }
@@ -319,8 +381,12 @@ impl Cluster {
     }
 
     fn roster_remove(&mut self, model: ModelKind, region: Region, id: InstanceId) {
+        let gpu = self.instances[id].gpu;
         if let Some(ep) = self.endpoints.get_mut(&(model, region)) {
-            ep.instances.retain(|&x| x != id);
+            if let Some(pos) = ep.instances.iter().position(|&x| x == id) {
+                ep.instances.remove(pos);
+                ep.alloc_by_gpu[gpu.index()] -= 1;
+            }
             ep.iw_instances.retain(|&x| x != id);
             ep.niw_instances.retain(|&x| x != id);
         }
@@ -332,6 +398,7 @@ impl Cluster {
             model: i.model,
             region: i.region,
             pool: i.pool,
+            gpu: i.gpu,
             active: i.state == InstState::Active,
             busy: !i.batch.is_empty() || !i.waiting.is_empty(),
             kv_used: i.kv_used,
@@ -363,6 +430,7 @@ impl Cluster {
             a.waiting_tokens -= before.waiting_tokens;
             a.pending_tokens -= before.pending_tokens;
             a.count -= 1;
+            a.count_by_gpu[before.gpu.index()] -= 1;
         }
         if after.active {
             let ep = self
@@ -375,6 +443,7 @@ impl Cluster {
             a.waiting_tokens += after.waiting_tokens;
             a.pending_tokens += after.pending_tokens;
             a.count += 1;
+            a.count_by_gpu[after.gpu.index()] += 1;
         }
     }
 
@@ -416,7 +485,7 @@ impl Cluster {
             // Scheduler policy orders the waiting queue (§6.5).
             // Head-only ordering keeps overload queues O(n) to manage.
             policy.order_head(&mut inst.waiting, now, 128);
-            let profile = perf.profile(inst.model);
+            let profile = perf.profile(inst.model, inst.gpu);
             // Per-chunk prefill budget ≈ 0.5 s of prompt throughput:
             // bounds the TTFT impact of bulk admissions (NIW chunking,
             // §6.2).
@@ -450,6 +519,15 @@ impl Cluster {
     /// the instance-hour ledgers integrate.
     pub fn allocated_count(&self, model: ModelKind, region: Region) -> usize {
         self.endpoints.get(&(model, region)).map(|e| e.instances.len()).unwrap_or(0)
+    }
+
+    /// Allocated instance counts split by GPU SKU (the controller's
+    /// per-SKU n_{j,k}) — O(1) from the roster-maintained array.
+    pub fn allocated_by_gpu(&self, model: ModelKind, region: Region) -> [usize; GpuKind::COUNT] {
+        self.endpoints
+            .get(&(model, region))
+            .map(|e| e.alloc_by_gpu)
+            .unwrap_or([0; GpuKind::COUNT])
     }
 
     /// Effective memory utilization across active instances (§6.1) —
@@ -502,32 +580,39 @@ impl Cluster {
         self.busy_instances == 0
     }
 
-    /// Scale out one instance, choosing the fastest source (§6.4).
+    /// Scale out one instance of the requested GPU SKU, choosing the
+    /// fastest source (§6.4) — spot reclaim and redeploy stay within the
+    /// SKU, since a VM's silicon is fixed even when weights are not.
     /// Returns `(instance id, ready time)`; records provisioning waste.
     pub fn scale_out(
         &mut self,
         model: ModelKind,
         region: Region,
         pool: PoolTag,
+        gpu: GpuKind,
         now: Time,
         metrics: &mut Metrics,
     ) -> Option<(InstanceId, Time)> {
         if self.allocated_count(model, region) >= self.params.max_instances {
             return None;
         }
-        // 1. same-model spot instance in this region.
-        let spot = self.spot_pool.get_mut(&region).unwrap();
-        if let Some(pos) = spot.iter().position(|&i| self.instances[i].model == model) {
-            let id = spot.remove(pos);
+        // 1. same-model spot instance (matching SKU) in this region.
+        if let Some(pos) = {
+            let spot = &self.spot_pool[&region];
+            spot.iter()
+                .position(|&i| self.instances[i].model == model && self.instances[i].gpu == gpu)
+        } {
+            let id = self.spot_pool.get_mut(&region).unwrap().remove(pos);
             let ready = now + self.params.spot_reclaim_secs;
             metrics.scaling_waste.record("spot-same-model", self.params.spot_reclaim_secs);
             self.reassign(id, model, region, pool, ready);
             return Some((id, ready));
         }
-        // 2. cross-model spot instance (weights redeploy).
+        // 2. cross-model spot instance of the SKU (weights redeploy).
         if let Some(pos) = {
             let spot = &self.spot_pool[&region];
-            spot.iter().position(|&i| self.instances[i].model != model)
+            spot.iter()
+                .position(|&i| self.instances[i].model != model && self.instances[i].gpu == gpu)
         } {
             let id = self.spot_pool.get_mut(&region).unwrap().remove(pos);
             let old_model = self.instances[id].model;
@@ -540,9 +625,9 @@ impl Cluster {
             self.reassign(id, model, region, pool, ready);
             return Some((id, ready));
         }
-        // 3. fresh VM from the regional budget.
-        if self.vm_budget[region.index()] > 0 {
-            self.vm_budget[region.index()] -= 1;
+        // 3. fresh VM of the SKU from the regional budget.
+        if self.vm_budget[region.index()][gpu.index()] > 0 {
+            self.vm_budget[region.index()][gpu.index()] -= 1;
             let local = self.local_weights[&region].contains(&model);
             let delay = if local {
                 self.params.local_redeploy_secs
@@ -553,7 +638,7 @@ impl Cluster {
                 if local { "vm-local-deploy" } else { "vm-remote-deploy" },
                 delay,
             );
-            let id = self.spawn_instance(model, region, pool, InstState::Provisioning {
+            let id = self.spawn_instance(model, region, pool, gpu, InstState::Provisioning {
                 until: now + delay,
             });
             return Some((id, now + delay));
@@ -562,7 +647,7 @@ impl Cluster {
     }
 
     fn reassign(&mut self, id: InstanceId, model: ModelKind, region: Region, pool: PoolTag, ready: Time) {
-        let kv_cap = self.perf.profile(model).serving_kv_budget();
+        let kv_cap = self.perf.profile(model, self.instances[id].gpu).serving_kv_budget();
         // The instance comes from the spot pool (inactive, empty), so the
         // aggregate delta is a no-op — but route it through `mutate` so
         // the invariant holds by construction.
@@ -577,14 +662,17 @@ impl Cluster {
         self.roster_add(model, region, pool, id);
     }
 
-    /// Scale in: drain the least-loaded active instance in a pool.  The
-    /// instance converts to spot once its batch empties (engine calls
-    /// [`Cluster::finish_drain`]).  Returns the drained instance id.
+    /// Scale in: drain the least-loaded active instance in a pool,
+    /// optionally restricted to one GPU SKU (the heterogeneity-aware
+    /// paths drain most-expensive-first).  The instance converts to spot
+    /// once its batch empties (engine calls [`Cluster::finish_drain`]).
+    /// Returns the drained instance id.
     pub fn scale_in(
         &mut self,
         model: ModelKind,
         region: Region,
         pool_filter: Option<PoolTag>,
+        gpu_filter: Option<GpuKind>,
     ) -> Option<InstanceId> {
         let ep = self.endpoints.get(&(model, region))?;
         // Keep the robustness floor (min_instances) per endpoint, and at
@@ -611,6 +699,9 @@ impl Cluster {
                 continue;
             }
             if pool_filter.map_or(false, |p| inst.pool != p) {
+                continue;
+            }
+            if gpu_filter.map_or(false, |g| inst.gpu != g) {
                 continue;
             }
             let key = inst.pending_tokens();
@@ -653,12 +744,14 @@ impl Cluster {
         let mut ok = true;
         for (_, ep) in self.endpoints.iter() {
             let mut agg = [PoolAgg::default(); 6];
+            let mut alloc_by_gpu = [0usize; GpuKind::COUNT];
             for &i in &ep.instances {
                 let inst = &self.instances[i];
                 let (waiting, running) = inst.recount_tokens();
                 // Cached per-instance counters match the raw queues.
                 ok &= waiting == inst.waiting_tokens();
                 ok &= waiting + running == inst.pending_tokens();
+                alloc_by_gpu[inst.gpu.index()] += 1;
                 if inst.state == InstState::Active {
                     let a = &mut agg[inst.pool.index()];
                     a.kv_used += inst.kv_used;
@@ -666,12 +759,14 @@ impl Cluster {
                     a.waiting_tokens += waiting;
                     a.pending_tokens += waiting + running;
                     a.count += 1;
+                    a.count_by_gpu[inst.gpu.index()] += 1;
                 }
                 // Roster caches agree with pool eligibility.
                 ok &= ep.iw_instances.contains(&i) == inst.pool.serves_iw();
                 ok &= ep.niw_instances.contains(&i) == inst.pool.serves_niw();
             }
             ok &= agg == ep.agg;
+            ok &= alloc_by_gpu == ep.alloc_by_gpu;
         }
         let busy = self
             .instances
@@ -723,11 +818,12 @@ mod tests {
     fn scale_in_then_out_uses_spot_fast_path() {
         let mut c = cluster();
         let mut metrics = Metrics::default();
-        let id = c.scale_in(ModelKind::Llama2_70B, Region::EastUs, None).unwrap();
+        let id = c.scale_in(ModelKind::Llama2_70B, Region::EastUs, None, None).unwrap();
         c.finish_drain(id);
         assert_eq!(c.spot_count(Region::EastUs), 1);
         let (id2, ready) = c
-            .scale_out(ModelKind::Llama2_70B, Region::EastUs, PoolTag::Unified, 100.0, &mut metrics)
+            .scale_out(ModelKind::Llama2_70B, Region::EastUs, PoolTag::Unified,
+                       GpuKind::A100x8, 100.0, &mut metrics)
             .unwrap();
         assert_eq!(id, id2);
         assert!((ready - 160.0).abs() < 1e-9); // 1 min spot reclaim
@@ -739,10 +835,11 @@ mod tests {
     fn cross_model_spot_costs_redeploy() {
         let mut c = cluster();
         let mut metrics = Metrics::default();
-        let id = c.scale_in(ModelKind::Bloom176B, Region::WestUs, None).unwrap();
+        let id = c.scale_in(ModelKind::Bloom176B, Region::WestUs, None, None).unwrap();
         c.finish_drain(id);
         let (id2, ready) = c
-            .scale_out(ModelKind::Llama2_70B, Region::WestUs, PoolTag::Unified, 0.0, &mut metrics)
+            .scale_out(ModelKind::Llama2_70B, Region::WestUs, PoolTag::Unified,
+                       GpuKind::A100x8, 0.0, &mut metrics)
             .unwrap();
         assert_eq!(id, id2);
         assert!((ready - 600.0).abs() < 1e-9); // 10 min redeploy
@@ -750,7 +847,7 @@ mod tests {
         // KV capacity switched to the new model's profile.
         assert_eq!(
             c.instances[id2].kv_capacity,
-            c.perf.profile(ModelKind::Llama2_70B).serving_kv_budget()
+            c.perf.profile(ModelKind::Llama2_70B, GpuKind::A100x8).serving_kv_budget()
         );
         assert!(c.aggregates_consistent());
     }
@@ -759,11 +856,12 @@ mod tests {
     fn fresh_vm_consumes_budget() {
         let mut c = cluster();
         let mut metrics = Metrics::default();
-        let before = c.vm_budget[Region::EastUs.index()];
+        let gpu = GpuKind::A100x8;
+        let before = c.vm_budget[Region::EastUs.index()][gpu.index()];
         let (_id, ready) = c
-            .scale_out(ModelKind::Llama31_8B, Region::EastUs, PoolTag::Unified, 0.0, &mut metrics)
+            .scale_out(ModelKind::Llama31_8B, Region::EastUs, PoolTag::Unified, gpu, 0.0, &mut metrics)
             .unwrap();
-        assert_eq!(c.vm_budget[Region::EastUs.index()], before - 1);
+        assert_eq!(c.vm_budget[Region::EastUs.index()][gpu.index()], before - 1);
         assert!((ready - 600.0).abs() < 1e-9);
     }
 
@@ -773,7 +871,8 @@ mod tests {
         c.local_weights.get_mut(&Region::WestUs).unwrap().retain(|&m| m != ModelKind::Bloom176B);
         let mut metrics = Metrics::default();
         let (_, ready) = c
-            .scale_out(ModelKind::Bloom176B, Region::WestUs, PoolTag::Unified, 0.0, &mut metrics)
+            .scale_out(ModelKind::Bloom176B, Region::WestUs, PoolTag::Unified,
+                       GpuKind::A100x8, 0.0, &mut metrics)
             .unwrap();
         assert!((ready - 7200.0).abs() < 1e-9);
     }
@@ -782,8 +881,8 @@ mod tests {
     fn min_instances_floor_respected() {
         let mut c = cluster();
         // 3 active; min is 2 ⇒ only one scale-in allowed.
-        assert!(c.scale_in(ModelKind::Llama2_70B, Region::EastUs, None).is_some());
-        assert!(c.scale_in(ModelKind::Llama2_70B, Region::EastUs, None).is_none());
+        assert!(c.scale_in(ModelKind::Llama2_70B, Region::EastUs, None, None).is_some());
+        assert!(c.scale_in(ModelKind::Llama2_70B, Region::EastUs, None, None).is_none());
     }
 
     #[test]
@@ -792,7 +891,8 @@ mod tests {
         let mut metrics = Metrics::default();
         let mut added = 0;
         while c
-            .scale_out(ModelKind::Llama32_3B, Region::CentralUs, PoolTag::Unified, 0.0, &mut metrics)
+            .scale_out(ModelKind::Llama32_3B, Region::CentralUs, PoolTag::Unified,
+                       GpuKind::A100x8, 0.0, &mut metrics)
             .is_some()
         {
             added += 1;
@@ -813,6 +913,64 @@ mod tests {
             c.mutate(id, |inst| inst.state = InstState::Draining);
         }
         assert_eq!(c.effective_util(ModelKind::Bloom176B, Region::WestUs), 1.0);
+        assert!(c.aggregates_consistent());
+    }
+
+    fn mixed_cluster() -> Cluster {
+        let fleet = FleetSpec::mixed(&[(GpuKind::H100x8, 0.5), (GpuKind::A100x8, 0.5)]);
+        Cluster::new_fleet(
+            &[ModelKind::Llama2_70B],
+            PerfTable::for_fleet(&[GpuKind::H100x8, GpuKind::A100x8], &[ModelKind::Llama2_70B]),
+            ScalingParams::default(),
+            &[(PoolTag::Unified, 4)],
+            5,
+            &fleet,
+        )
+    }
+
+    #[test]
+    fn mixed_fleet_initial_split_and_accounting() {
+        let c = mixed_cluster();
+        for r in Region::ALL {
+            let by_gpu = c.allocated_by_gpu(ModelKind::Llama2_70B, r);
+            assert_eq!(by_gpu[GpuKind::H100x8.index()], 2);
+            assert_eq!(by_gpu[GpuKind::A100x8.index()], 2);
+            // The per-region VM budget splits across SKUs by fleet
+            // weight (largest remainder: 5 → 3 + 2), keeping total
+            // resources equal to a homogeneous fleet's.
+            assert_eq!(c.vm_budget[r.index()], [3, 2]);
+        }
+        assert!(c.instances.iter().any(|i| i.gpu == GpuKind::H100x8));
+        assert!(c.instances.iter().any(|i| i.gpu == GpuKind::A100x8));
+        assert!(c.aggregates_consistent());
+    }
+
+    #[test]
+    fn scale_paths_are_sku_scoped() {
+        let mut c = mixed_cluster();
+        let mut metrics = Metrics::default();
+        let (m, r) = (ModelKind::Llama2_70B, Region::EastUs);
+        // Drain one H100 into the spot pool.
+        let id = c.scale_in(m, r, None, Some(GpuKind::H100x8)).unwrap();
+        assert_eq!(c.instances[id].gpu, GpuKind::H100x8);
+        c.finish_drain(id);
+        assert_eq!(c.spot_count(r), 1);
+        assert_eq!(c.allocated_by_gpu(m, r)[GpuKind::H100x8.index()], 1);
+        // Scaling out an A100 must NOT reclaim the H100 spot VM: it
+        // provisions a fresh A100 (10 min), leaving the spot pool alone.
+        let (a_id, ready) = c
+            .scale_out(m, r, PoolTag::Unified, GpuKind::A100x8, 0.0, &mut metrics)
+            .unwrap();
+        assert_eq!(c.instances[a_id].gpu, GpuKind::A100x8);
+        assert!((ready - 600.0).abs() < 1e-9);
+        assert_eq!(c.spot_count(r), 1);
+        // Scaling out an H100 reclaims the same-SKU spot VM in 1 min.
+        let (h_id, ready) = c
+            .scale_out(m, r, PoolTag::Unified, GpuKind::H100x8, 0.0, &mut metrics)
+            .unwrap();
+        assert_eq!(h_id, id);
+        assert!((ready - 60.0).abs() < 1e-9);
+        assert_eq!(c.spot_count(r), 0);
         assert!(c.aggregates_consistent());
     }
 

@@ -15,7 +15,7 @@
 use std::collections::BTreeMap;
 
 use crate::config::{
-    Epoch, GpuKind, ModelKind, Region, RoutingParams, ScalingParams, Tier, Time, HOUR, MINUTE,
+    Epoch, FleetSpec, ModelKind, Region, RoutingParams, ScalingParams, Tier, Time, HOUR, MINUTE,
 };
 pub use crate::coordinator::autoscaler::Strategy;
 use crate::coordinator::autoscaler::{Autoscaler, ScaleCtx};
@@ -35,7 +35,10 @@ use crate::trace::types::Request;
 /// Simulation parameters.
 pub struct SimConfig {
     pub trace: TraceConfig,
-    pub gpu: GpuKind,
+    /// GPU fleet: which SKUs the cluster provisions and how the initial
+    /// allocation splits across them (§5's k axis; single-SKU fleets
+    /// reproduce the paper's homogeneous experiments exactly).
+    pub fleet: FleetSpec,
     pub strategy: Strategy,
     pub sched_policy: SchedPolicy,
     pub scaling: ScalingParams,
@@ -64,7 +67,7 @@ impl Default for SimConfig {
     fn default() -> Self {
         SimConfig {
             trace: TraceConfig::default(),
-            gpu: GpuKind::H100x8,
+            fleet: FleetSpec::default(),
             strategy: Strategy::LtUa,
             sched_policy: SchedPolicy::Edf,
             scaling: ScalingParams::default(),
@@ -102,9 +105,10 @@ pub struct Simulation {
 impl Simulation {
     pub fn new(cfg: SimConfig) -> Self {
         let models = cfg.trace.models.clone();
-        let perf = PerfTable::new(cfg.gpu, &models);
+        let perf = PerfTable::for_fleet(&cfg.fleet.gpus(), &models);
         let pools = cfg.strategy.initial_pools(cfg.initial_instances);
-        let cluster = Cluster::new(&models, perf, cfg.scaling.clone(), &pools, cfg.vm_budget);
+        let cluster =
+            Cluster::new_fleet(&models, perf, cfg.scaling.clone(), &pools, cfg.vm_budget, &cfg.fleet);
 
         // Telemetry with one week of warm-up history from the generator's
         // expected rates (the "previous week" the forecaster trains on).
@@ -467,16 +471,22 @@ impl Simulation {
 
     fn on_control_epoch(&mut self) {
         self.epoch_start = self.now;
-        let counts: BTreeMap<(ModelKind, Region), usize> = self
+        // Per-SKU allocated counts n_{j,k}, aligned with the fleet axis.
+        let counts: BTreeMap<(ModelKind, Region), Vec<usize>> = self
             .cluster
             .endpoints
-            .keys()
-            .map(|&k| (k, self.cluster.allocated_count(k.0, k.1)))
+            .iter()
+            .map(|(&k, ep)| {
+                let per_sku: Vec<usize> =
+                    self.cluster.gpus.iter().map(|&g| ep.alloc_by_gpu[g.index()]).collect();
+                (k, per_sku)
+            })
             .collect();
         let plan = run_epoch(
             &self.telemetry,
             self.forecaster.as_mut(),
             &self.cluster.perf,
+            &self.cluster.gpus,
             &self.cfg.scaling,
             &counts,
             self.now,

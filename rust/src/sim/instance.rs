@@ -14,7 +14,7 @@
 //! conservative reservation), which makes `kv_used / kv_capacity` — the
 //! paper's *effective memory utilization* — a faithful load proxy.
 
-use crate::config::{ModelKind, Region, Time};
+use crate::config::{GpuKind, ModelKind, Region, Time};
 use crate::perf::PerfProfile;
 use crate::sim::cluster::{InstanceId, PoolTag};
 use crate::trace::types::Request;
@@ -65,6 +65,9 @@ pub struct InstanceSim {
     pub model: ModelKind,
     pub region: Region,
     pub pool: PoolTag,
+    /// Hardware SKU of the underlying 8-GPU VM — fixed for the VM's
+    /// life (weights redeploy across models, not across silicon).
+    pub gpu: GpuKind,
     pub state: InstState,
     pub batch: Vec<ActiveSeq>,
     pub waiting: Vec<Request>,
@@ -100,6 +103,7 @@ impl InstanceSim {
         model: ModelKind,
         region: Region,
         pool: PoolTag,
+        gpu: GpuKind,
         state: InstState,
         kv_capacity: u64,
     ) -> Self {
@@ -108,6 +112,7 @@ impl InstanceSim {
             model,
             region,
             pool,
+            gpu,
             state,
             batch: Vec::new(),
             waiting: Vec::new(),
@@ -323,7 +328,7 @@ mod tests {
 
     fn inst() -> InstanceSim {
         InstanceSim::new(0, ModelKind::Llama2_70B, Region::EastUs, PoolTag::Unified,
-                         InstState::Active, 100_000)
+                         GpuKind::H100x8, InstState::Active, 100_000)
     }
 
     #[test]

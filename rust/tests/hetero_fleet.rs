@@ -1,0 +1,95 @@
+//! Heterogeneous-fleet integration tests: the per-SKU plumbing must be
+//! invisible for single-SKU fleets (the degenerate case every paper
+//! experiment runs), deterministic, conservation-safe for mixed fleets,
+//! and cost-ordered (a mixed fleet must not out-spend the expensive
+//! homogeneous fleet it can always imitate).
+
+use sageserve::config::{FleetSpec, GpuKind, ModelKind};
+use sageserve::sim::engine::{quick_config, run_simulation, SimConfig, Strategy};
+use sageserve::trace::generator::TraceGenerator;
+
+fn quick(strategy: Strategy) -> SimConfig {
+    let mut cfg = quick_config(strategy, 0.05, 0.005);
+    cfg.scaling.max_instances = 10;
+    cfg
+}
+
+fn mixed_fleet() -> FleetSpec {
+    FleetSpec::mixed(&[(GpuKind::H100x8, 0.5), (GpuKind::A100x8, 0.5)])
+}
+
+/// A fleet declared through the multi-SKU API but holding one SKU must
+/// produce metrics *identical* to the default homogeneous config — every
+/// outcome, ledger point and util sample.
+#[test]
+fn single_sku_fleet_is_the_degenerate_case() {
+    for strategy in [Strategy::Reactive, Strategy::LtUa, Strategy::Chiron] {
+        let base = run_simulation(quick(strategy));
+        let mut cfg = quick(strategy);
+        cfg.fleet = FleetSpec::mixed(&[(GpuKind::H100x8, 1.0)]);
+        let via_fleet = run_simulation(cfg);
+        assert!(
+            base.metrics == via_fleet.metrics,
+            "{}: single-SKU fleet diverged from the homogeneous default",
+            strategy.name()
+        );
+    }
+}
+
+/// Mixed fleets keep every invariant the single-SKU engine guarantees:
+/// request conservation, coherent incremental aggregates, determinism,
+/// and per-SKU GPU-hour ledgers that sum to the per-endpoint totals.
+#[test]
+fn mixed_fleet_conserves_and_accounts_per_sku() {
+    let mut cfg = quick(Strategy::LtUa);
+    cfg.fleet = mixed_fleet();
+    let total = TraceGenerator::new(cfg.trace.clone()).stream().count();
+    let sim = run_simulation(cfg);
+    assert_eq!(
+        sim.metrics.outcomes.len() + sim.metrics.dropped as usize,
+        total,
+        "mixed fleet lost requests"
+    );
+    assert_eq!(sim.metrics.dropped, 0);
+    assert!(sim.cluster.aggregates_consistent());
+
+    let end = sim.end_time();
+    let by_sku = sim.metrics.gpu_hours_by_sku(end);
+    // Both SKUs hosted instances at some point (the initial 3/3 split).
+    assert!(by_sku.get(&GpuKind::H100x8).copied().unwrap_or(0.0) > 0.0);
+    assert!(by_sku.get(&GpuKind::A100x8).copied().unwrap_or(0.0) > 0.0);
+    assert!(sim.metrics.fleet_dollar_cost(end) > 0.0);
+
+    // Per-SKU ledgers are recorded at the same change points as the
+    // endpoint totals, so their hours must sum to the total hours.
+    let total_h = sim.metrics.model_instance_hours(ModelKind::Llama2_70B, end);
+    let sku_h: f64 = by_sku.values().sum();
+    assert!(
+        (total_h - sku_h).abs() < 1e-6 * total_h.max(1.0),
+        "per-SKU hours {sku_h} != total {total_h}"
+    );
+
+    // Determinism across runs, mixed fleet included.
+    let mut cfg2 = quick(Strategy::LtUa);
+    cfg2.fleet = mixed_fleet();
+    let sim2 = run_simulation(cfg2);
+    assert!(sim.metrics == sim2.metrics, "mixed fleet nondeterministic");
+}
+
+/// Cost ordering: a 50/50 mixed fleet drains its expensive H100s first
+/// (most-expensive-first scale-in) and grows on the cheaper-per-θ A100s,
+/// so it must come in cheaper than the all-H100 fleet on the same trace.
+#[test]
+fn mixed_fleet_cheaper_than_h100_only() {
+    let h100 = run_simulation(quick(Strategy::LtUa));
+    let mut cfg = quick(Strategy::LtUa);
+    cfg.fleet = mixed_fleet();
+    let mixed = run_simulation(cfg);
+    let cost_h100 = h100.metrics.fleet_dollar_cost(h100.end_time());
+    let cost_mixed = mixed.metrics.fleet_dollar_cost(mixed.end_time());
+    assert!(cost_h100 > 0.0 && cost_mixed > 0.0);
+    assert!(
+        cost_mixed < cost_h100,
+        "mixed fleet (${cost_mixed:.0}) must undercut H100-only (${cost_h100:.0})"
+    );
+}
