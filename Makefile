@@ -8,13 +8,20 @@
 
 CARGO_DIR := rust
 
-.PHONY: check verify build test bench bench-quick timing clean
+.PHONY: check verify build test bench bench-quick timing docs clean
 
 check: build test bench-quick
 
 # The verify flow: tier-1 build + tests plus the bench smoke that
-# refreshes BENCH_sim.json (see PERF.md "Verify flow").
-verify: check
+# refreshes BENCH_sim.json (see PERF.md "Verify flow"), plus the rustdoc
+# gate (every public-surface doc link and `missing_docs` audit must hold).
+verify: check docs
+
+# Rustdoc gate: broken intra-doc links, bad HTML in docs and missing
+# docs on the audited modules (config, perf, coordinator::router,
+# sim::cluster — see lib.rs) all fail the build.
+docs:
+	cd $(CARGO_DIR) && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 build:
 	cd $(CARGO_DIR) && cargo build --release

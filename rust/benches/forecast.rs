@@ -80,5 +80,19 @@ fn main() {
     bench("full control epoch, 2-SKU fleet (forecast + 4 ILPs)", quick_iters(500, 5), || {
         run_epoch(&telemetry, &mut fc2, &perf2, &fleet, &params, &counts2, 0.0).len()
     });
+
+    // The 3-SKU epoch (H100 + A100 + MI300): each per-model ILP carries
+    // 3 regions x 3 SKUs = 9 integer x-vars plus the u relaxations —
+    // the k axis the MI300 class stresses.
+    let fleet3 = GpuKind::ALL;
+    let perf3 = PerfTable::for_fleet(&fleet3, &models);
+    let counts3: BTreeMap<(ModelKind, Region), Vec<usize>> = models
+        .iter()
+        .flat_map(|&m| Region::ALL.into_iter().map(move |r| ((m, r), vec![2usize, 2, 2])))
+        .collect();
+    let mut fc3 = NativeArForecaster::new(96, 8, 4);
+    bench("full control epoch, 3-SKU fleet (forecast + 4 ILPs)", quick_iters(500, 5), || {
+        run_epoch(&telemetry, &mut fc3, &perf3, &fleet3, &params, &counts3, 0.0).len()
+    });
     println!("\npaper reference: ~0.7 s forecast + ~1.5 s ILP per hourly epoch");
 }

@@ -4,8 +4,10 @@
 //! that back them.  L3 must never be the bottleneck (DESIGN.md §Perf
 //! target: « 1 µs per decision).
 
-use sageserve::config::{GpuKind, ModelKind, Region, RoutingParams, ScalingParams, Tier};
-use sageserve::coordinator::router::{route_instance, route_region};
+use sageserve::config::{FleetSpec, GpuKind, ModelKind, Region, RoutingParams, ScalingParams, Tier};
+use sageserve::coordinator::router::{
+    route_instance, route_instance_sku_aware, route_region, route_region_sku_aware,
+};
 use sageserve::coordinator::scheduler::SchedPolicy;
 use sageserve::perf::PerfTable;
 use sageserve::sim::cluster::{Cluster, PoolTag};
@@ -31,6 +33,27 @@ fn main() {
 
     bench("route_instance (JSQ over 20 instances)", hot, || {
         route_instance(&cluster, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF)
+    });
+
+    // SKU-aware variants on a three-way fleet: the affinity cascade
+    // must stay in the same sub-µs class as blind JSQ.
+    let mixed3 = Cluster::new_fleet(
+        &models,
+        PerfTable::for_fleet(&GpuKind::ALL, &models),
+        ScalingParams::default(),
+        &[(PoolTag::Unified, 21)],
+        40,
+        &FleetSpec::mixed_3way(),
+    );
+    bench("route_region_sku_aware (long-context, 3-way fleet)", hot, || {
+        route_region_sku_aware(
+            &mixed3, &routing, ModelKind::Llama2_70B, Region::CentralUs, 50_000,
+        )
+    });
+    bench("route_instance_sku_aware (cascade over 21 instances)", hot, || {
+        route_instance_sku_aware(
+            &mixed3, &routing, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF, 50_000,
+        )
     });
 
     // The aggregate reads the engine hits on every routing decision,

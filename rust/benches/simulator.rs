@@ -70,6 +70,31 @@ fn main() {
         report.insert("simulate_lt-ua_mixed".to_string(), Json::Obj(entry));
     }
 
+    // Three-way H100/A100/MI300 fleet with SKU-aware routing: the k=3
+    // capacity ILP, the spot-first reclaim order and the per-request
+    // affinity cascade end-to-end.
+    {
+        let cfg = || SimConfig {
+            trace: TraceConfig { days: 0.1, scale: 0.05, ..Default::default() },
+            strategy: Strategy::LtUa,
+            fleet: FleetSpec::mixed_3way(),
+            ..Default::default()
+        };
+        let n_requests = TraceGenerator::new(cfg().trace.clone()).stream().count();
+        let result =
+            bench(&format!("simulate lt-ua 3-way fleet ({n_requests} reqs)"), iters, || {
+                run_simulation(cfg()).metrics.outcomes.len()
+            });
+        let reqs_per_sec = n_requests as f64 / (result.mean_ns / 1e9);
+        println!("    → {:.2} M simulated requests / wall-second\n", reqs_per_sec / 1e6);
+        let mut entry = BTreeMap::new();
+        entry.insert("n_requests".to_string(), Json::Num(n_requests as f64));
+        entry.insert("mean_ns".to_string(), Json::Num(result.mean_ns));
+        entry.insert("p50_ns".to_string(), Json::Num(result.p50_ns));
+        entry.insert("reqs_per_wall_sec".to_string(), Json::Num(reqs_per_sec));
+        report.insert("simulate_lt-ua_mixed3".to_string(), Json::Obj(entry));
+    }
+
     // Trace generation alone (the simulator's input pipeline).  The
     // headline `trace_generation` entry is the production path — the
     // chunk-parallel materializer sweep grids replay from;

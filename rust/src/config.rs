@@ -9,22 +9,31 @@ use std::fmt;
 /// Simulated/real time, in seconds since experiment start.
 pub type Time = f64;
 
+/// One minute, in [`Time`] seconds.
 pub const MINUTE: Time = 60.0;
+/// One hour, in [`Time`] seconds.
 pub const HOUR: Time = 3600.0;
+/// One day, in [`Time`] seconds.
 pub const DAY: Time = 86_400.0;
+/// One week, in [`Time`] seconds.
 pub const WEEK: Time = 7.0 * DAY;
 
 /// US data-center regions used throughout the paper (§2.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Region {
+    /// East US (the highest-traffic region in the trace).
     EastUs,
+    /// Central US.
     CentralUs,
+    /// West US.
     WestUs,
 }
 
 impl Region {
+    /// Every region, in [`Region::index`] order.
     pub const ALL: [Region; 3] = [Region::EastUs, Region::CentralUs, Region::WestUs];
 
+    /// Dense index (position in [`Region::ALL`]) for per-region arrays.
     pub fn index(self) -> usize {
         match self {
             Region::EastUs => 0,
@@ -33,6 +42,7 @@ impl Region {
         }
     }
 
+    /// Inverse of [`Region::index`].  Panics on an out-of-range index.
     pub fn from_index(i: usize) -> Region {
         Region::ALL[i]
     }
@@ -53,10 +63,16 @@ impl fmt::Display for Region {
 /// Llama-4-Scout MoE added in the scalability test (§7.2.5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum ModelKind {
+    /// Bloom-176B — the KV-heaviest model (multi-head attention, no GQA).
     Bloom176B,
+    /// Llama-2-70B — the paper's headline evaluation model.
     Llama2_70B,
+    /// Llama-3.1-8B.
     Llama31_8B,
+    /// Llama-3.2-3B.
     Llama32_3B,
+    /// Llama-4-Scout (109B MoE / 17B active), from the §7.2.5
+    /// scalability test.
     Llama4Scout,
     /// The ~3M-parameter byte-level transformer actually served end-to-end
     /// through PJRT by `serve/` (examples/serve_model.rs).
@@ -92,6 +108,7 @@ impl ModelKind {
         ModelKind::Llama4Scout,
     ];
 
+    /// Dense index (position in [`ModelKind::ALL`]) for per-model arrays.
     pub fn index(self) -> usize {
         match self {
             ModelKind::Bloom176B => 0,
@@ -119,27 +136,43 @@ impl fmt::Display for ModelKind {
 }
 
 /// GPU SKUs (§2.1).  One *instance* is a whole 8-GPU VM.
+///
+/// Three classes span the §5 SKU axis `k`:
+/// * [`GpuKind::H100x8`] — highest throughput, highest price;
+/// * [`GpuKind::A100x8`] — lowest price, best $-per-throughput for
+///   compute-bound models;
+/// * [`GpuKind::Mi300x8`] — MI300-class: ~2.4x the HBM of the others at
+///   mid throughput and a distinct price point, the natural home for
+///   long-context and KV-heavy work.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum GpuKind {
+    /// 8x NVIDIA H100 (80 GB each): fastest, dearest.
     H100x8,
+    /// 8x NVIDIA A100 (80 GB each): ~1.8x slower than H100, cheapest.
     A100x8,
+    /// 8x AMD MI300-class (192 GB each): mid throughput, 1.5 TiB HBM.
+    Mi300x8,
 }
 
 impl GpuKind {
     /// Number of SKUs — the dense per-SKU array width used by the
     /// cluster aggregates and ledgers.
-    pub const COUNT: usize = 2;
+    pub const COUNT: usize = 3;
 
     /// Every SKU, in [`GpuKind::index`] order.
-    pub const ALL: [GpuKind; GpuKind::COUNT] = [GpuKind::H100x8, GpuKind::A100x8];
+    pub const ALL: [GpuKind; GpuKind::COUNT] =
+        [GpuKind::H100x8, GpuKind::A100x8, GpuKind::Mi300x8];
 
+    /// Dense index (position in [`GpuKind::ALL`]) for per-SKU arrays.
     pub fn index(self) -> usize {
         match self {
             GpuKind::H100x8 => 0,
             GpuKind::A100x8 => 1,
+            GpuKind::Mi300x8 => 2,
         }
     }
 
+    /// Inverse of [`GpuKind::index`].  Panics on an out-of-range index.
     pub fn from_index(i: usize) -> GpuKind {
         GpuKind::ALL[i]
     }
@@ -149,20 +182,41 @@ impl GpuKind {
         match s.to_ascii_lowercase().as_str() {
             "h100" | "h100x8" | "8xh100" => Some(GpuKind::H100x8),
             "a100" | "a100x8" | "8xa100" => Some(GpuKind::A100x8),
+            "mi300" | "mi300x" | "mi300x8" | "8xmi300" => Some(GpuKind::Mi300x8),
             _ => None,
         }
     }
 
-    /// Total HBM per instance VM (GiB).
+    /// Total HBM per instance VM (GiB): 8 x 80 GB for the NVIDIA SKUs,
+    /// 8 x 192 GB for the MI300 class — the axis SKU-aware routing
+    /// steers long-context requests along.
     pub fn hbm_gib(self) -> f64 {
-        640.0 // 8 x 80 GB for both SKUs
+        match self {
+            GpuKind::H100x8 | GpuKind::A100x8 => 640.0,
+            GpuKind::Mi300x8 => 1536.0,
+        }
     }
 
-    /// On-demand $/hour for the 8-GPU VM (§7.2.1 quotes $98.32/h for H100).
+    /// On-demand $/hour for the 8-GPU VM — the §5 α_k
+    /// (§7.2.1 quotes $98.32/h for H100).
     pub fn dollars_per_hour(self) -> f64 {
         match self {
             GpuKind::H100x8 => 98.32,
             GpuKind::A100x8 => 54.20,
+            GpuKind::Mi300x8 => 78.00,
+        }
+    }
+
+    /// Base spot-market $/hour a *donated* VM of this SKU earns (before
+    /// the [`SpotMarket`] time-of-day multiplier).  Donated H100s are
+    /// worth far more than A100s — the per-SKU spot market the ROADMAP
+    /// called for.  The most-valuable SKU is also reclaimed first on
+    /// scale-out (external claimants compete hardest for it).
+    pub fn spot_dollars_per_hour(self) -> f64 {
+        match self {
+            GpuKind::H100x8 => 44.00,
+            GpuKind::A100x8 => 14.00,
+            GpuKind::Mi300x8 => 27.00,
         }
     }
 }
@@ -172,7 +226,40 @@ impl fmt::Display for GpuKind {
         f.write_str(match self {
             GpuKind::H100x8 => "8xH100",
             GpuKind::A100x8 => "8xA100",
+            GpuKind::Mi300x8 => "8xMI300",
         })
+    }
+}
+
+/// The per-SKU spot-market price curve: a deterministic business-hours
+/// shape on top of each SKU's [`GpuKind::spot_dollars_per_hour`] base.
+/// Donated (spot) instance-hours are valued at this price by
+/// [`crate::metrics::Metrics::spot_revenue`]; the price is
+/// hour-constant, so ledger integration splits segments at wall-clock
+/// hour boundaries and stays exact.
+#[derive(Debug, Clone, Copy)]
+pub struct SpotMarket;
+
+impl SpotMarket {
+    /// Price multiplier outside business hours.
+    pub const OFF_PEAK: f64 = 0.8;
+    /// Price multiplier during business hours (09:00–17:59), when
+    /// external spot demand peaks.
+    pub const PEAK: f64 = 1.25;
+
+    /// Time-of-day multiplier at simulated time `t` (hour-constant).
+    pub fn multiplier(t: Time) -> f64 {
+        let hour_of_day = (t / HOUR).rem_euclid(24.0).floor() as u32;
+        if (9..=17).contains(&hour_of_day) {
+            SpotMarket::PEAK
+        } else {
+            SpotMarket::OFF_PEAK
+        }
+    }
+
+    /// Spot $/hour for `gpu` at simulated time `t`.
+    pub fn price(gpu: GpuKind, t: Time) -> f64 {
+        gpu.spot_dollars_per_hour() * SpotMarket::multiplier(t)
     }
 }
 
@@ -211,6 +298,8 @@ impl FleetSpec {
         self.skus.iter().map(|&(g, _)| g).collect()
     }
 
+    /// True when the fleet holds exactly one SKU — the degenerate case
+    /// every pre-heterogeneity experiment runs.
     pub fn is_homogeneous(&self) -> bool {
         self.skus.len() == 1
     }
@@ -247,18 +336,33 @@ impl FleetSpec {
         out
     }
 
-    /// Parse a CLI fleet spec: a SKU name (`h100`, `a100`), `mixed`
-    /// (50/50 H100+A100), or explicit weights (`h100:0.5,a100:0.5`).
+    /// The three-way evaluation fleet: H100 + A100 + MI300, equal
+    /// initial weights — the `k = 3` stress case for the §5 ILP.
+    pub fn mixed_3way() -> Self {
+        FleetSpec::mixed(&[
+            (GpuKind::H100x8, 1.0),
+            (GpuKind::A100x8, 1.0),
+            (GpuKind::Mi300x8, 1.0),
+        ])
+    }
+
+    /// Parse a CLI fleet spec: a SKU name (`h100`, `a100`, `mi300`),
+    /// `mixed` (50/50 H100+A100), `mixed3` (equal three-way
+    /// H100+A100+MI300), or explicit weights (`h100:0.5,mi300:0.5`).
     pub fn parse(s: &str) -> Option<FleetSpec> {
         match s.to_ascii_lowercase().as_str() {
             "h100" | "h100x8" | "8xh100" => return Some(FleetSpec::homogeneous(GpuKind::H100x8)),
             "a100" | "a100x8" | "8xa100" => return Some(FleetSpec::homogeneous(GpuKind::A100x8)),
+            "mi300" | "mi300x8" | "8xmi300" => {
+                return Some(FleetSpec::homogeneous(GpuKind::Mi300x8))
+            }
             "mixed" => {
                 return Some(FleetSpec::mixed(&[
                     (GpuKind::H100x8, 0.5),
                     (GpuKind::A100x8, 0.5),
                 ]))
             }
+            "mixed3" | "mixed-3way" | "3way" => return Some(FleetSpec::mixed_3way()),
             _ => {}
         }
         let mut skus = Vec::new();
@@ -297,8 +401,10 @@ pub enum Tier {
 }
 
 impl Tier {
+    /// Every tier, in [`Tier::index`] order.
     pub const ALL: [Tier; 3] = [Tier::IwF, Tier::IwN, Tier::Niw];
 
+    /// Dense index (position in [`Tier::ALL`]) for per-tier arrays.
     pub fn index(self) -> usize {
         match self {
             Tier::IwF => 0,
@@ -307,6 +413,7 @@ impl Tier {
         }
     }
 
+    /// True for the IW tiers (TTFT SLA); false for NIW (deadline only).
     pub fn is_interactive(self) -> bool {
         !matches!(self, Tier::Niw)
     }
@@ -414,7 +521,8 @@ impl Default for ScalingParams {
     }
 }
 
-/// Routing constants (§6.1).
+/// Routing constants (§6.1), including the SKU-affinity policy the
+/// heterogeneous-fleet router applies on top of region selection + JSQ.
 #[derive(Debug, Clone)]
 pub struct RoutingParams {
     /// Route to the first preferred region whose effective memory
@@ -422,11 +530,33 @@ pub struct RoutingParams {
     pub region_util_threshold: f64,
     /// Mean inter-region network latency (§2.1: ~50 ms).
     pub inter_region_latency: Time,
+    /// Enable SKU-aware routing: long-context requests steer to
+    /// high-HBM SKUs, short interactive ones to the cheapest SKU with
+    /// headroom, with a fallback cascade when the preferred SKU has no
+    /// capacity.  On single-SKU fleets this is a no-op by construction
+    /// (the router short-circuits to plain JSQ), so every homogeneous
+    /// paper experiment is bit-identical either way.
+    pub sku_affinity: bool,
+    /// HBM threshold, in prompt+decode tokens: a request at or above it
+    /// counts as *long-context* and prefers the fleet's highest-HBM SKU.
+    /// 12 k tokens ≈ the top few percent of the Jul-2025 token CDF
+    /// (RAG / doc-summary / eval tails).
+    pub long_ctx_tokens: u64,
+    /// Instance-level headroom test for the affinity cascade: an
+    /// instance "has headroom" while (reserved KV + queued tokens) stays
+    /// under this fraction of its KV capacity.
+    pub sku_headroom_util: f64,
 }
 
 impl Default for RoutingParams {
     fn default() -> Self {
-        RoutingParams { region_util_threshold: 0.70, inter_region_latency: 0.050 }
+        RoutingParams {
+            region_util_threshold: 0.70,
+            inter_region_latency: 0.050,
+            sku_affinity: true,
+            long_ctx_tokens: 12_000,
+            sku_headroom_util: 0.70,
+        }
     }
 }
 
@@ -476,7 +606,43 @@ mod tests {
         }
         assert_eq!(GpuKind::parse("h100"), Some(GpuKind::H100x8));
         assert_eq!(GpuKind::parse("8xA100"), Some(GpuKind::A100x8));
+        assert_eq!(GpuKind::parse("MI300"), Some(GpuKind::Mi300x8));
+        assert_eq!(GpuKind::parse("mi300x8"), Some(GpuKind::Mi300x8));
         assert_eq!(GpuKind::parse("tpu"), None);
+    }
+
+    #[test]
+    fn sku_price_sheets_are_ordered() {
+        // On-demand: A100 < MI300 < H100; spot mirrors the same order
+        // (donated H100s are worth the most).
+        assert!(GpuKind::A100x8.dollars_per_hour() < GpuKind::Mi300x8.dollars_per_hour());
+        assert!(GpuKind::Mi300x8.dollars_per_hour() < GpuKind::H100x8.dollars_per_hour());
+        assert!(GpuKind::A100x8.spot_dollars_per_hour() < GpuKind::Mi300x8.spot_dollars_per_hour());
+        assert!(GpuKind::Mi300x8.spot_dollars_per_hour() < GpuKind::H100x8.spot_dollars_per_hour());
+        for g in GpuKind::ALL {
+            // Spot never pays more than on-demand costs, even at peak.
+            assert!(
+                g.spot_dollars_per_hour() * SpotMarket::PEAK < g.dollars_per_hour(),
+                "{g}"
+            );
+        }
+        // MI300 is the high-HBM class.
+        assert!(GpuKind::Mi300x8.hbm_gib() > 2.0 * GpuKind::H100x8.hbm_gib());
+    }
+
+    #[test]
+    fn spot_market_curve_is_diurnal_and_hour_constant() {
+        // 03:00 is off-peak, 12:00 is peak; the multiplier is constant
+        // within an hour and 24 h-periodic.
+        assert_eq!(SpotMarket::multiplier(3.0 * HOUR), SpotMarket::OFF_PEAK);
+        assert_eq!(SpotMarket::multiplier(12.0 * HOUR), SpotMarket::PEAK);
+        assert_eq!(SpotMarket::multiplier(12.0 * HOUR + 1800.0), SpotMarket::PEAK);
+        assert_eq!(
+            SpotMarket::multiplier(12.0 * HOUR),
+            SpotMarket::multiplier(12.0 * HOUR + 3.0 * DAY)
+        );
+        let p = SpotMarket::price(GpuKind::H100x8, 12.0 * HOUR);
+        assert!((p - 44.0 * 1.25).abs() < 1e-9);
     }
 
     #[test]
@@ -508,6 +674,23 @@ mod tests {
         assert_eq!(custom.split(4), vec![(GpuKind::A100x8, 3), (GpuKind::H100x8, 1)]);
         assert_eq!(FleetSpec::parse("tpu"), None);
         assert_eq!(FleetSpec::parse("h100:0.5,h100:0.5"), None);
+        // The MI300 class and the three-way fleet parse too.
+        assert_eq!(
+            FleetSpec::parse("mi300"),
+            Some(FleetSpec::homogeneous(GpuKind::Mi300x8))
+        );
+        let three = FleetSpec::parse("mixed3").unwrap();
+        assert_eq!(three, FleetSpec::mixed_3way());
+        assert_eq!(
+            three.gpus(),
+            vec![GpuKind::H100x8, GpuKind::A100x8, GpuKind::Mi300x8]
+        );
+        assert_eq!(
+            three.split(6),
+            vec![(GpuKind::H100x8, 2), (GpuKind::A100x8, 2), (GpuKind::Mi300x8, 2)]
+        );
+        let custom = FleetSpec::parse("mi300:0.5,a100:0.5").unwrap();
+        assert_eq!(custom.primary(), GpuKind::Mi300x8);
     }
 
     #[test]
@@ -516,5 +699,6 @@ mod tests {
         assert_eq!(Region::WestUs.to_string(), "westus");
         assert_eq!(Tier::IwF.to_string(), "IW-F");
         assert_eq!(GpuKind::H100x8.to_string(), "8xH100");
+        assert_eq!(GpuKind::Mi300x8.to_string(), "8xMI300");
     }
 }

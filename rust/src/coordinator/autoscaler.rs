@@ -15,6 +15,11 @@
 //!   memory-utilization consolidation (which is why it over-provisions —
 //!   §7.2.3).
 
+// Rustdoc debt: public surface not yet audited for `missing_docs`
+// (PR 4 audited config, perf, coordinator::router and sim::cluster);
+// drop this allow once every pub item here is documented.
+#![allow(missing_docs)]
+
 use std::collections::BTreeMap;
 
 use crate::config::{GpuKind, ModelKind, Region, ScalingParams, Tier, Time};
@@ -103,30 +108,80 @@ pub struct ScaleCtx<'a> {
 }
 
 impl ScaleCtx<'_> {
+    /// Commit a successful scale-out: schedule the activation event and
+    /// re-record the affected ledgers.  `prev_model` is the model the VM
+    /// hosted before — a cross-model spot reclaim removes a donated VM
+    /// from *another* endpoint's pool, so that endpoint's spot ledgers
+    /// must be re-recorded too (or they would keep accruing spot revenue
+    /// for a VM that was already taken back).
+    fn commit_scale_out(
+        &mut self,
+        model: ModelKind,
+        region: Region,
+        id: crate::sim::cluster::InstanceId,
+        ready: Time,
+        prev_model: ModelKind,
+    ) {
+        self.events.push(ready, Event::ProvisionDone { instance: id });
+        self.record_ledgers(model, region);
+        if prev_model != model {
+            self.record_ledgers(prev_model, region);
+        }
+    }
+
     /// Scale out one instance of an explicit SKU and schedule its
     /// ProvisionDone event.
     fn scale_out(&mut self, model: ModelKind, region: Region, pool: PoolTag, gpu: GpuKind) -> bool {
-        let Some((id, ready)) =
+        let Some((id, ready, prev)) =
             self.cluster.scale_out(model, region, pool, gpu, self.now, self.metrics)
         else {
             return false;
         };
-        self.events.push(ready, Event::ProvisionDone { instance: id });
-        self.record_ledgers(model, region);
+        self.commit_scale_out(model, region, id, ready, prev);
         true
     }
 
-    /// Scale out on the cheapest SKU (by α, $/h) that can source a VM —
-    /// the default when no per-SKU plan pins the SKU.  Deliberate
-    /// policy: cost order wins over source readiness, so a cheap fresh
-    /// VM (10 min) is preferred to an expensive same-SKU spot reclaim
-    /// (1 min) — the §5 α-ordering trades a slower ramp for fleet cost.
-    fn scale_out_cheapest(&mut self, model: ModelKind, region: Region, pool: PoolTag) -> bool {
+    /// Scale out when no per-SKU plan pins the SKU — the per-SKU
+    /// spot-market policy, two passes:
+    ///
+    /// 1. **Spot reclaim, most-valuable SKU first** (descending
+    ///    [`GpuKind::spot_dollars_per_hour`]): donated VMs are the
+    ///    fastest source (~1 min same-model vs ~10 min fresh) and their
+    ///    α is already sunk fleet-wide; the dearest donations are the
+    ///    ones external claimants compete hardest for, so they are
+    ///    taken back first while they are still in the pool.
+    /// 2. **Fresh provisioning, cheapest SKU first** (ascending α) —
+    ///    the §5 cost ordering for capacity that actually adds spend.
+    ///
+    /// (Until PR 4 the single pass was α-ascending over *both* sources,
+    /// so a cheap fresh VM outranked an expensive spot reclaim; with
+    /// per-SKU spot prices the reclaim/provision split prices the two
+    /// sources separately.)
+    fn scale_out_spot_then_cheapest(
+        &mut self,
+        model: ModelKind,
+        region: Region,
+        pool: PoolTag,
+    ) -> bool {
+        let (order, n) = self.gpus_by_spot_value();
+        for &gpu in &order[..n] {
+            let Some((id, ready, prev)) =
+                self.cluster.reclaim_spot(model, region, pool, gpu, self.now, self.metrics)
+            else {
+                continue;
+            };
+            self.commit_scale_out(model, region, id, ready, prev);
+            return true;
+        }
         let (order, n) = self.gpus_by_cost(false);
         for &gpu in &order[..n] {
-            if self.scale_out(model, region, pool, gpu) {
-                return true;
-            }
+            let Some((id, ready)) =
+                self.cluster.provision_fresh(model, region, pool, gpu, self.now, self.metrics)
+            else {
+                continue;
+            };
+            self.commit_scale_out(model, region, id, ready, model);
+            return true;
         }
         false
     }
@@ -176,6 +231,16 @@ impl ScaleCtx<'_> {
         (out, src.len())
     }
 
+    /// Fleet SKUs by descending spot-market value (the
+    /// most-valuable-first reclaim order), stack-copied like
+    /// [`ScaleCtx::gpus_by_cost`].
+    fn gpus_by_spot_value(&self) -> ([GpuKind; GpuKind::COUNT], usize) {
+        let src = &self.cluster.gpus_spot_desc;
+        let mut out = [GpuKind::H100x8; GpuKind::COUNT];
+        out[..src.len()].copy_from_slice(src);
+        (out, src.len())
+    }
+
     pub fn record_ledgers(&mut self, model: ModelKind, region: Region) {
         let allocated = self.cluster.allocated_count(model, region);
         self.metrics
@@ -193,17 +258,26 @@ impl ScaleCtx<'_> {
                 .or_default()
                 .record(self.now, by_gpu[gpu.index()]);
         }
-        let spot = self
-            .cluster
-            .spot_pool
-            .get(&region)
-            .map(|v| v.iter().filter(|&&i| self.cluster.instances[i].model == model).count())
-            .unwrap_or(0);
-        self.metrics
-            .spot_instances
-            .entry((model, region))
-            .or_default()
-            .record(self.now, spot);
+        // Spot ledgers: per-SKU counts in one pass over the region's
+        // donated pool — the single source of truth both spot-hour
+        // totals and the spot-market revenue integration derive from.
+        let mut spot_by_gpu = [0usize; GpuKind::COUNT];
+        if let Some(pool) = self.cluster.spot_pool.get(&region) {
+            for &i in pool {
+                let inst = &self.cluster.instances[i];
+                if inst.model == model {
+                    spot_by_gpu[inst.gpu.index()] += 1;
+                }
+            }
+        }
+        for gi in 0..self.cluster.gpus.len() {
+            let gpu = self.cluster.gpus[gi];
+            self.metrics
+                .spot_instances_by_gpu
+                .entry((model, region, gpu))
+                .or_default()
+                .record(self.now, spot_by_gpu[gpu.index()]);
+        }
     }
 
     fn cooldown_ok(&self, model: ModelKind, region: Region, params: &ScalingParams) -> bool {
@@ -266,7 +340,7 @@ impl Autoscaler {
         }
         let util = ctx.cluster.pool_util(model, region, filter);
         if util > self.params.scale_out_util {
-            if ctx.scale_out_cheapest(model, region, out_pool) {
+            if ctx.scale_out_spot_then_cheapest(model, region, out_pool) {
                 ctx.touch_cooldown(model, region);
             }
         } else if util < self.params.scale_in_util {
@@ -397,7 +471,7 @@ impl Autoscaler {
                 if forecast_tps > 0.0 {
                     let ratio = observed / forecast_tps;
                     if ratio >= self.params.ua_over_factor && allocated >= target {
-                        if ctx.scale_out_cheapest(model, region, PoolTag::Unified) {
+                        if ctx.scale_out_spot_then_cheapest(model, region, PoolTag::Unified) {
                             ctx.touch_cooldown(model, region);
                         }
                     } else if ratio <= self.params.ua_under_factor
@@ -415,8 +489,8 @@ impl Autoscaler {
 
     /// One LT-U progression step toward the armed per-SKU targets:
     /// cheapest SKU still below its target first; if every per-SKU
-    /// target is met (reactive drift between epochs), cheapest SKU that
-    /// can source an instance.
+    /// target is met (reactive drift between epochs), the unpinned
+    /// spot-first policy decides.
     fn lt_scale_out_step(&self, ctx: &mut ScaleCtx, model: ModelKind, region: Region) -> bool {
         let (alloc, targets) = {
             let ep = &ctx.cluster.endpoints[&(model, region)];
@@ -430,12 +504,7 @@ impl Autoscaler {
                 }
             }
         }
-        for &gpu in &order[..n] {
-            if ctx.scale_out(model, region, PoolTag::Unified, gpu) {
-                return true;
-            }
-        }
-        false
+        ctx.scale_out_spot_then_cheapest(model, region, PoolTag::Unified)
     }
 
     /// One LT-U scale-in step: most-expensive SKU above its armed
@@ -514,7 +583,7 @@ impl Autoscaler {
             // Strictest IW SLA = 1 s (IW-F); Θ = 0.6.
             let sla_budget = self.chiron_theta * 1.0;
             if smoothed > sla_budget {
-                if ctx.scale_out_cheapest(model, region, PoolTag::ChironInteractive) {
+                if ctx.scale_out_spot_then_cheapest(model, region, PoolTag::ChironInteractive) {
                     ctx.touch_cooldown(model, region);
                     continue;
                 }
@@ -538,7 +607,7 @@ impl Autoscaler {
             let est_drain = niw_pending as f64 / batch_tps;
             let deadline = Tier::Niw.deadline().unwrap_or(24.0 * 3600.0);
             if est_drain > self.chiron_theta * deadline {
-                if ctx.scale_out_cheapest(model, region, PoolTag::ChironBatch) {
+                if ctx.scale_out_spot_then_cheapest(model, region, PoolTag::ChironBatch) {
                     ctx.touch_cooldown(model, region);
                 }
             }

@@ -7,6 +7,11 @@
 //! buffer (10% of last hour's NIW load), and solve the §5 capacity ILP
 //! per model.  The resulting δ plans feed the Scaling Logic (§6.4).
 
+// Rustdoc debt: public surface not yet audited for `missing_docs`
+// (PR 4 audited config, perf, coordinator::router and sim::cluster);
+// drop this allow once every pub item here is documented.
+#![allow(missing_docs)]
+
 use std::collections::BTreeMap;
 
 use crate::config::{GpuKind, ModelKind, Region, ScalingParams, Time};

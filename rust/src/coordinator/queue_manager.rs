@@ -6,6 +6,11 @@
 //! Requests aging past 10 h are upgraded to priority 0 and routed
 //! immediately like interactive traffic (deadline protection, 24 h SLA).
 
+// Rustdoc debt: public surface not yet audited for `missing_docs`
+// (PR 4 audited config, perf, coordinator::router and sim::cluster);
+// drop this allow once every pub item here is documented.
+#![allow(missing_docs)]
+
 use std::collections::{BTreeMap, VecDeque};
 
 use crate::config::{ModelKind, Region, ScalingParams, Time};

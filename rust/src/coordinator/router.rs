@@ -1,8 +1,32 @@
 //! Routing logic (§6.1): global region selection by effective memory
 //! utilization, then within-region instance selection by
 //! join-the-shortest-queue on remaining tokens.
+//!
+//! ## SKU affinity (heterogeneous fleets)
+//!
+//! On a multi-SKU fleet the short-timescale layer cooperates with the
+//! pool-level scaler (the Chiron/OServe observation: hierarchical
+//! autoscaling wins only when request placement works *with* capacity
+//! placement).  With [`RoutingParams::sku_affinity`] on:
+//!
+//! * **long-context** requests (prompt+decode tokens ≥
+//!   [`RoutingParams::long_ctx_tokens`]) prefer the fleet's highest-HBM
+//!   SKU — their KV reservations crowd small-HBM instances out.  The
+//!   preference only engages when the fleet actually spans HBM sizes
+//!   ([`Cluster::hbm_diverse`]); on an HBM-uniform fleet it would just
+//!   chase the tie-break SKU, so long-context requests follow the
+//!   short-request policy there;
+//! * **short interactive** requests prefer the *cheapest* SKU with
+//!   headroom, keeping dear silicon free for the work that needs it;
+//! * a **fallback cascade** walks the remaining SKUs in affinity order
+//!   when the preferred SKU has no instance with headroom, and finally
+//!   degenerates to plain JSQ over every eligible instance — so
+//!   SKU-aware routing can never serve *fewer* requests than blind JSQ.
+//!
+//! Single-SKU fleets short-circuit to the blind path before any of this
+//! runs, keeping every homogeneous paper experiment bit-identical.
 
-use crate::config::{ModelKind, Region, RoutingParams, Tier};
+use crate::config::{GpuKind, ModelKind, Region, RoutingParams, Tier};
 use crate::sim::cluster::{Cluster, InstanceId};
 use crate::sim::instance::InstState;
 
@@ -83,6 +107,141 @@ pub fn route_instance(
         match slot {
             Some((bk, _)) if *bk <= key => {}
             _ => *slot = Some((key, i)),
+        }
+    }
+    best_active.or(best_prov).map(|(_, i)| i)
+}
+
+/// Is this request long-context under the configured HBM threshold —
+/// *and* does the fleet actually span HBM sizes?  On an HBM-uniform
+/// fleet (e.g. 50/50 H100+A100, both 640 GiB) "prefer the high-HBM SKU"
+/// would just chase the tie-break SKU for no memory benefit, so
+/// long-context requests follow the same cheapest-with-headroom policy
+/// as short ones there.
+#[inline]
+fn wants_high_hbm(cluster: &Cluster, params: &RoutingParams, total_tokens: u64) -> bool {
+    cluster.hbm_diverse && total_tokens >= params.long_ctx_tokens
+}
+
+/// The request's SKU-affinity order over the fleet: highest-HBM-first
+/// for long-context requests on an HBM-diverse fleet, cheapest-first
+/// otherwise.  Copied into a stack array — allocation-free on the
+/// per-request path.
+#[inline]
+fn sku_preference(
+    cluster: &Cluster,
+    params: &RoutingParams,
+    total_tokens: u64,
+) -> ([GpuKind; GpuKind::COUNT], usize) {
+    let src = if wants_high_hbm(cluster, params, total_tokens) {
+        &cluster.gpus_hbm_desc
+    } else {
+        &cluster.gpus_cost_asc
+    };
+    let mut out = [GpuKind::H100x8; GpuKind::COUNT];
+    out[..src.len()].copy_from_slice(src);
+    (out, src.len())
+}
+
+/// SKU-aware global routing: like [`route_region`], but a long-context
+/// request first looks for a preferred (under-threshold) region where
+/// the fleet's highest-HBM SKU still has KV headroom
+/// ([`Cluster::sku_has_headroom`] — O(1) per-SKU aggregate reads), so a
+/// cross-region spill is only paid when the target can actually serve
+/// on the preferred SKU.  Short requests, HBM-uniform fleets and
+/// single-SKU fleets fall through to the blind policy unchanged.
+pub fn route_region_sku_aware(
+    cluster: &Cluster,
+    params: &RoutingParams,
+    model: ModelKind,
+    origin: Region,
+    total_tokens: u64,
+) -> Region {
+    if !params.sku_affinity
+        || cluster.gpus.len() == 1
+        || !wants_high_hbm(cluster, params, total_tokens)
+    {
+        return route_region(cluster, params, model, origin);
+    }
+    let top_hbm = cluster.gpus_hbm_desc[0];
+    for r in preference_order(origin) {
+        if cluster.effective_util(model, r) < params.region_util_threshold
+            && cluster.sku_has_headroom(model, r, top_hbm, params.sku_headroom_util)
+        {
+            return r;
+        }
+    }
+    // No under-threshold region has headroom on the preferred SKU: the
+    // blind rule (first under-threshold region, else least-utilized)
+    // decides.
+    route_region(cluster, params, model, origin)
+}
+
+/// SKU-aware instance selection: JSQ *within* the request's preferred
+/// SKU, cascading across the fleet in affinity order, with plain JSQ as
+/// the terminal fallback.
+///
+/// One pass over the endpoint's cached tier-eligible roster tracks, per
+/// SKU, the shortest-queue active instance that still has headroom
+/// ((reserved KV + queued tokens) under
+/// [`RoutingParams::sku_headroom_util`] of its KV capacity), alongside
+/// the blind JSQ winners.  The cascade then takes the first affinity
+/// SKU with a headroom instance; if every SKU is saturated the blind
+/// active/provisioning pick is returned — exactly what
+/// [`route_instance`] would have chosen.  Allocation-free; single-SKU
+/// fleets and a disabled [`RoutingParams::sku_affinity`] short-circuit
+/// to [`route_instance`].
+pub fn route_instance_sku_aware(
+    cluster: &Cluster,
+    params: &RoutingParams,
+    model: ModelKind,
+    region: Region,
+    tier: Tier,
+    total_tokens: u64,
+) -> Option<InstanceId> {
+    if !params.sku_affinity || cluster.gpus.len() == 1 {
+        return route_instance(cluster, model, region, tier);
+    }
+    let ep = cluster.endpoints.get(&(model, region))?;
+    let eligible = if tier.is_interactive() {
+        &ep.iw_instances
+    } else {
+        &ep.niw_instances
+    };
+    // Strict `<` keeps the *first* minimal instance per bucket, matching
+    // the JSQ tie-break of the blind path.
+    let mut best_by_sku: [Option<(u64, InstanceId)>; GpuKind::COUNT] = [None; GpuKind::COUNT];
+    let mut best_active: Option<(u64, InstanceId)> = None;
+    let mut best_prov: Option<(u64, InstanceId)> = None;
+    for &i in eligible {
+        let inst = &cluster.instances[i];
+        let key = inst.pending_tokens();
+        match inst.state {
+            InstState::Active => {
+                match best_active {
+                    Some((bk, _)) if bk <= key => {}
+                    _ => best_active = Some((key, i)),
+                }
+                let occupied = inst.kv_used + inst.waiting_tokens();
+                if (occupied as f64) < params.sku_headroom_util * inst.kv_capacity as f64 {
+                    let slot = &mut best_by_sku[inst.gpu.index()];
+                    match slot {
+                        Some((bk, _)) if *bk <= key => {}
+                        _ => *slot = Some((key, i)),
+                    }
+                }
+            }
+            InstState::Provisioning { .. } => match best_prov {
+                Some((bk, _)) if bk <= key => {}
+                _ => best_prov = Some((key, i)),
+            },
+            _ => {}
+        }
+    }
+    let (order, n) = sku_preference(cluster, params, total_tokens);
+    for &gpu in &order[..n] {
+        if let Some((_, id)) = best_by_sku[gpu.index()] {
+            return Some(id);
         }
     }
     best_active.or(best_prov).map(|(_, i)| i)
@@ -213,5 +372,159 @@ mod tests {
         let p = RoutingParams::default();
         assert_eq!(routing_latency(&p, Region::EastUs, Region::EastUs), 0.0);
         assert!(routing_latency(&p, Region::EastUs, Region::WestUs) > 0.0);
+    }
+
+    // ------------------------------------------------------------------
+    // SKU-aware routing
+    // ------------------------------------------------------------------
+
+    fn three_way_cluster() -> Cluster {
+        use crate::config::FleetSpec;
+        Cluster::new_fleet(
+            &[ModelKind::Llama2_70B],
+            PerfTable::for_fleet(&GpuKind::ALL, &[ModelKind::Llama2_70B]),
+            ScalingParams::default(),
+            &[(PoolTag::Unified, 6)],
+            0,
+            &FleetSpec::mixed_3way(),
+        )
+    }
+
+    const LONG: u64 = 50_000; // ≥ default long_ctx_tokens
+    const SHORT: u64 = 1_000;
+
+    #[test]
+    fn long_context_prefers_high_hbm_sku() {
+        let c = three_way_cluster();
+        let p = RoutingParams::default();
+        let pick = route_instance_sku_aware(
+            &c, &p, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF, LONG,
+        )
+        .unwrap();
+        assert_eq!(c.instances[pick].gpu, GpuKind::Mi300x8);
+    }
+
+    #[test]
+    fn short_interactive_prefers_cheapest_sku() {
+        let c = three_way_cluster();
+        let p = RoutingParams::default();
+        let pick = route_instance_sku_aware(
+            &c, &p, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF, SHORT,
+        )
+        .unwrap();
+        assert_eq!(c.instances[pick].gpu, GpuKind::A100x8);
+    }
+
+    #[test]
+    fn cascade_falls_through_saturated_skus() {
+        let mut c = three_way_cluster();
+        let p = RoutingParams::default();
+        let (m, r) = (ModelKind::Llama2_70B, Region::EastUs);
+        // Saturate every MI300 past the headroom threshold: a long
+        // request must cascade to the next-HBM SKU (the 640 GiB tie
+        // keeps fleet order ⇒ H100).
+        let ids = c.endpoints[&(m, r)].instances.clone();
+        for id in &ids {
+            if c.instances[*id].gpu == GpuKind::Mi300x8 {
+                c.mutate(*id, |inst| {
+                    inst.kv_used = (inst.kv_capacity as f64 * 0.9) as u64;
+                });
+            }
+        }
+        let pick = route_instance_sku_aware(&c, &p, m, r, Tier::IwF, LONG).unwrap();
+        assert_eq!(c.instances[pick].gpu, GpuKind::H100x8);
+        // Saturate everything: the terminal fallback must equal blind JSQ.
+        for id in &ids {
+            c.mutate(*id, |inst| {
+                inst.kv_used = (inst.kv_capacity as f64 * 0.9) as u64;
+            });
+        }
+        let aware = route_instance_sku_aware(&c, &p, m, r, Tier::IwF, LONG).unwrap();
+        let blind = route_instance(&c, m, r, Tier::IwF).unwrap();
+        assert_eq!(aware, blind);
+    }
+
+    #[test]
+    fn single_sku_fleet_short_circuits_to_blind_jsq() {
+        let c = cluster(); // homogeneous H100
+        let p = RoutingParams::default();
+        for tokens in [SHORT, LONG] {
+            let aware = route_instance_sku_aware(
+                &c, &p, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF, tokens,
+            );
+            let blind = route_instance(&c, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF);
+            assert_eq!(aware, blind);
+            assert_eq!(
+                route_region_sku_aware(
+                    &c, &p, ModelKind::Llama2_70B, Region::WestUs, tokens
+                ),
+                route_region(&c, &p, ModelKind::Llama2_70B, Region::WestUs)
+            );
+        }
+    }
+
+    #[test]
+    fn region_routing_follows_high_hbm_capacity() {
+        let mut c = three_way_cluster();
+        let p = RoutingParams::default();
+        let (m, origin) = (ModelKind::Llama2_70B, Region::EastUs);
+        // Drain every MI300 in the origin region: a long-context request
+        // should spill to the next preference region that still serves
+        // the high-HBM SKU, even though the origin is under threshold.
+        let ids = c.endpoints[&(m, origin)].instances.clone();
+        for id in ids {
+            if c.instances[id].gpu == GpuKind::Mi300x8 {
+                c.mutate(id, |inst| inst.state = InstState::Draining);
+            }
+        }
+        let r = route_region_sku_aware(&c, &p, m, origin, LONG);
+        assert_ne!(r, origin);
+        assert!(c.active_count_by_gpu(m, r, GpuKind::Mi300x8) > 0);
+        // Short requests keep the blind region choice (origin is fine).
+        assert_eq!(route_region_sku_aware(&c, &p, m, origin, SHORT), origin);
+        // Saturate the remote MI300s past the headroom fraction too: an
+        // active-but-full preferred SKU must not attract the spill — the
+        // blind rule decides (origin, which is under threshold).
+        for region in Region::ALL {
+            let ids = c.endpoints[&(m, region)].instances.clone();
+            for id in ids {
+                if c.instances[id].gpu == GpuKind::Mi300x8 {
+                    c.mutate(id, |inst| {
+                        inst.kv_used = (inst.kv_capacity as f64 * 0.9) as u64;
+                    });
+                }
+            }
+        }
+        assert_eq!(route_region_sku_aware(&c, &p, m, origin, LONG), origin);
+    }
+
+    #[test]
+    fn hbm_uniform_fleet_disables_hbm_affinity() {
+        use crate::config::FleetSpec;
+        // 50/50 H100+A100: both 640 GiB, so "prefer high HBM" would just
+        // chase the tie-break SKU.  Long-context requests must follow
+        // the short-request policy (cheapest SKU with headroom) and the
+        // region pass must stay blind.
+        let c = Cluster::new_fleet(
+            &[ModelKind::Llama2_70B],
+            PerfTable::for_fleet(
+                &[GpuKind::H100x8, GpuKind::A100x8],
+                &[ModelKind::Llama2_70B],
+            ),
+            ScalingParams::default(),
+            &[(PoolTag::Unified, 4)],
+            0,
+            &FleetSpec::mixed(&[(GpuKind::H100x8, 0.5), (GpuKind::A100x8, 0.5)]),
+        );
+        assert!(!c.hbm_diverse);
+        let p = RoutingParams::default();
+        let pick =
+            route_instance_sku_aware(&c, &p, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF, LONG)
+                .unwrap();
+        assert_eq!(c.instances[pick].gpu, GpuKind::A100x8);
+        assert_eq!(
+            route_region_sku_aware(&c, &p, ModelKind::Llama2_70B, Region::WestUs, LONG),
+            route_region(&c, &p, ModelKind::Llama2_70B, Region::WestUs)
+        );
     }
 }

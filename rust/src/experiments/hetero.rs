@@ -1,14 +1,22 @@
-//! `exp hetero` — the heterogeneous-fleet sweep over §5's GPU axis `k`:
-//! H100-only vs A100-only vs a 50/50 mixed fleet on the week-long
-//! Jul-2025 trace, all under LT-UA, through the shared parallel sweep
-//! runner (the three runs replay one pre-materialized trace).
+//! `exp hetero` — the heterogeneous-fleet sweep over §5's GPU axis `k`,
+//! now at `k = 3`: H100-only vs A100-only vs MI300-only vs a 50/50
+//! H100+A100 fleet vs the equal three-way fleet, all on the week-long
+//! Jul-2025 trace under LT-UA, through the shared parallel sweep runner
+//! (every run replays one pre-materialized trace).
 //!
 //! The capacity ILP prices SKUs by α_k and plans per-SKU throughput
-//! θ_{i,k}; execution is cheapest-SKU-first on scale-out and
-//! most-expensive-first on scale-in, so a mixed fleet should converge to
-//! the cheaper-per-throughput SKU and cost no more than the cheaper
-//! homogeneous fleet at equal SLA attainment.  Reported per fleet:
-//! per-SKU GPU-hours, total dollar cost, IW p95 TTFT and SLA attainment.
+//! θ_{i,k}; execution reclaims donated VMs most-valuable-spot-SKU-first,
+//! provisions fresh VMs cheapest-first, and scales in
+//! most-expensive-first, so a mixed fleet should converge to the
+//! best-$-per-θ SKU and cost no more than the cheaper homogeneous fleet
+//! at equal SLA attainment.
+//!
+//! The sweep doubles as the **routing ablation**: the three-way fleet
+//! runs twice — SKU-blind vs SKU-aware routing on the *same* trace and
+//! fleet — isolating what request-level SKU affinity adds on top of
+//! pool-level per-SKU scaling.  Reported per row: per-SKU GPU-hours,
+//! on-demand dollar cost, spot-market revenue, net cost, IW p95 TTFT
+//! and SLA attainment (`hetero_fleet_cost.csv`).
 
 use anyhow::Result;
 
@@ -24,70 +32,116 @@ pub fn fleet_specs() -> Vec<(&'static str, FleetSpec)> {
     vec![
         ("h100-only", FleetSpec::homogeneous(GpuKind::H100x8)),
         ("a100-only", FleetSpec::homogeneous(GpuKind::A100x8)),
+        ("mi300-only", FleetSpec::homogeneous(GpuKind::Mi300x8)),
         (
             "mixed-50-50",
             FleetSpec::mixed(&[(GpuKind::H100x8, 0.5), (GpuKind::A100x8, 0.5)]),
         ),
+        ("mixed-3way", FleetSpec::mixed_3way()),
     ]
 }
 
-pub fn hetero(opts: &ExpOptions) -> Result<()> {
-    let fleets = fleet_specs();
-    let cfgs: Vec<SimConfig> = fleets
-        .iter()
-        .map(|(_, fleet)| SimConfig {
-            trace: TraceConfig {
-                epoch: Epoch::Jul2025,
-                days: 7.0,
-                scale: opts.scale,
-                seed: opts.seed,
-                start_weekday: 0,
-                ..Default::default()
-            },
-            strategy: Strategy::LtUa,
-            fleet: fleet.clone(),
-            pjrt_forecaster: opts.pjrt,
-            artifacts_dir: opts.artifacts_dir.clone(),
-            ..Default::default()
+/// The sweep rows: every fleet under the default SKU-aware routing,
+/// plus the three-way fleet again with routing forced SKU-blind — the
+/// ablation pair shares fleet, trace and strategy, differing only in
+/// `RoutingParams::sku_affinity`.
+pub fn sweep_rows() -> Vec<(&'static str, &'static str, FleetSpec, bool)> {
+    let mut rows: Vec<(&'static str, &'static str, FleetSpec, bool)> = fleet_specs()
+        .into_iter()
+        .map(|(label, fleet)| {
+            let routing = if fleet.is_homogeneous() { "n/a" } else { "sku-aware" };
+            (label, routing, fleet, true)
         })
         .collect();
-    println!("  running {} fleet configurations over the week trace in parallel ...", cfgs.len());
+    rows.push(("mixed-3way", "sku-blind", FleetSpec::mixed_3way(), false));
+    rows
+}
+
+pub fn hetero(opts: &ExpOptions) -> Result<()> {
+    let grid = sweep_rows();
+    let cfgs: Vec<SimConfig> = grid
+        .iter()
+        .map(|(_, _, fleet, sku_aware)| {
+            let mut cfg = SimConfig {
+                trace: TraceConfig {
+                    epoch: Epoch::Jul2025,
+                    days: 7.0,
+                    scale: opts.scale,
+                    seed: opts.seed,
+                    start_weekday: 0,
+                    ..Default::default()
+                },
+                strategy: Strategy::LtUa,
+                fleet: fleet.clone(),
+                pjrt_forecaster: opts.pjrt,
+                artifacts_dir: opts.artifacts_dir.clone(),
+                ..Default::default()
+            };
+            cfg.routing.sku_affinity = *sku_aware;
+            cfg
+        })
+        .collect();
+    println!(
+        "  running {} fleet/routing configurations over the week trace in parallel ...",
+        cfgs.len()
+    );
     let results = run_configs(cfgs);
 
     let mut rows = Vec::new();
     let mut table = Vec::new();
-    for ((label, _), r) in fleets.iter().zip(&results) {
+    for ((label, routing, _, _), r) in grid.iter().zip(&results) {
         let end = r.end_time;
         let by_sku = r.metrics.gpu_hours_by_sku(end);
-        let h100_h = by_sku.get(&GpuKind::H100x8).copied().unwrap_or(0.0);
-        let a100_h = by_sku.get(&GpuKind::A100x8).copied().unwrap_or(0.0);
+        let hours = |g: GpuKind| by_sku.get(&g).copied().unwrap_or(0.0);
+        let (h100_h, a100_h, mi300_h) =
+            (hours(GpuKind::H100x8), hours(GpuKind::A100x8), hours(GpuKind::Mi300x8));
         let cost = r.metrics.fleet_dollar_cost(end);
+        let spot_rev = r.metrics.spot_revenue(end);
+        let net = r.metrics.net_fleet_cost(end);
         let iw = LatencySummary::from_outcomes(
             r.metrics.outcomes.iter().filter(|o| o.tier.is_interactive()),
         );
         let attain = (1.0 - iw.sla_violation_rate) * 100.0;
         rows.push(format!(
-            "{label},{h100_h:.2},{a100_h:.2},{cost:.0},{:.3},{attain:.2}",
+            "{label},{routing},{h100_h:.2},{a100_h:.2},{mi300_h:.2},{cost:.0},{spot_rev:.0},\
+             {net:.0},{:.3},{attain:.2}",
             iw.ttft_p95
         ));
         table.push(vec![
             label.to_string(),
+            routing.to_string(),
             format!("{h100_h:.0}"),
             format!("{a100_h:.0}"),
+            format!("{mi300_h:.0}"),
             format!("${cost:.0}"),
+            format!("${spot_rev:.0}"),
+            format!("${net:.0}"),
             format!("{:.2}", iw.ttft_p95),
             format!("{attain:.2}%"),
         ]);
     }
     opts.csv(
         "hetero_fleet_cost.csv",
-        "fleet,h100_gpu_hours,a100_gpu_hours,dollar_cost,iw_ttft_p95,sla_attainment_pct",
+        "fleet,routing,h100_gpu_hours,a100_gpu_hours,mi300_gpu_hours,dollar_cost,\
+         spot_revenue,net_cost,iw_ttft_p95,sla_attainment_pct",
         &rows,
     )?;
     print_table(
-        "exp hetero — fleet cost/SLA trade-off, week trace, LT-UA \
-         (expected: mixed costs no more than the cheaper homogeneous fleet at equal SLA)",
-        &["fleet", "H100-h", "A100-h", "cost", "IW p95 TTFT (s)", "SLA attain"],
+        "exp hetero — fleet cost/SLA trade-off + routing ablation, week trace, LT-UA \
+         (expected: mixed fleets cost no more than the cheaper homogeneous fleet at equal \
+         SLA; SKU-aware routing no worse on net cost than SKU-blind on the same 3-way fleet)",
+        &[
+            "fleet",
+            "routing",
+            "H100-h",
+            "A100-h",
+            "MI300-h",
+            "cost",
+            "spot rev",
+            "net",
+            "IW p95 TTFT (s)",
+            "SLA attain",
+        ],
         &table,
     );
     Ok(())

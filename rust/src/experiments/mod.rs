@@ -7,6 +7,11 @@
 //! the *shape* — who wins, by roughly what factor — is the reproduction
 //! target, and EXPERIMENTS.md records paper-vs-measured for each.
 
+// Rustdoc debt: public surface not yet audited for `missing_docs`
+// (PR 4 audited config, perf, coordinator::router and sim::cluster);
+// drop this allow once every pub item here is documented.
+#![allow(missing_docs)]
+
 pub mod burst;
 pub mod characterization;
 pub mod fidelity;

@@ -11,6 +11,11 @@
 //! * [`SeasonalNaive`] — ŷ[t+h] = mean of y at the same phase on previous
 //!   days; the forecasting baseline.
 
+// Rustdoc debt: public surface not yet audited for `missing_docs`
+// (PR 4 audited config, perf, coordinator::router and sim::cluster);
+// drop this allow once every pub item here is documented.
+#![allow(missing_docs)]
+
 use crate::runtime::ForecastExecutable;
 
 /// Multi-series TPS forecaster.  `history` is `[series][t]` (time

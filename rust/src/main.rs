@@ -4,7 +4,8 @@
 //!
 //! ```text
 //! sageserve exp <id|all> [--out DIR] [--scale F] [--pjrt] [--seed N]
-//! sageserve simulate --strategy S [--days F] [--scale F] [--epoch E] [--policy P] [--pjrt]
+//! sageserve simulate --strategy S [--days F] [--scale F] [--epoch E] [--policy P]
+//!                    [--fleet SPEC] [--routing sku-aware|blind] [--pjrt]
 //! sageserve serve [--requests N] [--max-new N] [--artifacts DIR]
 //! sageserve trace --out FILE [--days F] [--scale F] [--epoch E]
 //! sageserve selftest [--artifacts DIR]
@@ -125,8 +126,18 @@ fn dispatch(args: &[String]) -> Result<()> {
             }
             if let Some(v) = f("fleet") {
                 cfg.fleet = sageserve::config::FleetSpec::parse(&v).with_context(|| {
-                    format!("unknown fleet '{v}' (h100|a100|mixed or h100:0.5,a100:0.5)")
+                    format!(
+                        "unknown fleet '{v}' (h100|a100|mi300|mixed|mixed3 or \
+                         h100:0.5,mi300:0.5)"
+                    )
                 })?;
+            }
+            if let Some(r) = f("routing") {
+                cfg.routing.sku_affinity = match r.as_str() {
+                    "sku" | "sku-aware" | "aware" => true,
+                    "blind" | "sku-blind" => false,
+                    other => bail!("unknown routing policy '{other}' (sku-aware|blind)"),
+                };
             }
             if let Some(a) = f("artifacts") {
                 cfg.artifacts_dir = a;
@@ -246,15 +257,18 @@ fn report_simulation(sim: &sageserve::sim::engine::Simulation) {
         sim.metrics.scaling_waste.total_events(),
         sim.metrics.spot_hours(end),
     );
-    // Per-SKU GPU-hours and dollar cost (the heterogeneous-fleet view).
+    // Per-SKU GPU-hours and the spot-vs-on-demand cost split (the
+    // heterogeneous-fleet view).
     let by_sku = sim.metrics.gpu_hours_by_sku(end);
     if !by_sku.is_empty() {
         let parts: Vec<String> =
             by_sku.iter().map(|(g, h)| format!("{g} {h:.1} GPU-h")).collect();
         println!(
-            "  fleet: {}; total cost ${:.0}",
+            "  fleet: {}; on-demand ${:.0}, spot revenue ${:.0}, net ${:.0}",
             parts.join(", "),
-            sim.metrics.fleet_dollar_cost(end)
+            sim.metrics.fleet_dollar_cost(end),
+            sim.metrics.spot_revenue(end),
+            sim.metrics.net_fleet_cost(end)
         );
     }
 }
@@ -268,9 +282,11 @@ USAGE:
       regenerate paper figures/tables ({} ids; see DESIGN.md §5)
   sageserve simulate [--strategy siloed|reactive|lt-i|lt-u|lt-ua|chiron]
       [--days F] [--scale F] [--epoch jul2025|nov2024] [--policy fcfs|edf|pf|dpa]
-      [--fleet h100|a100|mixed|h100:W,a100:W] [--pjrt] [--replay trace.csv]
-      (--fleet picks the GPU fleet; mixed fleets report per-SKU GPU-hours
-       and dollar cost — see also `exp hetero`)
+      [--fleet h100|a100|mi300|mixed|mixed3|h100:W,mi300:W]
+      [--routing sku-aware|blind] [--pjrt] [--replay trace.csv]
+      (--fleet picks the GPU fleet; mixed fleets report per-SKU GPU-hours,
+       on-demand cost, spot revenue and net cost; --routing toggles
+       per-request SKU affinity — see also `exp hetero`)
   sageserve serve [--requests N] [--max-new N] [--artifacts DIR]
       real batched inference on the AOT transformer via PJRT
   sageserve trace --out FILE [--days F] [--scale F] [--epoch E] [--seed N]

@@ -1,9 +1,21 @@
 //! Metrics: latency recorders, SLA accounting, instance-hour ledgers and
 //! the scaling-waste ledger — everything the evaluation figures consume.
+//!
+//! Heterogeneous-fleet cost accounting splits on-demand spend from
+//! spot-market value per SKU: allocated hours are priced at α_k
+//! ([`Metrics::fleet_dollar_cost`]), donated hours earn the per-SKU
+//! [`crate::config::SpotMarket`] curve ([`Metrics::spot_revenue`]), and
+//! [`Metrics::net_fleet_cost`] is the difference — the number the
+//! `exp hetero` ablation compares fleets and routing policies on.
+
+// Rustdoc debt: public surface not yet audited for `missing_docs`
+// (PR 4 audited config, perf, coordinator::router and sim::cluster);
+// drop this allow once every pub item here is documented.
+#![allow(missing_docs)]
 
 use std::collections::BTreeMap;
 
-use crate::config::{GpuKind, ModelKind, Region, Tier, Time, HOUR};
+use crate::config::{GpuKind, ModelKind, Region, SpotMarket, Tier, Time, HOUR};
 use crate::trace::types::Request;
 
 /// Per-request outcome recorded at completion.
@@ -144,6 +156,35 @@ impl InstanceHourLedger {
         }
         out
     }
+
+    /// Integrate `count × rate(t)` over `[0, end]` where `rate` is $/h
+    /// and *hour-constant* (the [`SpotMarket`] curve's contract):
+    /// segments split at wall-clock hour boundaries, so the integral is
+    /// exact.  Returns dollars.
+    pub fn dollars(&self, end: Time, rate: impl Fn(Time) -> f64) -> f64 {
+        let mut total = 0.0;
+        let mut add = |t0: Time, t1: Time, count: usize| {
+            if count == 0 || t1 <= t0 {
+                return;
+            }
+            let mut t = t0;
+            while t < t1 {
+                let next_hour = ((t / HOUR).floor() + 1.0) * HOUR;
+                let seg_end = next_hour.min(t1);
+                total += count as f64 * rate(t) * (seg_end - t) / HOUR;
+                t = seg_end;
+            }
+        };
+        for w in self.points.windows(2) {
+            add(w[0].0.min(end), w[1].0.min(end), w[0].1);
+        }
+        if let Some(&(t, c)) = self.points.last() {
+            if t < end {
+                add(t, end, c);
+            }
+        }
+        total
+    }
 }
 
 /// GPU-hours wasted on scaling: time VMs spend provisioning, by cause
@@ -182,8 +223,11 @@ pub struct Metrics {
     /// GPU-hour and dollar-cost attribution for heterogeneous fleets
     /// (recorded at the same change points as `instances`).
     pub instances_by_gpu: BTreeMap<(ModelKind, Region, GpuKind), InstanceHourLedger>,
-    /// (model, region) → spot-donated-instance ledger.
-    pub spot_instances: BTreeMap<(ModelKind, Region), InstanceHourLedger>,
+    /// (model, region, GPU SKU) → spot-donated-instance ledger: the
+    /// single source of truth for donated capacity — totals
+    /// ([`Metrics::spot_hours`]) and the spot-market revenue integration
+    /// both derive from it.
+    pub spot_instances_by_gpu: BTreeMap<(ModelKind, Region, GpuKind), InstanceHourLedger>,
     pub scaling_waste: ScalingWasteLedger,
     /// Effective memory-utilization samples: (time, model, region, util).
     pub util_samples: Vec<(Time, ModelKind, Region, f64)>,
@@ -316,9 +360,10 @@ impl Metrics {
             .sum()
     }
 
-    /// Total spot-donated instance-hours.
+    /// Total spot-donated instance-hours (derived from the per-SKU
+    /// ledgers — every spot VM is a fleet SKU, so the split is total).
     pub fn spot_hours(&self, end: Time) -> f64 {
-        self.spot_instances.values().map(|l| l.instance_hours(end)).sum()
+        self.spot_instances_by_gpu.values().map(|l| l.instance_hours(end)).sum()
     }
 
     /// GPU-hours (instance-hours) per SKU across all models and regions.
@@ -337,6 +382,48 @@ impl Metrics {
             .iter()
             .map(|(gpu, hours)| gpu.dollars_per_hour() * hours)
             .sum()
+    }
+
+    /// On-demand dollar cost split per SKU (hours × α_k) — one half of
+    /// the spot-vs-on-demand breakdown.
+    pub fn fleet_dollar_cost_by_sku(&self, end: Time) -> BTreeMap<GpuKind, f64> {
+        self.gpu_hours_by_sku(end)
+            .into_iter()
+            .map(|(gpu, hours)| (gpu, gpu.dollars_per_hour() * hours))
+            .collect()
+    }
+
+    /// Spot-donated GPU-hours per SKU across all models and regions.
+    pub fn spot_hours_by_sku(&self, end: Time) -> BTreeMap<GpuKind, f64> {
+        let mut out = BTreeMap::new();
+        for ((_, _, gpu), ledger) in &self.spot_instances_by_gpu {
+            *out.entry(*gpu).or_insert(0.0) += ledger.instance_hours(end);
+        }
+        out
+    }
+
+    /// Spot-market revenue per SKU: donated hours priced along the
+    /// diurnal [`SpotMarket`] curve (exact — the curve is hour-constant
+    /// and the ledger integration splits at hour boundaries).
+    pub fn spot_revenue_by_sku(&self, end: Time) -> BTreeMap<GpuKind, f64> {
+        let mut out = BTreeMap::new();
+        for ((_, _, gpu), ledger) in &self.spot_instances_by_gpu {
+            let g = *gpu;
+            *out.entry(g).or_insert(0.0) += ledger.dollars(end, |t| SpotMarket::price(g, t));
+        }
+        out
+    }
+
+    /// Total spot-market revenue over `[0, end]` — what the donated pool
+    /// earns back at per-SKU spot prices.
+    pub fn spot_revenue(&self, end: Time) -> f64 {
+        self.spot_revenue_by_sku(end).values().sum()
+    }
+
+    /// Net fleet cost: on-demand spend minus spot-market revenue — the
+    /// heterogeneous-fleet headline metric (`exp hetero`).
+    pub fn net_fleet_cost(&self, end: Time) -> f64 {
+        self.fleet_dollar_cost(end) - self.spot_revenue(end)
     }
 
     /// Mean effective memory utilization for a model across samples.
@@ -506,6 +593,51 @@ mod tests {
         let cost = m.fleet_dollar_cost(HOUR);
         let want = 2.0 * GpuKind::H100x8.dollars_per_hour() + 4.0 * GpuKind::A100x8.dollars_per_hour();
         assert!((cost - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ledger_dollars_integrates_hour_constant_rates() {
+        let mut l = InstanceHourLedger::default();
+        l.record(0.0, 2);
+        l.record(2.0 * HOUR, 0);
+        // Constant $10/h: 2 instances × 2 h = $40.
+        assert!((l.dollars(3.0 * HOUR, |_| 10.0) - 40.0).abs() < 1e-9);
+        // Rate that doubles after the first hour: 2×10 + 2×20 = $60,
+        // even when the segment spans the boundary.
+        let stepped = |t: Time| if t < HOUR { 10.0 } else { 20.0 };
+        assert!((l.dollars(3.0 * HOUR, stepped) - 60.0).abs() < 1e-9);
+        // Truncation at `end` mid-segment.
+        assert!((l.dollars(0.5 * HOUR, |_| 10.0) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spot_revenue_prices_donated_hours_per_sku() {
+        use crate::config::SpotMarket;
+        let mut m = Metrics::default();
+        // One H100 donated for the first two (off-peak) hours of the day.
+        let led = m
+            .spot_instances_by_gpu
+            .entry((ModelKind::Llama2_70B, Region::EastUs, GpuKind::H100x8))
+            .or_default();
+        led.record(0.0, 1);
+        led.record(2.0 * HOUR, 0);
+        // One A100 donated across the 08:00→10:00 off-peak/peak edge.
+        let led = m
+            .spot_instances_by_gpu
+            .entry((ModelKind::Llama2_70B, Region::WestUs, GpuKind::A100x8))
+            .or_default();
+        led.record(8.0 * HOUR, 1);
+        led.record(10.0 * HOUR, 0);
+        let end = 24.0 * HOUR;
+        let by_sku = m.spot_revenue_by_sku(end);
+        let h100 = 2.0 * GpuKind::H100x8.spot_dollars_per_hour() * SpotMarket::OFF_PEAK;
+        let a100 = GpuKind::A100x8.spot_dollars_per_hour()
+            * (SpotMarket::OFF_PEAK + SpotMarket::PEAK);
+        assert!((by_sku[&GpuKind::H100x8] - h100).abs() < 1e-9);
+        assert!((by_sku[&GpuKind::A100x8] - a100).abs() < 1e-9);
+        assert!((m.spot_revenue(end) - h100 - a100).abs() < 1e-9);
+        // Net cost = on-demand − spot revenue (no allocated hours here).
+        assert!((m.net_fleet_cost(end) + h100 + a100).abs() < 1e-9);
     }
 
     #[test]

@@ -8,6 +8,11 @@
 //!   constraint in §5 couples different `i`) and returns the δ_{i,j,k}
 //!   instance-count changes.
 
+// Rustdoc debt: public surface not yet audited for `missing_docs`
+// (PR 4 audited config, perf, coordinator::router and sim::cluster);
+// drop this allow once every pub item here is documented.
+#![allow(missing_docs)]
+
 pub mod capacity;
 pub mod ilp;
 pub mod simplex;

@@ -10,15 +10,21 @@
 //! Profiles are anchored to the numbers the paper publishes: Llama2-70B
 //! prompt TPS ≈ 21 000 on 8×H100 (Fig 9), instance input-TPS capacity
 //! quartiles of §2.1 (Llama2-70B 95–522 on H100, 68–293 on A100; Bloom
-//! 82–397 / 50–177), and A100 ≈ H100 / 1.8.  The KV-cache byte costs come
-//! from the published architectures (layers × kv-heads × head-dim).
+//! 82–397 / 50–177), and A100 ≈ H100 / 1.8.  The MI300 class derates
+//! compute by 1.45× but carries 1.5 TiB of HBM and a deeper batch cap —
+//! the high-HBM/mid-throughput point on the §5 SKU axis, decisive for
+//! KV-heavy models (Bloom-class) and long-context traffic.  The KV-cache
+//! byte costs come from the published architectures
+//! (layers × kv-heads × head-dim).
 
 use crate::config::{GpuKind, ModelKind, Time};
 
 /// Static per-(model, GPU) performance profile.
 #[derive(Debug, Clone)]
 pub struct PerfProfile {
+    /// The model this profile describes.
     pub model: ModelKind,
+    /// The GPU SKU this profile describes.
     pub gpu: GpuKind,
     /// Prompt-phase throughput, tokens/sec for a saturated batch.
     pub prompt_tps: f64,
@@ -35,7 +41,9 @@ pub struct PerfProfile {
     pub kv_bytes_per_token: u64,
     /// Model weights resident size (GiB).
     pub weights_gib: f64,
-    /// Max concurrent sequences (continuous-batching running cap).
+    /// Max concurrent sequences (continuous-batching running cap) —
+    /// per-SKU: the MI300 class runs a deeper cap because its 1.5 TiB
+    /// of HBM keeps far more KV resident.
     pub max_batch: usize,
     /// Published input-TPS capacity anchor (§2.1 quartiles) — kept for
     /// reference/reporting; the ILP uses [`PerfProfile::input_tps_capacity`],
@@ -45,10 +53,13 @@ pub struct PerfProfile {
     pub published_tps_anchor: f64,
 }
 
-/// Reference request used for capacity derivation (≈ the trace means:
-/// RAG-heavy inputs, sub-1k outputs).
+/// Reference request *input* tokens used for capacity derivation (≈ the
+/// trace means: RAG-heavy inputs, sub-1k outputs).
 pub const REF_INPUT_TOKENS: u64 = 1_700;
+/// Reference request *output* tokens (see [`REF_INPUT_TOKENS`]).
 pub const REF_OUTPUT_TOKENS: u64 = 370;
+/// Reference request total KV reservation, input + output rounded up to
+/// the planning granularity (see [`REF_INPUT_TOKENS`]).
 pub const REF_TOTAL_TOKENS: u64 = 3_000;
 
 /// Fraction of saturation throughput an instance is *planned* at (the
@@ -77,9 +88,15 @@ impl PerfProfile {
             // (Fig 9 experiment) — placeholders refined at runtime.
             ModelKind::TinyLm => (40_000.0, 0.002, 0.0001, 16_384, 0.013, 10_000.0),
         };
-        let derate = match gpu {
-            GpuKind::H100x8 => 1.0,
-            GpuKind::A100x8 => 1.8,
+        // Compute derates off the H100 anchors: A100 by 1.8x (paper's
+        // quartile ratios); MI300-class by 1.45x (mid throughput).  The
+        // MI300's distinguishing axis is HBM, not FLOPs: 1.5 TiB per VM
+        // lets continuous batching hold a ~1.5x deeper running set, so
+        // its batch cap rises while the per-iteration times derate.
+        let (derate, max_batch) = match gpu {
+            GpuKind::H100x8 => (1.0, 64),
+            GpuKind::A100x8 => (1.8, 64),
+            GpuKind::Mi300x8 => (1.45, 96),
         };
         PerfProfile {
             model,
@@ -91,7 +108,7 @@ impl PerfProfile {
             tbt_per_kv_mib: 2.0e-8 * derate,
             kv_bytes_per_token: kv_bytes,
             weights_gib,
-            max_batch: 64,
+            max_batch,
             published_tps_anchor: anchor / derate,
         }
     }
@@ -209,6 +226,8 @@ impl PerfTable {
         t
     }
 
+    /// The profile for a (model, SKU) pair — O(1) via the dense slot
+    /// grid.  Panics if the pair is not in this table's fleet.
     pub fn profile(&self, model: ModelKind, gpu: GpuKind) -> &PerfProfile {
         match self.lookup[model.index()][gpu.index()] {
             Some(s) => &self.profiles[s as usize],
@@ -227,6 +246,7 @@ impl PerfTable {
         self.gpus[0]
     }
 
+    /// The models this table profiles, construction order.
     pub fn models(&self) -> impl Iterator<Item = ModelKind> + '_ {
         self.models.iter().copied()
     }
@@ -292,11 +312,42 @@ mod tests {
     #[test]
     fn kv_capacity_positive_for_all_pairs() {
         for m in ModelKind::EVAL5 {
-            for g in [GpuKind::H100x8, GpuKind::A100x8] {
+            for g in GpuKind::ALL {
                 let p = PerfProfile::get(m, g);
                 assert!(p.kv_capacity_tokens() > 10_000, "{m} on {g}");
             }
         }
+    }
+
+    #[test]
+    fn mi300_is_high_hbm_mid_throughput() {
+        let h = PerfProfile::get(ModelKind::Llama2_70B, GpuKind::H100x8);
+        let a = PerfProfile::get(ModelKind::Llama2_70B, GpuKind::A100x8);
+        let m = PerfProfile::get(ModelKind::Llama2_70B, GpuKind::Mi300x8);
+        // Mid throughput: between the H100 and A100 derates.
+        assert!(m.prompt_tps < h.prompt_tps && m.prompt_tps > a.prompt_tps);
+        assert!(m.tbt_base > h.tbt_base && m.tbt_base < a.tbt_base);
+        // High HBM: deeper batch cap and a larger serving budget.
+        assert!(m.max_batch > h.max_batch);
+        assert!(m.serving_kv_budget() > h.serving_kv_budget());
+        assert!(m.kv_capacity_tokens() > 2 * h.kv_capacity_tokens());
+        // A100 keeps the best $-per-θ for compute-bound Llama2 (the ILP
+        // ordering the 2-SKU tests rely on must survive k=3).
+        let per_theta = |p: &PerfProfile| p.gpu.dollars_per_hour() / p.input_tps_capacity();
+        assert!(per_theta(&a) < per_theta(&m), "A100 {} MI300 {}", per_theta(&a), per_theta(&m));
+        assert!(per_theta(&a) < per_theta(&h));
+    }
+
+    #[test]
+    fn mi300_dominates_for_kv_bound_bloom() {
+        // Bloom's 4 MiB/token KV makes the NVIDIA SKUs HBM-bound; the
+        // MI300's 1.5 TiB flips the economics: more concurrency, and a
+        // better $-per-θ than either 640 GiB SKU.
+        let h = PerfProfile::get(ModelKind::Bloom176B, GpuKind::H100x8);
+        let m = PerfProfile::get(ModelKind::Bloom176B, GpuKind::Mi300x8);
+        assert!(m.max_concurrency() > 2 * h.max_concurrency());
+        let per_theta = |p: &PerfProfile| p.gpu.dollars_per_hour() / p.input_tps_capacity();
+        assert!(per_theta(&m) < per_theta(&h));
     }
 
     #[test]
@@ -319,18 +370,21 @@ mod tests {
 
     #[test]
     fn fleet_table_covers_every_pair() {
-        let t = PerfTable::for_fleet(&[GpuKind::H100x8, GpuKind::A100x8], &ModelKind::EVAL4);
-        assert_eq!(t.gpus(), &[GpuKind::H100x8, GpuKind::A100x8]);
+        // The full k=3 fleet: every (model, SKU) pair gets a profile.
+        let t = PerfTable::for_fleet(&GpuKind::ALL, &ModelKind::EVAL4);
+        assert_eq!(t.gpus(), &GpuKind::ALL);
         for m in ModelKind::EVAL4 {
             for g in GpuKind::ALL {
                 let p = t.profile(m, g);
                 assert_eq!((p.model, p.gpu), (m, g));
             }
         }
-        // Per-SKU profiles differ (A100 derated) — the ILP's θ_{i,k}.
+        // Per-SKU profiles differ (A100/MI300 derated) — the ILP's θ_{i,k}.
         let h = t.profile(ModelKind::Llama2_70B, GpuKind::H100x8);
         let a = t.profile(ModelKind::Llama2_70B, GpuKind::A100x8);
+        let m = t.profile(ModelKind::Llama2_70B, GpuKind::Mi300x8);
         assert!(h.input_tps_capacity() > a.input_tps_capacity());
+        assert!(m.input_tps_capacity() > a.input_tps_capacity());
     }
 
     #[test]

@@ -12,6 +12,11 @@
 //!   prefill/decode execution.
 //! * [`forecast_exec`] — the hourly load-forecast executable.
 
+// Rustdoc debt: public surface not yet audited for `missing_docs`
+// (PR 4 audited config, perf, coordinator::router and sim::cluster);
+// drop this allow once every pub item here is documented.
+#![allow(missing_docs)]
+
 pub mod engine;
 pub mod forecast_exec;
 pub mod selftest;

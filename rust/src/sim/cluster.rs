@@ -10,6 +10,11 @@
 //!
 //! Scale-in drains the least-loaded instance and donates it to the spot
 //! pool (§2.3: a lost-opportunity sink that SageServe tries to shrink).
+//! Donated hours earn the per-SKU spot-market price
+//! ([`crate::config::SpotMarket`]); the autoscaler's unpinned scale-out
+//! first reclaims donated VMs most-valuable-SKU-first
+//! ([`Cluster::gpus_spot_desc`]) before burning fresh-VM budget
+//! cheapest-SKU-first.
 //!
 //! ## Incremental accounting
 //!
@@ -35,6 +40,7 @@ use crate::trace::types::Request;
 use std::collections::BTreeMap;
 use std::ops::Index;
 
+/// Index into [`Cluster::instances`] — stable for the VM's whole life.
 pub type InstanceId = usize;
 
 /// Which workload pool an instance belongs to.  `Unified` strategies use
@@ -42,15 +48,22 @@ pub type InstanceId = usize;
 /// interactive/mixed/batch trio [34].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum PoolTag {
+    /// One pool for all tiers (SageServe and the Reactive baseline).
     Unified,
+    /// Siloed baseline: the interactive-only pool.
     SiloIw,
+    /// Siloed baseline: the non-interactive-only pool.
     SiloNiw,
+    /// Chiron: the interactive pool.
     ChironInteractive,
+    /// Chiron: the mixed pool (serves both tiers).
     ChironMixed,
+    /// Chiron: the batch pool (NIW only).
     ChironBatch,
 }
 
 impl PoolTag {
+    /// Every pool tag, in [`PoolTag::index`] order.
     pub const ALL: [PoolTag; 6] = [
         PoolTag::Unified,
         PoolTag::SiloIw,
@@ -88,14 +101,25 @@ impl PoolTag {
 /// backpressure signal the routing/scaling hot path reads.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct PoolAgg {
+    /// Σ reserved KV tokens across the pool's active instances.
     pub kv_used: u64,
+    /// Σ KV serving budgets (the denominator of effective utilization).
     pub kv_capacity: u64,
+    /// Σ queued-but-unadmitted tokens.
     pub waiting_tokens: u64,
+    /// Σ queued + running tokens (the JSQ backpressure signal).
     pub pending_tokens: u64,
+    /// Number of active instances in this pool.
     pub count: usize,
     /// Active-instance counts split by GPU SKU (Σ == `count`) — the O(1)
     /// per-SKU signal the heterogeneity-aware scaling paths read.
     pub count_by_gpu: [usize; GpuKind::COUNT],
+    /// `kv_used` split by GPU SKU (Σ == `kv_used`) — with
+    /// `kv_capacity_by_gpu`, the O(1) per-SKU headroom signal SKU-aware
+    /// region routing reads.
+    pub kv_used_by_gpu: [u64; GpuKind::COUNT],
+    /// `kv_capacity` split by GPU SKU (Σ == `kv_capacity`).
+    pub kv_capacity_by_gpu: [u64; GpuKind::COUNT],
 }
 
 /// Per-(model, region) endpoint bookkeeping.
@@ -137,6 +161,8 @@ impl Endpoint {
             t.count += a.count;
             for k in 0..GpuKind::COUNT {
                 t.count_by_gpu[k] += a.count_by_gpu[k];
+                t.kv_used_by_gpu[k] += a.kv_used_by_gpu[k];
+                t.kv_capacity_by_gpu[k] += a.kv_capacity_by_gpu[k];
             }
         }
         t
@@ -161,6 +187,7 @@ impl EndpointMap {
         self.lookup[model.index()][region.index()].map(|s| s as usize)
     }
 
+    /// Insert or replace the endpoint at `key`.
     pub fn insert(&mut self, key: (ModelKind, Region), ep: Endpoint) {
         if let Some(s) = self.slot(key.0, key.1) {
             self.eps[s] = ep;
@@ -172,11 +199,13 @@ impl EndpointMap {
         self.eps.push(ep);
     }
 
+    /// O(1) endpoint lookup.
     #[inline]
     pub fn get(&self, key: &(ModelKind, Region)) -> Option<&Endpoint> {
         self.slot(key.0, key.1).map(|s| &self.eps[s])
     }
 
+    /// O(1) mutable endpoint lookup.
     #[inline]
     pub fn get_mut(&mut self, key: &(ModelKind, Region)) -> Option<&mut Endpoint> {
         match self.slot(key.0, key.1) {
@@ -185,6 +214,7 @@ impl EndpointMap {
         }
     }
 
+    /// The endpoint keys, insertion (dense-slot) order.
     pub fn keys(&self) -> impl Iterator<Item = &(ModelKind, Region)> + '_ {
         self.keys.iter()
     }
@@ -197,18 +227,22 @@ impl EndpointMap {
         self.keys[idx]
     }
 
+    /// The endpoints, dense-slot order (matches [`EndpointMap::keys`]).
     pub fn values(&self) -> impl Iterator<Item = &Endpoint> + '_ {
         self.eps.iter()
     }
 
+    /// (key, endpoint) pairs, dense-slot order.
     pub fn iter(&self) -> impl Iterator<Item = (&(ModelKind, Region), &Endpoint)> + '_ {
         self.keys.iter().zip(self.eps.iter())
     }
 
+    /// Number of endpoints (fixed after cluster construction).
     pub fn len(&self) -> usize {
         self.eps.len()
     }
 
+    /// True when no endpoint has been inserted.
     pub fn is_empty(&self) -> bool {
         self.eps.is_empty()
     }
@@ -241,7 +275,10 @@ struct InstSnapshot {
 
 /// The multi-region cluster state.
 pub struct Cluster {
+    /// Every VM the simulation ever created, indexed by [`InstanceId`]
+    /// (instances are never removed, only change state).
     pub instances: Vec<InstanceSim>,
+    /// Per-(model, region) endpoint bookkeeping and aggregates.
     pub endpoints: EndpointMap,
     /// Donated instances per region (still hosting their last model).
     pub spot_pool: BTreeMap<Region, Vec<InstanceId>>,
@@ -256,10 +293,27 @@ pub struct Cluster {
     pub gpus_cost_asc: Vec<GpuKind>,
     /// `gpus_cost_asc` reversed — the most-expensive-first scale-in order.
     pub gpus_cost_desc: Vec<GpuKind>,
+    /// Fleet SKUs by descending spot-market value
+    /// ([`GpuKind::spot_dollars_per_hour`]; stable, ties keep fleet
+    /// order) — the most-valuable-first spot *reclaim* order the
+    /// autoscaler uses before it falls back to fresh provisioning.
+    pub gpus_spot_desc: Vec<GpuKind>,
+    /// Fleet SKUs by descending HBM ([`GpuKind::hbm_gib`]; stable, ties
+    /// keep fleet order) — the SKU-affinity cascade for long-context
+    /// routing.
+    pub gpus_hbm_desc: Vec<GpuKind>,
+    /// True when the fleet spans more than one HBM size.  Gates the
+    /// long-context HBM affinity: on an HBM-uniform fleet (e.g. 50/50
+    /// H100+A100, both 640 GiB) "prefer the high-HBM SKU" would just
+    /// chase the tie-break SKU for no memory benefit, so the router
+    /// treats long-context requests like short ones there.
+    pub hbm_diverse: bool,
     /// Models whose weights are present in each region's repository
     /// (missing ⇒ 2 h remote redeploy).
     pub local_weights: BTreeMap<Region, Vec<ModelKind>>,
+    /// Per-(model, SKU) performance profiles for this fleet.
     pub perf: PerfTable,
+    /// Provisioning and scaling constants (§2.3, §4, §6).
     pub params: ScalingParams,
     /// Instances with a non-empty batch or waiting queue — the engine's
     /// O(1) all-idle check.
@@ -306,6 +360,14 @@ impl Cluster {
             .sort_by(|a, b| a.dollars_per_hour().partial_cmp(&b.dollars_per_hour()).unwrap());
         let mut gpus_cost_desc = gpus_cost_asc.clone();
         gpus_cost_desc.reverse();
+        let mut gpus_spot_desc = gpus.clone();
+        gpus_spot_desc.sort_by(|a, b| {
+            b.spot_dollars_per_hour().partial_cmp(&a.spot_dollars_per_hour()).unwrap()
+        });
+        let mut gpus_hbm_desc = gpus.clone();
+        gpus_hbm_desc.sort_by(|a, b| b.hbm_gib().partial_cmp(&a.hbm_gib()).unwrap());
+        let hbm_diverse = gpus_hbm_desc.first().map(|g| g.hbm_gib())
+            != gpus_hbm_desc.last().map(|g| g.hbm_gib());
         let mut cluster = Cluster {
             instances: Vec::new(),
             endpoints: EndpointMap::default(),
@@ -314,6 +376,9 @@ impl Cluster {
             gpus,
             gpus_cost_asc,
             gpus_cost_desc,
+            gpus_spot_desc,
+            gpus_hbm_desc,
+            hbm_diverse,
             local_weights: Region::ALL.iter().map(|&r| (r, models.to_vec())).collect(),
             perf,
             params,
@@ -431,6 +496,8 @@ impl Cluster {
             a.pending_tokens -= before.pending_tokens;
             a.count -= 1;
             a.count_by_gpu[before.gpu.index()] -= 1;
+            a.kv_used_by_gpu[before.gpu.index()] -= before.kv_used;
+            a.kv_capacity_by_gpu[before.gpu.index()] -= before.kv_capacity;
         }
         if after.active {
             let ep = self
@@ -444,6 +511,8 @@ impl Cluster {
             a.pending_tokens += after.pending_tokens;
             a.count += 1;
             a.count_by_gpu[after.gpu.index()] += 1;
+            a.kv_used_by_gpu[after.gpu.index()] += after.kv_used;
+            a.kv_capacity_by_gpu[after.gpu.index()] += after.kv_capacity;
         }
     }
 
@@ -491,7 +560,7 @@ impl Cluster {
             // §6.2).
             let prefill_budget = (profile.prompt_tps * 0.5) as u64;
             let admitted = if inst.state == InstState::Active {
-                inst.admit(now, prefill_budget)
+                inst.admit(now, prefill_budget, profile.max_batch)
             } else {
                 Vec::new()
             };
@@ -528,6 +597,41 @@ impl Cluster {
             .get(&(model, region))
             .map(|e| e.alloc_by_gpu)
             .unwrap_or([0; GpuKind::COUNT])
+    }
+
+    /// *Active* instances of one SKU at an endpoint, summed across
+    /// pools — the O(1) signal SKU-aware region routing reads ("does
+    /// this region have the preferred SKU serving right now?").
+    pub fn active_count_by_gpu(&self, model: ModelKind, region: Region, gpu: GpuKind) -> usize {
+        self.endpoints
+            .get(&(model, region))
+            .map(|e| e.agg.iter().map(|a| a.count_by_gpu[gpu.index()]).sum())
+            .unwrap_or(0)
+    }
+
+    /// Does one SKU at an endpoint still have KV headroom?  True when
+    /// the SKU's active instances exist and their summed reserved KV is
+    /// under `frac` of their summed capacity — the O(1) endpoint-level
+    /// approximation of the instance-level headroom test the affinity
+    /// cascade applies (queued-but-unadmitted tokens are not split per
+    /// SKU, so this reads reserved KV only).
+    pub fn sku_has_headroom(
+        &self,
+        model: ModelKind,
+        region: Region,
+        gpu: GpuKind,
+        frac: f64,
+    ) -> bool {
+        let Some(ep) = self.endpoints.get(&(model, region)) else {
+            return false;
+        };
+        let mut used = 0u64;
+        let mut cap = 0u64;
+        for a in &ep.agg {
+            used += a.kv_used_by_gpu[gpu.index()];
+            cap += a.kv_capacity_by_gpu[gpu.index()];
+        }
+        cap > 0 && (used as f64) < frac * cap as f64
     }
 
     /// Effective memory utilization across active instances (§6.1) —
@@ -583,7 +687,16 @@ impl Cluster {
     /// Scale out one instance of the requested GPU SKU, choosing the
     /// fastest source (§6.4) — spot reclaim and redeploy stay within the
     /// SKU, since a VM's silicon is fixed even when weights are not.
-    /// Returns `(instance id, ready time)`; records provisioning waste.
+    /// Returns `(instance id, ready time, previous model)`; the third
+    /// element is the model the VM hosted before (== `model` for fresh
+    /// VMs and same-model reclaims) so callers can re-record the *old*
+    /// endpoint's spot ledgers after a cross-model reclaim.  Records
+    /// provisioning waste.
+    ///
+    /// This is [`Cluster::reclaim_spot`] followed by
+    /// [`Cluster::provision_fresh`]; callers that want to order the two
+    /// sources differently across SKUs (the autoscaler's spot-first,
+    /// most-valuable-SKU-first policy) call them directly.
     pub fn scale_out(
         &mut self,
         model: ModelKind,
@@ -592,7 +705,30 @@ impl Cluster {
         gpu: GpuKind,
         now: Time,
         metrics: &mut Metrics,
-    ) -> Option<(InstanceId, Time)> {
+    ) -> Option<(InstanceId, Time, ModelKind)> {
+        self.reclaim_spot(model, region, pool, gpu, now, metrics).or_else(|| {
+            self.provision_fresh(model, region, pool, gpu, now, metrics)
+                .map(|(id, ready)| (id, ready, model))
+        })
+    }
+
+    /// Take one donated VM of the requested SKU back from the region's
+    /// spot pool (§6.4 sources 1–2): same-model reclaim in ~1 min, or a
+    /// cross-model VM with a ~10 min weights redeploy.  Returns
+    /// `(instance id, ready time, previous model)` — callers must
+    /// re-record the previous model's ledgers when it differs, or its
+    /// spot ledger would keep accruing revenue for a VM that left the
+    /// pool.  Returns `None` when the pool holds no VM of the SKU or
+    /// the endpoint is at `max_instances`.
+    pub fn reclaim_spot(
+        &mut self,
+        model: ModelKind,
+        region: Region,
+        pool: PoolTag,
+        gpu: GpuKind,
+        now: Time,
+        metrics: &mut Metrics,
+    ) -> Option<(InstanceId, Time, ModelKind)> {
         if self.allocated_count(model, region) >= self.params.max_instances {
             return None;
         }
@@ -606,7 +742,7 @@ impl Cluster {
             let ready = now + self.params.spot_reclaim_secs;
             metrics.scaling_waste.record("spot-same-model", self.params.spot_reclaim_secs);
             self.reassign(id, model, region, pool, ready);
-            return Some((id, ready));
+            return Some((id, ready, model));
         }
         // 2. cross-model spot instance of the SKU (weights redeploy).
         if let Some(pos) = {
@@ -623,9 +759,27 @@ impl Cluster {
             // Remove from the old endpoint's roster if still listed.
             self.roster_remove(old_model, region, id);
             self.reassign(id, model, region, pool, ready);
-            return Some((id, ready));
+            return Some((id, ready, old_model));
         }
-        // 3. fresh VM of the SKU from the regional budget.
+        None
+    }
+
+    /// Provision a fresh VM of the requested SKU from the regional
+    /// budget (§6.4 source 3): ~10 min when the weights are in the
+    /// region's repository, 2 h otherwise.  Returns `None` when the
+    /// budget is exhausted or the endpoint is at `max_instances`.
+    pub fn provision_fresh(
+        &mut self,
+        model: ModelKind,
+        region: Region,
+        pool: PoolTag,
+        gpu: GpuKind,
+        now: Time,
+        metrics: &mut Metrics,
+    ) -> Option<(InstanceId, Time)> {
+        if self.allocated_count(model, region) >= self.params.max_instances {
+            return None;
+        }
         if self.vm_budget[region.index()][gpu.index()] > 0 {
             self.vm_budget[region.index()][gpu.index()] -= 1;
             let local = self.local_weights[&region].contains(&model);
@@ -760,6 +914,8 @@ impl Cluster {
                     a.pending_tokens += waiting + running;
                     a.count += 1;
                     a.count_by_gpu[inst.gpu.index()] += 1;
+                    a.kv_used_by_gpu[inst.gpu.index()] += inst.kv_used;
+                    a.kv_capacity_by_gpu[inst.gpu.index()] += inst.kv_capacity;
                 }
                 // Roster caches agree with pool eligibility.
                 ok &= ep.iw_instances.contains(&i) == inst.pool.serves_iw();
@@ -821,11 +977,12 @@ mod tests {
         let id = c.scale_in(ModelKind::Llama2_70B, Region::EastUs, None, None).unwrap();
         c.finish_drain(id);
         assert_eq!(c.spot_count(Region::EastUs), 1);
-        let (id2, ready) = c
+        let (id2, ready, prev) = c
             .scale_out(ModelKind::Llama2_70B, Region::EastUs, PoolTag::Unified,
                        GpuKind::A100x8, 100.0, &mut metrics)
             .unwrap();
         assert_eq!(id, id2);
+        assert_eq!(prev, ModelKind::Llama2_70B); // same-model reclaim
         assert!((ready - 160.0).abs() < 1e-9); // 1 min spot reclaim
         assert_eq!(c.spot_count(Region::EastUs), 0);
         assert!(c.aggregates_consistent());
@@ -837,11 +994,13 @@ mod tests {
         let mut metrics = Metrics::default();
         let id = c.scale_in(ModelKind::Bloom176B, Region::WestUs, None, None).unwrap();
         c.finish_drain(id);
-        let (id2, ready) = c
+        let (id2, ready, prev) = c
             .scale_out(ModelKind::Llama2_70B, Region::WestUs, PoolTag::Unified,
                        GpuKind::A100x8, 0.0, &mut metrics)
             .unwrap();
         assert_eq!(id, id2);
+        // The caller learns whose spot ledger to re-record.
+        assert_eq!(prev, ModelKind::Bloom176B);
         assert!((ready - 600.0).abs() < 1e-9); // 10 min redeploy
         assert_eq!(c.instances[id2].model, ModelKind::Llama2_70B);
         // KV capacity switched to the new model's profile.
@@ -858,7 +1017,7 @@ mod tests {
         let mut metrics = Metrics::default();
         let gpu = GpuKind::A100x8;
         let before = c.vm_budget[Region::EastUs.index()][gpu.index()];
-        let (_id, ready) = c
+        let (_id, ready, _) = c
             .scale_out(ModelKind::Llama31_8B, Region::EastUs, PoolTag::Unified, gpu, 0.0, &mut metrics)
             .unwrap();
         assert_eq!(c.vm_budget[Region::EastUs.index()][gpu.index()], before - 1);
@@ -870,7 +1029,7 @@ mod tests {
         let mut c = cluster();
         c.local_weights.get_mut(&Region::WestUs).unwrap().retain(|&m| m != ModelKind::Bloom176B);
         let mut metrics = Metrics::default();
-        let (_, ready) = c
+        let (_, ready, _) = c
             .scale_out(ModelKind::Bloom176B, Region::WestUs, PoolTag::Unified,
                        GpuKind::A100x8, 0.0, &mut metrics)
             .unwrap();
@@ -936,9 +1095,10 @@ mod tests {
             assert_eq!(by_gpu[GpuKind::H100x8.index()], 2);
             assert_eq!(by_gpu[GpuKind::A100x8.index()], 2);
             // The per-region VM budget splits across SKUs by fleet
-            // weight (largest remainder: 5 → 3 + 2), keeping total
-            // resources equal to a homogeneous fleet's.
-            assert_eq!(c.vm_budget[r.index()], [3, 2]);
+            // weight (largest remainder: 5 → 3 + 2; no MI300 in this
+            // fleet), keeping total resources equal to a homogeneous
+            // fleet's.
+            assert_eq!(c.vm_budget[r.index()], [3, 2, 0]);
         }
         assert!(c.instances.iter().any(|i| i.gpu == GpuKind::H100x8));
         assert!(c.instances.iter().any(|i| i.gpu == GpuKind::A100x8));
@@ -958,19 +1118,128 @@ mod tests {
         assert_eq!(c.allocated_by_gpu(m, r)[GpuKind::H100x8.index()], 1);
         // Scaling out an A100 must NOT reclaim the H100 spot VM: it
         // provisions a fresh A100 (10 min), leaving the spot pool alone.
-        let (a_id, ready) = c
+        let (a_id, ready, _) = c
             .scale_out(m, r, PoolTag::Unified, GpuKind::A100x8, 0.0, &mut metrics)
             .unwrap();
         assert_eq!(c.instances[a_id].gpu, GpuKind::A100x8);
         assert!((ready - 600.0).abs() < 1e-9);
         assert_eq!(c.spot_count(r), 1);
         // Scaling out an H100 reclaims the same-SKU spot VM in 1 min.
-        let (h_id, ready) = c
+        let (h_id, ready, _) = c
             .scale_out(m, r, PoolTag::Unified, GpuKind::H100x8, 0.0, &mut metrics)
             .unwrap();
         assert_eq!(h_id, id);
         assert!((ready - 60.0).abs() < 1e-9);
         assert_eq!(c.spot_count(r), 0);
+        assert!(c.aggregates_consistent());
+    }
+
+    fn three_way_cluster() -> Cluster {
+        let fleet = FleetSpec::mixed_3way();
+        Cluster::new_fleet(
+            &[ModelKind::Llama2_70B],
+            PerfTable::for_fleet(&GpuKind::ALL, &[ModelKind::Llama2_70B]),
+            ScalingParams::default(),
+            &[(PoolTag::Unified, 6)],
+            6,
+            &fleet,
+        )
+    }
+
+    #[test]
+    fn precomputed_sku_orders_match_price_sheets() {
+        let c = three_way_cluster();
+        // α ascending: A100 < MI300 < H100.
+        assert_eq!(
+            c.gpus_cost_asc,
+            vec![GpuKind::A100x8, GpuKind::Mi300x8, GpuKind::H100x8]
+        );
+        assert_eq!(
+            c.gpus_cost_desc,
+            vec![GpuKind::H100x8, GpuKind::Mi300x8, GpuKind::A100x8]
+        );
+        // Spot value descending: H100 > MI300 > A100.
+        assert_eq!(
+            c.gpus_spot_desc,
+            vec![GpuKind::H100x8, GpuKind::Mi300x8, GpuKind::A100x8]
+        );
+        // HBM descending: MI300 first; the 640 GiB tie keeps fleet order.
+        assert_eq!(
+            c.gpus_hbm_desc,
+            vec![GpuKind::Mi300x8, GpuKind::H100x8, GpuKind::A100x8]
+        );
+    }
+
+    #[test]
+    fn three_way_fleet_splits_and_accounts() {
+        let c = three_way_cluster();
+        assert!(c.hbm_diverse);
+        for r in Region::ALL {
+            let by_gpu = c.allocated_by_gpu(ModelKind::Llama2_70B, r);
+            assert_eq!(by_gpu, [2, 2, 2]);
+            assert_eq!(c.vm_budget[r.index()], [2, 2, 2]);
+            for g in GpuKind::ALL {
+                assert_eq!(c.active_count_by_gpu(ModelKind::Llama2_70B, r, g), 2);
+            }
+        }
+        assert!(c.aggregates_consistent());
+    }
+
+    #[test]
+    fn sku_headroom_tracks_per_sku_kv() {
+        let mut c = three_way_cluster();
+        let (m, r) = (ModelKind::Llama2_70B, Region::EastUs);
+        // Idle instances: every SKU has headroom.
+        for g in GpuKind::ALL {
+            assert!(c.sku_has_headroom(m, r, g, 0.70), "{g}");
+        }
+        // Fill only the MI300s past the fraction: MI300 loses headroom,
+        // the other SKUs keep it (per-SKU aggregates, not the endpoint
+        // total, drive the signal).
+        let ids = c.endpoints[&(m, r)].instances.clone();
+        for id in ids {
+            if c.instances[id].gpu == GpuKind::Mi300x8 {
+                c.mutate(id, |inst| {
+                    inst.kv_used = (inst.kv_capacity as f64 * 0.9) as u64;
+                });
+            }
+        }
+        assert!(!c.sku_has_headroom(m, r, GpuKind::Mi300x8, 0.70));
+        assert!(c.sku_has_headroom(m, r, GpuKind::H100x8, 0.70));
+        assert!(c.sku_has_headroom(m, r, GpuKind::A100x8, 0.70));
+        // No active instance of a SKU ⇒ no headroom (capacity 0).
+        let ids = c.endpoints[&(m, r)].instances.clone();
+        for id in ids {
+            if c.instances[id].gpu == GpuKind::H100x8 {
+                c.mutate(id, |inst| inst.state = InstState::Draining);
+            }
+        }
+        assert!(!c.sku_has_headroom(m, r, GpuKind::H100x8, 0.70));
+        assert!(c.aggregates_consistent());
+    }
+
+    #[test]
+    fn reclaim_spot_and_provision_fresh_are_disjoint_sources() {
+        let mut c = three_way_cluster();
+        let mut metrics = Metrics::default();
+        let (m, r) = (ModelKind::Llama2_70B, Region::EastUs);
+        // Nothing donated yet: reclaim fails, fresh provisioning works.
+        assert!(c.reclaim_spot(m, r, PoolTag::Unified, GpuKind::Mi300x8, 0.0, &mut metrics)
+            .is_none());
+        let (id, ready) = c
+            .provision_fresh(m, r, PoolTag::Unified, GpuKind::Mi300x8, 0.0, &mut metrics)
+            .unwrap();
+        assert_eq!(c.instances[id].gpu, GpuKind::Mi300x8);
+        assert!((ready - 600.0).abs() < 1e-9);
+        // Donate an MI300, then reclaim it same-model in 1 min.
+        let drained = c.scale_in(m, r, None, Some(GpuKind::Mi300x8)).unwrap();
+        c.finish_drain(drained);
+        let (id2, ready2, prev) = c
+            .reclaim_spot(m, r, PoolTag::Unified, GpuKind::Mi300x8, 100.0, &mut metrics)
+            .unwrap();
+        assert_eq!(id2, drained);
+        assert_eq!(prev, m);
+        assert!((ready2 - 160.0).abs() < 1e-9);
         assert!(c.aggregates_consistent());
     }
 

@@ -4,6 +4,11 @@
 //! at the same timestamp pop in push order, which keeps simulations
 //! reproducible run-to-run.
 
+// Rustdoc debt: public surface not yet audited for `missing_docs`
+// (PR 4 audited config, perf, coordinator::router and sim::cluster);
+// drop this allow once every pub item here is documented.
+#![allow(missing_docs)]
+
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 

@@ -14,6 +14,11 @@
 //! conservative reservation), which makes `kv_used / kv_capacity` — the
 //! paper's *effective memory utilization* — a faithful load proxy.
 
+// Rustdoc debt: public surface not yet audited for `missing_docs`
+// (PR 4 audited config, perf, coordinator::router and sim::cluster);
+// drop this allow once every pub item here is documented.
+#![allow(missing_docs)]
+
 use crate::config::{GpuKind, ModelKind, Region, Time};
 use crate::perf::PerfProfile;
 use crate::sim::cluster::{InstanceId, PoolTag};
@@ -26,7 +31,12 @@ use crate::trace::types::Request;
 /// under the 1 s IW-F TTFT SLA.
 pub const CHUNK_ITERS: u32 = 8;
 
-/// Max sequences decoding concurrently (vLLM-style running cap).
+/// Default max sequences decoding concurrently (vLLM-style running
+/// cap).  The cap is per-SKU — [`crate::perf::PerfProfile::max_batch`]
+/// is what [`crate::sim::cluster::Cluster::plan_next_chunk`] actually
+/// passes to [`InstanceSim::admit`]; high-HBM SKUs (MI300-class) run
+/// deeper.  This constant is the 640 GiB-SKU value, kept for tests and
+/// as the documentation anchor.
 pub const MAX_BATCH: usize = 64;
 
 /// Instance lifecycle (§2.3 provisioning, §6.4 scaling, spot donation).
@@ -197,16 +207,24 @@ impl InstanceSim {
     /// * `prefill_budget_tokens` bounds the prompt tokens admitted into
     ///   one chunk, so a bulk admission cannot stall co-admitted IW TTFT
     ///   (the paper's NIW chunking — §6.2).
+    /// * `max_batch` is the SKU's continuous-batching running cap
+    ///   ([`crate::perf::PerfProfile::max_batch`]; high-HBM SKUs run
+    ///   deeper).
     /// * Fresh NIW (still priority 1 at `now`) only fills up to
     ///   [`Self::NIW_ADMIT_CAP`] of the KV budget; IW and aged NIW use it
     ///   all.
-    pub fn admit(&mut self, now: Time, prefill_budget_tokens: u64) -> Vec<Request> {
+    pub fn admit(
+        &mut self,
+        now: Time,
+        prefill_budget_tokens: u64,
+        max_batch: usize,
+    ) -> Vec<Request> {
         // Scan the (policy-ordered) head for the admissible prefix, then
         // drain it in one pass — O(prefix) instead of O(Q) per admission.
         let mut take = 0usize;
         let mut prefill_tokens = 0u64;
         let mut kv_used = self.kv_used;
-        while take < self.waiting.len() && self.batch.len() + take < MAX_BATCH {
+        while take < self.waiting.len() && self.batch.len() + take < max_batch {
             let head = &self.waiting[take];
             let need = head.total_tokens();
             // An oversized request on an empty batch is served anyway with
@@ -336,7 +354,7 @@ mod tests {
         let mut i = inst();
         i.push_waiting(req(1, 60_000, 10_000));
         i.push_waiting(req(2, 40_000, 10_000)); // would exceed 100k
-        let admitted = i.admit(0.0, u64::MAX);
+        let admitted = i.admit(0.0, u64::MAX, MAX_BATCH);
         assert_eq!(admitted.len(), 1);
         assert_eq!(i.kv_used, 70_000);
         assert_eq!(i.waiting.len(), 1);
@@ -348,7 +366,7 @@ mod tests {
         for n in 0..(MAX_BATCH + 10) {
             i.push_waiting(req(n as u64, 10, 10));
         }
-        let admitted = i.admit(0.0, u64::MAX);
+        let admitted = i.admit(0.0, u64::MAX, MAX_BATCH);
         assert_eq!(admitted.len(), MAX_BATCH);
     }
 
@@ -356,7 +374,7 @@ mod tests {
     fn short_request_completes_within_first_chunk() {
         let mut i = inst();
         i.push_waiting(req(1, 1000, 6)); // 6 < CHUNK_ITERS
-        let adm = i.admit(0.0, u64::MAX);
+        let adm = i.admit(0.0, u64::MAX, MAX_BATCH);
         let plan = i.plan_chunk(0.0, adm, &perf()).unwrap();
         assert_eq!(plan.completions.len(), 1);
         let p = perf();
@@ -372,7 +390,7 @@ mod tests {
     fn long_request_spans_chunks() {
         let mut i = inst();
         i.push_waiting(req(1, 1000, 200));
-        let adm = i.admit(0.0, u64::MAX);
+        let adm = i.admit(0.0, u64::MAX, MAX_BATCH);
         let plan = i.plan_chunk(0.0, adm, &perf()).unwrap();
         assert!(plan.completions.is_empty());
         assert_eq!(i.batch[0].remaining, 200 - CHUNK_ITERS);
@@ -403,7 +421,7 @@ mod tests {
     fn retire_frees_memory() {
         let mut i = inst();
         i.push_waiting(req(1, 100, 8)); // completes within one chunk
-        let adm = i.admit(0.0, u64::MAX);
+        let adm = i.admit(0.0, u64::MAX, MAX_BATCH);
         assert_eq!(i.kv_used, 108);
         i.plan_chunk(0.0, adm, &perf()).unwrap();
         let done = i.retire_completed();
@@ -442,7 +460,7 @@ mod tests {
         for n in 0..3 {
             i.push_waiting(niw_req(n, 0.0, 20_000, 5_000));
         }
-        let admitted = i.admit(100.0, u64::MAX);
+        let admitted = i.admit(100.0, u64::MAX, MAX_BATCH);
         assert_eq!(admitted.len(), 2);
         assert_eq!(i.kv_used, 50_000);
         assert_eq!(i.waiting.len(), 1);
@@ -455,7 +473,7 @@ mod tests {
             i.push_waiting(niw_req(n, 0.0, 20_000, 5_000));
         }
         // 11 hours later the requests are priority 0 (aged past 10 h).
-        let admitted = i.admit(11.0 * 3600.0, u64::MAX);
+        let admitted = i.admit(11.0 * 3600.0, u64::MAX, MAX_BATCH);
         assert_eq!(admitted.len(), 3);
     }
 
@@ -465,7 +483,7 @@ mod tests {
         for n in 0..3 {
             i.push_waiting(req(n, 20_000, 5_000)); // IW-F
         }
-        let admitted = i.admit(0.0, u64::MAX);
+        let admitted = i.admit(0.0, u64::MAX, MAX_BATCH);
         assert_eq!(admitted.len(), 3);
     }
 
@@ -477,9 +495,9 @@ mod tests {
         }
         // Budget of 15k prompt tokens: first request always admitted,
         // second would exceed ⇒ chunked to one per call.
-        let admitted = i.admit(0.0, 15_000);
+        let admitted = i.admit(0.0, 15_000, MAX_BATCH);
         assert_eq!(admitted.len(), 1);
-        let admitted = i.admit(0.0, 15_000);
+        let admitted = i.admit(0.0, 15_000, MAX_BATCH);
         assert_eq!(admitted.len(), 1);
     }
 
@@ -487,7 +505,7 @@ mod tests {
     fn oversized_request_served_with_truncated_reservation() {
         let mut i = inst();
         i.push_waiting(req(1, 90_000, 20_000)); // 110k > 100k capacity
-        let admitted = i.admit(0.0, u64::MAX);
+        let admitted = i.admit(0.0, u64::MAX, MAX_BATCH);
         assert_eq!(admitted.len(), 1);
         assert!(i.kv_used <= i.kv_capacity);
     }
@@ -496,7 +514,7 @@ mod tests {
     fn util_is_kv_fraction() {
         let mut i = inst();
         i.push_waiting(req(1, 30_000, 20_000));
-        let adm = i.admit(0.0, u64::MAX);
+        let adm = i.admit(0.0, u64::MAX, MAX_BATCH);
         i.plan_chunk(0.0, adm, &perf()).unwrap();
         assert!((i.effective_util() - 0.5).abs() < 1e-9);
     }

@@ -646,7 +646,7 @@ fn token_params(model: ModelKind, app: AppKind) -> (f64, f64, f64, f64) {
 }
 
 /// Streaming iterator over the trace, minute-bucketed.  Draws each
-/// minute through the same counter-seeded [`TraceGenerator::fill_minute`]
+/// minute through the same counter-seeded `TraceGenerator::fill_minute`
 /// as the parallel materializer, so the sequences are identical.
 pub struct TraceStream<'a> {
     generator: &'a TraceGenerator,

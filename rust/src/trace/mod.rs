@@ -7,6 +7,11 @@
 //! per-region amplitudes, diurnal/weekly periodicity, token-count CDFs,
 //! the 5× Nov-2024 → Jul-2025 growth, and the application mix of Fig 6a.
 
+// Rustdoc debt: public surface not yet audited for `missing_docs`
+// (PR 4 audited config, perf, coordinator::router and sim::cluster);
+// drop this allow once every pub item here is documented.
+#![allow(missing_docs)]
+
 pub mod generator;
 pub mod io;
 pub mod stats;

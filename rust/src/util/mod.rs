@@ -11,6 +11,11 @@
 //! * [`proptest`] — seeded random-input sweep helper for property-style
 //!   tests.
 
+// Rustdoc debt: public surface not yet audited for `missing_docs`
+// (PR 4 audited config, perf, coordinator::router and sim::cluster);
+// drop this allow once every pub item here is documented.
+#![allow(missing_docs)]
+
 pub mod bench;
 pub mod json;
 pub mod proptest;

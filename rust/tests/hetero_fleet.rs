@@ -1,8 +1,11 @@
 //! Heterogeneous-fleet integration tests: the per-SKU plumbing must be
 //! invisible for single-SKU fleets (the degenerate case every paper
-//! experiment runs), deterministic, conservation-safe for mixed fleets,
-//! and cost-ordered (a mixed fleet must not out-spend the expensive
-//! homogeneous fleet it can always imitate).
+//! experiment runs), deterministic, conservation-safe for mixed fleets
+//! (including the k=3 three-way fleet), and cost-ordered (a mixed fleet
+//! must not out-spend the expensive homogeneous fleet it can always
+//! imitate).  SKU-aware routing rides the same bars: identical to blind
+//! on homogeneous fleets, deterministic on mixed ones, and no worse on
+//! net cost at equal SLA attainment in the mixed-fleet ablation.
 
 use sageserve::config::{FleetSpec, GpuKind, ModelKind};
 use sageserve::sim::engine::{quick_config, run_simulation, SimConfig, Strategy};
@@ -92,4 +95,155 @@ fn mixed_fleet_cheaper_than_h100_only() {
         cost_mixed < cost_h100,
         "mixed fleet (${cost_mixed:.0}) must undercut H100-only (${cost_h100:.0})"
     );
+}
+
+/// The k=3 three-way fleet keeps every engine invariant: request
+/// conservation, coherent aggregates, per-SKU GPU-hour ledgers that sum
+/// to the endpoint totals across all three SKUs, and determinism — the
+/// ILP-plan-to-execution pipeline conserves instances at k=3.
+#[test]
+fn three_way_fleet_conserves_and_accounts_per_sku() {
+    let mut cfg = quick(Strategy::LtUa);
+    cfg.fleet = FleetSpec::mixed_3way();
+    let total = TraceGenerator::new(cfg.trace.clone()).stream().count();
+    let sim = run_simulation(cfg);
+    assert_eq!(
+        sim.metrics.outcomes.len() + sim.metrics.dropped as usize,
+        total,
+        "three-way fleet lost requests"
+    );
+    assert_eq!(sim.metrics.dropped, 0);
+    assert!(sim.cluster.aggregates_consistent());
+
+    let end = sim.end_time();
+    let by_sku = sim.metrics.gpu_hours_by_sku(end);
+    for g in GpuKind::ALL {
+        assert!(
+            by_sku.get(&g).copied().unwrap_or(0.0) > 0.0,
+            "{g} hosted no instance-hours in the three-way fleet"
+        );
+    }
+    let total_h = sim.metrics.model_instance_hours(ModelKind::Llama2_70B, end);
+    let sku_h: f64 = by_sku.values().sum();
+    assert!(
+        (total_h - sku_h).abs() < 1e-6 * total_h.max(1.0),
+        "per-SKU hours {sku_h} != total {total_h}"
+    );
+    // The spot-vs-on-demand split is internally consistent.
+    let cost_sum: f64 = sim.metrics.fleet_dollar_cost_by_sku(end).values().sum();
+    assert!((cost_sum - sim.metrics.fleet_dollar_cost(end)).abs() < 1e-6);
+    assert!(sim.metrics.spot_revenue(end) >= 0.0);
+    assert!(
+        sim.metrics.net_fleet_cost(end) <= sim.metrics.fleet_dollar_cost(end) + 1e-9,
+        "spot revenue must not increase net cost"
+    );
+
+    // Determinism across runs at k=3.
+    let mut cfg2 = quick(Strategy::LtUa);
+    cfg2.fleet = FleetSpec::mixed_3way();
+    let sim2 = run_simulation(cfg2);
+    assert!(sim.metrics == sim2.metrics, "three-way fleet nondeterministic");
+}
+
+/// On a homogeneous fleet the SKU-aware router short-circuits to blind
+/// JSQ by construction — the two policies must produce *identical*
+/// metrics, outcome for outcome.
+#[test]
+fn sku_routing_is_identity_on_single_sku_fleets() {
+    for strategy in [Strategy::Reactive, Strategy::LtUa] {
+        let aware = run_simulation(quick(strategy));
+        let mut cfg = quick(strategy);
+        cfg.routing.sku_affinity = false;
+        let blind = run_simulation(cfg);
+        assert!(
+            aware.metrics == blind.metrics,
+            "{}: SKU-aware diverged from blind on a homogeneous fleet",
+            strategy.name()
+        );
+    }
+}
+
+/// The routing ablation on the same three-way fleet and trace:
+/// SKU-aware must be deterministic, and no worse on net cost at equal
+/// SLA attainment (small tolerances — the quick trace is tiny, so the
+/// two runs differ by at most a few scaling events).
+#[test]
+fn sku_aware_routing_no_worse_than_blind_on_mixed_fleet() {
+    let run = |sku_aware: bool| {
+        let mut cfg = quick(Strategy::LtUa);
+        cfg.fleet = FleetSpec::mixed_3way();
+        cfg.routing.sku_affinity = sku_aware;
+        run_simulation(cfg)
+    };
+    let aware = run(true);
+    let aware2 = run(true);
+    assert!(aware.metrics == aware2.metrics, "SKU-aware routing nondeterministic");
+    let blind = run(false);
+
+    let end = aware.end_time();
+    let net_aware = aware.metrics.net_fleet_cost(end);
+    let net_blind = blind.metrics.net_fleet_cost(blind.end_time());
+    assert!(net_aware > 0.0 && net_blind > 0.0);
+    assert!(
+        net_aware <= net_blind * 1.05 + 1.0,
+        "SKU-aware net cost ${net_aware:.0} worse than blind ${net_blind:.0}"
+    );
+
+    let attainment = |sim: &sageserve::sim::engine::Simulation| {
+        let iw: Vec<_> = sim
+            .metrics
+            .outcomes
+            .iter()
+            .filter(|o| o.tier.is_interactive())
+            .collect();
+        iw.iter().filter(|o| o.sla_met).count() as f64 / iw.len().max(1) as f64
+    };
+    let (sla_aware, sla_blind) = (attainment(&aware), attainment(&blind));
+    assert!(
+        sla_aware >= sla_blind - 0.02,
+        "SKU-aware SLA attainment {sla_aware:.4} fell below blind {sla_blind:.4}"
+    );
+}
+
+/// The §5 ILP at k=3: every per-(model, region) plan entry carries one
+/// delta per fleet SKU, and executing a plan never double-counts — the
+/// summed per-SKU allocation always matches the endpoint roster.
+#[test]
+fn k3_epoch_plans_align_with_fleet_axis() {
+    use sageserve::coordinator::controller::{run_epoch, Telemetry};
+    use sageserve::forecast::SeasonalNaive;
+    use sageserve::config::{Region, ScalingParams};
+    use sageserve::perf::PerfTable;
+    use std::collections::BTreeMap;
+
+    let models = [ModelKind::Llama2_70B];
+    let mut telemetry = Telemetry::new(&models, 900.0);
+    let mut warm = BTreeMap::new();
+    for r in Region::ALL {
+        let tps = if r == Region::EastUs { 20_000.0 } else { 50.0 };
+        warm.insert((ModelKind::Llama2_70B, r), vec![tps; 192]);
+    }
+    telemetry.warmup(&warm);
+    let gpus = GpuKind::ALL;
+    let perf = PerfTable::for_fleet(&gpus, &models);
+    let params = ScalingParams::default();
+    let mut forecaster = SeasonalNaive::new(96, 4);
+    let mut counts = BTreeMap::new();
+    for r in Region::ALL {
+        counts.insert((ModelKind::Llama2_70B, r), vec![1usize, 1, 1]);
+    }
+    let plan = run_epoch(&telemetry, &mut forecaster, &perf, &gpus, &params, &counts, 0.0);
+    assert_eq!(plan.len(), 3, "one entry per region");
+    for entry in &plan {
+        assert_eq!(entry.deltas.len(), 3, "k=3 plans carry one delta per SKU");
+        // Plans never shrink below zero instances of any SKU.
+        for (k, &d) in entry.deltas.iter().enumerate() {
+            assert!(1 + d >= 0, "SKU {k} delta {d} under-runs current count");
+        }
+    }
+    // The hot region must be planned up: ε × its ~20k-TPS peak exceeds
+    // the three incumbents' combined θ (≈7.4k TPS), so the §5 local
+    // floor forces east growth on some SKU.
+    let east = plan.iter().find(|p| p.region == Region::EastUs).unwrap();
+    assert!(east.delta_total() > 0, "east delta {}", east.delta_total());
 }
