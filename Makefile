@@ -40,18 +40,30 @@ bench-quick:
 	cd $(CARGO_DIR) && SAGESERVE_BENCH_QUICK=1 SAGESERVE_BENCH_OUT=../BENCH_sim.json cargo bench --bench simulator
 	cd $(CARGO_DIR) && SAGESERVE_BENCH_QUICK=1 cargo bench --bench router_hotpath
 
-# Paper-scale wall-clock per experiment (PERF.md records the numbers).
-# Each id runs once at --scale 1.0 under `time`; expect hours, not
-# minutes, for the week-long ids.
+# Paper-scale wall-clock AND peak-RSS per experiment (PERF.md records
+# the numbers).  Each id runs once at --scale 1.0 under
+# `/usr/bin/time -v`; the full resource report lands in
+# results-timing/<id>.time, and wall-clock + maximum resident set size
+# are extracted into results-timing/summary.tsv — the peak-RSS column is
+# the streaming-metrics acceptance signal (O(bins), not O(requests)).
+# Expect hours, not minutes, for the week-long ids.
 TIMING_IDS := fig8 fig11 fig16a fig16b hetero
 timing:
 	cd $(CARGO_DIR) && cargo build --release
 	mkdir -p results-timing
+	printf 'id\twall_clock\tpeak_rss_kb\n' > results-timing/summary.tsv
 	for id in $(TIMING_IDS); do \
 		echo "=== $$id (--scale 1.0) ==="; \
 		/usr/bin/time -v $(CARGO_DIR)/target/release/sageserve exp $$id \
-			--scale 1.0 --out results-timing 2>&1 | tail -20; \
+			--scale 1.0 --out results-timing \
+			> results-timing/$$id.log 2> results-timing/$$id.time; \
+		tail -5 results-timing/$$id.log; \
+		wall=$$(grep 'Elapsed (wall clock)' results-timing/$$id.time | awk '{print $$NF}'); \
+		rss=$$(grep 'Maximum resident set size' results-timing/$$id.time | awk '{print $$NF}'); \
+		printf '%s\t%s\t%s\n' "$$id" "$$wall" "$$rss" >> results-timing/summary.tsv; \
+		echo "  wall $$wall  peak RSS $$rss kB"; \
 	done
+	@echo; cat results-timing/summary.tsv
 
 clean:
 	cd $(CARGO_DIR) && cargo clean

@@ -8,7 +8,6 @@
 //! ```
 
 use sageserve::config::{ModelKind, Tier};
-use sageserve::metrics::LatencySummary;
 use sageserve::sim::engine::{run_simulation, SimConfig, Strategy};
 use sageserve::trace::generator::TraceConfig;
 
@@ -33,9 +32,7 @@ fn main() {
             ..Default::default()
         };
         let sim = run_simulation(cfg);
-        let iwf = LatencySummary::from_outcomes(
-            sim.metrics.outcomes.iter().filter(|o| o.tier == Tier::IwF),
-        );
+        let iwf = sim.metrics.latency_by_tier(Tier::IwF);
         let ih = sim.metrics.model_instance_hours(ModelKind::Llama2_70B, sim.end_time());
         println!(
             "{:<8} {:>13.2}s {:>13.1}% {:>12.1} {:>12.2}",

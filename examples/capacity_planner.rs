@@ -56,12 +56,9 @@ fn main() -> anyhow::Result<()> {
     let gpus = [GpuKind::H100x8, GpuKind::A100x8];
     let perf = PerfTable::for_fleet(&gpus, &models);
     let params = ScalingParams::default();
-    let mut counts = BTreeMap::new();
-    for &m in &models {
-        for r in Region::ALL {
-            counts.insert((m, r), vec![6usize, 0]); // current: 6 H100 each
-        }
-    }
+    // Dense allocated counts: one row per telemetry key (models ×
+    // regions, telemetry order), indexed by GpuKind::index — 6 H100 each.
+    let counts = vec![[6usize, 0, 0]; telemetry.keys().len()];
 
     println!("\nhourly scaling plan (δ per SKU; ε = {}, β = {}%):\n",
              params.epsilon, params.niw_buffer_frac * 100.0);
@@ -75,7 +72,7 @@ fn main() -> anyhow::Result<()> {
             "{:<14} {:<10} {:>8} {:>+8} {:>+8} {:>14.0}",
             entry.model.to_string(),
             entry.region.to_string(),
-            counts[&(entry.model, entry.region)].iter().sum::<usize>(),
+            counts[0].iter().sum::<usize>(), // uniform seed — see above
             entry.deltas[0],
             entry.deltas[1],
             entry.forecast_tps

@@ -20,7 +20,7 @@ fn main() {
     println!("SageServe quickstart: 6 simulated hours, strategy = lt-ua\n");
     let sim = run_simulation(cfg);
 
-    println!("requests completed: {}", sim.metrics.outcomes.len());
+    println!("requests completed: {}", sim.metrics.completed);
     for tier in Tier::ALL {
         let s = sim.metrics.latency_by_tier(tier);
         if s.count == 0 {

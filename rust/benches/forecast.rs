@@ -60,10 +60,9 @@ fn main() {
     telemetry.warmup(&warm);
     let perf = PerfTable::new(GpuKind::H100x8, &models);
     let params = ScalingParams::default();
-    let counts: BTreeMap<(ModelKind, Region), Vec<usize>> = models
-        .iter()
-        .flat_map(|&m| Region::ALL.into_iter().map(move |r| ((m, r), vec![6usize])))
-        .collect();
+    // Dense per-SKU counts: one row per telemetry key, GpuKind::index order.
+    let n_keys = models.len() * Region::ALL.len();
+    let counts = vec![[6usize, 0, 0]; n_keys];
     let mut fc = NativeArForecaster::new(96, 8, 4);
     bench("full control epoch (forecast + 4 ILPs)", quick_iters(500, 5), || {
         run_epoch(&telemetry, &mut fc, &perf, &[GpuKind::H100x8], &params, &counts, 0.0).len()
@@ -72,10 +71,7 @@ fn main() {
     // The 2-SKU epoch: per-model ILPs now carry a [region][gpu] grid.
     let fleet = [GpuKind::H100x8, GpuKind::A100x8];
     let perf2 = PerfTable::for_fleet(&fleet, &models);
-    let counts2: BTreeMap<(ModelKind, Region), Vec<usize>> = models
-        .iter()
-        .flat_map(|&m| Region::ALL.into_iter().map(move |r| ((m, r), vec![3usize, 3usize])))
-        .collect();
+    let counts2 = vec![[3usize, 3, 0]; n_keys];
     let mut fc2 = NativeArForecaster::new(96, 8, 4);
     bench("full control epoch, 2-SKU fleet (forecast + 4 ILPs)", quick_iters(500, 5), || {
         run_epoch(&telemetry, &mut fc2, &perf2, &fleet, &params, &counts2, 0.0).len()
@@ -86,10 +82,7 @@ fn main() {
     // the k axis the MI300 class stresses.
     let fleet3 = GpuKind::ALL;
     let perf3 = PerfTable::for_fleet(&fleet3, &models);
-    let counts3: BTreeMap<(ModelKind, Region), Vec<usize>> = models
-        .iter()
-        .flat_map(|&m| Region::ALL.into_iter().map(move |r| ((m, r), vec![2usize, 2, 2])))
-        .collect();
+    let counts3 = vec![[2usize, 2, 2]; n_keys];
     let mut fc3 = NativeArForecaster::new(96, 8, 4);
     bench("full control epoch, 3-SKU fleet (forecast + 4 ILPs)", quick_iters(500, 5), || {
         run_epoch(&telemetry, &mut fc3, &perf3, &fleet3, &params, &counts3, 0.0).len()

@@ -9,6 +9,7 @@
 use std::collections::BTreeMap;
 
 use sageserve::config::{FleetSpec, GpuKind};
+use sageserve::metrics::Metrics;
 use sageserve::sim::engine::{run_simulation, SimConfig, Strategy};
 use sageserve::trace::generator::{TraceConfig, TraceGenerator};
 use sageserve::util::bench::{bench, quick_iters, quick_mode};
@@ -35,7 +36,7 @@ fn main() {
         };
         let n_requests = TraceGenerator::new(cfg().trace.clone()).stream().count();
         let result = bench(&format!("simulate {} ({n_requests} reqs)", strategy.name()), iters, || {
-            run_simulation(cfg()).metrics.outcomes.len()
+            run_simulation(cfg()).metrics.completed as usize
         });
         let reqs_per_sec = n_requests as f64 / (result.mean_ns / 1e9);
         println!("    → {:.2} M simulated requests / wall-second\n", reqs_per_sec / 1e6);
@@ -58,7 +59,7 @@ fn main() {
         };
         let n_requests = TraceGenerator::new(cfg().trace.clone()).stream().count();
         let result = bench(&format!("simulate lt-ua mixed fleet ({n_requests} reqs)"), iters, || {
-            run_simulation(cfg()).metrics.outcomes.len()
+            run_simulation(cfg()).metrics.completed as usize
         });
         let reqs_per_sec = n_requests as f64 / (result.mean_ns / 1e9);
         println!("    → {:.2} M simulated requests / wall-second\n", reqs_per_sec / 1e6);
@@ -83,7 +84,7 @@ fn main() {
         let n_requests = TraceGenerator::new(cfg().trace.clone()).stream().count();
         let result =
             bench(&format!("simulate lt-ua 3-way fleet ({n_requests} reqs)"), iters, || {
-                run_simulation(cfg()).metrics.outcomes.len()
+                run_simulation(cfg()).metrics.completed as usize
             });
         let reqs_per_sec = n_requests as f64 / (result.mean_ns / 1e9);
         println!("    → {:.2} M simulated requests / wall-second\n", reqs_per_sec / 1e6);
@@ -93,6 +94,32 @@ fn main() {
         entry.insert("p50_ns".to_string(), Json::Num(result.p50_ns));
         entry.insert("reqs_per_wall_sec".to_string(), Json::Num(reqs_per_sec));
         report.insert("simulate_lt-ua_mixed3".to_string(), Json::Obj(entry));
+    }
+
+    // Metrics recording alone (the completion hot path): per-request
+    // cost of the streaming accumulators — two histogram bucketings plus
+    // O(1) cell updates, no outcome-log growth.
+    {
+        let cfg = TraceConfig { days: 0.1, scale: 0.05, ..Default::default() };
+        let reqs = TraceGenerator::new(cfg).materialize();
+        let n = reqs.len();
+        let result = bench(&format!("metrics record, streaming ({n} reqs)"), iters, || {
+            let mut m = Metrics::default();
+            for r in &reqs {
+                // Synthetic latencies spanning the histogram range.
+                let ttft = 0.05 + (r.id % 97) as f64 * 0.01;
+                let e2e = ttft + 0.02 * r.output_tokens as f64;
+                m.record_outcome(r, r.origin, ttft, e2e);
+            }
+            m.completed as usize
+        });
+        let ns_per = result.mean_ns / n as f64;
+        println!("    → {ns_per:.1} ns / completion\n");
+        let mut entry = BTreeMap::new();
+        entry.insert("n_requests".to_string(), Json::Num(n as f64));
+        entry.insert("mean_ns".to_string(), Json::Num(result.mean_ns));
+        entry.insert("ns_per_record".to_string(), Json::Num(ns_per));
+        report.insert("metrics_record".to_string(), Json::Obj(entry));
     }
 
     // Trace generation alone (the simulator's input pipeline).  The

@@ -144,19 +144,26 @@ pub type EpochPlan = Vec<EpochPlanEntry>;
 /// capacity formulation of §5.
 ///
 /// `gpus` is the fleet's SKU axis; `current_counts` are the allocated
-/// instance counts per (model, region) split by SKU in the same order;
-/// θ_{i,k} (per-instance input TPS) comes from the perf table, α_k/σ_k
-/// from the SKU price sheet.  Returns the per-SKU δ plan.
+/// instance counts as a dense array — one row per `telemetry.keys()`
+/// entry, indexed by [`GpuKind::index`] (the engine fills a reused
+/// buffer straight off the `EndpointMap` aggregates; no per-epoch map
+/// allocation).  θ_{i,k} (per-instance input TPS) comes from the perf
+/// table, α_k/σ_k from the SKU price sheet.  Returns the per-SKU δ plan.
 pub fn run_epoch(
     telemetry: &Telemetry,
     forecaster: &mut dyn Forecaster,
     perf: &PerfTable,
     gpus: &[GpuKind],
     params: &ScalingParams,
-    current_counts: &BTreeMap<(ModelKind, Region), Vec<usize>>,
+    current_counts: &[[usize; GpuKind::COUNT]],
     now: Time,
 ) -> EpochPlan {
     let keys = telemetry.keys().to_vec();
+    assert_eq!(
+        current_counts.len(),
+        keys.len(),
+        "current_counts rows must align with telemetry keys"
+    );
     let history: Vec<Vec<f64>> = keys.iter().map(|&k| telemetry.history_tps(k, now)).collect();
     let forecasts = forecaster.forecast(&history);
     let g = gpus.len();
@@ -173,16 +180,16 @@ pub fn run_epoch(
     for model in models {
         let mut current = Vec::new();
         let mut forecast_tps = Vec::new();
-        let mut region_order = Vec::new();
+        // (telemetry-key row, region) pairs for this model.
+        let mut region_order: Vec<(usize, Region)> = Vec::new();
         for (i, &(m, r)) in keys.iter().enumerate() {
             if m != model {
                 continue;
             }
-            region_order.push(r);
-            current.push(match current_counts.get(&(m, r)) {
-                Some(v) => v.iter().map(|&c| c as f64).collect(),
-                None => vec![0.0; g],
-            });
+            region_order.push((i, r));
+            current.push(
+                gpus.iter().map(|&k| current_counts[i][k.index()] as f64).collect::<Vec<f64>>(),
+            );
             // β buffer: 10% of last hour's NIW load as TPS headroom (§6.3).
             let beta = params.niw_buffer_frac * telemetry.niw_tokens_last_hour((m, r), now) / 3600.0;
             forecast_tps.push(forecasts[i].iter().map(|&f| f + beta).collect::<Vec<f64>>());
@@ -206,7 +213,7 @@ pub fn run_epoch(
         };
         match optimize_capacity(&inputs) {
             Some(cap_plan) => {
-                for (j, &r) in region_order.iter().enumerate() {
+                for (j, &(_, r)) in region_order.iter().enumerate() {
                     let peak = forecast_tps[j].iter().copied().fold(0.0, f64::max);
                     plan.push(EpochPlanEntry {
                         model,
@@ -228,11 +235,9 @@ pub fn run_epoch(
                             .unwrap()
                     })
                     .unwrap_or(0);
-                for (j, &r) in region_order.iter().enumerate() {
-                    let cur: i64 = current_counts
-                        .get(&(model, r))
-                        .map(|v| v.iter().sum::<usize>() as i64)
-                        .unwrap_or(0);
+                for (j, &(ki, r)) in region_order.iter().enumerate() {
+                    let cur: i64 =
+                        gpus.iter().map(|&k| current_counts[ki][k.index()] as i64).sum();
                     let peak = forecast_tps[j].iter().copied().fold(0.0, f64::max);
                     let mut deltas = vec![0i64; g];
                     deltas[cheapest] = params.max_instances as i64 - cur;
@@ -304,10 +309,8 @@ mod tests {
         let perf = PerfTable::new(GpuKind::H100x8, &models);
         let params = ScalingParams::default();
         let mut forecaster = SeasonalNaive::new(96, 4);
-        let mut counts = BTreeMap::new();
-        for r in Region::ALL {
-            counts.insert((ModelKind::Llama2_70B, r), vec![2usize]);
-        }
+        // One dense row per telemetry key (3 regions), GpuKind::index order.
+        let counts = vec![[2usize, 0, 0]; Region::ALL.len()];
         let plan = run_epoch(
             &telemetry, &mut forecaster, &perf, &[GpuKind::H100x8], &params, &counts, 0.0,
         );
@@ -333,10 +336,7 @@ mod tests {
         let perf = PerfTable::new(GpuKind::H100x8, &models);
         let params = ScalingParams::default();
         let mut forecaster = SeasonalNaive::new(96, 4);
-        let mut counts = BTreeMap::new();
-        for r in Region::ALL {
-            counts.insert((ModelKind::Llama32_3B, r), vec![20usize]);
-        }
+        let counts = vec![[20usize, 0, 0]; Region::ALL.len()];
         let plan = run_epoch(
             &telemetry, &mut forecaster, &perf, &[GpuKind::H100x8], &params, &counts, 0.0,
         );
@@ -363,11 +363,8 @@ mod tests {
         let perf = PerfTable::for_fleet(&gpus, &models);
         let params = ScalingParams::default();
         let mut forecaster = SeasonalNaive::new(96, 4);
-        let mut counts = BTreeMap::new();
-        for r in Region::ALL {
-            // Incumbents are all H100.
-            counts.insert((ModelKind::Llama2_70B, r), vec![2usize, 0usize]);
-        }
+        // Incumbents are all H100 (row index 0 in GpuKind::index order).
+        let counts = vec![[2usize, 0, 0]; Region::ALL.len()];
         let plan = run_epoch(&telemetry, &mut forecaster, &perf, &gpus, &params, &counts, 0.0);
         assert_eq!(plan.len(), 3);
         let east = plan.iter().find(|p| p.region == Region::EastUs).unwrap();

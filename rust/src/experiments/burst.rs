@@ -8,7 +8,6 @@ use anyhow::Result;
 use crate::config::{Epoch, ModelKind, Tier, HOUR};
 use crate::experiments::sweep::run_configs;
 use crate::experiments::{print_table, ExpOptions};
-use crate::metrics::LatencySummary;
 use crate::sim::engine::{SimConfig, Strategy};
 use crate::trace::generator::TraceConfig;
 
@@ -53,9 +52,8 @@ pub fn fig16a(opts: &ExpOptions) -> Result<()> {
                 worst_p95 = worst_p95.max(s.ttft_p95);
             }
         }
-        let overall = LatencySummary::from_outcomes(
-            sim.metrics.outcomes.iter().filter(|o| o.tier == Tier::IwF),
-        );
+        // Streaming tier summary — no outcome log to re-scan.
+        let overall = sim.metrics.latency_by_tier(Tier::IwF);
         let util = sim.metrics.mean_util(ModelKind::Llama2_70B);
         let ih = sim.metrics.model_instance_hours(ModelKind::Llama2_70B, end);
         rows.push(format!(

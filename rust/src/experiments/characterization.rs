@@ -259,16 +259,11 @@ pub fn fig6(opts: &ExpOptions) -> Result<()> {
     let mut table = Vec::new();
     for region in Region::ALL {
         for tier in Tier::ALL {
-            let outs: Vec<_> = sim
-                .metrics
-                .outcomes
-                .iter()
-                .filter(|o| o.region == region && o.tier == tier)
-                .collect();
-            if outs.is_empty() {
+            // Streaming (tier, region) cell fold — no outcome log.
+            let summary = sim.metrics.latency_by_tier_region(tier, region);
+            if summary.count == 0 {
                 continue;
             }
-            let summary = crate::metrics::LatencySummary::from_outcomes(outs.into_iter());
             rows.push(format!(
                 "{region},{tier},{},{:.3},{:.3},{:.3},{:.3}",
                 summary.count, summary.mean_e2e, summary.e2e_p50, summary.e2e_p95, summary.ttft_p95
@@ -290,15 +285,27 @@ pub fn fig6(opts: &ExpOptions) -> Result<()> {
         &table,
     );
 
-    // (e): per-instance load spread within each region for Model A.
+    // (e): per-instance load spread within each region for Model A —
+    // percentiles over the streaming per-bin utilization means.  At the
+    // default 15-minute metrics bin each bin holds exactly one sample
+    // (UTIL_SAMPLE_EVERY × SCALE_TICK == bin_width), so this matches
+    // the old raw-sample percentiles; if the bin is ever widened the
+    // spread would silently flatten toward the mean — assert the
+    // coupling so it fails loudly instead.
+    debug_assert!(
+        (sim.metrics.bin_width() - 900.0).abs() < 1e-9,
+        "fig6e expects one util sample per metrics bin (900 s); \
+         re-derive the spread if MetricsConfig::bin changes"
+    );
     let mut rows = Vec::new();
     for region in Region::ALL {
         let mut utils: Vec<f64> = sim
             .metrics
-            .util_samples
+            .util_series(ModelKind::Bloom176B, region)
             .iter()
-            .filter(|(_, m, r, _)| *m == ModelKind::Bloom176B && *r == region)
-            .map(|&(_, _, _, u)| u)
+            .filter(|b| b.count > 0)
+            .inspect(|b| debug_assert!(b.count == 1, "util bin aggregates {} samples", b.count))
+            .map(|b| b.sum / b.count as f64)
             .collect();
         if utils.is_empty() {
             continue;

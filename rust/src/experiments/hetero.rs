@@ -23,7 +23,6 @@ use anyhow::Result;
 use crate::config::{Epoch, FleetSpec, GpuKind};
 use crate::experiments::sweep::run_configs;
 use crate::experiments::{print_table, ExpOptions};
-use crate::metrics::LatencySummary;
 use crate::sim::engine::{SimConfig, Strategy};
 use crate::trace::generator::TraceConfig;
 
@@ -98,9 +97,8 @@ pub fn hetero(opts: &ExpOptions) -> Result<()> {
         let cost = r.metrics.fleet_dollar_cost(end);
         let spot_rev = r.metrics.spot_revenue(end);
         let net = r.metrics.net_fleet_cost(end);
-        let iw = LatencySummary::from_outcomes(
-            r.metrics.outcomes.iter().filter(|o| o.tier.is_interactive()),
-        );
+        // All-model interactive summary from the streaming cells.
+        let iw = r.metrics.interactive_latency();
         let attain = (1.0 - iw.sla_violation_rate) * 100.0;
         rows.push(format!(
             "{label},{routing},{h100_h:.2},{a100_h:.2},{mi300_h:.2},{cost:.0},{spot_rev:.0},\

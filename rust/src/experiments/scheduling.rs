@@ -6,7 +6,6 @@ use anyhow::Result;
 use crate::config::{Epoch, Tier};
 use crate::coordinator::scheduler::SchedPolicy;
 use crate::experiments::{print_table, ExpOptions};
-use crate::metrics::{percentile, LatencySummary};
 use crate::sim::engine::{run_simulation, SimConfig, Strategy};
 use crate::trace::generator::TraceConfig;
 
@@ -58,10 +57,10 @@ pub fn fig15(opts: &ExpOptions) -> Result<()> {
         let sim = run_simulation(cfg);
         let mut line = vec![name.to_string()];
         for tier in [Tier::IwF, Tier::IwN] {
-            let outs: Vec<_> = sim.metrics.outcomes.iter().filter(|o| o.tier == tier).collect();
-            let mut ttfts: Vec<f64> = outs.iter().map(|o| o.ttft).collect();
-            let q3 = if ttfts.is_empty() { 0.0 } else { percentile(&mut ttfts, 75.0) };
-            let summary = LatencySummary::from_outcomes(outs.into_iter());
+            // Q3 TTFT (p75) and violation rate straight off the
+            // streaming tier summary — no per-tier outcome collection.
+            let summary = sim.metrics.latency_by_tier(tier);
+            let q3 = summary.ttft_p75;
             rows.push(format!(
                 "{name},{tier},{q3:.3},{:.1}",
                 summary.sla_violation_rate * 100.0

@@ -25,8 +25,8 @@
 // --no-deps` with `-D warnings`).  The lint is crate-wide; modules whose
 // public surface has not been audited yet carry a file-level
 // `#![allow(missing_docs)]` with a debt note — drop those as they are
-// documented.  config, perf, coordinator::router and sim::cluster are
-// fully documented.
+// documented.  config, perf, coordinator::router, sim::cluster and
+// metrics are fully documented.
 #![warn(missing_docs)]
 
 pub mod config;

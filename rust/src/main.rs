@@ -5,7 +5,8 @@
 //! ```text
 //! sageserve exp <id|all> [--out DIR] [--scale F] [--pjrt] [--seed N]
 //! sageserve simulate --strategy S [--days F] [--scale F] [--epoch E] [--policy P]
-//!                    [--fleet SPEC] [--routing sku-aware|blind] [--pjrt]
+//!                    [--fleet SPEC] [--routing sku-aware|blind]
+//!                    [--metrics streaming|exact] [--pjrt]
 //! sageserve serve [--requests N] [--max-new N] [--artifacts DIR]
 //! sageserve trace --out FILE [--days F] [--scale F] [--epoch E]
 //! sageserve selftest [--artifacts DIR]
@@ -17,6 +18,7 @@ use std::collections::HashMap;
 use sageserve::config::Epoch;
 use sageserve::coordinator::scheduler::SchedPolicy;
 use sageserve::experiments::{self, ExpOptions};
+use sageserve::metrics::MetricsMode;
 use sageserve::sim::engine::{run_simulation, SimConfig, Strategy};
 use sageserve::trace::generator::{TraceConfig, TraceGenerator};
 use sageserve::trace::io::write_csv;
@@ -139,6 +141,13 @@ fn dispatch(args: &[String]) -> Result<()> {
                     other => bail!("unknown routing policy '{other}' (sku-aware|blind)"),
                 };
             }
+            if let Some(m) = f("metrics") {
+                cfg.metrics.mode = match m.as_str() {
+                    "streaming" | "stream" => MetricsMode::Streaming,
+                    "exact" => MetricsMode::Exact,
+                    other => bail!("unknown metrics mode '{other}' (streaming|exact)"),
+                };
+            }
             if let Some(a) = f("artifacts") {
                 cfg.artifacts_dir = a;
             }
@@ -220,7 +229,7 @@ fn dispatch(args: &[String]) -> Result<()> {
 fn report_simulation(sim: &sageserve::sim::engine::Simulation) {
     use sageserve::config::Tier;
     let end = sim.end_time();
-    println!("completed {} requests ({} dropped)", sim.metrics.outcomes.len(), sim.metrics.dropped);
+    println!("completed {} requests ({} dropped)", sim.metrics.completed, sim.metrics.dropped);
     for tier in Tier::ALL {
         let s = sim.metrics.latency_by_tier(tier);
         if s.count == 0 {
@@ -283,10 +292,13 @@ USAGE:
   sageserve simulate [--strategy siloed|reactive|lt-i|lt-u|lt-ua|chiron]
       [--days F] [--scale F] [--epoch jul2025|nov2024] [--policy fcfs|edf|pf|dpa]
       [--fleet h100|a100|mi300|mixed|mixed3|h100:W,mi300:W]
-      [--routing sku-aware|blind] [--pjrt] [--replay trace.csv]
+      [--routing sku-aware|blind] [--metrics streaming|exact]
+      [--pjrt] [--replay trace.csv]
       (--fleet picks the GPU fleet; mixed fleets report per-SKU GPU-hours,
        on-demand cost, spot revenue and net cost; --routing toggles
-       per-request SKU affinity — see also `exp hetero`)
+       per-request SKU affinity — see also `exp hetero`; --metrics exact
+       keeps the O(requests) per-request outcome log instead of the
+       default O(bins) streaming accumulators)
   sageserve serve [--requests N] [--max-new N] [--artifacts DIR]
       real batched inference on the AOT transformer via PJRT
   sageserve trace --out FILE [--days F] [--scale F] [--epoch E] [--seed N]

@@ -1,0 +1,256 @@
+//! Deterministic log-bucketed latency histograms — the percentile engine
+//! behind the streaming metrics core.
+//!
+//! Buckets are geometric with a **static** layout (no per-run adaptation):
+//! 32 buckets per decade across 8 decades, `[1 ms, 100 000 s)`, plus an
+//! underflow and an overflow bucket.  A static layout is what makes the
+//! histograms *mergeable*: two shards bucket every value identically, so
+//! `merge` is an exact element-wise count sum and merged percentiles are
+//! bit-identical to single-pass accumulation.
+//!
+//! Accuracy: within the covered range a percentile is reported as the
+//! geometric midpoint of its bucket, so the relative error versus the
+//! exact nearest-rank percentile is at most `10^(1/64) − 1 ≈ 3.7 %`
+//! (asserted with margin by the histogram tests).  Out-of-range values
+//! fall into the underflow/overflow buckets and are reported as the
+//! exactly-tracked global min/max.
+
+use crate::config::Time;
+
+/// Log-bucket resolution: buckets per decade.
+const PER_DECADE: f64 = 32.0;
+/// Lower edge of the first regular bucket, seconds.
+const MIN_LAT: f64 = 1e-3;
+/// Covered decades above [`MIN_LAT`] (upper edge `1e5` s ≈ 28 h).
+const DECADES: usize = 8;
+/// Total bucket count: underflow + 8 × 32 regular + overflow.
+pub const BUCKETS: usize = DECADES * PER_DECADE as usize + 2;
+
+/// Dense bucket index for a latency value (pure function of `v`; shards
+/// bucket identically, which is what makes histogram merges exact).
+#[inline]
+pub fn bucket_of(v: Time) -> usize {
+    // NaN and anything ≤ MIN_LAT land in the underflow bucket.
+    if !(v > MIN_LAT) {
+        return 0;
+    }
+    // Saturating float→int cast, clamped *before* the +1 shift so even
+    // pathological inputs (∞) stay in the overflow bucket.
+    let b = ((v / MIN_LAT).log10() * PER_DECADE) as usize;
+    b.min(BUCKETS - 2) + 1
+}
+
+/// A fixed-layout log-bucketed histogram of latency samples with exact
+/// min/max tracking.  ~2 KiB regardless of how many samples it absorbs —
+/// the O(1)-in-requests building block of [`crate::metrics::Metrics`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyHistogram {
+    counts: [u64; BUCKETS],
+    total: u64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            counts: [0; BUCKETS],
+            total: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// Record one sample.
+    #[inline]
+    pub fn record(&mut self, v: Time) {
+        self.record_at(bucket_of(v), v);
+    }
+
+    /// Record one sample whose bucket the caller already computed (the
+    /// completion hot path buckets each value once and feeds both the
+    /// whole-run and the time-binned histogram).
+    #[inline]
+    pub fn record_at(&mut self, bucket: usize, v: Time) {
+        self.counts[bucket] += 1;
+        self.total += 1;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Absorb another histogram: element-wise count sum plus min/max
+    /// union.  Exact — merged shards are indistinguishable from a single
+    /// sequential accumulation of the same samples.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += *b;
+        }
+        self.total += other.total;
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
+    /// Number of recorded samples.
+    #[inline]
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Smallest recorded sample (`+∞` when empty).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Largest recorded sample (`−∞` when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Nearest-rank percentile, `p` in `[0, 100]`; `0.0` when empty.
+    ///
+    /// The rank is computed exactly as [`crate::metrics::percentile`]
+    /// computes it over a sorted slice, so the reported value lives in
+    /// the same bucket as the exact answer and differs from it by at
+    /// most half a bucket width (≈3.7 % relative) within the covered
+    /// range; under/overflow ranks report the exact min/max.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * (self.total - 1) as f64).round() as u64;
+        let rank = rank.min(self.total - 1);
+        let mut cum = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return self.representative(b);
+            }
+        }
+        self.max
+    }
+
+    /// Reported value for a bucket: geometric midpoint, clamped to the
+    /// exact observed [min, max] (so single-sample and extreme ranks
+    /// stay honest).
+    fn representative(&self, bucket: usize) -> f64 {
+        let v = if bucket == 0 {
+            self.min
+        } else if bucket == BUCKETS - 1 {
+            self.max
+        } else {
+            MIN_LAT * 10f64.powf((bucket as f64 - 0.5) / PER_DECADE)
+        };
+        // NaN samples land in the underflow bucket without touching
+        // min/max; guard the clamp so a poisoned histogram degrades
+        // instead of panicking (`f64::clamp` asserts min <= max).
+        if self.min <= self.max {
+            v.clamp(self.min, self.max)
+        } else {
+            v
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::percentile;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bucket_mapping_is_monotonic_and_bounded() {
+        let mut last = 0usize;
+        let mut v = 1e-5;
+        while v < 1e7 {
+            let b = bucket_of(v);
+            assert!(b >= last, "bucket order broke at {v}");
+            assert!(b < BUCKETS);
+            last = b;
+            v *= 1.01;
+        }
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(-1.0), 0);
+        assert_eq!(bucket_of(f64::NAN), 0);
+        assert_eq!(bucket_of(1e9), BUCKETS - 1);
+    }
+
+    #[test]
+    fn percentile_error_is_bounded_by_bucket_width() {
+        // Log-uniform samples across the realistic latency range.
+        let mut rng = Rng::seed_from_u64(7);
+        let mut hist = LatencyHistogram::default();
+        let mut exact: Vec<f64> = Vec::new();
+        for _ in 0..50_000 {
+            let v = 10f64.powf(rng.range(-2.0, 3.0));
+            hist.record(v);
+            exact.push(v);
+        }
+        for p in [0.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 100.0] {
+            let e = percentile(&mut exact, p);
+            let h = hist.percentile(p);
+            let rel = (h - e).abs() / e;
+            // Guaranteed bound is 10^(1/64) − 1 ≈ 3.7 %; assert with margin.
+            assert!(rel < 0.045, "p{p}: hist {h} vs exact {e} (rel {rel:.4})");
+        }
+    }
+
+    #[test]
+    fn merge_equals_sequential_accumulation() {
+        let mut rng = Rng::seed_from_u64(11);
+        let (mut all, mut a, mut b) = (
+            LatencyHistogram::default(),
+            LatencyHistogram::default(),
+            LatencyHistogram::default(),
+        );
+        for i in 0..10_000 {
+            let v = 10f64.powf(rng.range(-4.0, 6.0)); // includes under/overflow
+            all.record(v);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a, all, "merged shards must equal sequential accumulation");
+    }
+
+    #[test]
+    fn empty_and_single_sample_cases() {
+        let mut h = LatencyHistogram::default();
+        assert_eq!(h.percentile(95.0), 0.0);
+        h.record(0.42);
+        // Single sample: every percentile is clamped to the value itself.
+        for p in [0.0, 50.0, 100.0] {
+            assert!((h.percentile(p) - 0.42).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn nan_samples_degrade_without_panicking() {
+        let mut h = LatencyHistogram::default();
+        h.record(f64::NAN); // underflow bucket; min/max untouched
+        assert_eq!(h.count(), 1);
+        let _ = h.percentile(50.0); // degraded value, but no clamp panic
+    }
+
+    #[test]
+    fn out_of_range_values_report_exact_extrema() {
+        let mut h = LatencyHistogram::default();
+        h.record(1e-6);
+        h.record(1e-6);
+        h.record(5e8);
+        assert!((h.percentile(0.0) - 1e-6).abs() < 1e-18);
+        assert!((h.percentile(100.0) - 5e8).abs() < 1.0);
+    }
+}

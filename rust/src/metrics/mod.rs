@@ -1,5 +1,37 @@
-//! Metrics: latency recorders, SLA accounting, instance-hour ledgers and
+//! Metrics: streaming latency/SLA accounting, instance-hour ledgers and
 //! the scaling-waste ledger — everything the evaluation figures consume.
+//!
+//! # Streaming core (O(bins), not O(requests))
+//!
+//! The engine records every completion into a set of **mergeable
+//! accumulators** instead of a per-request outcome log: per
+//! (model, tier, region) whole-run cells ([`GroupCell`]) and per
+//! (model, region, arrival-time-bin) cells ([`BinCell`]), each carrying
+//! counts, SLA violations, latency sums and fixed-layout log-bucketed
+//! [`LatencyHistogram`]s for TTFT/E2E percentiles.  Peak memory is
+//! proportional to the number of *bins*, not the number of requests, so
+//! paper-scale sweeps (`--scale 1.0`, ≈10 M req/day) are bounded by
+//! cores, not RAM — see PERF.md "Streaming metrics memory model".
+//!
+//! Summary extraction ([`LatencySummary`]) folds cells on the stack —
+//! no `Vec<f64>` collection or re-sorting per report group — and
+//! percentiles come from the histograms (≤ ~3.7 % relative error; the
+//! error bound is asserted by the histogram tests).
+//!
+//! [`Metrics::merge`] combines shards: histogram/count merges are exact,
+//! and shards that partition completions by (model, region) — e.g. a
+//! region-sharded replay — merge **bit-identically** to one sequential
+//! accumulation (`tests/metrics_streaming.rs`).
+//!
+//! # Exact mode
+//!
+//! [`MetricsMode::Exact`] additionally keeps the classic per-request
+//! [`RequestOutcome`] log for fidelity tests and fig-level plots that
+//! need exact percentiles or raw outcome streams
+//! (`simulate --metrics exact`).  Streaming accumulators are maintained
+//! in both modes, so every summary API works identically.
+//!
+//! # Cost accounting
 //!
 //! Heterogeneous-fleet cost accounting splits on-demand spend from
 //! spot-market value per SKU: allocated hours are priced at α_k
@@ -8,28 +40,43 @@
 //! [`Metrics::net_fleet_cost`] is the difference — the number the
 //! `exp hetero` ablation compares fleets and routing policies on.
 
-// Rustdoc debt: public surface not yet audited for `missing_docs`
-// (PR 4 audited config, perf, coordinator::router and sim::cluster);
-// drop this allow once every pub item here is documented.
-#![allow(missing_docs)]
+mod hist;
+
+pub use hist::{bucket_of, LatencyHistogram, BUCKETS};
 
 use std::collections::BTreeMap;
 
 use crate::config::{GpuKind, ModelKind, Region, SpotMarket, Tier, Time, HOUR};
 use crate::trace::types::Request;
 
-/// Per-request outcome recorded at completion.
+/// Number of model slots in the dense accumulator grids.
+const MODELS: usize = ModelKind::ALL.len();
+/// Number of tier slots.
+const TIERS: usize = Tier::ALL.len();
+/// Number of region slots.
+const REGIONS: usize = Region::ALL.len();
+/// Whole-run cell count: one [`GroupCell`] per (model, tier, region).
+const CELLS: usize = MODELS * TIERS * REGIONS;
+
+/// Per-request outcome recorded at completion ([`MetricsMode::Exact`]
+/// only — the streaming accumulators carry everything the reports need).
 #[derive(Debug, Clone, PartialEq)]
 pub struct RequestOutcome {
+    /// SLA tier the request arrived under.
     pub tier: Tier,
+    /// Model the request targeted.
     pub model: ModelKind,
+    /// Region that actually served the request.
     pub region: Region,
     /// Time to first token, seconds.
     pub ttft: Time,
     /// End-to-end latency, seconds.
     pub e2e: Time,
+    /// Arrival time, seconds since simulation start.
     pub arrival: Time,
+    /// Prompt length, tokens.
     pub input_tokens: u32,
+    /// Generated length, tokens.
     pub output_tokens: u32,
     /// True if the TTFT SLA (IW) or deadline (NIW) was met.
     pub sla_met: bool,
@@ -47,23 +94,157 @@ pub fn percentile(values: &mut [f64], p: f64) -> f64 {
     *v
 }
 
-/// Latency statistics for a set of outcomes.
-#[derive(Debug, Clone, Default)]
+/// How [`Metrics`] stores per-request information.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MetricsMode {
+    /// Streaming accumulators only — O(bins) memory, the sweep default.
+    /// Percentiles are histogram-derived (≤ ~3.7 % relative error).
+    #[default]
+    Streaming,
+    /// Streaming accumulators **plus** the full [`RequestOutcome`] log —
+    /// O(requests) memory, for fidelity tests and fig-level plots.
+    Exact,
+}
+
+/// Construction parameters for [`Metrics`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricsConfig {
+    /// Streaming-only or streaming + exact outcome log.
+    pub mode: MetricsMode,
+    /// Width of the arrival-time bins (and utilization bins), seconds.
+    /// Report-time bins ([`Metrics::interactive_latency_bins`]) must be
+    /// an integer multiple of this.
+    pub bin: Time,
+}
+
+impl Default for MetricsConfig {
+    fn default() -> Self {
+        // 15-minute bins: divides every report cadence in the suite
+        // (hourly fig16a windows, 3 h fig16b windows) and matches the
+        // engine's utilization sampling period.
+        MetricsConfig { mode: MetricsMode::Streaming, bin: 900.0 }
+    }
+}
+
+/// Whole-run streaming accumulator for one (model, tier, region) group:
+/// everything a [`LatencySummary`] needs, in O(1)-per-request updates.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GroupCell {
+    /// Completions recorded into this group.
+    pub count: u64,
+    /// Completions that missed their SLA/deadline.
+    pub violations: u64,
+    /// Sum of TTFTs, seconds (mean numerator).
+    pub sum_ttft: f64,
+    /// Sum of end-to-end latencies, seconds.
+    pub sum_e2e: f64,
+    /// TTFT distribution.
+    pub ttft: LatencyHistogram,
+    /// End-to-end latency distribution.
+    pub e2e: LatencyHistogram,
+}
+
+impl GroupCell {
+    fn merge(&mut self, other: &GroupCell) {
+        self.count += other.count;
+        self.violations += other.violations;
+        self.sum_ttft += other.sum_ttft;
+        self.sum_e2e += other.sum_e2e;
+        self.ttft.merge(&other.ttft);
+        self.e2e.merge(&other.e2e);
+    }
+}
+
+/// Streaming accumulator for one (model, region, arrival-time-bin):
+/// per-tier scalar stats plus interactive-only latency histograms (the
+/// binned-percentile consumers — `fig16a`/`fig16b` — are IW-only).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BinCell {
+    /// Completions per tier (indexed by [`Tier::index`]).
+    pub count: [u64; TIERS],
+    /// SLA/deadline misses per tier.
+    pub violations: [u64; TIERS],
+    /// Sum of TTFTs per tier, seconds.
+    pub sum_ttft: [f64; TIERS],
+    /// Sum of end-to-end latencies per tier, seconds.
+    pub sum_e2e: [f64; TIERS],
+    /// Interactive-traffic TTFT distribution.
+    pub iw_ttft: LatencyHistogram,
+    /// Interactive-traffic end-to-end latency distribution.
+    pub iw_e2e: LatencyHistogram,
+}
+
+impl BinCell {
+    fn merge(&mut self, other: &BinCell) {
+        for t in 0..TIERS {
+            self.count[t] += other.count[t];
+            self.violations[t] += other.violations[t];
+            self.sum_ttft[t] += other.sum_ttft[t];
+            self.sum_e2e[t] += other.sum_e2e[t];
+        }
+        self.iw_ttft.merge(&other.iw_ttft);
+        self.iw_e2e.merge(&other.iw_e2e);
+    }
+}
+
+/// One fixed-cadence utilization bin: mean (`sum / count`) and max of
+/// the effective-memory-utilization samples that fell into it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UtilBin {
+    /// Sum of samples in the bin.
+    pub sum: f64,
+    /// Number of samples in the bin.
+    pub count: u64,
+    /// Largest sample in the bin.
+    pub max: f64,
+}
+
+impl Default for UtilBin {
+    fn default() -> Self {
+        UtilBin { sum: 0.0, count: 0, max: f64::NEG_INFINITY }
+    }
+}
+
+impl UtilBin {
+    fn merge(&mut self, other: &UtilBin) {
+        self.sum += other.sum;
+        self.count += other.count;
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+}
+
+/// Latency statistics for a set of completions.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct LatencySummary {
+    /// Number of completions summarized.
     pub count: usize,
+    /// Median TTFT, seconds.
     pub ttft_p50: f64,
+    /// 75th-percentile TTFT, seconds.
     pub ttft_p75: f64,
+    /// 95th-percentile TTFT, seconds.
     pub ttft_p95: f64,
+    /// 99th-percentile TTFT, seconds.
     pub ttft_p99: f64,
+    /// Median end-to-end latency, seconds.
     pub e2e_p50: f64,
+    /// 75th-percentile end-to-end latency, seconds.
     pub e2e_p75: f64,
+    /// 95th-percentile end-to-end latency, seconds.
     pub e2e_p95: f64,
+    /// Mean TTFT, seconds.
     pub mean_ttft: f64,
+    /// Mean end-to-end latency, seconds.
     pub mean_e2e: f64,
+    /// Fraction of completions that missed their SLA/deadline.
     pub sla_violation_rate: f64,
 }
 
 impl LatencySummary {
+    /// Exact summary over an outcome iterator — the
+    /// [`MetricsMode::Exact`] / fidelity path (quickselect percentiles).
     pub fn from_outcomes<'a>(outcomes: impl Iterator<Item = &'a RequestOutcome>) -> Self {
         let mut ttft = Vec::new();
         let mut e2e = Vec::new();
@@ -78,8 +259,7 @@ impl LatencySummary {
         Self::from_parts(ttft, e2e, violations)
     }
 
-    /// Summarize pre-collected latency vectors (the grouped single-pass
-    /// paths hand these over without re-scanning outcomes).
+    /// Summarize pre-collected latency vectors (exact percentiles).
     pub fn from_parts(mut ttft: Vec<f64>, mut e2e: Vec<f64>, violations: usize) -> Self {
         if ttft.is_empty() {
             return LatencySummary::default();
@@ -101,6 +281,34 @@ impl LatencySummary {
             sla_violation_rate: violations as f64 / count as f64,
         }
     }
+
+    /// Summarize streaming accumulators: scalar stats plus two merged
+    /// histograms.  Allocation-free — percentiles walk the histograms.
+    pub fn from_accum(
+        count: u64,
+        violations: u64,
+        sum_ttft: f64,
+        sum_e2e: f64,
+        ttft: &LatencyHistogram,
+        e2e: &LatencyHistogram,
+    ) -> Self {
+        if count == 0 {
+            return LatencySummary::default();
+        }
+        LatencySummary {
+            count: count as usize,
+            ttft_p50: ttft.percentile(50.0),
+            ttft_p75: ttft.percentile(75.0),
+            ttft_p95: ttft.percentile(95.0),
+            ttft_p99: ttft.percentile(99.0),
+            e2e_p50: e2e.percentile(50.0),
+            e2e_p75: e2e.percentile(75.0),
+            e2e_p95: e2e.percentile(95.0),
+            mean_ttft: sum_ttft / count as f64,
+            mean_e2e: sum_e2e / count as f64,
+            sla_violation_rate: violations as f64 / count as f64,
+        }
+    }
 }
 
 /// Step-function integrator: instance count over time → instance-hours
@@ -112,6 +320,8 @@ pub struct InstanceHourLedger {
 }
 
 impl InstanceHourLedger {
+    /// Record the instance count in effect from time `t` on (consecutive
+    /// equal counts are deduplicated).
     pub fn record(&mut self, t: Time, count: usize) {
         if let Some(&(lt, lc)) = self.points.last() {
             debug_assert!(t >= lt, "ledger time went backwards");
@@ -185,6 +395,46 @@ impl InstanceHourLedger {
         }
         total
     }
+
+    /// Sum another step function into this one: the merged ledger's
+    /// count at any time is the sum of the two inputs' counts (shards
+    /// tracking disjoint instance subsets combine exactly — integrals
+    /// and `count_at` reads are preserved).
+    pub fn merge(&mut self, other: &InstanceHourLedger) {
+        if other.points.is_empty() {
+            return;
+        }
+        if self.points.is_empty() {
+            self.points = other.points.clone();
+            return;
+        }
+        let a = std::mem::take(&mut self.points);
+        let b = &other.points;
+        let (mut i, mut j) = (0usize, 0usize);
+        let (mut la, mut lb) = (0usize, 0usize);
+        let mut out: Vec<(Time, usize)> = Vec::with_capacity(a.len() + b.len());
+        while i < a.len() || j < b.len() {
+            let t = match (a.get(i), b.get(j)) {
+                (Some(&(ta, _)), Some(&(tb, _))) => ta.min(tb),
+                (Some(&(ta, _)), None) => ta,
+                (None, Some(&(tb, _))) => tb,
+                (None, None) => break,
+            };
+            while i < a.len() && a[i].0 == t {
+                la = a[i].1;
+                i += 1;
+            }
+            while j < b.len() && b[j].0 == t {
+                lb = b[j].1;
+                j += 1;
+            }
+            let level = la + lb;
+            if out.last().map_or(true, |&(_, l)| l != level) {
+                out.push((t, level));
+            }
+        }
+        self.points = out;
+    }
 }
 
 /// GPU-hours wasted on scaling: time VMs spend provisioning, by cause
@@ -196,26 +446,45 @@ pub struct ScalingWasteLedger {
 }
 
 impl ScalingWasteLedger {
+    /// Record one scaling event's wasted provisioning time.
     pub fn record(&mut self, cause: &str, wasted_secs: Time) {
         let e = self.by_cause.entry(cause.to_string()).or_insert((0, 0.0));
         e.0 += 1;
         e.1 += wasted_secs;
     }
 
+    /// Total wasted GPU-hours across causes.
     pub fn total_gpu_hours(&self) -> f64 {
         self.by_cause.values().map(|&(_, s)| s).sum::<f64>() / HOUR
     }
 
+    /// Total scaling events across causes.
     pub fn total_events(&self) -> u64 {
         self.by_cause.values().map(|&(n, _)| n).sum()
+    }
+
+    /// Absorb another waste ledger (per-cause event/second sums).
+    pub fn merge(&mut self, other: &ScalingWasteLedger) {
+        for (cause, &(n, s)) in &other.by_cause {
+            let e = self.by_cause.entry(cause.clone()).or_insert((0, 0.0));
+            e.0 += n;
+            e.1 += s;
+        }
     }
 }
 
 /// Top-level metrics container for one simulation run.  `PartialEq` backs
-/// the parallel-sweep equivalence test: two runs are "identical" iff every
-/// outcome, ledger point and sample matches exactly.
-#[derive(Debug, Default, PartialEq)]
+/// the parallel-sweep equivalence tests: two runs are "identical" iff
+/// every accumulator cell, histogram bucket, ledger point and (in Exact
+/// mode) outcome matches exactly.
+#[derive(Debug, PartialEq)]
 pub struct Metrics {
+    cfg: MetricsConfig,
+    /// Completions recorded (maintained in every mode — conservation
+    /// checks read this instead of `outcomes.len()`).
+    pub completed: u64,
+    /// Per-request outcome log — populated in [`MetricsMode::Exact`]
+    /// only; empty under streaming.
     pub outcomes: Vec<RequestOutcome>,
     /// (model, region) → active-instance ledger.
     pub instances: BTreeMap<(ModelKind, Region), InstanceHourLedger>,
@@ -228,14 +497,61 @@ pub struct Metrics {
     /// ([`Metrics::spot_hours`]) and the spot-market revenue integration
     /// both derive from it.
     pub spot_instances_by_gpu: BTreeMap<(ModelKind, Region, GpuKind), InstanceHourLedger>,
+    /// GPU-hours wasted on provisioning, by cause.
     pub scaling_waste: ScalingWasteLedger,
-    /// Effective memory-utilization samples: (time, model, region, util).
-    pub util_samples: Vec<(Time, ModelKind, Region, f64)>,
     /// Dropped/unserved requests (should stay 0 in healthy runs).
     pub dropped: u64,
+    /// Whole-run cells, dense `[model][tier][region]`; empty until the
+    /// first completion.
+    cells: Vec<GroupCell>,
+    /// Arrival-binned cells, dense `[model][region]` slots each holding
+    /// a by-bin series; empty until the first completion.
+    bins: Vec<Vec<BinCell>>,
+    /// Utilization bins, dense `[model][region]` slots; empty until the
+    /// first sample.
+    util: Vec<Vec<UtilBin>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new(MetricsConfig::default())
+    }
 }
 
 impl Metrics {
+    /// Create an empty metrics container for the given mode/bin width.
+    ///
+    /// Panics if `cfg.bin` is not positive (a zero/negative bin would
+    /// turn the first recorded arrival into a huge bin index).
+    pub fn new(cfg: MetricsConfig) -> Self {
+        assert!(cfg.bin > 0.0, "metrics bin width must be positive (got {})", cfg.bin);
+        Metrics {
+            cfg,
+            completed: 0,
+            outcomes: Vec::new(),
+            instances: BTreeMap::new(),
+            instances_by_gpu: BTreeMap::new(),
+            spot_instances_by_gpu: BTreeMap::new(),
+            scaling_waste: ScalingWasteLedger::default(),
+            dropped: 0,
+            cells: Vec::new(),
+            bins: Vec::new(),
+            util: Vec::new(),
+        }
+    }
+
+    /// The recording mode this container was built with.
+    pub fn mode(&self) -> MetricsMode {
+        self.cfg.mode
+    }
+
+    /// Width of the arrival/utilization bins, seconds.
+    pub fn bin_width(&self) -> Time {
+        self.cfg.bin
+    }
+
+    /// Record one completion: SLA evaluation plus O(1) streaming
+    /// accumulator updates (and, in Exact mode, the outcome log push).
     pub fn record_outcome(&mut self, req: &Request, region: Region, ttft: Time, e2e: Time) {
         let sla_met = match req.tier.ttft_sla() {
             Some(sla) => ttft <= sla,
@@ -244,81 +560,181 @@ impl Metrics {
                 None => true,
             },
         };
-        self.outcomes.push(RequestOutcome {
-            tier: req.tier,
-            model: req.model,
-            region,
-            ttft,
-            e2e,
-            arrival: req.arrival,
-            input_tokens: req.input_tokens,
-            output_tokens: req.output_tokens,
-            sla_met,
-        });
+        self.completed += 1;
+        let (m, t, r) = (req.model.index(), req.tier.index(), region.index());
+        // Bucket each latency once; both the whole-run and the binned
+        // histogram reuse the index.
+        let tb = bucket_of(ttft);
+        let eb = bucket_of(e2e);
+
+        if self.cells.is_empty() {
+            self.cells.resize_with(CELLS, GroupCell::default);
+        }
+        let cell = &mut self.cells[(m * TIERS + t) * REGIONS + r];
+        cell.count += 1;
+        if !sla_met {
+            cell.violations += 1;
+        }
+        cell.sum_ttft += ttft;
+        cell.sum_e2e += e2e;
+        cell.ttft.record_at(tb, ttft);
+        cell.e2e.record_at(eb, e2e);
+
+        if self.bins.is_empty() {
+            self.bins.resize_with(MODELS * REGIONS, Vec::new);
+        }
+        let bin = (req.arrival / self.cfg.bin) as usize;
+        let series = &mut self.bins[m * REGIONS + r];
+        if series.len() <= bin {
+            series.resize_with(bin + 1, BinCell::default);
+        }
+        let bc = &mut series[bin];
+        bc.count[t] += 1;
+        if !sla_met {
+            bc.violations[t] += 1;
+        }
+        bc.sum_ttft[t] += ttft;
+        bc.sum_e2e[t] += e2e;
+        if req.tier.is_interactive() {
+            bc.iw_ttft.record_at(tb, ttft);
+            bc.iw_e2e.record_at(eb, e2e);
+        }
+
+        if self.cfg.mode == MetricsMode::Exact {
+            self.outcomes.push(RequestOutcome {
+                tier: req.tier,
+                model: req.model,
+                region,
+                ttft,
+                e2e,
+                arrival: req.arrival,
+                input_tokens: req.input_tokens,
+                output_tokens: req.output_tokens,
+                sla_met,
+            });
+        }
     }
 
+    /// Record one effective-memory-utilization sample into its
+    /// fixed-cadence bin (replaces the old unbounded sample `Vec`).
+    pub fn record_util(&mut self, now: Time, model: ModelKind, region: Region, util: f64) {
+        if self.util.is_empty() {
+            self.util.resize_with(MODELS * REGIONS, Vec::new);
+        }
+        let bin = (now / self.cfg.bin) as usize;
+        let series = &mut self.util[model.index() * REGIONS + region.index()];
+        if series.len() <= bin {
+            series.resize_with(bin + 1, UtilBin::default);
+        }
+        let b = &mut series[bin];
+        b.sum += util;
+        b.count += 1;
+        if util > b.max {
+            b.max = util;
+        }
+    }
+
+    /// Fold the whole-run cells selected by `want` into one summary —
+    /// stack-allocated histograms, no per-group latency vectors.
+    fn summarize_cells(
+        &self,
+        want: impl Fn(ModelKind, Tier, Region) -> bool,
+    ) -> LatencySummary {
+        if self.cells.is_empty() {
+            return LatencySummary::default();
+        }
+        let (mut count, mut violations) = (0u64, 0u64);
+        let (mut sum_ttft, mut sum_e2e) = (0.0f64, 0.0f64);
+        let mut ttft = LatencyHistogram::default();
+        let mut e2e = LatencyHistogram::default();
+        for (mi, &model) in ModelKind::ALL.iter().enumerate() {
+            for (ti, &tier) in Tier::ALL.iter().enumerate() {
+                for (ri, &region) in Region::ALL.iter().enumerate() {
+                    if !want(model, tier, region) {
+                        continue;
+                    }
+                    let cell = &self.cells[(mi * TIERS + ti) * REGIONS + ri];
+                    if cell.count == 0 {
+                        continue;
+                    }
+                    count += cell.count;
+                    violations += cell.violations;
+                    sum_ttft += cell.sum_ttft;
+                    sum_e2e += cell.sum_e2e;
+                    ttft.merge(&cell.ttft);
+                    e2e.merge(&cell.e2e);
+                }
+            }
+        }
+        LatencySummary::from_accum(count, violations, sum_ttft, sum_e2e, &ttft, &e2e)
+    }
+
+    /// Latency summary for one SLA tier across all models and regions.
     pub fn latency_by_tier(&self, tier: Tier) -> LatencySummary {
-        LatencySummary::from_outcomes(self.outcomes.iter().filter(|o| o.tier == tier))
+        self.summarize_cells(|_, t, _| t == tier)
     }
 
+    /// Latency summary for one model across all tiers and regions.
     pub fn latency_by_model(&self, model: ModelKind) -> LatencySummary {
-        LatencySummary::from_outcomes(self.outcomes.iter().filter(|o| o.model == model))
+        self.summarize_cells(|m, _, _| m == model)
     }
 
+    /// Latency summary for one (model, tier) across regions.
     pub fn latency_by_model_tier(&self, model: ModelKind, tier: Tier) -> LatencySummary {
-        LatencySummary::from_outcomes(
-            self.outcomes.iter().filter(|o| o.model == model && o.tier == tier),
-        )
+        self.summarize_cells(|m, t, _| m == model && t == tier)
     }
 
-    /// Every (model, tier) latency summary in ONE pass over the outcomes.
-    /// The per-cell `latency_by_model_tier` filter re-scans the full
-    /// outcome list for each cell — quadratic across a report table; this
-    /// groups first, then summarizes each bucket.
+    /// Latency summary for one (tier, serving region) across models —
+    /// the Fig 6c per-region cell.
+    pub fn latency_by_tier_region(&self, tier: Tier, region: Region) -> LatencySummary {
+        self.summarize_cells(|_, t, r| t == tier && r == region)
+    }
+
+    /// Interactive-traffic latency summary across all models (the
+    /// `exp hetero` SLA-attainment cell).
+    pub fn interactive_latency(&self) -> LatencySummary {
+        self.summarize_cells(|_, t, _| t.is_interactive())
+    }
+
+    /// Every non-empty (model, tier) latency summary — one stack fold
+    /// per populated group, no outcome re-scans.
     pub fn latency_by_model_tier_all(&self) -> BTreeMap<(ModelKind, Tier), LatencySummary> {
-        let mut groups: BTreeMap<(ModelKind, Tier), (Vec<f64>, Vec<f64>, usize)> =
-            BTreeMap::new();
-        for o in &self.outcomes {
-            let g = groups.entry((o.model, o.tier)).or_default();
-            g.0.push(o.ttft);
-            g.1.push(o.e2e);
-            if !o.sla_met {
-                g.2 += 1;
+        let mut out = BTreeMap::new();
+        for &model in &ModelKind::ALL {
+            for &tier in &Tier::ALL {
+                let s = self.latency_by_model_tier(model, tier);
+                if s.count > 0 {
+                    out.insert((model, tier), s);
+                }
             }
         }
-        groups
-            .into_iter()
-            .map(|(k, (ttft, e2e, v))| (k, LatencySummary::from_parts(ttft, e2e, v)))
-            .collect()
+        out
     }
 
-    /// Interactive-traffic latency summaries per model, single grouping
-    /// pass (the experiment tables' common cell shape).
+    /// Interactive-traffic latency summaries per model (the experiment
+    /// tables' common cell shape); models with no IW completions are
+    /// omitted, matching the historical grouped-scan behaviour.
     pub fn interactive_latency_by_model(&self) -> BTreeMap<ModelKind, LatencySummary> {
-        let mut groups: BTreeMap<ModelKind, (Vec<f64>, Vec<f64>, usize)> = BTreeMap::new();
-        for o in &self.outcomes {
-            if !o.tier.is_interactive() {
-                continue;
-            }
-            let g = groups.entry(o.model).or_default();
-            g.0.push(o.ttft);
-            g.1.push(o.e2e);
-            if !o.sla_met {
-                g.2 += 1;
+        let mut out = BTreeMap::new();
+        for &model in &ModelKind::ALL {
+            let s = self.summarize_cells(|m, t, _| m == model && t.is_interactive());
+            if s.count > 0 {
+                out.insert(model, s);
             }
         }
-        groups
-            .into_iter()
-            .map(|(k, (ttft, e2e, v))| (k, LatencySummary::from_parts(ttft, e2e, v)))
-            .collect()
+        out
     }
 
     /// Interactive-traffic latency summaries for one model in fixed
-    /// arrival-time bins over `[0, end)` — ONE pass over the outcomes
-    /// (the `week`/`burst` figures used to re-scan every outcome per
-    /// bin).  Returns one summary per bin, index `i` covering arrivals
-    /// in `[i*bin, (i+1)*bin)`; empty bins yield a default summary with
-    /// `count == 0`.
+    /// arrival-time bins over `[0, end)`.  Returns one summary per bin,
+    /// index `i` covering arrivals in `[i*bin, (i+1)*bin)`; empty bins
+    /// yield a default summary with `count == 0`.
+    ///
+    /// `bin` must be a positive integer multiple of
+    /// [`Metrics::bin_width`] — report bins are exact merges of the
+    /// streaming bins (histogram merges are exact, so a 3-hour report
+    /// bin over 15-minute streaming bins equals direct 3-hour
+    /// accumulation).
     pub fn interactive_latency_bins(
         &self,
         model: ModelKind,
@@ -329,26 +745,58 @@ impl Metrics {
         if n_bins == 0 {
             return Vec::new();
         }
-        let mut groups: Vec<(Vec<f64>, Vec<f64>, usize)> = vec![Default::default(); n_bins];
-        for o in &self.outcomes {
-            if o.model != model || !o.tier.is_interactive() {
-                continue;
+        let ratio = bin / self.cfg.bin;
+        let k = ratio.round() as usize;
+        assert!(
+            k >= 1 && (ratio - k as f64).abs() < 1e-6,
+            "report bin {bin}s must be an integer multiple of the streaming bin {}s",
+            self.cfg.bin
+        );
+        let mi = model.index();
+        let mut out = Vec::with_capacity(n_bins);
+        for i in 0..n_bins {
+            let (lo, hi) = (i * k, (i + 1) * k);
+            let (mut count, mut violations) = (0u64, 0u64);
+            let (mut sum_ttft, mut sum_e2e) = (0.0f64, 0.0f64);
+            let mut ttft = LatencyHistogram::default();
+            let mut e2e = LatencyHistogram::default();
+            for r in 0..REGIONS {
+                let Some(series) = self.bins.get(mi * REGIONS + r) else { continue };
+                for cell in series.iter().take(hi.min(series.len())).skip(lo) {
+                    for (ti, &tier) in Tier::ALL.iter().enumerate() {
+                        if !tier.is_interactive() {
+                            continue;
+                        }
+                        count += cell.count[ti];
+                        violations += cell.violations[ti];
+                        sum_ttft += cell.sum_ttft[ti];
+                        sum_e2e += cell.sum_e2e[ti];
+                    }
+                    ttft.merge(&cell.iw_ttft);
+                    e2e.merge(&cell.iw_e2e);
+                }
             }
-            let b = (o.arrival / bin) as usize;
-            if b >= n_bins {
-                continue; // arrival past the last bin edge
-            }
-            let g = &mut groups[b];
-            g.0.push(o.ttft);
-            g.1.push(o.e2e);
-            if !o.sla_met {
-                g.2 += 1;
-            }
+            out.push(LatencySummary::from_accum(count, violations, sum_ttft, sum_e2e, &ttft, &e2e));
         }
-        groups
-            .into_iter()
-            .map(|(ttft, e2e, v)| LatencySummary::from_parts(ttft, e2e, v))
-            .collect()
+        out
+    }
+
+    /// The arrival-binned cell series for one (model, region) — per-tier
+    /// scalar stats plus IW histograms per streaming bin (for custom
+    /// over-time reports and the shard-merge tests).
+    pub fn bin_series(&self, model: ModelKind, region: Region) -> &[BinCell] {
+        self.bins
+            .get(model.index() * REGIONS + region.index())
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// The utilization bin series for one (model, region).
+    pub fn util_series(&self, model: ModelKind, region: Region) -> &[UtilBin] {
+        self.util
+            .get(model.index() * REGIONS + region.index())
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
     }
 
     /// Total instance-hours for a model across regions.
@@ -426,25 +874,122 @@ impl Metrics {
         self.fleet_dollar_cost(end) - self.spot_revenue(end)
     }
 
-    /// Mean effective memory utilization for a model across samples.
+    /// Mean effective memory utilization for a model across all samples
+    /// (regions folded in canonical order — deterministic).
     pub fn mean_util(&self, model: ModelKind) -> f64 {
-        let vals: Vec<f64> = self
-            .util_samples
-            .iter()
-            .filter(|(_, m, _, _)| *m == model)
-            .map(|&(_, _, _, u)| u)
-            .collect();
-        if vals.is_empty() {
+        let (mut sum, mut n) = (0.0f64, 0u64);
+        for r in 0..REGIONS {
+            if let Some(series) = self.util.get(model.index() * REGIONS + r) {
+                for b in series {
+                    sum += b.sum;
+                    n += b.count;
+                }
+            }
+        }
+        if n == 0 {
             0.0
         } else {
-            vals.iter().sum::<f64>() / vals.len() as f64
+            sum / n as f64
         }
+    }
+
+    /// Absorb another metrics container recorded over a disjoint shard
+    /// of the same run (e.g. completions partitioned by region, or a
+    /// time-sliced chunk).
+    ///
+    /// Counts and histograms merge exactly in every case.  Floating
+    /// latency/utilization sums are per-(model, region) — shards that
+    /// partition completions *by key* therefore merge **bit-identically**
+    /// to one sequential accumulation; shards that interleave updates to
+    /// the same key merge within f64 rounding.  Ledgers under the same
+    /// key are combined as step-function sums (integral-exact).
+    pub fn merge(&mut self, other: &Metrics) {
+        // Hard asserts: silently merging misaligned bin series would
+        // attribute completions to wrong time windows, and mixed modes
+        // would leave the outcome log covering only some shards (merge
+        // is a cold report-side API — the checks cost nothing).
+        assert!(
+            self.cfg.bin == other.cfg.bin,
+            "shards must share a bin width ({} vs {})",
+            self.cfg.bin,
+            other.cfg.bin
+        );
+        assert!(
+            self.cfg.mode == other.cfg.mode,
+            "shards must share a metrics mode ({:?} vs {:?})",
+            self.cfg.mode,
+            other.cfg.mode
+        );
+        self.completed += other.completed;
+        self.dropped += other.dropped;
+        self.outcomes.extend(other.outcomes.iter().cloned());
+        if !other.cells.is_empty() {
+            if self.cells.is_empty() {
+                self.cells = other.cells.clone();
+            } else {
+                for (a, b) in self.cells.iter_mut().zip(&other.cells) {
+                    a.merge(b);
+                }
+            }
+        }
+        if !other.bins.is_empty() {
+            if self.bins.is_empty() {
+                self.bins = other.bins.clone();
+            } else {
+                for (sa, sb) in self.bins.iter_mut().zip(&other.bins) {
+                    if sa.len() < sb.len() {
+                        sa.resize_with(sb.len(), BinCell::default);
+                    }
+                    for (a, b) in sa.iter_mut().zip(sb) {
+                        a.merge(b);
+                    }
+                }
+            }
+        }
+        if !other.util.is_empty() {
+            if self.util.is_empty() {
+                self.util = other.util.clone();
+            } else {
+                for (sa, sb) in self.util.iter_mut().zip(&other.util) {
+                    if sa.len() < sb.len() {
+                        sa.resize_with(sb.len(), UtilBin::default);
+                    }
+                    for (a, b) in sa.iter_mut().zip(sb) {
+                        a.merge(b);
+                    }
+                }
+            }
+        }
+        for (k, l) in &other.instances {
+            self.instances.entry(*k).or_default().merge(l);
+        }
+        for (k, l) in &other.instances_by_gpu {
+            self.instances_by_gpu.entry(*k).or_default().merge(l);
+        }
+        for (k, l) in &other.spot_instances_by_gpu {
+            self.spot_instances_by_gpu.entry(*k).or_default().merge(l);
+        }
+        self.scaling_waste.merge(&other.scaling_waste);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::trace::types::AppKind;
+
+    fn req(i: u64, arrival: Time, model: ModelKind, tier: Tier) -> Request {
+        Request {
+            id: i,
+            arrival,
+            model,
+            origin: Region::EastUs,
+            tier,
+            app: AppKind::Chat,
+            input_tokens: 100,
+            output_tokens: 10,
+        }
+    }
 
     #[test]
     fn percentile_nearest_rank() {
@@ -486,77 +1031,106 @@ mod tests {
     }
 
     #[test]
-    fn sla_accounting() {
-        use crate::trace::types::AppKind;
-        let mut m = Metrics::default();
-        let req = Request {
-            id: 0,
-            arrival: 0.0,
-            model: ModelKind::Llama2_70B,
-            origin: Region::EastUs,
-            tier: Tier::IwF,
-            app: AppKind::Chat,
-            input_tokens: 100,
-            output_tokens: 10,
-        };
-        m.record_outcome(&req, Region::EastUs, 0.5, 2.0); // meets 1s TTFT
-        m.record_outcome(&req, Region::EastUs, 1.5, 3.0); // violates
-        let s = m.latency_by_tier(Tier::IwF);
-        assert_eq!(s.count, 2);
-        assert!((s.sla_violation_rate - 0.5).abs() < 1e-9);
+    fn ledger_merge_sums_step_functions() {
+        let mut a = InstanceHourLedger::default();
+        a.record(0.0, 2);
+        a.record(100.0, 1);
+        let mut b = InstanceHourLedger::default();
+        b.record(50.0, 3);
+        b.record(100.0, 0);
+        let (ia, ib) = (a.instance_hours(200.0), b.instance_hours(200.0));
+        a.merge(&b);
+        // Integral is preserved exactly ...
+        assert!((a.instance_hours(200.0) - ia - ib).abs() < 1e-9);
+        // ... and the merged step function is the pointwise sum.
+        assert_eq!(a.count_at(25.0), 2);
+        assert_eq!(a.count_at(75.0), 5);
+        assert_eq!(a.count_at(150.0), 1);
+        // Merging into an empty ledger clones.
+        let mut empty = InstanceHourLedger::default();
+        empty.merge(&a);
+        assert_eq!(empty, a);
     }
 
     #[test]
-    fn grouped_summaries_match_filtered() {
-        use crate::trace::types::AppKind;
+    fn sla_accounting() {
         let mut m = Metrics::default();
-        for i in 0..40u64 {
-            let req = Request {
-                id: i,
-                arrival: i as f64,
-                model: if i % 2 == 0 { ModelKind::Llama2_70B } else { ModelKind::Bloom176B },
-                origin: Region::EastUs,
-                tier: if i % 3 == 0 { Tier::Niw } else { Tier::IwF },
-                app: AppKind::Chat,
-                input_tokens: 100,
-                output_tokens: 10,
-            };
-            m.record_outcome(&req, Region::EastUs, 0.1 + i as f64 * 0.07, 2.0 + i as f64);
+        let r = req(0, 0.0, ModelKind::Llama2_70B, Tier::IwF);
+        m.record_outcome(&r, Region::EastUs, 0.5, 2.0); // meets 1s TTFT
+        m.record_outcome(&r, Region::EastUs, 1.5, 3.0); // violates
+        let s = m.latency_by_tier(Tier::IwF);
+        assert_eq!(s.count, 2);
+        assert!((s.sla_violation_rate - 0.5).abs() < 1e-9);
+        assert_eq!(m.completed, 2);
+        // Streaming mode keeps no outcome log.
+        assert!(m.outcomes.is_empty());
+    }
+
+    #[test]
+    fn exact_mode_keeps_outcome_log() {
+        let mut m = Metrics::new(MetricsConfig { mode: MetricsMode::Exact, bin: 900.0 });
+        let r = req(0, 10.0, ModelKind::Llama2_70B, Tier::IwF);
+        m.record_outcome(&r, Region::WestUs, 0.3, 1.2);
+        assert_eq!(m.outcomes.len(), 1);
+        assert_eq!(m.outcomes[0].region, Region::WestUs);
+        assert!(m.outcomes[0].sla_met);
+        // Streaming summaries are maintained in Exact mode too.
+        assert_eq!(m.latency_by_tier(Tier::IwF).count, 1);
+    }
+
+    /// Streaming grouped summaries vs the exact outcome log: counts,
+    /// means and violation rates match exactly; percentiles within the
+    /// histogram error bound.
+    #[test]
+    fn grouped_summaries_match_exact_log() {
+        let mut m = Metrics::new(MetricsConfig { mode: MetricsMode::Exact, bin: 900.0 });
+        for i in 0..400u64 {
+            let model = if i % 2 == 0 { ModelKind::Llama2_70B } else { ModelKind::Bloom176B };
+            let tier = if i % 3 == 0 { Tier::Niw } else { Tier::IwF };
+            let r = req(i, i as f64, model, tier);
+            m.record_outcome(&r, Region::EastUs, 0.1 + (i % 37) as f64 * 0.07, 2.0 + i as f64 * 0.5);
         }
-        let grouped = m.latency_by_model_tier_all();
-        for (&(model, tier), s) in &grouped {
-            let filtered = m.latency_by_model_tier(model, tier);
-            assert_eq!(s.count, filtered.count);
-            assert_eq!(s.ttft_p95, filtered.ttft_p95, "{model} {tier}");
-            assert_eq!(s.e2e_p50, filtered.e2e_p50, "{model} {tier}");
-            assert_eq!(s.sla_violation_rate, filtered.sla_violation_rate);
+        for (&(model, tier), s) in &m.latency_by_model_tier_all() {
+            let exact = LatencySummary::from_outcomes(
+                m.outcomes.iter().filter(|o| o.model == model && o.tier == tier),
+            );
+            assert_eq!(s.count, exact.count, "{model} {tier}");
+            assert_eq!(s.sla_violation_rate, exact.sla_violation_rate);
+            assert!((s.mean_ttft - exact.mean_ttft).abs() < 1e-9 * exact.mean_ttft.max(1.0));
+            assert!((s.mean_e2e - exact.mean_e2e).abs() < 1e-9 * exact.mean_e2e.max(1.0));
+            for (h, e) in [
+                (s.ttft_p50, exact.ttft_p50),
+                (s.ttft_p95, exact.ttft_p95),
+                (s.e2e_p50, exact.e2e_p50),
+                (s.e2e_p95, exact.e2e_p95),
+            ] {
+                assert!((h - e).abs() / e.max(1e-9) < 0.045, "{model} {tier}: {h} vs {e}");
+            }
         }
         let iw = m.interactive_latency_by_model();
         for (&model, s) in &iw {
-            let filtered = LatencySummary::from_outcomes(
+            let exact = LatencySummary::from_outcomes(
                 m.outcomes.iter().filter(|o| o.model == model && o.tier.is_interactive()),
             );
-            assert_eq!(s.count, filtered.count);
-            assert_eq!(s.ttft_p75, filtered.ttft_p75);
+            assert_eq!(s.count, exact.count);
+            assert!((s.ttft_p75 - exact.ttft_p75).abs() / exact.ttft_p75 < 0.045);
         }
+        // The all-model interactive fold agrees with a filtered scan.
+        let all_iw = m.interactive_latency();
+        let exact_iw =
+            LatencySummary::from_outcomes(m.outcomes.iter().filter(|o| o.tier.is_interactive()));
+        assert_eq!(all_iw.count, exact_iw.count);
+        assert_eq!(all_iw.sla_violation_rate, exact_iw.sla_violation_rate);
     }
 
     #[test]
     fn binned_summaries_match_filtered_windows() {
-        use crate::trace::types::AppKind;
-        let mut m = Metrics::default();
+        let mut m = Metrics::new(MetricsConfig { mode: MetricsMode::Exact, bin: 300.0 });
         for i in 0..200u64 {
-            let req = Request {
-                id: i,
-                arrival: i as f64 * 7.3,
-                model: if i % 2 == 0 { ModelKind::Llama2_70B } else { ModelKind::Bloom176B },
-                origin: Region::EastUs,
-                tier: if i % 5 == 0 { Tier::Niw } else { Tier::IwF },
-                app: AppKind::Chat,
-                input_tokens: 100,
-                output_tokens: 10,
-            };
-            m.record_outcome(&req, Region::EastUs, 0.1 + (i % 13) as f64 * 0.2, 3.0 + i as f64);
+            let model = if i % 2 == 0 { ModelKind::Llama2_70B } else { ModelKind::Bloom176B };
+            let tier = if i % 5 == 0 { Tier::Niw } else { Tier::IwF };
+            let r = req(i, i as f64 * 7.3, model, tier);
+            m.record_outcome(&r, Region::EastUs, 0.1 + (i % 13) as f64 * 0.2, 3.0 + i as f64);
         }
         let (bin, end) = (300.0, 200.0 * 7.3);
         let bins = m.interactive_latency_bins(ModelKind::Llama2_70B, bin, end);
@@ -570,10 +1144,42 @@ mod tests {
                     && o.arrival < t + bin
             }));
             assert_eq!(s.count, window.count, "bin {i}");
-            assert_eq!(s.ttft_p95, window.ttft_p95, "bin {i}");
-            assert_eq!(s.e2e_p95, window.e2e_p95, "bin {i}");
             assert_eq!(s.sla_violation_rate, window.sla_violation_rate, "bin {i}");
+            if window.count > 0 {
+                assert!(
+                    (s.ttft_p95 - window.ttft_p95).abs() / window.ttft_p95.max(1e-9) < 0.045,
+                    "bin {i}: {} vs {}",
+                    s.ttft_p95,
+                    window.ttft_p95
+                );
+                assert!(
+                    (s.e2e_p95 - window.e2e_p95).abs() / window.e2e_p95.max(1e-9) < 0.045,
+                    "bin {i}"
+                );
+            }
         }
+        // Coarser report bins are exact merges of the streaming bins:
+        // counts at 600 s equal the sum of the two 300 s halves.
+        let coarse = m.interactive_latency_bins(ModelKind::Llama2_70B, 600.0, end);
+        for (i, c) in coarse.iter().enumerate() {
+            let fine: usize =
+                bins[i * 2..(i * 2 + 2).min(bins.len())].iter().map(|s| s.count).sum();
+            assert_eq!(c.count, fine, "coarse bin {i}");
+        }
+    }
+
+    #[test]
+    fn util_bins_mean_and_max() {
+        let mut m = Metrics::default();
+        m.record_util(0.0, ModelKind::Llama2_70B, Region::EastUs, 0.2);
+        m.record_util(100.0, ModelKind::Llama2_70B, Region::EastUs, 0.6);
+        m.record_util(1000.0, ModelKind::Llama2_70B, Region::WestUs, 0.4);
+        assert!((m.mean_util(ModelKind::Llama2_70B) - 0.4).abs() < 1e-12);
+        let series = m.util_series(ModelKind::Llama2_70B, Region::EastUs);
+        assert_eq!(series.len(), 1);
+        assert_eq!(series[0].count, 2);
+        assert!((series[0].max - 0.6).abs() < 1e-12);
+        assert!(m.util_series(ModelKind::Llama2_70B, Region::CentralUs).is_empty());
     }
 
     #[test]
@@ -648,5 +1254,10 @@ mod tests {
         w.record("spot-reclaim", 60.0);
         assert_eq!(w.total_events(), 3);
         assert!((w.total_gpu_hours() - 1260.0 / 3600.0).abs() < 1e-9);
+        let mut w2 = ScalingWasteLedger::default();
+        w2.record("vm-provision", 60.0);
+        w.merge(&w2);
+        assert_eq!(w.total_events(), 4);
+        assert_eq!(w.by_cause["vm-provision"].0, 3);
     }
 }

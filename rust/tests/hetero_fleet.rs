@@ -49,7 +49,7 @@ fn mixed_fleet_conserves_and_accounts_per_sku() {
     let total = TraceGenerator::new(cfg.trace.clone()).stream().count();
     let sim = run_simulation(cfg);
     assert_eq!(
-        sim.metrics.outcomes.len() + sim.metrics.dropped as usize,
+        sim.metrics.completed as usize + sim.metrics.dropped as usize,
         total,
         "mixed fleet lost requests"
     );
@@ -108,7 +108,7 @@ fn three_way_fleet_conserves_and_accounts_per_sku() {
     let total = TraceGenerator::new(cfg.trace.clone()).stream().count();
     let sim = run_simulation(cfg);
     assert_eq!(
-        sim.metrics.outcomes.len() + sim.metrics.dropped as usize,
+        sim.metrics.completed as usize + sim.metrics.dropped as usize,
         total,
         "three-way fleet lost requests"
     );
@@ -190,13 +190,12 @@ fn sku_aware_routing_no_worse_than_blind_on_mixed_fleet() {
     );
 
     let attainment = |sim: &sageserve::sim::engine::Simulation| {
-        let iw: Vec<_> = sim
-            .metrics
-            .outcomes
-            .iter()
-            .filter(|o| o.tier.is_interactive())
-            .collect();
-        iw.iter().filter(|o| o.sla_met).count() as f64 / iw.len().max(1) as f64
+        let iw = sim.metrics.interactive_latency();
+        if iw.count == 0 {
+            1.0
+        } else {
+            1.0 - iw.sla_violation_rate
+        }
     };
     let (sla_aware, sla_blind) = (attainment(&aware), attainment(&blind));
     assert!(
@@ -228,10 +227,8 @@ fn k3_epoch_plans_align_with_fleet_axis() {
     let perf = PerfTable::for_fleet(&gpus, &models);
     let params = ScalingParams::default();
     let mut forecaster = SeasonalNaive::new(96, 4);
-    let mut counts = BTreeMap::new();
-    for r in Region::ALL {
-        counts.insert((ModelKind::Llama2_70B, r), vec![1usize, 1, 1]);
-    }
+    // Dense per-SKU counts: one row per telemetry key, GpuKind::index order.
+    let counts = vec![[1usize, 1, 1]; Region::ALL.len()];
     let plan = run_epoch(&telemetry, &mut forecaster, &perf, &gpus, &params, &counts, 0.0);
     assert_eq!(plan.len(), 3, "one entry per region");
     for entry in &plan {

@@ -1,0 +1,211 @@
+//! Invariants for the streaming metrics core: shard `merge()` must equal
+//! one sequential accumulation bit-for-bit when shards partition the
+//! completion stream by key, and `MetricsMode::Exact` must agree with
+//! the streaming summaries (counts/means/rates exactly, percentiles
+//! within the histogram error bound).
+
+use sageserve::config::{GpuKind, ModelKind, Region, Tier};
+use sageserve::metrics::{LatencySummary, Metrics, MetricsConfig, MetricsMode};
+use sageserve::sim::engine::{quick_config, run_simulation, Strategy};
+use sageserve::trace::types::{AppKind, Request};
+use sageserve::util::rng::Rng;
+
+const WEEK: f64 = 7.0 * 86_400.0;
+
+/// One synthetic completion: (request, serving region, ttft, e2e).
+fn synth(i: u64, n: u64, rng: &mut Rng) -> (Request, Region, f64, f64) {
+    let model = if i % 3 == 0 { ModelKind::Bloom176B } else { ModelKind::Llama2_70B };
+    let tier = Tier::ALL[(i % 5) as usize % 3];
+    let region = if i % 2 == 0 { Region::EastUs } else { Region::WestUs };
+    let req = Request {
+        id: i,
+        arrival: i as f64 * (WEEK / n as f64),
+        model,
+        origin: region,
+        tier,
+        app: AppKind::Chat,
+        input_tokens: 200,
+        output_tokens: 50,
+    };
+    let ttft = 0.05 * 10f64.powf(rng.range(0.0, 2.0));
+    let e2e = ttft + 10f64.powf(rng.range(-1.0, 2.5));
+    (req, region, ttft, e2e)
+}
+
+/// A two-region "week run" split into per-region shards must merge to a
+/// metrics container **bit-identical** to sequential accumulation of the
+/// full stream: counts and histograms merge exactly by construction, and
+/// because every floating sum lives in a per-(model, region) cell, a
+/// by-region partition gives each shard exclusive ownership of its cells.
+#[test]
+fn shard_merge_equals_sequential_on_two_region_week() {
+    let n = 20_000u64;
+    let mut rng = Rng::seed_from_u64(0xA5);
+    let mut seq = Metrics::default();
+    let mut east = Metrics::default();
+    let mut west = Metrics::default();
+    for i in 0..n {
+        let (req, region, ttft, e2e) = synth(i, n, &mut rng);
+        seq.record_outcome(&req, region, ttft, e2e);
+        let shard = if region == Region::EastUs { &mut east } else { &mut west };
+        shard.record_outcome(&req, region, ttft, e2e);
+    }
+    // Utilization samples, hourly, per region.
+    for h in 0..(7 * 24) {
+        let t = h as f64 * 3600.0;
+        let u = 0.3 + 0.5 * ((h % 24) as f64 / 24.0);
+        seq.record_util(t, ModelKind::Llama2_70B, Region::EastUs, u);
+        east.record_util(t, ModelKind::Llama2_70B, Region::EastUs, u);
+        seq.record_util(t, ModelKind::Llama2_70B, Region::WestUs, 1.0 - u);
+        west.record_util(t, ModelKind::Llama2_70B, Region::WestUs, 1.0 - u);
+    }
+    // Region-keyed ledgers and (exactly-representable) waste entries.
+    for (m, r, shard) in [
+        (ModelKind::Llama2_70B, Region::EastUs, &mut east),
+        (ModelKind::Llama2_70B, Region::WestUs, &mut west),
+    ] {
+        let led = seq.instances.entry((m, r)).or_default();
+        led.record(0.0, 4);
+        led.record(3600.0, 2);
+        let led = shard.instances.entry((m, r)).or_default();
+        led.record(0.0, 4);
+        led.record(3600.0, 2);
+        let k = (m, r, GpuKind::H100x8);
+        seq.instances_by_gpu.entry(k).or_default().record(0.0, 4);
+        shard.instances_by_gpu.entry(k).or_default().record(0.0, 4);
+        seq.scaling_waste.record("vm-provision", 600.0);
+        shard.scaling_waste.record("vm-provision", 600.0);
+        seq.dropped += 1;
+        shard.dropped += 1;
+    }
+
+    let mut merged = east;
+    merged.merge(&west);
+    assert!(merged == seq, "merged shards must equal sequential accumulation exactly");
+
+    // Spot-check a few derived summaries too.
+    assert_eq!(merged.completed, seq.completed);
+    assert_eq!(
+        merged.interactive_latency_bins(ModelKind::Llama2_70B, 3.0 * 3600.0, WEEK),
+        seq.interactive_latency_bins(ModelKind::Llama2_70B, 3.0 * 3600.0, WEEK)
+    );
+    assert_eq!(
+        merged.mean_util(ModelKind::Llama2_70B),
+        seq.mean_util(ModelKind::Llama2_70B)
+    );
+}
+
+/// Merging shards of the *same* key (e.g. a future time-sliced chunk
+/// split) is exact for counts/histograms and within f64 rounding for
+/// means — summaries must agree to near machine precision.
+#[test]
+fn same_key_merge_matches_sequential_summaries() {
+    let n = 10_000u64;
+    let mut rng = Rng::seed_from_u64(0x77);
+    let mut seq = Metrics::default();
+    let mut a = Metrics::default();
+    let mut b = Metrics::default();
+    for i in 0..n {
+        let (req, region, ttft, e2e) = synth(i, n, &mut rng);
+        seq.record_outcome(&req, region, ttft, e2e);
+        // Split by *time* (first half / second half), not by key.
+        let shard = if i < n / 2 { &mut a } else { &mut b };
+        shard.record_outcome(&req, region, ttft, e2e);
+    }
+    let mut merged = a;
+    merged.merge(&b);
+    for tier in Tier::ALL {
+        let (s, m) = (seq.latency_by_tier(tier), merged.latency_by_tier(tier));
+        assert_eq!(s.count, m.count, "{tier}");
+        assert_eq!(s.sla_violation_rate, m.sla_violation_rate, "{tier}");
+        // Histogram-derived percentiles are bit-identical (integer merge).
+        assert_eq!(s.ttft_p95, m.ttft_p95, "{tier}");
+        assert_eq!(s.e2e_p50, m.e2e_p50, "{tier}");
+        // Means agree to f64 rounding.
+        assert!((s.mean_ttft - m.mean_ttft).abs() < 1e-9 * s.mean_ttft.max(1.0), "{tier}");
+    }
+}
+
+/// `MetricsMode::Exact` parity on a real simulation: the streaming
+/// accumulators must be identical in both modes (every summary API
+/// agrees exactly), and the exact outcome log's percentiles must sit
+/// within the histogram error bound of the streaming summaries.
+#[test]
+fn exact_mode_parity_with_streaming_run() {
+    let streaming_cfg = || {
+        let mut cfg = quick_config(Strategy::LtUa, 0.05, 0.005);
+        cfg.scaling.max_instances = 10;
+        cfg
+    };
+    let exact_cfg = || {
+        let mut cfg = streaming_cfg();
+        cfg.metrics.mode = MetricsMode::Exact;
+        cfg
+    };
+    let s = run_simulation(streaming_cfg());
+    let e = run_simulation(exact_cfg());
+
+    assert_eq!(s.metrics.completed, e.metrics.completed);
+    assert!(s.metrics.outcomes.is_empty(), "streaming must not log outcomes");
+    assert_eq!(e.metrics.outcomes.len() as u64, e.metrics.completed);
+
+    // Identical streaming summaries in both modes.
+    assert_eq!(s.metrics.latency_by_model_tier_all(), e.metrics.latency_by_model_tier_all());
+    assert_eq!(
+        s.metrics.interactive_latency_by_model(),
+        e.metrics.interactive_latency_by_model()
+    );
+    for &m in &s.cfg.trace.models {
+        assert_eq!(s.metrics.mean_util(m), e.metrics.mean_util(m));
+    }
+
+    // Exact log vs streaming summaries: counts/rates exact, means to
+    // rounding, percentiles within the log-bucket bound.
+    for tier in Tier::ALL {
+        let stream = s.metrics.latency_by_tier(tier);
+        let exact = LatencySummary::from_outcomes(
+            e.metrics.outcomes.iter().filter(|o| o.tier == tier),
+        );
+        assert_eq!(stream.count, exact.count, "{tier}");
+        if exact.count == 0 {
+            continue;
+        }
+        assert_eq!(stream.sla_violation_rate, exact.sla_violation_rate, "{tier}");
+        assert!(
+            (stream.mean_e2e - exact.mean_e2e).abs() < 1e-9 * exact.mean_e2e.max(1.0),
+            "{tier}"
+        );
+        for (h, x) in [
+            (stream.ttft_p50, exact.ttft_p50),
+            (stream.ttft_p95, exact.ttft_p95),
+            (stream.e2e_p50, exact.e2e_p50),
+            (stream.e2e_p95, exact.e2e_p95),
+        ] {
+            assert!(
+                (h - x).abs() <= 0.045 * x.abs() + 1e-6,
+                "{tier}: streaming {h} vs exact {x}"
+            );
+        }
+    }
+}
+
+/// Custom streaming bin widths thread through construction, and the
+/// report-bin multiple contract holds.
+#[test]
+fn custom_bin_width_and_report_multiples() {
+    let mut m = Metrics::new(MetricsConfig { mode: MetricsMode::Streaming, bin: 60.0 });
+    let mut rng = Rng::seed_from_u64(3);
+    for i in 0..500u64 {
+        let (mut req, region, ttft, e2e) = synth(i, 500, &mut rng);
+        req.arrival = i as f64 * 7.0; // ~1 h of arrivals
+        m.record_outcome(&req, region, ttft, e2e);
+    }
+    assert_eq!(m.bin_width(), 60.0);
+    let fine = m.interactive_latency_bins(ModelKind::Llama2_70B, 60.0, 3600.0);
+    let coarse = m.interactive_latency_bins(ModelKind::Llama2_70B, 600.0, 3600.0);
+    assert_eq!(fine.len(), 60);
+    assert_eq!(coarse.len(), 6);
+    let fine_total: usize = fine.iter().map(|s| s.count).sum();
+    let coarse_total: usize = coarse.iter().map(|s| s.count).sum();
+    assert_eq!(fine_total, coarse_total, "report bins must cover the same completions");
+}
