@@ -19,7 +19,9 @@ verify: check docs
 
 # Rustdoc gate: broken intra-doc links, bad HTML in docs and missing
 # docs on the audited modules (config, perf, coordinator::router,
-# sim::cluster — see lib.rs) all fail the build.
+# coordinator::queue_manager, metrics, sim::cluster, sim::engine,
+# sim::chunked, sim::event, sim::instance — see lib.rs) all fail the
+# build.
 docs:
 	cd $(CARGO_DIR) && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
@@ -61,6 +63,22 @@ timing:
 		wall=$$(grep 'Elapsed (wall clock)' results-timing/$$id.time | awk '{print $$NF}'); \
 		rss=$$(grep 'Maximum resident set size' results-timing/$$id.time | awk '{print $$NF}'); \
 		printf '%s\t%s\t%s\n' "$$id" "$$wall" "$$rss" >> results-timing/summary.tsv; \
+		echo "  wall $$wall  peak RSS $$rss kB"; \
+	done
+	# Sequential vs chunked single runs on the week trace (the PERF.md
+	# peak-RSS/wall-clock comparison row for the epoch-sliced executor):
+	# identical config, bit-identical results; the chunked run pipelines
+	# generation on worker threads with daily chunks.
+	for mode in seq chunked; do \
+		extra=""; \
+		if [ $$mode = chunked ]; then extra="--chunked --chunk-epochs 24"; fi; \
+		echo "=== week_$$mode: simulate lt-ua 7 days (--scale 1.0) $$extra ==="; \
+		/usr/bin/time -v $(CARGO_DIR)/target/release/sageserve simulate \
+			--strategy lt-ua --days 7 --scale 1.0 $$extra \
+			> results-timing/week_$$mode.log 2> results-timing/week_$$mode.time; \
+		wall=$$(grep 'Elapsed (wall clock)' results-timing/week_$$mode.time | awk '{print $$NF}'); \
+		rss=$$(grep 'Maximum resident set size' results-timing/week_$$mode.time | awk '{print $$NF}'); \
+		printf '%s\t%s\t%s\n' "week_$$mode" "$$wall" "$$rss" >> results-timing/summary.tsv; \
 		echo "  wall $$wall  peak RSS $$rss kB"; \
 	done
 	@echo; cat results-timing/summary.tsv

@@ -10,6 +10,7 @@ use std::collections::BTreeMap;
 
 use sageserve::config::{FleetSpec, GpuKind};
 use sageserve::metrics::Metrics;
+use sageserve::sim::chunked::{run_simulation_chunked, ChunkedOptions};
 use sageserve::sim::engine::{run_simulation, SimConfig, Strategy};
 use sageserve::trace::generator::{TraceConfig, TraceGenerator};
 use sageserve::util::bench::{bench, quick_iters, quick_mode};
@@ -94,6 +95,50 @@ fn main() {
         entry.insert("p50_ns".to_string(), Json::Num(result.p50_ns));
         entry.insert("reqs_per_wall_sec".to_string(), Json::Num(reqs_per_sec));
         report.insert("simulate_lt-ua_mixed3".to_string(), Json::Obj(entry));
+    }
+
+    // Single-run engine: sequential loop vs the epoch-sliced chunked
+    // executor on the identical config.  The chunked path generates on
+    // worker threads while simulating (overlap, O(chunk) memory) and
+    // does a full suspend/resume handoff every epoch — this pair records
+    // what that pipeline wins (or costs) per PR.  Quick mode covers the
+    // chunked path too, so CI smoke always exercises the handoff.
+    {
+        let cfg = || SimConfig {
+            trace: TraceConfig { days: 0.1, scale: 0.05, ..Default::default() },
+            strategy: Strategy::LtUa,
+            ..Default::default()
+        };
+        let n_requests = TraceGenerator::new(cfg().trace.clone()).stream().count();
+        for (key, chunked) in
+            [("single_run_sequential", false), ("single_run_chunked", true)]
+        {
+            let label = if chunked {
+                format!("single run, chunked 1-epoch ({n_requests} reqs)")
+            } else {
+                format!("single run, sequential ({n_requests} reqs)")
+            };
+            let result = bench(&label, iters, || {
+                if chunked {
+                    run_simulation_chunked(
+                        cfg(),
+                        &ChunkedOptions { chunk_epochs: 1, workers: 0 },
+                    )
+                    .metrics
+                    .completed as usize
+                } else {
+                    run_simulation(cfg()).metrics.completed as usize
+                }
+            });
+            let reqs_per_sec = n_requests as f64 / (result.mean_ns / 1e9);
+            println!("    → {:.2} M simulated requests / wall-second\n", reqs_per_sec / 1e6);
+            let mut entry = BTreeMap::new();
+            entry.insert("n_requests".to_string(), Json::Num(n_requests as f64));
+            entry.insert("mean_ns".to_string(), Json::Num(result.mean_ns));
+            entry.insert("p50_ns".to_string(), Json::Num(result.p50_ns));
+            entry.insert("reqs_per_wall_sec".to_string(), Json::Num(reqs_per_sec));
+            report.insert(key.to_string(), Json::Obj(entry));
+        }
     }
 
     // Metrics recording alone (the completion hot path): per-request

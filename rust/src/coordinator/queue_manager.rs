@@ -5,11 +5,12 @@
 //! releases one queued request to that (model, region), below 50% two.
 //! Requests aging past 10 h are upgraded to priority 0 and routed
 //! immediately like interactive traffic (deadline protection, 24 h SLA).
-
-// Rustdoc debt: public surface not yet audited for `missing_docs`
-// (PR 4 audited config, perf, coordinator::router and sim::cluster);
-// drop this allow once every pub item here is documented.
-#![allow(missing_docs)]
+//!
+//! The manager itself is SKU-blind: a release names the *signalling*
+//! region, and the engine then runs it through
+//! [`router::route_released_niw`](crate::coordinator::router::route_released_niw)
+//! so long-context releases get the same HBM-affinity cascade as live
+//! arrivals.
 
 use std::collections::{BTreeMap, VecDeque};
 
@@ -23,15 +24,19 @@ pub struct QueueManager {
     /// Requests currently parked across all queues (kept incrementally —
     /// the engine polls total depth every event-loop iteration).
     depth_total: usize,
+    /// Lifetime count of NIW requests parked here.
     pub total_enqueued: u64,
+    /// Lifetime count leaving the queues (released, aged or drained).
     pub total_released: u64,
 }
 
 impl QueueManager {
+    /// An empty manager (no queues until the first enqueue).
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Park an NIW request in its model's FIFO.
     pub fn enqueue(&mut self, req: Request) {
         debug_assert!(!req.tier.is_interactive());
         self.queues.entry(req.model).or_default().push_back(req);
@@ -39,6 +44,7 @@ impl QueueManager {
         self.total_enqueued += 1;
     }
 
+    /// Parked requests for one model.
     pub fn depth(&self, model: ModelKind) -> usize {
         self.queues.get(&model).map(|q| q.len()).unwrap_or(0)
     }
@@ -60,8 +66,11 @@ impl QueueManager {
     }
 
     /// Handle a capacity signal from a (model, region) endpoint: pop up to
-    /// `release_count(util)` requests for that model, destined for the
-    /// signalling region.
+    /// `release_count(util)` requests for that model, paired with the
+    /// signalling region.  That region is the *default* destination — the
+    /// engine passes each release through the SKU-aware cascade
+    /// (`router::route_released_niw`), which may redirect long-context
+    /// work on HBM-diverse fleets.
     pub fn on_capacity_signal(
         &mut self,
         params: &ScalingParams,

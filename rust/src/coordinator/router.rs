@@ -177,6 +177,45 @@ pub fn route_region_sku_aware(
     route_region(cluster, params, model, origin)
 }
 
+/// Region choice for NIW work released by the queue manager's capacity
+/// signal (§6.2).  The signal means "this region has spare capacity",
+/// so the default destination stays the signalling region — but on an
+/// HBM-diverse fleet a *long-context* release deserves the same SKU
+/// awareness as a live arrival: if the signalling region's top-HBM SKU
+/// has no KV headroom, spill to the first preference-order region that
+/// is under the utilization threshold *and* can actually serve on that
+/// SKU.  Short releases, single-SKU and HBM-uniform fleets keep the
+/// signalling region unconditionally, so homogeneous paper experiments
+/// are bit-identical to the pre-fix behavior.
+pub fn route_released_niw(
+    cluster: &Cluster,
+    params: &RoutingParams,
+    model: ModelKind,
+    signal_region: Region,
+    total_tokens: u64,
+) -> Region {
+    if !params.sku_affinity
+        || cluster.gpus.len() == 1
+        || !wants_high_hbm(cluster, params, total_tokens)
+    {
+        return signal_region;
+    }
+    let top_hbm = cluster.gpus_hbm_desc[0];
+    if cluster.sku_has_headroom(model, signal_region, top_hbm, params.sku_headroom_util) {
+        return signal_region;
+    }
+    for r in preference_order(signal_region) {
+        if cluster.effective_util(model, r) < params.region_util_threshold
+            && cluster.sku_has_headroom(model, r, top_hbm, params.sku_headroom_util)
+        {
+            return r;
+        }
+    }
+    // Nowhere better: the capacity signal still stands, serve locally on
+    // whatever SKU the instance cascade picks.
+    signal_region
+}
+
 /// SKU-aware instance selection: JSQ *within* the request's preferred
 /// SKU, cascading across the fleet in affinity order, with plain JSQ as
 /// the terminal fallback.
@@ -496,6 +535,65 @@ mod tests {
             }
         }
         assert_eq!(route_region_sku_aware(&c, &p, m, origin, LONG), origin);
+    }
+
+    #[test]
+    fn released_niw_stays_in_signal_region_by_default() {
+        let p = RoutingParams::default();
+        // Homogeneous fleet: always the signalling region, long or short.
+        let h = cluster();
+        for tokens in [SHORT, LONG] {
+            assert_eq!(
+                route_released_niw(&h, &p, ModelKind::Llama2_70B, Region::WestUs, tokens),
+                Region::WestUs
+            );
+        }
+        // Mixed fleet with headroom everywhere: short releases stay, and
+        // long releases stay too because the signal region's MI300s have
+        // room.
+        let c = three_way_cluster();
+        for tokens in [SHORT, LONG] {
+            assert_eq!(
+                route_released_niw(&c, &p, ModelKind::Llama2_70B, Region::EastUs, tokens),
+                Region::EastUs
+            );
+        }
+    }
+
+    #[test]
+    fn released_long_niw_spills_when_signal_region_lacks_hbm_headroom() {
+        let mut c = three_way_cluster();
+        let p = RoutingParams::default();
+        let (m, signal) = (ModelKind::Llama2_70B, Region::EastUs);
+        // Saturate the signalling region's MI300s past the headroom
+        // fraction: a long-context release must move to a region whose
+        // top-HBM SKU can still take it.
+        let ids = c.endpoints[&(m, signal)].instances.clone();
+        for id in ids {
+            if c.instances[id].gpu == GpuKind::Mi300x8 {
+                c.mutate(id, |inst| {
+                    inst.kv_used = (inst.kv_capacity as f64 * 0.9) as u64;
+                });
+            }
+        }
+        let dest = route_released_niw(&c, &p, m, signal, LONG);
+        assert_ne!(dest, signal);
+        assert!(c.sku_has_headroom(m, dest, GpuKind::Mi300x8, p.sku_headroom_util));
+        // Short releases are unaffected by the saturation.
+        assert_eq!(route_released_niw(&c, &p, m, signal, SHORT), signal);
+        // Saturate every region's MI300s: fall back to the signalling
+        // region (the capacity signal still stands).
+        for region in Region::ALL {
+            let ids = c.endpoints[&(m, region)].instances.clone();
+            for id in ids {
+                if c.instances[id].gpu == GpuKind::Mi300x8 {
+                    c.mutate(id, |inst| {
+                        inst.kv_used = (inst.kv_capacity as f64 * 0.9) as u64;
+                    });
+                }
+            }
+        }
+        assert_eq!(route_released_niw(&c, &p, m, signal, LONG), signal);
     }
 
     #[test]

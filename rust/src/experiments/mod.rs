@@ -17,6 +17,7 @@ pub mod characterization;
 pub mod fidelity;
 pub mod hetero;
 pub mod ilp_runtime;
+pub mod month;
 pub mod scalability;
 pub mod scheduling;
 pub mod strategies;
@@ -96,6 +97,9 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
         "ilp" => ilp_runtime::solver_table(opts),
         "hetero" => hetero::hetero(opts),
         "forecast-accuracy" => ilp_runtime::forecast_accuracy(opts),
+        // Dispatchable but not in `exp all` (hours-long at full scale):
+        // the 30-day chunked-engine run, see experiments::month.
+        "month" => month::month(opts),
         "all" => {
             // fig11/12/13 share one run; dedup here.
             let mut seen_strategies = false;

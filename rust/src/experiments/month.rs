@@ -1,0 +1,93 @@
+//! Month-scale validation: a 30-day trace (10 M req/day at `--scale 1`)
+//! through the epoch-sliced chunked engine — the run length ROADMAP
+//! item 1 targets and the sequential sweep path cannot reach, because a
+//! materialized 30-day buffer is ~300 M requests (≈14 GiB at 48 B
+//! each).  The chunked executor generates day-sized chunks on worker
+//! threads and hands simulator state across each boundary, so peak
+//! memory stays O(chunk) no matter how long the trace runs.
+//!
+//! Not part of `exp all` (like `forecast-accuracy`): a full-scale month
+//! is a deliberate, hours-long run — invoke it explicitly with
+//! `sageserve exp month --scale F`.
+
+use anyhow::Result;
+
+use crate::config::{Epoch, ModelKind, DAY};
+use crate::experiments::{print_table, ExpOptions};
+use crate::sim::chunked::{run_simulation_chunked, ChunkedOptions};
+use crate::sim::engine::{SimConfig, Strategy};
+use crate::trace::generator::{TraceConfig, TraceGenerator};
+
+/// Run the 30-day chunked-engine validation (`exp month`).
+pub fn month(opts: &ExpOptions) -> Result<()> {
+    let cfg = SimConfig {
+        trace: TraceConfig {
+            epoch: Epoch::Jul2025,
+            days: 30.0,
+            scale: opts.scale,
+            seed: opts.seed,
+            start_weekday: 0,
+            ..Default::default()
+        },
+        strategy: Strategy::LtUa,
+        pjrt_forecaster: opts.pjrt,
+        artifacts_dir: opts.artifacts_dir.clone(),
+        ..Default::default()
+    };
+    let est = (TraceGenerator::new(cfg.trace.clone()).total_minutes() as f64 / 60.0 / 24.0)
+        .round() as u64;
+    println!(
+        "  simulating {est} days at scale {} with {} through the chunked engine \
+         (daily chunks, generation pipelined, peak memory O(chunk)) ...",
+        opts.scale,
+        cfg.strategy.name()
+    );
+    // 24 hourly epochs per chunk = one handoff per simulated day.
+    let sim = run_simulation_chunked(cfg, &ChunkedOptions { chunk_epochs: 24, workers: 0 });
+    let end = sim.end_time();
+
+    // Daily p95 series: does LT-UA hold its latency floor across four
+    // weekly cycles (weekday/weekend transitions ×4)?
+    let bins = sim.metrics.interactive_latency_bins(ModelKind::Llama2_70B, DAY, end);
+    let mut rows = Vec::new();
+    for (day, s) in bins.iter().enumerate() {
+        if s.count > 0 {
+            rows.push(format!(
+                "{day},{},{:.3},{:.3},{:.4}",
+                s.count, s.ttft_p95, s.e2e_p95, s.sla_violation_rate
+            ));
+        }
+    }
+    opts.csv(
+        "month_daily_latency.csv",
+        "day,n,p95_ttft,p95_e2e,sla_violation",
+        &rows,
+    )?;
+
+    let mut table = Vec::new();
+    for &m in &sim.cfg.trace.models {
+        let s = sim
+            .metrics
+            .interactive_latency_by_model()
+            .get(&m)
+            .cloned()
+            .unwrap_or_default();
+        table.push(vec![
+            m.to_string(),
+            format!("{}", s.count),
+            format!("{:.2}", s.ttft_p95),
+            format!("{:.2}", s.e2e_p95),
+            format!("{:.1}", sim.metrics.model_instance_hours(m, end)),
+        ]);
+    }
+    print_table(
+        &format!(
+            "Month-scale run — 30 days, LT-UA, chunked engine \
+             ({} completed, {} dropped)",
+            sim.metrics.completed, sim.metrics.dropped
+        ),
+        &["model", "IW n", "p95 TTFT", "p95 E2E", "inst-h"],
+        &table,
+    );
+    Ok(())
+}

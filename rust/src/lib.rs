@@ -25,8 +25,9 @@
 // --no-deps` with `-D warnings`).  The lint is crate-wide; modules whose
 // public surface has not been audited yet carry a file-level
 // `#![allow(missing_docs)]` with a debt note — drop those as they are
-// documented.  config, perf, coordinator::router, sim::cluster and
-// metrics are fully documented.
+// documented.  config, perf, coordinator::router,
+// coordinator::queue_manager, sim::cluster, sim::engine, sim::chunked,
+// sim::event, sim::instance and metrics are fully documented.
 #![warn(missing_docs)]
 
 pub mod config;

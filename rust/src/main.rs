@@ -7,6 +7,7 @@
 //! sageserve simulate --strategy S [--days F] [--scale F] [--epoch E] [--policy P]
 //!                    [--fleet SPEC] [--routing sku-aware|blind]
 //!                    [--metrics streaming|exact] [--pjrt]
+//!                    [--chunked] [--chunk-epochs N] [--chunk-workers N]
 //! sageserve serve [--requests N] [--max-new N] [--artifacts DIR]
 //! sageserve trace --out FILE [--days F] [--scale F] [--epoch E]
 //! sageserve selftest [--artifacts DIR]
@@ -19,6 +20,7 @@ use sageserve::config::Epoch;
 use sageserve::coordinator::scheduler::SchedPolicy;
 use sageserve::experiments::{self, ExpOptions};
 use sageserve::metrics::MetricsMode;
+use sageserve::sim::chunked::{run_simulation_chunked, ChunkedOptions};
 use sageserve::sim::engine::{run_simulation, SimConfig, Strategy};
 use sageserve::trace::generator::{TraceConfig, TraceGenerator};
 use sageserve::trace::io::write_csv;
@@ -36,7 +38,7 @@ fn main() {
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     let mut pos = Vec::new();
     let mut flags = HashMap::new();
-    let bools = ["--pjrt"];
+    let bools = ["--pjrt", "--chunked"];
     let mut i = 0;
     while i < args.len() {
         let a = &args[i];
@@ -166,7 +168,17 @@ fn dispatch(args: &[String]) -> Result<()> {
                     .collect::<Vec<_>>()
                     .join(", ")
             );
-            let sim = run_simulation(cfg);
+            let sim = if flags.contains_key("chunked") {
+                // Epoch-sliced execution: pipelined generation, O(chunk)
+                // peak memory, bit-identical results.
+                let opts = ChunkedOptions {
+                    chunk_epochs: ff("chunk-epochs", 3.0)? as usize,
+                    workers: ff("chunk-workers", 0.0)? as usize,
+                };
+                run_simulation_chunked(cfg, &opts)
+            } else {
+                run_simulation(cfg)
+            };
             report_simulation(&sim);
             Ok(())
         }
@@ -294,11 +306,14 @@ USAGE:
       [--fleet h100|a100|mi300|mixed|mixed3|h100:W,mi300:W]
       [--routing sku-aware|blind] [--metrics streaming|exact]
       [--pjrt] [--replay trace.csv]
+      [--chunked] [--chunk-epochs N] [--chunk-workers N]
       (--fleet picks the GPU fleet; mixed fleets report per-SKU GPU-hours,
        on-demand cost, spot revenue and net cost; --routing toggles
        per-request SKU affinity — see also `exp hetero`; --metrics exact
        keeps the O(requests) per-request outcome log instead of the
-       default O(bins) streaming accumulators)
+       default O(bins) streaming accumulators; --chunked runs the
+       epoch-sliced executor — generation pipelined on worker threads,
+       peak memory O(chunk), results bit-identical to the default engine)
   sageserve serve [--requests N] [--max-new N] [--artifacts DIR]
       real batched inference on the AOT transformer via PJRT
   sageserve trace --out FILE [--days F] [--scale F] [--epoch E] [--seed N]

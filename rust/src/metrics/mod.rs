@@ -903,6 +903,13 @@ impl Metrics {
     /// to one sequential accumulation; shards that interleave updates to
     /// the same key merge within f64 rounding.  Ledgers under the same
     /// key are combined as step-function sums (integral-exact).
+    ///
+    /// This rounding caveat is exactly why `sim::chunked` *carries* one
+    /// accumulator across chunk boundaries (inside the `SimHandoff`)
+    /// instead of merging per-chunk shards: time-sliced chunks of a
+    /// single run interleave on every key, so only the carried
+    /// accumulator — same cells, same update order — can promise
+    /// bit-identity with the sequential engine.
     pub fn merge(&mut self, other: &Metrics) {
         // Hard asserts: silently merging misaligned bin series would
         // attribute completions to wrong time windows, and mixed modes

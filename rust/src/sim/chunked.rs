@@ -1,0 +1,304 @@
+//! Epoch-sliced chunked execution for a single simulation run
+//! (ROADMAP item 1).
+//!
+//! The sequential engine streams arrivals lazily but generates them
+//! *inline* on the simulation thread, and the sweep path materializes
+//! the whole `Arc<[Request]>` buffer up front — O(trace) memory that a
+//! 30-day, 10M-request/day run cannot afford.  This module partitions
+//! the trace into control-epoch-aligned chunks and pipelines them:
+//! generator workers (the `experiments::sweep` scoped-pool pattern)
+//! produce chunk k+1..k+W through a bounded reorder window while the
+//! simulation thread consumes chunk k, so peak memory is O(chunk) and
+//! generation cost overlaps simulation instead of serializing with it.
+//!
+//! Between chunks the simulator state is detached and re-attached as an
+//! explicit [`SimHandoff`](crate::sim::engine::SimHandoff) — every
+//! boundary exercises the full suspend/resume path, which is how the
+//! headline invariant is kept honest: chunked execution is
+//! **bit-identical** to the sequential engine for every strategy, fleet,
+//! chunk size and worker count (`tests/chunked_equivalence.rs`).
+//!
+//! Chunk boundaries land on multiples of the chunk length, which is a
+//! whole number of control intervals — so the hourly
+//! `Event::ControlEpoch` barrier always falls on a boundary, never
+//! inside a straddling arrival slice.  (Bit-identity holds for *any*
+//! cut points by construction; epoch alignment keeps the forecast/ILP
+//! cadence and the chunk cadence in phase, which is what makes the
+//! per-boundary handoff a natural checkpoint.)
+
+use std::collections::BTreeMap;
+use std::sync::{Condvar, Mutex};
+
+use crate::config::MINUTE;
+use crate::sim::engine::{SimConfig, Simulation};
+use crate::trace::generator::TraceGenerator;
+use crate::trace::types::Request;
+
+/// Knobs for [`run_chunked`].
+#[derive(Debug, Clone)]
+pub struct ChunkedOptions {
+    /// Chunk length in control epochs (chunk seconds =
+    /// `chunk_epochs × ScalingParams::control_interval`, rounded to
+    /// whole generator minutes).  1 = handoff every epoch; 24 = daily
+    /// chunks on the default hourly interval.
+    pub chunk_epochs: usize,
+    /// Generator worker threads; 0 = auto (`available_parallelism - 1`,
+    /// at least 1).  The reorder window admits `workers + 1` chunks, so
+    /// peak buffered memory is O(workers × chunk) regardless of trace
+    /// length.
+    pub workers: usize,
+}
+
+impl Default for ChunkedOptions {
+    fn default() -> Self {
+        ChunkedOptions { chunk_epochs: 3, workers: 0 }
+    }
+}
+
+/// Run an already-built simulation chunk-by-chunk to completion.
+///
+/// Source selection mirrors [`Simulation::run`]: a replay CSV or shared
+/// buffer is sliced in place by arrival time (already materialized, so
+/// the pipeline would only add copies); otherwise the generator is
+/// pipelined on worker threads.  Every chunk boundary performs a full
+/// [`suspend`](Simulation::suspend)/[`resume`](Simulation::resume)
+/// handoff, and the drain phase ([`Simulation::finish`]) runs once after
+/// the final chunk.
+pub fn run_chunked(sim: Simulation, opts: &ChunkedOptions) -> Simulation {
+    let chunk_secs =
+        (sim.cfg.scaling.control_interval * opts.chunk_epochs.max(1) as f64).max(MINUTE);
+    let mut sim = if let Some(path) = sim.cfg.replay_trace.clone() {
+        let reqs = crate::trace::io::read_csv(&path)
+            .expect("read replay trace (CSV with header)");
+        run_buffer_chunks(sim, &reqs, chunk_secs)
+    } else if let Some(buf) = sim.cfg.shared_trace.clone() {
+        run_buffer_chunks(sim, &buf, chunk_secs)
+    } else {
+        run_pipelined(sim, chunk_secs, opts.workers)
+    };
+    sim.finish();
+    sim
+}
+
+/// Convenience: build and run a simulation through the chunked executor.
+pub fn run_simulation_chunked(cfg: SimConfig, opts: &ChunkedOptions) -> Simulation {
+    run_chunked(Simulation::new(cfg), opts)
+}
+
+/// One explicit state handoff: detach everything mutable, re-attach,
+/// continue.  Done at every chunk boundary so the roundtrip can never
+/// silently rot.
+fn handoff_roundtrip(sim: Simulation) -> Simulation {
+    let (cfg, handoff) = sim.suspend();
+    Simulation::resume(cfg, handoff)
+}
+
+/// Chunked execution over a pre-materialized, time-ordered buffer
+/// (replay CSV or `shared_trace`): slice by arrival time at multiples of
+/// `chunk_secs`.  Ids come with the buffer.
+fn run_buffer_chunks(mut sim: Simulation, buf: &[Request], chunk_secs: f64) -> Simulation {
+    let mut start = 0usize;
+    let mut boundary_idx = 1u64;
+    while start < buf.len() {
+        let boundary = boundary_idx as f64 * chunk_secs;
+        let end = start + buf[start..].partition_point(|r| r.arrival < boundary);
+        if end > start {
+            let next_after = buf.get(end).map(|r| r.arrival);
+            sim.run_chunk(buf[start..end].iter().copied(), next_after);
+            sim = handoff_roundtrip(sim);
+            start = end;
+        }
+        boundary_idx += 1;
+    }
+    sim
+}
+
+/// Generation→simulation pipeline: workers claim chunk indices through a
+/// bounded reorder window and publish generated buffers; the simulation
+/// thread consumes them in order, assigns ids sequentially (identical to
+/// the streaming path), and keeps one non-empty chunk of lookahead to
+/// know the successor's first arrival time.
+fn run_pipelined(sim: Simulation, chunk_secs: f64, workers: usize) -> Simulation {
+    let gen = TraceGenerator::new(sim.cfg.trace.clone());
+    let total_minutes = gen.total_minutes();
+    let chunk_minutes = ((chunk_secs / MINUTE).round() as u64).max(1);
+    let n_chunks = ((total_minutes + chunk_minutes - 1) / chunk_minutes) as usize;
+    if n_chunks == 0 {
+        return sim;
+    }
+    let workers = if workers == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .saturating_sub(1)
+            .max(1)
+    } else {
+        workers
+    }
+    .min(n_chunks);
+
+    let exchange = ChunkExchange::new(n_chunks, workers + 1);
+    let (gen_ref, ex_ref) = (&gen, &exchange);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(move || loop {
+                let c = match ex_ref.claim() {
+                    Some(c) => c,
+                    None => break,
+                };
+                let lo = c as u64 * chunk_minutes;
+                let hi = (lo + chunk_minutes).min(total_minutes);
+                ex_ref.publish(c, gen_ref.generate_window(lo, hi));
+            });
+        }
+
+        // Consumer (this thread).  Ids are assigned in receive order,
+        // which is chunk order, which is global arrival order — the
+        // same numbering `TraceGenerator::stream` produces.
+        let mut sim = sim;
+        let mut cursor = 0usize;
+        let mut next_id = 0u64;
+        let fetch_nonempty = |cursor: &mut usize, next_id: &mut u64| -> Option<Vec<Request>> {
+            while *cursor < n_chunks {
+                let mut buf = ex_ref.recv(*cursor);
+                *cursor += 1;
+                if !buf.is_empty() {
+                    for r in &mut buf {
+                        r.id = *next_id;
+                        *next_id += 1;
+                    }
+                    return Some(buf);
+                }
+            }
+            None
+        };
+        let mut cur = fetch_nonempty(&mut cursor, &mut next_id);
+        while let Some(buf) = cur {
+            // One chunk of lookahead: the successor's first arrival is
+            // this chunk's event-processing horizon.  Empty chunks are
+            // skipped — their events simply run at the head of the next
+            // non-empty chunk, in the identical pop order.
+            let nxt = fetch_nonempty(&mut cursor, &mut next_id);
+            let next_after = nxt.as_ref().map(|b| b[0].arrival);
+            sim.run_chunk(buf.iter().copied(), next_after);
+            sim = handoff_roundtrip(sim);
+            cur = nxt;
+        }
+        sim
+    })
+}
+
+/// Bounded reorder window between generator workers and the simulation
+/// thread.  Workers `claim` the next unclaimed chunk index — blocking
+/// while the window is full — generate it, and `publish` the buffer; the
+/// consumer `recv`s strictly in index order, which opens window space.
+/// At most `window` published-but-unconsumed chunks exist at any time,
+/// so buffered memory is bounded by O(window × chunk) for any trace
+/// length.
+struct ChunkExchange {
+    state: Mutex<ExchangeState>,
+    /// Signalled on `publish`; the consumer waits here for its index.
+    ready_cv: Condvar,
+    /// Signalled on `recv`; claiming workers wait here for window space.
+    space_cv: Condvar,
+    n_chunks: usize,
+    window: usize,
+}
+
+struct ExchangeState {
+    /// Next chunk index no worker has claimed yet.
+    next_claim: usize,
+    /// Number of chunks the consumer has received (= next index it needs).
+    consumed: usize,
+    /// Published chunks awaiting consumption, keyed by index.
+    ready: BTreeMap<usize, Vec<Request>>,
+}
+
+impl ChunkExchange {
+    fn new(n_chunks: usize, window: usize) -> Self {
+        ChunkExchange {
+            state: Mutex::new(ExchangeState {
+                next_claim: 0,
+                consumed: 0,
+                ready: BTreeMap::new(),
+            }),
+            ready_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            n_chunks,
+            // ≥ 2 so the consumer's one-chunk lookahead can never
+            // deadlock against a full window.
+            window: window.max(2),
+        }
+    }
+
+    /// Claim the next chunk index to generate, or `None` when the whole
+    /// trace has been claimed.  Blocks while the reorder window is full.
+    fn claim(&self) -> Option<usize> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.next_claim >= self.n_chunks {
+                return None;
+            }
+            if st.next_claim < st.consumed + self.window {
+                let c = st.next_claim;
+                st.next_claim += 1;
+                return Some(c);
+            }
+            st = self.space_cv.wait(st).unwrap();
+        }
+    }
+
+    /// Publish a generated chunk under its index.
+    fn publish(&self, c: usize, buf: Vec<Request>) {
+        let mut st = self.state.lock().unwrap();
+        st.ready.insert(c, buf);
+        self.ready_cv.notify_all();
+    }
+
+    /// Receive chunk `c` (the consumer calls with strictly increasing
+    /// `c`), blocking until its worker publishes it.
+    fn recv(&self, c: usize) -> Vec<Request> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(buf) = st.ready.remove(&c) {
+                st.consumed = c + 1;
+                self.space_cv.notify_all();
+                return buf;
+            }
+            st = self.ready_cv.wait(st).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::{quick_config, run_simulation, Strategy};
+
+    #[test]
+    fn chunked_generator_path_matches_sequential() {
+        let mk = || {
+            let mut cfg = quick_config(Strategy::LtUa, 0.1, 0.005);
+            cfg.scaling.max_instances = 10;
+            cfg
+        };
+        let seq = run_simulation(mk());
+        assert!(seq.metrics.completed > 0);
+        let ch = run_simulation_chunked(mk(), &ChunkedOptions { chunk_epochs: 1, workers: 2 });
+        assert!(seq.metrics == ch.metrics);
+    }
+
+    #[test]
+    fn chunked_shared_buffer_path_matches_sequential() {
+        let mk = || {
+            let mut cfg = quick_config(Strategy::Reactive, 0.1, 0.005);
+            cfg.scaling.max_instances = 10;
+            cfg
+        };
+        let seq = run_simulation(mk());
+        let mut cfg = mk();
+        cfg.shared_trace = Some(TraceGenerator::new(cfg.trace.clone()).materialize_shared());
+        let ch = run_simulation_chunked(cfg, &ChunkedOptions { chunk_epochs: 1, workers: 2 });
+        assert!(seq.metrics == ch.metrics);
+    }
+}

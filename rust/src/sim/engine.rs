@@ -11,11 +11,19 @@
 //!   signals, utilization sampling;
 //! * `ControlEpoch` (hourly) — forecast + ILP (LT strategies);
 //! * `QmTick` (60 s) — NIW aging scan.
-
-// Rustdoc debt: public surface not yet audited for `missing_docs`
-// (PR 4 audited config, perf, coordinator::router and sim::cluster);
-// drop this allow once every pub item here is documented.
-#![allow(missing_docs)]
+//!
+//! ## Resumable execution
+//!
+//! The event loop is exposed in two granularities sharing one code path:
+//! [`Simulation::run`] drives the whole trace, while
+//! [`Simulation::run_chunk`] + [`Simulation::finish`] drive it one
+//! arrival slice at a time with identical pop ordering — the foundation
+//! of the epoch-sliced chunked executor in [`crate::sim::chunked`].
+//! Between chunks the complete mutable state can be carried across as an
+//! explicit [`SimHandoff`] via [`Simulation::suspend`] /
+//! [`Simulation::resume`], which is how the chunked executor proves the
+//! handoff covers everything: chunked runs are *bit-identical* to
+//! sequential ones (`tests/chunked_equivalence.rs`).
 
 use std::collections::BTreeMap;
 
@@ -40,14 +48,19 @@ use crate::trace::types::Request;
 
 /// Simulation parameters.
 pub struct SimConfig {
+    /// Workload: models, regions, epoch shape, scale and seed.
     pub trace: TraceConfig,
     /// GPU fleet: which SKUs the cluster provisions and how the initial
     /// allocation splits across them (§5's k axis; single-SKU fleets
     /// reproduce the paper's homogeneous experiments exactly).
     pub fleet: FleetSpec,
+    /// Auto-scaling strategy under test (§4/§6).
     pub strategy: Strategy,
+    /// Per-instance admission ordering (EDF by default).
     pub sched_policy: SchedPolicy,
+    /// Scaling thresholds, control interval, NIW release/aging knobs.
     pub scaling: ScalingParams,
+    /// Region/SKU routing thresholds and cross-region latency model.
     pub routing: RoutingParams,
     /// Instances per (model, region) at t=0 (§7.1: 20).
     pub initial_instances: usize,
@@ -100,11 +113,17 @@ const UTIL_SAMPLE_EVERY: u64 = 60; // ticks → one util sample / 15 min
 /// The simulation: build with [`Simulation::new`], run with
 /// [`Simulation::run`], then read `metrics`.
 pub struct Simulation {
+    /// Current simulated time (seconds since trace start).
     pub now: Time,
+    /// The configuration this simulation was built from.
     pub cfg: SimConfig,
+    /// Regions, endpoints, instances and their O(1) aggregates.
     pub cluster: Cluster,
+    /// Streaming result accumulator (latency bins, ledgers, counters).
     pub metrics: Metrics,
+    /// Per-(model, region) observed-load window feeding the forecaster.
     pub telemetry: Telemetry,
+    /// Global NIW queue manager (§6.2).
     pub qm: QueueManager,
     events: EventQueue,
     autoscaler: Autoscaler,
@@ -117,7 +136,49 @@ pub struct Simulation {
     epoch_counts: Vec<[usize; GpuKind::COUNT]>,
 }
 
+/// Complete mutable simulator state, detached from a [`Simulation`] so it
+/// can be carried across a chunk boundary (or, in principle, serialized
+/// between processes).  Everything the event loop reads *and* writes is
+/// here; re-attaching it to the same `SimConfig` via
+/// [`Simulation::resume`] continues the run bit-identically.
+///
+/// Two `Simulation` fields are deliberately absent:
+/// * `end_time` — derived from `cfg.trace.days`, recomputed on resume;
+/// * `epoch_counts` — a scratch buffer cleared at the start of every
+///   control epoch, so an empty one is equivalent state.
+pub struct SimHandoff {
+    /// Simulated clock at suspension.
+    pub now: Time,
+    /// Cluster allocation, per-endpoint aggregates and in-flight
+    /// instance work (batches, waiting queues, KV accounting).
+    pub cluster: Cluster,
+    /// Metrics accumulator.  Carried, not merged: re-folding outcomes
+    /// into the *same* accumulator in the same order is what makes
+    /// chunked runs bit-identical (summing per-chunk f64 shards in a
+    /// different association would only match within rounding — see the
+    /// `Metrics::merge` contract).
+    pub metrics: Metrics,
+    /// Telemetry window (forecaster features), including warm-up.
+    pub telemetry: Telemetry,
+    /// NIW queue-manager depths and per-model FIFOs.
+    pub qm: QueueManager,
+    /// Pending event heap, moved wholesale — its internal sequence
+    /// counter keeps same-time events popping in the original order.
+    pub events: EventQueue,
+    /// Strategy state machine (armed targets, progression state).
+    pub autoscaler: Autoscaler,
+    /// Forecaster state (AR model / PJRT executable handle).
+    pub forecaster: Box<dyn Forecaster>,
+    /// Start time of the current control epoch.
+    pub epoch_start: Time,
+    /// ScaleTick counter (drives the 15-minute utilization sampling).
+    pub tick_count: u64,
+}
+
 impl Simulation {
+    /// Build a simulation: fleet + initial allocation, telemetry with a
+    /// week of warm-up history, forecaster, and the initial periodic
+    /// events.  The clock starts at `t = 0` with nothing in flight.
     pub fn new(cfg: SimConfig) -> Self {
         let models = cfg.trace.models.clone();
         let perf = PerfTable::for_fleet(&cfg.fleet.gpus(), &models);
@@ -223,18 +284,47 @@ impl Simulation {
     }
 
     fn run_stream(&mut self, stream: impl Iterator<Item = Request>) {
-        let mut stream = stream.peekable();
+        self.run_chunk(stream, None);
+        self.finish();
+    }
+
+    /// Drive the event loop over one arrival slice.
+    ///
+    /// `next_after` is the arrival time of the first request *after* this
+    /// chunk, or `None` if this is the final (or only) chunk.  Events
+    /// strictly before `next_after` are processed before returning, so
+    /// consecutive calls pop arrivals and events in exactly the order the
+    /// single-pass loop would — the merge decision `ta <= te` (arrival
+    /// wins ties) only ever compares the globally-next arrival against
+    /// the event heap, whichever chunk that arrival lives in.
+    ///
+    /// With `next_after = None` the loop also runs the early-termination
+    /// check (trace exhausted, cluster idle, queue manager empty); with a
+    /// successor chunk pending that check must not fire, since "idle"
+    /// mid-trace is just a lull.  Call [`Simulation::finish`] after the
+    /// last chunk to drain in-flight work.
+    pub fn run_chunk(&mut self, chunk: impl Iterator<Item = Request>, next_after: Option<Time>) {
+        let mut chunk = chunk.peekable();
         loop {
-            let next_arrival = stream.peek().map(|r| r.arrival);
+            let in_chunk = chunk.peek().is_some();
+            let next_arrival = chunk.peek().map(|r| r.arrival).or(next_after);
             let next_event = self.events.peek_time();
             match (next_arrival, next_event) {
                 (Some(ta), Some(te)) if ta <= te => {
-                    let req = stream.next().unwrap();
+                    // The next arrival wins the merge; if it belongs to
+                    // the successor chunk, this chunk's work is done.
+                    if !in_chunk {
+                        return;
+                    }
+                    let req = chunk.next().unwrap();
                     self.now = ta;
                     self.handle_arrival(req);
                 }
                 (Some(ta), None) => {
-                    let req = stream.next().unwrap();
+                    if !in_chunk {
+                        return;
+                    }
+                    let req = chunk.next().unwrap();
                     self.now = ta;
                     self.handle_arrival(req);
                 }
@@ -251,10 +341,24 @@ impl Simulation {
             }
             // Termination: trace done and only periodic events remain.
             // Both checks are O(1) counters — this runs every iteration.
-            if stream.peek().is_none() && self.cluster.is_all_idle() && self.qm.total_depth() == 0 {
+            // Gated on `next_after`: with more chunks coming this is a
+            // mid-trace lull, not the end.
+            if next_after.is_none()
+                && chunk.peek().is_none()
+                && self.cluster.is_all_idle()
+                && self.qm.total_depth() == 0
+            {
                 break;
             }
         }
+    }
+
+    /// Drain phase after the last chunk: flush NIW stragglers out of the
+    /// queue manager, then run remaining events until everything is idle
+    /// (bounded by `end_time + 8 h`).  [`Simulation::run`] calls this
+    /// automatically; chunked execution calls it once after the final
+    /// [`Simulation::run_chunk`].
+    pub fn finish(&mut self) {
         // Flush any NIW stragglers so nothing is silently lost.
         let leftovers = self.qm.drain_all();
         for req in leftovers {
@@ -269,6 +373,64 @@ impl Simulation {
             if self.cluster.is_all_idle() && self.qm.total_depth() == 0 {
                 break;
             }
+        }
+    }
+
+    /// Detach the complete mutable state as a [`SimHandoff`], consuming
+    /// the simulation.  Pair with [`Simulation::resume`].
+    pub fn suspend(self) -> (SimConfig, SimHandoff) {
+        let Simulation {
+            now,
+            cfg,
+            cluster,
+            metrics,
+            telemetry,
+            qm,
+            events,
+            autoscaler,
+            forecaster,
+            end_time: _,
+            epoch_start,
+            tick_count,
+            epoch_counts: _,
+        } = self;
+        (
+            cfg,
+            SimHandoff {
+                now,
+                cluster,
+                metrics,
+                telemetry,
+                qm,
+                events,
+                autoscaler,
+                forecaster,
+                epoch_start,
+                tick_count,
+            },
+        )
+    }
+
+    /// Re-attach a [`SimHandoff`] to its config and continue.  Unlike
+    /// [`Simulation::new`] this performs *no* initialization — no ledger
+    /// seeding, no initial periodic events, no telemetry warm-up — the
+    /// handoff already carries all of that, mid-flight.
+    pub fn resume(cfg: SimConfig, h: SimHandoff) -> Simulation {
+        let end_time = cfg.trace.days * 86_400.0;
+        Simulation {
+            now: h.now,
+            cluster: h.cluster,
+            metrics: h.metrics,
+            telemetry: h.telemetry,
+            qm: h.qm,
+            events: h.events,
+            autoscaler: h.autoscaler,
+            forecaster: h.forecaster,
+            end_time,
+            epoch_start: h.epoch_start,
+            tick_count: h.tick_count,
+            epoch_counts: Vec::new(),
+            cfg,
         }
     }
 
@@ -472,7 +634,20 @@ impl Simulation {
                         break;
                     }
                     for (req, region) in released {
-                        self.dispatch_to_region(req, region);
+                        // Released NIW goes through the same SKU-aware
+                        // cascade as live arrivals: long-context work may
+                        // spill to a region whose top-HBM SKU has
+                        // headroom instead of being pinned to the
+                        // signalling region.  Homogeneous fleets
+                        // short-circuit to the signalling region.
+                        let dest = router::route_released_niw(
+                            &self.cluster,
+                            &self.cfg.routing,
+                            req.model,
+                            region,
+                            req.total_tokens(),
+                        );
+                        self.dispatch_to_region(req, dest);
                     }
                 }
             }
@@ -551,6 +726,8 @@ impl Simulation {
         self.metrics.model_instance_hours(model, self.end_time)
     }
 
+    /// End of the arrival window (`trace.days` in seconds); the drain
+    /// phase may run up to 8 h past this.
     pub fn end_time(&self) -> Time {
         self.end_time
     }
@@ -675,6 +852,48 @@ mod tests {
             let sim = run_quick(strategy);
             assert!(sim.cluster.aggregates_consistent(), "{}", strategy.name());
         }
+    }
+
+    #[test]
+    fn suspend_resume_roundtrip_is_identity() {
+        // A handoff roundtrip before the run starts (and the implicit
+        // per-boundary roundtrips in `sim::chunked`) must not perturb
+        // anything: the resumed simulation replays bit-identically.
+        let mk = || {
+            let mut cfg = quick_config(Strategy::LtUa, 0.1, 0.005);
+            cfg.scaling.max_instances = 10;
+            cfg
+        };
+        let (cfg, handoff) = Simulation::new(mk()).suspend();
+        let mut resumed = Simulation::resume(cfg, handoff);
+        resumed.run();
+        let reference = run_simulation(mk());
+        assert!(resumed.metrics == reference.metrics);
+    }
+
+    #[test]
+    fn manual_chunk_split_matches_run() {
+        // Split the arrival stream by hand at an arbitrary (non-epoch)
+        // boundary and drive run_chunk/finish directly; the merge order
+        // is invariant to where the stream is cut.
+        let mk = || {
+            let mut cfg = quick_config(Strategy::Reactive, 0.1, 0.005);
+            cfg.scaling.max_instances = 10;
+            cfg
+        };
+        let reference = run_simulation(mk());
+
+        let cfg = mk();
+        let reqs: Vec<Request> = TraceGenerator::new(cfg.trace.clone()).stream().collect();
+        assert!(reqs.len() > 100);
+        let cut = reqs.len() / 3;
+        let mut sim = Simulation::new(cfg);
+        sim.run_chunk(reqs[..cut].iter().copied(), Some(reqs[cut].arrival));
+        let (cfg, handoff) = sim.suspend();
+        let mut sim = Simulation::resume(cfg, handoff);
+        sim.run_chunk(reqs[cut..].iter().copied(), None);
+        sim.finish();
+        assert!(sim.metrics == reference.metrics);
     }
 
     #[test]

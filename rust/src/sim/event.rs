@@ -4,11 +4,6 @@
 //! at the same timestamp pop in push order, which keeps simulations
 //! reproducible run-to-run.
 
-// Rustdoc debt: public surface not yet audited for `missing_docs`
-// (PR 4 audited config, perf, coordinator::router and sim::cluster);
-// drop this allow once every pub item here is documented.
-#![allow(missing_docs)]
-
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
@@ -71,10 +66,14 @@ pub struct EventQueue {
 }
 
 impl EventQueue {
+    /// An empty queue with the sequence counter at zero.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Schedule `event` at `time`.  The monotone sequence counter breaks
+    /// same-time ties in push order; it is never reset, so moving the
+    /// queue across a chunk handoff preserves pending tie-breaks.
     pub fn push(&mut self, time: Time, event: Event) {
         debug_assert!(time.is_finite(), "non-finite event time");
         self.heap.push(Entry { time, seq: self.seq, event });
@@ -86,14 +85,17 @@ impl EventQueue {
         self.heap.peek().map(|e| e.time)
     }
 
+    /// Remove and return the earliest pending event.
     pub fn pop(&mut self) -> Option<(Time, Event)> {
         self.heap.pop().map(|e| (e.time, e.event))
     }
 
+    /// Number of pending events.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// True when no events are pending.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }

@@ -14,11 +14,6 @@
 //! conservative reservation), which makes `kv_used / kv_capacity` — the
 //! paper's *effective memory utilization* — a faithful load proxy.
 
-// Rustdoc debt: public surface not yet audited for `missing_docs`
-// (PR 4 audited config, perf, coordinator::router and sim::cluster);
-// drop this allow once every pub item here is documented.
-#![allow(missing_docs)]
-
 use crate::config::{GpuKind, ModelKind, Region, Time};
 use crate::perf::PerfProfile;
 use crate::sim::cluster::{InstanceId, PoolTag};
@@ -55,6 +50,7 @@ pub enum InstState {
 /// A running sequence.
 #[derive(Debug, Clone)]
 pub struct ActiveSeq {
+    /// The admitted request.
     pub req: Request,
     /// Output tokens still to generate at the *start* of the current chunk.
     pub remaining: u32,
@@ -71,15 +67,22 @@ pub struct ActiveSeq {
 /// One simulated model instance.
 #[derive(Debug)]
 pub struct InstanceSim {
+    /// Stable arena index in [`crate::sim::cluster::Cluster::instances`].
     pub id: InstanceId,
+    /// Model whose weights are deployed here.
     pub model: ModelKind,
+    /// Region the VM lives in.
     pub region: Region,
+    /// Ownership pool (siloed IW/NIW or unified).
     pub pool: PoolTag,
     /// Hardware SKU of the underlying 8-GPU VM — fixed for the VM's
     /// life (weights redeploy across models, not across silicon).
     pub gpu: GpuKind,
+    /// Lifecycle state (provisioning / active / draining / spot).
     pub state: InstState,
+    /// Sequences currently decoding.
     pub batch: Vec<ActiveSeq>,
+    /// Requests routed here but not yet admitted to the batch.
     pub waiting: Vec<Request>,
     /// Cached Σ total_tokens over `waiting` (JSQ signal; O(1) reads).
     waiting_tokens: u64,
@@ -88,6 +91,7 @@ pub struct InstanceSim {
     running_tokens: u64,
     /// Reserved KV tokens (running batch).
     pub kv_used: u64,
+    /// KV-token capacity of this SKU (weights excluded).
     pub kv_capacity: u64,
     /// True when a ChunkDone event is in flight for this instance.
     pub chunk_scheduled: bool,
@@ -108,6 +112,7 @@ pub struct ChunkPlan {
 }
 
 impl InstanceSim {
+    /// A fresh instance with empty queues and zero KV reserved.
     pub fn new(
         id: InstanceId,
         model: ModelKind,
@@ -173,6 +178,7 @@ impl InstanceSim {
         std::mem::take(&mut self.waiting)
     }
 
+    /// Can this instance take new work right now (active, not draining)?
     pub fn is_admitting(&self) -> bool {
         matches!(self.state, InstState::Active)
     }

@@ -8,13 +8,18 @@
 //!   provisioning delays.
 //! * [`engine`] — the simulation loop wiring traces, routing, the queue
 //!   manager, autoscalers and metrics together.
+//! * [`chunked`] — epoch-sliced chunked execution of a single run:
+//!   pipelined generation, explicit state handoff at every boundary,
+//!   bit-identical to the sequential engine.
 
+pub mod chunked;
 pub mod cluster;
 pub mod engine;
 pub mod event;
 pub mod instance;
 
+pub use chunked::{run_chunked, run_simulation_chunked, ChunkedOptions};
 pub use cluster::{Cluster, InstanceId, PoolTag};
-pub use engine::{SimConfig, Simulation, Strategy};
+pub use engine::{SimConfig, SimHandoff, Simulation, Strategy};
 pub use event::{Event, EventQueue};
 pub use instance::{InstState, InstanceSim};

@@ -477,6 +477,17 @@ impl TraceGenerator {
         out
     }
 
+    /// Generate the minute window `[first_minute, last_minute)` as a
+    /// time-ordered buffer, ids left 0 — the caller assigns ids in
+    /// global arrival order (chunk order), exactly as [`TraceStream`]
+    /// would.  Pure function of `(config, window)`: any partition of
+    /// `0..total_minutes()` into windows concatenates to the identical
+    /// trace, which is what lets `sim::chunked` generate chunk k+1 on
+    /// worker threads while chunk k simulates.
+    pub fn generate_window(&self, first_minute: u64, last_minute: u64) -> Vec<Request> {
+        self.fill_chunk(first_minute, last_minute.min(self.total_minutes()))
+    }
+
     /// Generate the full trace as a time-ordered iterator.
     ///
     /// Arrivals are sampled per-minute per stream as Poisson counts with
@@ -720,6 +731,30 @@ mod tests {
         let g = TraceGenerator::new(TraceConfig { bursts: true, ..small_cfg() });
         let streamed: Vec<_> = g.stream().collect();
         assert_eq!(g.materialize(), streamed);
+    }
+
+    #[test]
+    fn window_partition_concatenates_to_stream() {
+        // Any partition into windows + sequential id assignment must
+        // reproduce the streamed trace byte-for-byte (the `sim::chunked`
+        // consumer contract).
+        let g = TraceGenerator::new(TraceConfig { bursts: true, ..small_cfg() });
+        let streamed: Vec<_> = g.stream().collect();
+        for window in [1u64, 7, 60] {
+            let mut out = Vec::new();
+            let mut next_id = 0u64;
+            let mut lo = 0;
+            while lo < g.total_minutes() {
+                let mut buf = g.generate_window(lo, lo + window);
+                for r in &mut buf {
+                    r.id = next_id;
+                    next_id += 1;
+                }
+                out.extend_from_slice(&buf);
+                lo += window;
+            }
+            assert_eq!(out, streamed, "window {window}");
+        }
     }
 
     #[test]

@@ -1,0 +1,129 @@
+//! The chunked-execution headline invariant (ISSUE 6 / ROADMAP item 1):
+//! epoch-sliced execution is **bit-identical** to the sequential engine
+//! — not "statistically close", not "within f64 rounding" — for every
+//! strategy, fleet, chunk size and worker count.  `Metrics` equality is
+//! full streaming-state equality: every accumulator cell, histogram
+//! bucket and ledger point.
+
+use sageserve::config::FleetSpec;
+use sageserve::sim::chunked::{run_simulation_chunked, ChunkedOptions};
+use sageserve::sim::engine::{quick_config, run_simulation, SimConfig, Strategy};
+use sageserve::trace::generator::TraceGenerator;
+
+/// Multi-day config so chunk boundaries cross diurnal peaks, control
+/// epochs and scale-in/out transitions, not just a quiet tail.
+fn multi_day_config(strategy: Strategy, fleet: Option<&FleetSpec>) -> SimConfig {
+    let mut cfg = quick_config(strategy, 2.0, 0.002);
+    cfg.scaling.max_instances = 8;
+    if let Some(f) = fleet {
+        cfg.fleet = f.clone();
+    }
+    cfg
+}
+
+#[test]
+fn chunked_bit_identical_across_chunk_sizes_strategies_fleets() {
+    // The acceptance grid: chunk sizes {1, 3, 24} epochs × strategies
+    // {Reactive, LT-UA, Chiron} × {homogeneous H100, mixed 3-way} on a
+    // 2-day trace.  Reactive exercises the queue manager, LT-UA the
+    // forecast+ILP epochs, Chiron the hierarchical pools; the mixed
+    // fleet adds SKU-aware routing and per-SKU ledgers to the state
+    // that must survive each handoff.
+    let mixed = FleetSpec::mixed_3way();
+    let fleets: [Option<&FleetSpec>; 2] = [None, Some(&mixed)];
+    for strategy in [Strategy::Reactive, Strategy::LtUa, Strategy::Chiron] {
+        for fleet in fleets {
+            let seq = run_simulation(multi_day_config(strategy, fleet));
+            assert!(
+                seq.metrics.completed > 1000,
+                "{}: trace too small to be meaningful",
+                strategy.name()
+            );
+            for chunk_epochs in [1usize, 3, 24] {
+                let ch = run_simulation_chunked(
+                    multi_day_config(strategy, fleet),
+                    &ChunkedOptions { chunk_epochs, workers: 2 },
+                );
+                assert!(
+                    seq.metrics == ch.metrics,
+                    "{} / {} / {} epoch(s) per chunk: chunked diverged from sequential",
+                    strategy.name(),
+                    if fleet.is_some() { "mixed3" } else { "h100" },
+                    chunk_epochs
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chunked_invariant_to_worker_count() {
+    // The worker count only decides which thread generates a chunk;
+    // results must not depend on it (counter-seeded generation + ordered
+    // consumption).
+    let mk = || {
+        let mut cfg = quick_config(Strategy::LtUa, 1.0, 0.003);
+        cfg.scaling.max_instances = 8;
+        cfg
+    };
+    let seq = run_simulation(mk());
+    for workers in [1usize, 2, 8] {
+        let ch = run_simulation_chunked(mk(), &ChunkedOptions { chunk_epochs: 2, workers });
+        assert!(seq.metrics == ch.metrics, "{workers} workers diverged");
+    }
+}
+
+#[test]
+fn chunked_shared_buffer_source_matches_generator_pipeline() {
+    // Both chunk sources — sliced pre-materialized buffer and pipelined
+    // generation — must agree with each other (and hence with the
+    // sequential engine, by the tests above).
+    let mk = || {
+        let mut cfg = quick_config(Strategy::LtUa, 1.0, 0.003);
+        cfg.scaling.max_instances = 8;
+        cfg
+    };
+    let piped = run_simulation_chunked(mk(), &ChunkedOptions { chunk_epochs: 3, workers: 2 });
+    let mut cfg = mk();
+    cfg.shared_trace = Some(TraceGenerator::new(cfg.trace.clone()).materialize_shared());
+    let sliced = run_simulation_chunked(cfg, &ChunkedOptions { chunk_epochs: 3, workers: 2 });
+    assert!(piped.metrics == sliced.metrics);
+}
+
+#[test]
+fn drain_phase_niw_stragglers_identical() {
+    // The trickiest boundary: the end-of-trace drain.  Pin every NIW
+    // request in the queue manager until the trace ends — release
+    // thresholds at 0 mean capacity signals never fire, and an aging
+    // threshold far past the trace length means the QmTick scan never
+    // pops them — so the whole NIW population goes through `drain_all`
+    // plus the post-trace event flush, under both executors.
+    let mk = || {
+        let mut cfg = quick_config(Strategy::Reactive, 0.3, 0.004);
+        cfg.scaling.max_instances = 8;
+        cfg.scaling.niw_release_util_1 = 0.0;
+        cfg.scaling.niw_release_util_2 = 0.0;
+        cfg.scaling.niw_aging_secs = 100.0 * 86_400.0;
+        cfg
+    };
+    let seq = run_simulation(mk());
+    assert!(seq.qm.total_enqueued > 0, "no NIW flowed through the QM");
+    assert_eq!(
+        seq.qm.total_enqueued, seq.qm.total_released,
+        "stragglers must leave via drain_all, not be lost"
+    );
+    let total = TraceGenerator::new(mk().trace.clone()).stream().count();
+    assert_eq!(
+        seq.metrics.completed as usize + seq.metrics.dropped as usize,
+        total,
+        "drained stragglers must still complete or drop explicitly"
+    );
+    for chunk_epochs in [1usize, 5] {
+        let ch = run_simulation_chunked(mk(), &ChunkedOptions { chunk_epochs, workers: 2 });
+        assert_eq!(ch.qm.total_enqueued, seq.qm.total_enqueued);
+        assert!(
+            seq.metrics == ch.metrics,
+            "drain-phase stragglers diverged at {chunk_epochs} epoch(s) per chunk"
+        );
+    }
+}
