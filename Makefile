@@ -8,20 +8,29 @@
 
 CARGO_DIR := rust
 
-.PHONY: check verify build test bench bench-quick timing docs clean
+.PHONY: check verify build test bench bench-quick smoke-faults timing docs clean
 
 check: build test bench-quick
 
 # The verify flow: tier-1 build + tests plus the bench smoke that
-# refreshes BENCH_sim.json (see PERF.md "Verify flow"), plus the rustdoc
-# gate (every public-surface doc link and `missing_docs` audit must hold).
-verify: check docs
+# refreshes BENCH_sim.json (see PERF.md "Verify flow"), the fault-plane
+# smoke (quick-mode `exp faults`), plus the rustdoc gate (every
+# public-surface doc link and `missing_docs` audit must hold).
+verify: check smoke-faults docs
+
+# Fault-plane smoke: the quick-mode fault ablation — 1-day trace, capped
+# scale — drives the kill/retry/failover/re-provision path end-to-end
+# across both scenarios × 3 strategies, asserts the graceful-degradation
+# invariant (no interactive shed) and writes fault_recovery.csv under
+# results-smoke/.
+smoke-faults:
+	cd $(CARGO_DIR) && SAGESERVE_EXP_QUICK=1 cargo run --release -- exp faults --out ../results-smoke
 
 # Rustdoc gate: broken intra-doc links, bad HTML in docs and missing
 # docs on the audited modules (config, perf, coordinator::router,
-# coordinator::queue_manager, metrics, sim::cluster, sim::engine,
-# sim::chunked, sim::event, sim::instance — see lib.rs) all fail the
-# build.
+# coordinator::queue_manager, coordinator::autoscaler, metrics,
+# sim::cluster, sim::engine, sim::chunked, sim::event, sim::instance,
+# sim::faults — see lib.rs) all fail the build.
 docs:
 	cd $(CARGO_DIR) && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 

@@ -141,6 +141,43 @@ fn main() {
         }
     }
 
+    // Fault plane: the identical LT-UA single run with an active fault
+    // schedule — a region outage spanning the middle of the trace, a
+    // market spot shock and a continuous crash hazard.  Compared against
+    // `single_run_sequential` this records what the kill/retry/
+    // re-provision machinery costs; with no faults firing the plan
+    // compiles to zero events and the engine is bit-identical, so the
+    // overhead measured here is the *active* fault path only.
+    {
+        use sageserve::config::Region;
+        use sageserve::sim::faults::{FaultPlan, SpotShock};
+        let span = 0.1 * 86_400.0;
+        let cfg = || {
+            let mut plan = FaultPlan::region_dark(Region::EastUs, span * 0.3, span * 0.5);
+            plan.spot_shocks.push(SpotShock { at: span * 0.7, frac: 0.5 });
+            plan.crash_rate_per_day = 2.0;
+            SimConfig {
+                trace: TraceConfig { days: 0.1, scale: 0.05, ..Default::default() },
+                strategy: Strategy::LtUa,
+                faults: plan,
+                ..Default::default()
+            }
+        };
+        let n_requests = TraceGenerator::new(cfg().trace.clone()).stream().count();
+        let result =
+            bench(&format!("fault injection epoch ({n_requests} reqs)"), iters, || {
+                run_simulation(cfg()).metrics.completed as usize
+            });
+        let reqs_per_sec = n_requests as f64 / (result.mean_ns / 1e9);
+        println!("    → {:.2} M simulated requests / wall-second\n", reqs_per_sec / 1e6);
+        let mut entry = BTreeMap::new();
+        entry.insert("n_requests".to_string(), Json::Num(n_requests as f64));
+        entry.insert("mean_ns".to_string(), Json::Num(result.mean_ns));
+        entry.insert("p50_ns".to_string(), Json::Num(result.p50_ns));
+        entry.insert("reqs_per_wall_sec".to_string(), Json::Num(reqs_per_sec));
+        report.insert("fault_injection_epoch".to_string(), Json::Obj(entry));
+    }
+
     // Metrics recording alone (the completion hot path): per-request
     // cost of the streaming accumulators — two histogram bucketings plus
     // O(1) cell updates, no outcome-log growth.

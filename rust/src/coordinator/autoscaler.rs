@@ -15,11 +15,6 @@
 //!   memory-utilization consolidation (which is why it over-provisions —
 //!   §7.2.3).
 
-// Rustdoc debt: public surface not yet audited for `missing_docs`
-// (PR 4 audited config, perf, coordinator::router and sim::cluster);
-// drop this allow once every pub item here is documented.
-#![allow(missing_docs)]
-
 use std::collections::BTreeMap;
 
 use crate::config::{GpuKind, ModelKind, Region, ScalingParams, Tier, Time};
@@ -32,15 +27,22 @@ use crate::sim::event::{Event, EventQueue};
 /// Scaling strategy selector (CLI-visible names).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Strategy {
+    /// Legacy separate IW/NIW pools, reactively scaled (§4).
     Siloed,
+    /// Unified pool on the same reactive thresholds (§4).
     Reactive,
+    /// Long-term forecast, ILP delta applied immediately (§6.4).
     LtI,
+    /// Long-term forecast, delta armed and applied on util breach (§6.4).
     LtU,
+    /// LT-U plus the ARIMA-gap override window (§6.4).
     LtUa,
+    /// The Chiron queue-backpressure SOTA baseline [34].
     Chiron,
 }
 
 impl Strategy {
+    /// CLI-visible strategy name (`lt-ua`, `chiron`, ...).
     pub fn name(self) -> &'static str {
         match self {
             Strategy::Siloed => "siloed",
@@ -52,6 +54,7 @@ impl Strategy {
         }
     }
 
+    /// Inverse of [`Strategy::name`] (accepts hyphen-free aliases).
     pub fn parse(s: &str) -> Option<Strategy> {
         Some(match s {
             "siloed" => Strategy::Siloed,
@@ -98,9 +101,13 @@ impl Strategy {
 
 /// Borrowed simulation pieces the scaler operates on.
 pub struct ScaleCtx<'a> {
+    /// Current simulated time.
     pub now: Time,
+    /// The fleet being scaled.
     pub cluster: &'a mut Cluster,
+    /// Ledger/waste accounting sink.
     pub metrics: &'a mut Metrics,
+    /// Event heap (for scheduling `ProvisionDone`).
     pub events: &'a mut EventQueue,
     /// Requests displaced by immediate drains; the engine re-routes these
     /// after the autoscaler call returns.
@@ -241,6 +248,41 @@ impl ScaleCtx<'_> {
         (out, src.len())
     }
 
+    /// Sweep Draining instances that can no longer make progress: an
+    /// empty batch with no chunk in flight means nothing will ever call
+    /// `finish_drain` for them again (only chunk completions do), so
+    /// they would sit Draining forever — holding their endpoint slot and
+    /// stranding any waiting requests.  The state is unreachable on the
+    /// healthy path (`scale_in` converts idle instances immediately and
+    /// chunk completions convert the rest), but fault-plane kills and
+    /// admission stalls can manufacture it; the engine runs this on
+    /// every scale tick as a deterministic backstop.  Displaced waiting
+    /// requests land in [`ScaleCtx::reroutes`].  Returns how many
+    /// instances were converted.
+    pub fn sweep_stalled_drains(&mut self) -> usize {
+        let mut swept = 0;
+        for id in 0..self.cluster.instances.len() {
+            let inst = &self.cluster.instances[id];
+            if inst.state != crate::sim::instance::InstState::Draining
+                || !inst.batch.is_empty()
+                || inst.chunk_scheduled
+            {
+                continue;
+            }
+            let (model, region) = (inst.model, inst.region);
+            let stragglers = self.cluster.take_waiting(id);
+            self.reroutes.extend(stragglers);
+            self.cluster.finish_drain(id);
+            self.record_ledgers(model, region);
+            swept += 1;
+        }
+        swept
+    }
+
+    /// Re-record the instance-count, per-SKU GPU-hour and spot ledgers
+    /// for one endpoint at `now` — called after any change to its
+    /// allocation or the region's donated pool, so every step-function
+    /// ledger integrates exactly.
     pub fn record_ledgers(&mut self, model: ModelKind, region: Region) {
         let allocated = self.cluster.allocated_count(model, region);
         self.metrics
@@ -299,7 +341,9 @@ struct ChironState {
 
 /// The autoscaler: strategy + mutable state.
 pub struct Autoscaler {
+    /// The strategy under test.
     pub strategy: Strategy,
+    /// Thresholds, cooldowns and control-interval knobs.
     pub params: ScalingParams,
     /// Chiron's Θ (0.6 per §7.1).
     pub chiron_theta: f64,
@@ -307,6 +351,7 @@ pub struct Autoscaler {
 }
 
 impl Autoscaler {
+    /// A fresh autoscaler with empty strategy state.
     pub fn new(strategy: Strategy, params: ScalingParams) -> Self {
         Autoscaler { strategy, params, chiron_theta: 0.6, chiron: ChironState::default() }
     }
@@ -807,6 +852,52 @@ mod tests {
         let mut ctx = ScaleCtx { now: 7000.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
         scaler.on_tick(&mut ctx, &obs, 3000.0);
         assert_eq!(cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs), 4);
+    }
+
+    #[test]
+    fn stalled_drain_sweep_converts_and_reroutes() {
+        use crate::sim::instance::InstState;
+        let (mut cluster, mut metrics, mut events, _scaler) = setup(Strategy::Reactive, 4);
+        // Manufacture the documented footgun: a Draining instance with an
+        // empty batch, no chunk in flight, and a stranded waiting request
+        // — nothing on the healthy path would ever finish_drain it.
+        let id = 0;
+        let region = cluster.instances[id].region;
+        cluster.push_waiting(id, crate::trace::types::Request {
+            id: 7,
+            arrival: 0.0,
+            model: ModelKind::Llama2_70B,
+            origin: region,
+            tier: Tier::IwF,
+            app: crate::trace::types::AppKind::Chat,
+            input_tokens: 100,
+            output_tokens: 10,
+        });
+        cluster.mutate(id, |inst| inst.state = InstState::Draining);
+        let before_spot = cluster.spot_count(region);
+        let mut ctx = ScaleCtx {
+            now: 100.0,
+            cluster: &mut cluster,
+            metrics: &mut metrics,
+            events: &mut events,
+            reroutes: Vec::new(),
+        };
+        let swept = ctx.sweep_stalled_drains();
+        assert_eq!(swept, 1, "the stalled drain must be converted");
+        assert_eq!(ctx.reroutes.len(), 1, "the stranded request must be rerouted");
+        assert_eq!(ctx.reroutes[0].id, 7);
+        assert_eq!(cluster.spot_count(region), before_spot + 1);
+        assert_eq!(cluster.instances[id].state, InstState::Spot);
+        assert!(cluster.aggregates_consistent());
+        // Idempotent: a second sweep finds nothing.
+        let mut ctx = ScaleCtx {
+            now: 115.0,
+            cluster: &mut cluster,
+            metrics: &mut metrics,
+            events: &mut events,
+            reroutes: Vec::new(),
+        };
+        assert_eq!(ctx.sweep_stalled_drains(), 0);
     }
 
     #[test]

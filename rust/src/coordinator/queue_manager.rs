@@ -28,6 +28,9 @@ pub struct QueueManager {
     pub total_enqueued: u64,
     /// Lifetime count leaving the queues (released, aged or drained).
     pub total_released: u64,
+    /// Lifetime count shed under graceful degradation (NOT counted in
+    /// `total_released` — shed requests never reach an instance).
+    pub total_shed: u64,
 }
 
 impl QueueManager {
@@ -109,6 +112,26 @@ impl QueueManager {
         }
         self.depth_total -= out.len();
         self.total_released += out.len() as u64;
+        out
+    }
+
+    /// Graceful degradation under sustained capacity loss (fault plane):
+    /// shed the *newest* parked requests of one model until the queue
+    /// depth fits under `cap` (what the surviving fleet can plausibly
+    /// absorb).  Shedding newest-first preserves the FIFO head — the
+    /// requests closest to their 24 h deadline keep their place.  Shed
+    /// requests leave the system for good (counted once in `total_shed`,
+    /// never in `total_released`); interactive traffic is untouched by
+    /// construction because only NIW work ever parks here.
+    pub fn shed_over_depth(&mut self, model: ModelKind, cap: usize) -> Vec<Request> {
+        let mut out = Vec::new();
+        if let Some(q) = self.queues.get_mut(&model) {
+            while q.len() > cap {
+                out.push(q.pop_back().unwrap());
+            }
+        }
+        self.depth_total -= out.len();
+        self.total_shed += out.len() as u64;
         out
     }
 
@@ -196,6 +219,28 @@ mod tests {
         qm.enqueue(niw(2, 0.0, ModelKind::Llama31_8B));
         assert_eq!(qm.drain_all().len(), 2);
         assert_eq!(qm.total_depth(), 0);
+    }
+
+    #[test]
+    fn shed_removes_newest_first_and_counts_exactly_once() {
+        let p = ScalingParams::default();
+        let mut qm = QueueManager::new();
+        for i in 0..5 {
+            qm.enqueue(niw(i, i as f64, ModelKind::Bloom176B));
+        }
+        let shed = qm.shed_over_depth(ModelKind::Bloom176B, 2);
+        // Newest-first: ids 4, 3, 2 go; the FIFO head (oldest) survives.
+        assert_eq!(shed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4, 3, 2]);
+        assert_eq!(qm.depth(ModelKind::Bloom176B), 2);
+        assert_eq!(qm.total_shed, 3);
+        assert_eq!(qm.total_released, 0, "shed is not a release");
+        // Already under cap: a second sweep sheds nothing — exactly-once.
+        assert!(qm.shed_over_depth(ModelKind::Bloom176B, 2).is_empty());
+        assert_eq!(qm.total_shed, 3);
+        // The survivors drain normally at end of run.
+        assert_eq!(qm.drain_all().len(), 2);
+        assert_eq!(qm.total_enqueued, 5);
+        assert_eq!(qm.total_released + qm.total_shed, 5);
     }
 
     #[test]

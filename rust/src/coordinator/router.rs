@@ -49,6 +49,12 @@ fn preference_order(origin: Region) -> [Region; 3] {
 /// (origin, then the others in index order) whose effective memory
 /// utilization is under the threshold; otherwise the least-utilized one.
 /// One pass over three O(1) aggregate reads — allocation-free.
+///
+/// Regions dark under the fault plane's availability mask are skipped
+/// entirely (the mask is all-clear in fault-free runs, so this costs one
+/// always-false branch per region).  If *every* region is dark the origin
+/// is returned as a degenerate fallback — dispatch will find no instance
+/// there and the request re-enters the retry path.
 pub fn route_region(
     cluster: &Cluster,
     params: &RoutingParams,
@@ -58,6 +64,9 @@ pub fn route_region(
     let mut best = origin;
     let mut best_util = f64::INFINITY;
     for r in preference_order(origin) {
+        if !cluster.region_available(r) {
+            continue;
+        }
         let util = cluster.effective_util(model, r);
         if util < params.region_util_threshold {
             return r;
@@ -165,7 +174,8 @@ pub fn route_region_sku_aware(
     }
     let top_hbm = cluster.gpus_hbm_desc[0];
     for r in preference_order(origin) {
-        if cluster.effective_util(model, r) < params.region_util_threshold
+        if cluster.region_available(r)
+            && cluster.effective_util(model, r) < params.region_util_threshold
             && cluster.sku_has_headroom(model, r, top_hbm, params.sku_headroom_util)
         {
             return r;
@@ -205,7 +215,8 @@ pub fn route_released_niw(
         return signal_region;
     }
     for r in preference_order(signal_region) {
-        if cluster.effective_util(model, r) < params.region_util_threshold
+        if cluster.region_available(r)
+            && cluster.effective_util(model, r) < params.region_util_threshold
             && cluster.sku_has_headroom(model, r, top_hbm, params.sku_headroom_util)
         {
             return r;
@@ -284,6 +295,37 @@ pub fn route_instance_sku_aware(
         }
     }
     best_active.or(best_prov).map(|(_, i)| i)
+}
+
+/// Failover routing for a retried (killed) request.  Like
+/// [`route_region_sku_aware`], but with the fault plane in view:
+///
+/// 1. a region that is neither dark nor latency-degraded *and* under the
+///    utilization threshold wins first, in preference order — a retry
+///    should not land on a wobbling region when a clean one has room;
+/// 2. otherwise the normal SKU-aware rule decides among live regions
+///    (a degraded region beats losing the request);
+/// 3. `None` only when *every* region is dark — the caller re-arms the
+///    backoff timer or declares the request lost.
+pub fn route_retry(
+    cluster: &Cluster,
+    params: &RoutingParams,
+    model: ModelKind,
+    origin: Region,
+    total_tokens: u64,
+) -> Option<Region> {
+    if Region::ALL.iter().all(|&r| !cluster.region_available(r)) {
+        return None;
+    }
+    for r in preference_order(origin) {
+        if cluster.region_available(r)
+            && !cluster.region_degraded(r)
+            && cluster.effective_util(model, r) < params.region_util_threshold
+        {
+            return Some(r);
+        }
+    }
+    Some(route_region_sku_aware(cluster, params, model, origin, total_tokens))
 }
 
 /// Extra latency charged when a request is served outside its origin
@@ -404,6 +446,54 @@ mod tests {
         }
         let pick = route_instance(&c, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF);
         assert!(pick.is_some());
+    }
+
+    // ------------------------------------------------------------------
+    // Fault plane: dark-region exclusion and retry failover
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn routing_never_picks_a_dark_region() {
+        let mut c = cluster();
+        let p = RoutingParams::default();
+        let m = ModelKind::Llama2_70B;
+        // Dark origin: even though it is the preferred region, routing
+        // must skip it.
+        c.set_region_dark(Region::EastUs, true);
+        assert_ne!(route_region(&c, &p, m, Region::EastUs), Region::EastUs);
+        assert_ne!(route_region_sku_aware(&c, &p, m, Region::EastUs, 50_000), Region::EastUs);
+        // Saturate the live regions: least-utilized still excludes dark.
+        saturate(&mut c, Region::CentralUs);
+        saturate(&mut c, Region::WestUs);
+        assert_ne!(route_region(&c, &p, m, Region::EastUs), Region::EastUs);
+    }
+
+    #[test]
+    fn retry_prefers_clean_regions_over_degraded() {
+        let mut c = cluster();
+        let p = RoutingParams::default();
+        let m = ModelKind::Llama2_70B;
+        c.set_region_dark(Region::EastUs, true);
+        c.set_region_degraded(Region::CentralUs, 0.5);
+        // The only clean live region wins even though Central precedes
+        // West in preference order from East.
+        assert_eq!(route_retry(&c, &p, m, Region::EastUs, 1_000), Some(Region::WestUs));
+        // Saturating the clean region falls back to SKU-aware routing,
+        // which may pick the degraded (but live) region — never the dark
+        // one.
+        saturate(&mut c, Region::WestUs);
+        let r = route_retry(&c, &p, m, Region::EastUs, 1_000).unwrap();
+        assert_ne!(r, Region::EastUs);
+    }
+
+    #[test]
+    fn retry_returns_none_when_every_region_is_dark() {
+        let mut c = cluster();
+        let p = RoutingParams::default();
+        for r in Region::ALL {
+            c.set_region_dark(r, true);
+        }
+        assert_eq!(route_retry(&c, &p, ModelKind::Llama2_70B, Region::EastUs, 1_000), None);
     }
 
     #[test]

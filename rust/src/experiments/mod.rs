@@ -14,6 +14,7 @@
 
 pub mod burst;
 pub mod characterization;
+pub mod faults;
 pub mod fidelity;
 pub mod hetero;
 pub mod ilp_runtime;
@@ -100,6 +101,10 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
         // Dispatchable but not in `exp all` (hours-long at full scale):
         // the 30-day chunked-engine run, see experiments::month.
         "month" => month::month(opts),
+        // The fault-plane ablation (robustness, not a paper figure):
+        // region outage + spot shock × 3 strategies; `SAGESERVE_EXP_QUICK=1`
+        // shrinks it to the `make verify` smoke run.
+        "faults" => faults::faults(opts),
         "all" => {
             // fig11/12/13 share one run; dedup here.
             let mut seen_strategies = false;

@@ -26,8 +26,9 @@
 // public surface has not been audited yet carry a file-level
 // `#![allow(missing_docs)]` with a debt note — drop those as they are
 // documented.  config, perf, coordinator::router,
-// coordinator::queue_manager, sim::cluster, sim::engine, sim::chunked,
-// sim::event, sim::instance and metrics are fully documented.
+// coordinator::queue_manager, coordinator::autoscaler, sim::cluster,
+// sim::engine, sim::chunked, sim::event, sim::instance, sim::faults and
+// metrics are fully documented.
 #![warn(missing_docs)]
 
 pub mod config;

@@ -6,7 +6,7 @@
 //! sageserve exp <id|all> [--out DIR] [--scale F] [--pjrt] [--seed N]
 //! sageserve simulate --strategy S [--days F] [--scale F] [--epoch E] [--policy P]
 //!                    [--fleet SPEC] [--routing sku-aware|blind]
-//!                    [--metrics streaming|exact] [--pjrt]
+//!                    [--metrics streaming|exact] [--pjrt] [--faults PLAN]
 //!                    [--chunked] [--chunk-epochs N] [--chunk-workers N]
 //! sageserve serve [--requests N] [--max-new N] [--artifacts DIR]
 //! sageserve trace --out FILE [--days F] [--scale F] [--epoch E]
@@ -156,6 +156,17 @@ fn dispatch(args: &[String]) -> Result<()> {
             if let Some(t) = f("replay") {
                 cfg.replay_trace = Some(t.into());
             }
+            if let Some(spec) = f("faults") {
+                cfg.faults = sageserve::sim::FaultPlan::parse(&spec).with_context(|| {
+                    format!(
+                        "bad fault spec '{spec}' (clauses: \
+                         region-dark=<region>@<start>-<end>; \
+                         degrade=<region>@<start>-<end>:<extra>; \
+                         spot-shock=<frac>@<t>; crash=<per-day-rate>; \
+                         retry=<base>/<max>/<attempts>; times take s/m/h/d suffixes)"
+                    )
+                })?;
+            }
             println!(
                 "simulating {} day(s) at scale {} with strategy {} on fleet [{}] ...",
                 cfg.trace.days,
@@ -278,6 +289,26 @@ fn report_simulation(sim: &sageserve::sim::engine::Simulation) {
         sim.metrics.scaling_waste.total_events(),
         sim.metrics.spot_hours(end),
     );
+    // Failure accounting (all-zero — and silent — on fault-free runs).
+    let fails = &sim.metrics.failures;
+    if fails.killed_total() + fails.lost_total() + fails.shed_total() > 0 {
+        println!(
+            "  faults: {} killed, {} retried, {} lost, {} shed (NIW); \
+             retry amplification {:.3}; {} incident(s)",
+            fails.killed_total(),
+            fails.retries,
+            fails.lost_total(),
+            fails.shed_total(),
+            fails.retry_amplification(sim.metrics.completed),
+            fails.incidents.len(),
+        );
+        for inc in &fails.incidents {
+            let ttr = inc
+                .time_to_recover()
+                .map_or("not recovered".into(), |t| format!("recovered in {t:.0}s"));
+            println!("    {} in {} at t={:.0}s: {ttr}", inc.kind, inc.region, inc.start);
+        }
+    }
     // Per-SKU GPU-hours and the spot-vs-on-demand cost split (the
     // heterogeneous-fleet view).
     let by_sku = sim.metrics.gpu_hours_by_sku(end);
@@ -305,7 +336,7 @@ USAGE:
       [--days F] [--scale F] [--epoch jul2025|nov2024] [--policy fcfs|edf|pf|dpa]
       [--fleet h100|a100|mi300|mixed|mixed3|h100:W,mi300:W]
       [--routing sku-aware|blind] [--metrics streaming|exact]
-      [--pjrt] [--replay trace.csv]
+      [--pjrt] [--replay trace.csv] [--faults PLAN]
       [--chunked] [--chunk-epochs N] [--chunk-workers N]
       (--fleet picks the GPU fleet; mixed fleets report per-SKU GPU-hours,
        on-demand cost, spot revenue and net cost; --routing toggles
@@ -313,7 +344,10 @@ USAGE:
        keeps the O(requests) per-request outcome log instead of the
        default O(bins) streaming accumulators; --chunked runs the
        epoch-sliced executor — generation pipelined on worker threads,
-       peak memory O(chunk), results bit-identical to the default engine)
+       peak memory O(chunk), results bit-identical to the default engine;
+       --faults injects a deterministic fault schedule, `;`-separated
+       clauses: region-dark=centralus@2d-2.5d, degrade=eastus@1d-2d:0.5,
+       spot-shock=0.6@3d, crash=1.0, retry=1s/60s/5 — see `exp faults`)
   sageserve serve [--requests N] [--max-new N] [--artifacts DIR]
       real batched inference on the AOT transformer via PJRT
   sageserve trace --out FILE [--days F] [--scale F] [--epoch E] [--seed N]

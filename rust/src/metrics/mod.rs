@@ -437,6 +437,189 @@ impl InstanceHourLedger {
     }
 }
 
+/// One fault incident (outage window, spot shock, …) and its recovery
+/// lifecycle — the per-incident record behind the time-to-recover column
+/// of `fault_recovery.csv`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultIncident {
+    /// Incident kind (`"region-outage"`, `"spot-shock"`, …).
+    pub kind: &'static str,
+    /// The region the incident hit.
+    pub region: Region,
+    /// When the fault opened, seconds since simulation start.
+    pub start: Time,
+    /// When the fault condition itself lifted (e.g. the outage window
+    /// closed); `None` while still in effect.
+    pub fault_end: Option<Time>,
+    /// When serving capacity was restored to the pre-incident level
+    /// (replacement VMs active); `None` if the run ended first.
+    pub recovered_at: Option<Time>,
+}
+
+impl FaultIncident {
+    /// Seconds from fault start to capacity recovery, if recovered.
+    pub fn time_to_recover(&self) -> Option<Time> {
+        self.recovered_at.map(|t| t - self.start)
+    }
+}
+
+/// First-class failure accounting for the fault plane: per
+/// (model, tier, region) kill/lost/shed counts, retry totals and the
+/// incident log.  All-zero in fault-free runs (the cells stay
+/// unallocated), so `Metrics` equality with pre-fault-plane runs is
+/// preserved bit-for-bit.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FailureStats {
+    /// In-flight requests killed by instance loss, dense
+    /// `[model][tier][region]`; empty until the first kill.
+    killed: Vec<u64>,
+    /// Requests lost for good (retry budget exhausted or no live region).
+    lost: Vec<u64>,
+    /// NIW requests shed by graceful degradation.
+    shed: Vec<u64>,
+    /// Successful retry re-dispatches (a request retried twice counts
+    /// twice — the numerator of the retry-amplification factor).
+    pub retries: u64,
+    /// Fault incidents in open order.
+    pub incidents: Vec<FaultIncident>,
+}
+
+impl FailureStats {
+    fn cell(v: &mut Vec<u64>, model: ModelKind, tier: Tier, region: Region) -> &mut u64 {
+        if v.is_empty() {
+            v.resize(CELLS, 0);
+        }
+        &mut v[(model.index() * TIERS + tier.index()) * REGIONS + region.index()]
+    }
+
+    fn read(v: &[u64], model: ModelKind, tier: Tier, region: Region) -> u64 {
+        if v.is_empty() {
+            0
+        } else {
+            v[(model.index() * TIERS + tier.index()) * REGIONS + region.index()]
+        }
+    }
+
+    /// Count one in-flight request killed by instance loss.
+    pub fn record_killed(&mut self, model: ModelKind, tier: Tier, region: Region) {
+        *Self::cell(&mut self.killed, model, tier, region) += 1;
+    }
+
+    /// Count one request lost for good.
+    pub fn record_lost(&mut self, model: ModelKind, tier: Tier, region: Region) {
+        *Self::cell(&mut self.lost, model, tier, region) += 1;
+    }
+
+    /// Count one NIW request shed under graceful degradation.
+    pub fn record_shed(&mut self, model: ModelKind, tier: Tier, region: Region) {
+        *Self::cell(&mut self.shed, model, tier, region) += 1;
+    }
+
+    /// Kills in one (model, tier, region) cell.
+    pub fn killed(&self, model: ModelKind, tier: Tier, region: Region) -> u64 {
+        Self::read(&self.killed, model, tier, region)
+    }
+
+    /// Losses in one (model, tier, region) cell.
+    pub fn lost(&self, model: ModelKind, tier: Tier, region: Region) -> u64 {
+        Self::read(&self.lost, model, tier, region)
+    }
+
+    /// Sheds in one (model, tier, region) cell.
+    pub fn shed(&self, model: ModelKind, tier: Tier, region: Region) -> u64 {
+        Self::read(&self.shed, model, tier, region)
+    }
+
+    /// Total kills across all cells.
+    pub fn killed_total(&self) -> u64 {
+        self.killed.iter().sum()
+    }
+
+    /// Total losses across all cells.
+    pub fn lost_total(&self) -> u64 {
+        self.lost.iter().sum()
+    }
+
+    /// Total sheds across all cells.
+    pub fn shed_total(&self) -> u64 {
+        self.shed.iter().sum()
+    }
+
+    /// Sheds restricted to interactive tiers — must stay 0 (graceful
+    /// degradation sacrifices NIW batch work first, never IW traffic);
+    /// the `exp faults` ablation asserts this.
+    pub fn shed_interactive_total(&self) -> u64 {
+        if self.shed.is_empty() {
+            return 0;
+        }
+        let mut sum = 0;
+        for (mi, _) in ModelKind::ALL.iter().enumerate() {
+            for (ti, tier) in Tier::ALL.iter().enumerate() {
+                if !tier.is_interactive() {
+                    continue;
+                }
+                for ri in 0..REGIONS {
+                    sum += self.shed[(mi * TIERS + ti) * REGIONS + ri];
+                }
+            }
+        }
+        sum
+    }
+
+    /// Retry-amplification factor: dispatches per completed request,
+    /// `1 + retries / completed` (1.0 in a fault-free run).
+    pub fn retry_amplification(&self, completed: u64) -> f64 {
+        if completed == 0 {
+            1.0
+        } else {
+            1.0 + self.retries as f64 / completed as f64
+        }
+    }
+
+    /// Open a new incident; returns its index for later closure.
+    pub fn open_incident(&mut self, kind: &'static str, region: Region, start: Time) -> usize {
+        self.incidents.push(FaultIncident {
+            kind,
+            region,
+            start,
+            fault_end: None,
+            recovered_at: None,
+        });
+        self.incidents.len() - 1
+    }
+
+    /// Mark the fault condition itself as lifted (outage window closed).
+    pub fn set_fault_end(&mut self, idx: usize, t: Time) {
+        self.incidents[idx].fault_end = Some(t);
+    }
+
+    /// Mark capacity as recovered to the pre-incident level.
+    pub fn set_recovered(&mut self, idx: usize, t: Time) {
+        self.incidents[idx].recovered_at = Some(t);
+    }
+
+    /// Absorb another shard (elementwise cell sums, appended incidents).
+    pub fn merge(&mut self, other: &FailureStats) {
+        for (mine, theirs) in [
+            (&mut self.killed, &other.killed),
+            (&mut self.lost, &other.lost),
+            (&mut self.shed, &other.shed),
+        ] {
+            if theirs.is_empty() {
+                continue;
+            }
+            if mine.is_empty() {
+                mine.resize(CELLS, 0);
+            }
+            for (a, b) in mine.iter_mut().zip(theirs) {
+                *a += b;
+            }
+        }
+        self.retries += other.retries;
+        self.incidents.extend(other.incidents.iter().cloned());
+    }
+}
+
 /// GPU-hours wasted on scaling: time VMs spend provisioning, by cause
 /// (Fig 13b's ledger).
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -501,6 +684,8 @@ pub struct Metrics {
     pub scaling_waste: ScalingWasteLedger,
     /// Dropped/unserved requests (should stay 0 in healthy runs).
     pub dropped: u64,
+    /// Fault-plane failure accounting (all-zero without a fault plan).
+    pub failures: FailureStats,
     /// Whole-run cells, dense `[model][tier][region]`; empty until the
     /// first completion.
     cells: Vec<GroupCell>,
@@ -534,6 +719,7 @@ impl Metrics {
             spot_instances_by_gpu: BTreeMap::new(),
             scaling_waste: ScalingWasteLedger::default(),
             dropped: 0,
+            failures: FailureStats::default(),
             cells: Vec::new(),
             bins: Vec::new(),
             util: Vec::new(),
@@ -929,6 +1115,7 @@ impl Metrics {
         );
         self.completed += other.completed;
         self.dropped += other.dropped;
+        self.failures.merge(&other.failures);
         self.outcomes.extend(other.outcomes.iter().cloned());
         if !other.cells.is_empty() {
             if self.cells.is_empty() {
@@ -1251,6 +1438,42 @@ mod tests {
         assert!((m.spot_revenue(end) - h100 - a100).abs() < 1e-9);
         // Net cost = on-demand − spot revenue (no allocated hours here).
         assert!((m.net_fleet_cost(end) + h100 + a100).abs() < 1e-9);
+    }
+
+    #[test]
+    fn failure_stats_cells_incidents_and_merge() {
+        let mut f = FailureStats::default();
+        let (m, r) = (ModelKind::Llama2_70B, Region::CentralUs);
+        f.record_killed(m, Tier::IwF, r);
+        f.record_killed(m, Tier::IwF, r);
+        f.record_lost(m, Tier::Niw, r);
+        f.record_shed(m, Tier::Niw, r);
+        f.retries += 3;
+        assert_eq!(f.killed(m, Tier::IwF, r), 2);
+        assert_eq!(f.killed_total(), 2);
+        assert_eq!(f.lost_total(), 1);
+        assert_eq!(f.shed_total(), 1);
+        assert_eq!(f.shed_interactive_total(), 0, "only NIW was shed");
+        assert!((f.retry_amplification(6) - 1.5).abs() < 1e-12);
+        assert_eq!(FailureStats::default().retry_amplification(0), 1.0);
+
+        let idx = f.open_incident("region-outage", r, 100.0);
+        f.set_fault_end(idx, 200.0);
+        f.set_recovered(idx, 350.0);
+        assert_eq!(f.incidents[idx].time_to_recover(), Some(250.0));
+
+        // Merge: cell sums + appended incidents; merging an empty shard
+        // is an identity (the fault-free bit-identity guarantee).
+        let snapshot = f.clone();
+        f.merge(&FailureStats::default());
+        assert_eq!(f, snapshot);
+        let mut g = FailureStats::default();
+        g.record_killed(m, Tier::IwF, r);
+        g.retries = 1;
+        f.merge(&g);
+        assert_eq!(f.killed_total(), 3);
+        assert_eq!(f.retries, 4);
+        assert_eq!(f.incidents.len(), 1);
     }
 
     #[test]

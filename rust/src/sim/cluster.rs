@@ -35,7 +35,7 @@ use crate::config::{FleetSpec, GpuKind, ModelKind, Region, ScalingParams, Time};
 use crate::coordinator::scheduler::SchedPolicy;
 use crate::metrics::Metrics;
 use crate::perf::PerfTable;
-use crate::sim::instance::{ChunkPlan, InstState, InstanceSim};
+use crate::sim::instance::{ChunkPlan, CrashedWork, InstState, InstanceSim};
 use crate::trace::types::Request;
 use std::collections::BTreeMap;
 use std::ops::Index;
@@ -318,6 +318,16 @@ pub struct Cluster {
     /// Instances with a non-empty batch or waiting queue — the engine's
     /// O(1) all-idle check.
     busy_instances: usize,
+    /// Fault-plane availability mask: regions currently dark (inside an
+    /// outage window), indexed by [`Region::index`].  Dark regions are
+    /// excluded from routing and refuse provisioning.
+    dark: [bool; 3],
+    /// Regions under cross-region latency degradation, indexed by
+    /// [`Region::index`] — routable, but retries prefer clean regions.
+    degraded: [bool; 3],
+    /// Extra per-request latency (seconds) charged while a region is
+    /// degraded, indexed by [`Region::index`].
+    extra_latency: [f64; 3],
 }
 
 impl Cluster {
@@ -383,6 +393,9 @@ impl Cluster {
             perf,
             params,
             busy_instances: 0,
+            dark: [false; 3],
+            degraded: [false; 3],
+            extra_latency: [0.0; 3],
         };
         for &model in models {
             for region in Region::ALL {
@@ -729,6 +742,12 @@ impl Cluster {
         now: Time,
         metrics: &mut Metrics,
     ) -> Option<(InstanceId, Time, ModelKind)> {
+        // A dark region refuses provisioning: `pool_util` reports 1.0 for
+        // an endpoint with zero capacity, so without this gate the
+        // reactive autoscaler would pour replacement VMs into the outage.
+        if !self.region_available(region) {
+            return None;
+        }
         if self.allocated_count(model, region) >= self.params.max_instances {
             return None;
         }
@@ -777,6 +796,9 @@ impl Cluster {
         now: Time,
         metrics: &mut Metrics,
     ) -> Option<(InstanceId, Time)> {
+        if !self.region_available(region) {
+            return None;
+        }
         if self.allocated_count(model, region) >= self.params.max_instances {
             return None;
         }
@@ -889,6 +911,91 @@ impl Cluster {
     /// Instances currently donated to spot, per region.
     pub fn spot_count(&self, region: Region) -> usize {
         self.spot_pool[&region].len()
+    }
+
+    // ── Fault plane ────────────────────────────────────────────────────
+    //
+    // The availability mask and the crash/preemption paths below are only
+    // exercised when a non-empty `FaultPlan` schedules fault events; in a
+    // fault-free run the mask stays all-clear and no instance ever enters
+    // `InstState::Dead`, so existing runs are bit-identical.
+
+    /// Mark a region dark (inside an outage window) or lift the mark.
+    /// Dark regions are excluded from routing and refuse provisioning.
+    pub fn set_region_dark(&mut self, region: Region, dark: bool) {
+        self.dark[region.index()] = dark;
+    }
+
+    /// True when the region is *not* dark — routable and provisionable.
+    pub fn region_available(&self, region: Region) -> bool {
+        !self.dark[region.index()]
+    }
+
+    /// True while any region is inside an outage window — the queue
+    /// manager's graceful-degradation signal (defer NIW releases, shed
+    /// over-capacity NIW backlog before any interactive request suffers).
+    pub fn any_region_dark(&self) -> bool {
+        self.dark.iter().any(|&d| d)
+    }
+
+    /// Open a latency-degradation window: the region stays routable but
+    /// every request it serves is charged `extra` seconds, and retry
+    /// failover prefers clean regions.
+    pub fn set_region_degraded(&mut self, region: Region, extra: Time) {
+        self.degraded[region.index()] = true;
+        self.extra_latency[region.index()] = extra;
+    }
+
+    /// Close a latency-degradation window.
+    pub fn clear_region_degraded(&mut self, region: Region) {
+        self.degraded[region.index()] = false;
+        self.extra_latency[region.index()] = 0.0;
+    }
+
+    /// True while the region is inside a degradation window.
+    pub fn region_degraded(&self, region: Region) -> bool {
+        self.degraded[region.index()]
+    }
+
+    /// Extra latency (seconds) currently charged to requests served by
+    /// this region — 0.0 outside degradation windows.
+    pub fn latency_penalty(&self, region: Region) -> f64 {
+        self.extra_latency[region.index()]
+    }
+
+    /// Kill a roster instance (outage or VM-crash hazard): splits its
+    /// batch into finished-this-chunk vs killed work, zeroes its load,
+    /// removes it from the roster, and returns its budget slot so the
+    /// autoscaler can provision a replacement once the region is live.
+    /// The arena slot stays (`InstState::Dead`) so stale `ChunkDone` /
+    /// `ProvisionDone` events resolve harmlessly.
+    pub fn crash_instance(&mut self, id: InstanceId, now: Time) -> CrashedWork {
+        let work = self.mutate(id, |inst| inst.crash(now));
+        let (model, region, gpu) = {
+            let inst = &self.instances[id];
+            (inst.model, inst.region, inst.gpu)
+        };
+        self.roster_remove(model, region, id);
+        self.vm_budget[region.index()][gpu.index()] += 1;
+        work
+    }
+
+    /// Spot-market preemption shock: the market reclaims `count` donated
+    /// VMs from the back of a region's spot pool (most recently donated
+    /// first — deterministic).  Preempted VMs are gone for good: they go
+    /// `Dead` and do *not* return a budget slot, shrinking the fast
+    /// spot-reclaim path the autoscaler leans on.  Returns the number
+    /// actually preempted (the pool may be smaller than `count`).
+    pub fn preempt_spot(&mut self, region: Region, count: usize) -> usize {
+        let mut taken = 0;
+        while taken < count {
+            let Some(id) = self.spot_pool.get_mut(&region).unwrap().pop() else {
+                break;
+            };
+            self.mutate(id, |inst| inst.state = InstState::Dead);
+            taken += 1;
+        }
+        taken
     }
 
     /// Recompute every aggregate, roster cache and cached token counter
@@ -1241,6 +1348,86 @@ mod tests {
         assert_eq!(prev, m);
         assert!((ready2 - 160.0).abs() < 1e-9);
         assert!(c.aggregates_consistent());
+    }
+
+    #[test]
+    fn crash_instance_frees_roster_slot_and_returns_budget() {
+        use crate::config::Tier;
+        use crate::trace::types::AppKind;
+        let mut c = cluster();
+        let (m, r) = (ModelKind::Llama2_70B, Region::EastUs);
+        let id = c.endpoints[&(m, r)].instances[0];
+        c.push_waiting(id, Request {
+            id: 1,
+            arrival: 0.0,
+            model: m,
+            origin: r,
+            tier: Tier::IwF,
+            app: AppKind::Chat,
+            input_tokens: 100,
+            output_tokens: 10,
+        });
+        let budget_before = c.vm_budget[r.index()][GpuKind::A100x8.index()];
+        let work = c.crash_instance(id, 5.0);
+        assert_eq!(work.killed.len(), 1);
+        assert!(work.finished.is_empty());
+        assert_eq!(c.instances[id].state, InstState::Dead);
+        assert!(!c.endpoints[&(m, r)].instances.contains(&id));
+        assert_eq!(c.vm_budget[r.index()][GpuKind::A100x8.index()], budget_before + 1);
+        assert_eq!(c.active_instances(m, r).len(), 2);
+        assert!(c.is_all_idle());
+        assert!(c.aggregates_consistent());
+    }
+
+    #[test]
+    fn preempt_spot_kills_donated_vms_without_budget_return() {
+        let mut c = cluster();
+        let r = Region::EastUs;
+        let a = c.scale_in(ModelKind::Llama2_70B, r, None, None).unwrap();
+        c.finish_drain(a);
+        let b = c.scale_in(ModelKind::Bloom176B, r, None, None).unwrap();
+        c.finish_drain(b);
+        assert_eq!(c.spot_count(r), 2);
+        let budget = c.vm_budget[r.index()];
+        // Ask for more than the pool holds: both go, count reports 2.
+        assert_eq!(c.preempt_spot(r, 5), 2);
+        assert_eq!(c.spot_count(r), 0);
+        assert_eq!(c.instances[a].state, InstState::Dead);
+        assert_eq!(c.instances[b].state, InstState::Dead);
+        assert_eq!(c.vm_budget[r.index()], budget); // no slot returned
+        assert!(c.aggregates_consistent());
+    }
+
+    #[test]
+    fn dark_region_refuses_both_provisioning_sources() {
+        let mut c = cluster();
+        let mut metrics = Metrics::default();
+        let (m, r) = (ModelKind::Llama2_70B, Region::CentralUs);
+        // Seed the spot pool so reclaim would otherwise succeed.
+        let id = c.scale_in(m, r, None, None).unwrap();
+        c.finish_drain(id);
+        c.set_region_dark(r, true);
+        assert!(!c.region_available(r));
+        assert!(c.any_region_dark());
+        assert!(c.scale_out(m, r, PoolTag::Unified, GpuKind::A100x8, 0.0, &mut metrics).is_none());
+        // Lifting the mark restores both sources.
+        c.set_region_dark(r, false);
+        assert!(c.scale_out(m, r, PoolTag::Unified, GpuKind::A100x8, 0.0, &mut metrics).is_some());
+        assert!(!c.any_region_dark());
+    }
+
+    #[test]
+    fn degradation_mask_tracks_penalty() {
+        let mut c = cluster();
+        let r = Region::WestUs;
+        assert!(!c.region_degraded(r));
+        assert_eq!(c.latency_penalty(r), 0.0);
+        c.set_region_degraded(r, 0.25);
+        assert!(c.region_degraded(r));
+        assert_eq!(c.latency_penalty(r), 0.25);
+        c.clear_region_degraded(r);
+        assert!(!c.region_degraded(r));
+        assert_eq!(c.latency_penalty(r), 0.0);
     }
 
     #[test]

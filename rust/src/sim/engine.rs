@@ -42,6 +42,7 @@ use crate::metrics::{Metrics, MetricsConfig};
 use crate::perf::PerfTable;
 use crate::sim::cluster::{Cluster, InstanceId};
 use crate::sim::event::{Event, EventQueue};
+use crate::sim::faults::FaultPlan;
 use crate::sim::instance::InstState;
 use crate::trace::generator::{TraceConfig, TraceGenerator};
 use crate::trace::types::Request;
@@ -85,6 +86,12 @@ pub struct SimConfig {
     /// additionally logs every `RequestOutcome` for fidelity work
     /// (`simulate --metrics exact`).
     pub metrics: MetricsConfig,
+    /// Deterministic fault schedule (region outages, VM-crash hazard,
+    /// spot preemption shocks, latency degradation).  The default is the
+    /// empty plan: it compiles to zero events and the engine's fault
+    /// paths never run, so fault-free runs stay bit-identical to builds
+    /// without the fault plane.
+    pub faults: FaultPlan,
 }
 
 impl Default for SimConfig {
@@ -103,12 +110,30 @@ impl Default for SimConfig {
             replay_trace: None,
             shared_trace: None,
             metrics: MetricsConfig::default(),
+            faults: FaultPlan::default(),
         }
     }
 }
 
 const SCALE_TICK: Time = 15.0;
 const UTIL_SAMPLE_EVERY: u64 = 60; // ticks → one util sample / 15 min
+
+/// An open fault incident whose capacity recovery the engine is still
+/// watching: when `region`'s active-instance count climbs back to
+/// `target` (its pre-incident level), the incident's time-to-recover is
+/// stamped.  Lives in the [`SimHandoff`] so chunked runs track recovery
+/// across boundaries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryWatch {
+    /// Index into `FaultPlan::outages` (matches start/end events).
+    pub outage: usize,
+    /// The region whose capacity must recover.
+    pub region: Region,
+    /// Pre-incident active-instance count to restore.
+    pub target: usize,
+    /// Index into `Metrics::failures.incidents`.
+    pub incident: usize,
+}
 
 /// The simulation: build with [`Simulation::new`], run with
 /// [`Simulation::run`], then read `metrics`.
@@ -134,6 +159,15 @@ pub struct Simulation {
     /// Reused per-epoch buffer of per-SKU allocated counts, rows in
     /// `telemetry.keys()` order — no per-epoch map/Vec allocation.
     epoch_counts: Vec<[usize; GpuKind::COUNT]>,
+    /// Requests killed by instance loss, parked between their kill and
+    /// their `RetryDue` event (keyed by request id — the event carries
+    /// only the key, keeping `Event: Eq` trivial).
+    pending_retries: BTreeMap<u64, Request>,
+    /// Kill count per in-flight request id (drives the capped
+    /// exponential backoff; entries are dropped on completion or loss).
+    retry_attempt: BTreeMap<u64, u32>,
+    /// Open incidents awaiting capacity recovery.
+    recovery_watch: Vec<RecoveryWatch>,
 }
 
 /// Complete mutable simulator state, detached from a [`Simulation`] so it
@@ -173,6 +207,12 @@ pub struct SimHandoff {
     pub epoch_start: Time,
     /// ScaleTick counter (drives the 15-minute utilization sampling).
     pub tick_count: u64,
+    /// Fault plane: requests awaiting their `RetryDue` event.
+    pub pending_retries: BTreeMap<u64, Request>,
+    /// Fault plane: kill counts backing the retry backoff.
+    pub retry_attempt: BTreeMap<u64, u32>,
+    /// Fault plane: incidents still awaiting capacity recovery.
+    pub recovery_watch: Vec<RecoveryWatch>,
 }
 
 impl Simulation {
@@ -236,6 +276,9 @@ impl Simulation {
             epoch_start: 0.0,
             tick_count: 0,
             epoch_counts: Vec::new(),
+            pending_retries: BTreeMap::new(),
+            retry_attempt: BTreeMap::new(),
+            recovery_watch: Vec::new(),
             cfg,
         };
         // Seed ledgers with the initial allocation.
@@ -251,6 +294,9 @@ impl Simulation {
         if sim.cfg.strategy.uses_forecast() {
             sim.events.push(0.0, Event::ControlEpoch);
         }
+        // Fault schedule (an empty plan pushes nothing, leaving the
+        // heap's sequence counter — and thus every pop order — intact).
+        sim.cfg.faults.compile(&mut sim.events, end_time);
         sim
     }
 
@@ -347,6 +393,7 @@ impl Simulation {
                 && chunk.peek().is_none()
                 && self.cluster.is_all_idle()
                 && self.qm.total_depth() == 0
+                && self.pending_retries.is_empty()
             {
                 break;
             }
@@ -370,7 +417,10 @@ impl Simulation {
                 break;
             }
             self.handle_event(ev);
-            if self.cluster.is_all_idle() && self.qm.total_depth() == 0 {
+            if self.cluster.is_all_idle()
+                && self.qm.total_depth() == 0
+                && self.pending_retries.is_empty()
+            {
                 break;
             }
         }
@@ -393,6 +443,9 @@ impl Simulation {
             epoch_start,
             tick_count,
             epoch_counts: _,
+            pending_retries,
+            retry_attempt,
+            recovery_watch,
         } = self;
         (
             cfg,
@@ -407,6 +460,9 @@ impl Simulation {
                 forecaster,
                 epoch_start,
                 tick_count,
+                pending_retries,
+                retry_attempt,
+                recovery_watch,
             },
         )
     }
@@ -430,6 +486,9 @@ impl Simulation {
             epoch_start: h.epoch_start,
             tick_count: h.tick_count,
             epoch_counts: Vec::new(),
+            pending_retries: h.pending_retries,
+            retry_attempt: h.retry_attempt,
+            recovery_watch: h.recovery_watch,
             cfg,
         }
     }
@@ -531,18 +590,54 @@ impl Simulation {
         // reading the sequences in place (no per-completion clone).
         // Cross-region latency is derived from where the request was
         // actually served, replacing the old per-request side table.
+        //
+        // With a fault plan active, recording moves to the chunk *end*
+        // (`record_completed_outcomes`): a VM can die mid-chunk, and a
+        // completion planned for after the crash instant must count as
+        // killed, not completed.  The empty-plan path records here,
+        // eagerly — byte-identical to the fault-plane-free engine.
         let served_region = self.cluster.instances[id].region;
-        for &(idx, t_done) in &plan.completions {
-            let seq = &self.cluster.instances[id].batch[idx];
-            let extra = router::routing_latency(&self.cfg.routing, seq.req.origin, served_region);
-            let ttft = seq.prefill_done - seq.req.arrival + extra;
-            let e2e = t_done - seq.req.arrival + extra;
-            self.metrics.record_outcome(&seq.req, served_region, ttft, e2e);
+        if self.cfg.faults.is_empty() {
+            for &(idx, t_done) in &plan.completions {
+                let seq = &self.cluster.instances[id].batch[idx];
+                let extra =
+                    router::routing_latency(&self.cfg.routing, seq.req.origin, served_region);
+                let ttft = seq.prefill_done - seq.req.arrival + extra;
+                let e2e = t_done - seq.req.arrival + extra;
+                self.metrics.record_outcome(&seq.req, served_region, ttft, e2e);
+            }
         }
         self.events.push(now + plan.duration, Event::ChunkDone { instance: id });
     }
 
+    /// Fault-plan outcome recording at a chunk boundary: every batch
+    /// sequence with a planned completion genuinely finished (the chunk
+    /// ran to its end — crashes sweep their instance's batch before this
+    /// can fire), so record it now, charge any degradation penalty of
+    /// the serving region, and drop its retry bookkeeping.
+    fn record_completed_outcomes(&mut self, id: InstanceId) {
+        let served_region = self.cluster.instances[id].region;
+        let penalty = self.cluster.latency_penalty(served_region);
+        for idx in 0..self.cluster.instances[id].batch.len() {
+            let seq = &self.cluster.instances[id].batch[idx];
+            let Some(t_done) = seq.completed_at else { continue };
+            let extra = router::routing_latency(&self.cfg.routing, seq.req.origin, served_region)
+                + penalty;
+            let ttft = seq.prefill_done - seq.req.arrival + extra;
+            let e2e = t_done - seq.req.arrival + extra;
+            let (req, rid) = (seq.req, seq.req.id);
+            self.metrics.record_outcome(&req, served_region, ttft, e2e);
+            self.retry_attempt.remove(&rid);
+        }
+    }
+
     fn on_chunk_done(&mut self, id: InstanceId) {
+        if self.cluster.instances[id].state == InstState::Dead {
+            return; // stale event: the VM died mid-chunk
+        }
+        if !self.cfg.faults.is_empty() {
+            self.record_completed_outcomes(id);
+        }
         let (is_draining, batch_empty) = self.cluster.mutate(id, |inst| {
             inst.chunk_scheduled = false;
             inst.retire_completed();
@@ -580,6 +675,277 @@ impl Simulation {
             }
         });
         self.kick_instance(id);
+        // Replacement capacity landing after an outage may close an
+        // open incident (time-to-recover).
+        if !self.recovery_watch.is_empty() {
+            let region = self.cluster.instances[id].region;
+            self.check_recovery(region);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Fault plane
+    // ------------------------------------------------------------------
+
+    /// Kill one roster VM (outage or crash hazard): finished-before-the-
+    /// crash sequences still record their outcomes; everything else is
+    /// counted killed and re-enters through the retry path.
+    fn kill_instance(&mut self, id: InstanceId) {
+        let (model, region) = {
+            let inst = &self.cluster.instances[id];
+            (inst.model, inst.region)
+        };
+        let penalty = self.cluster.latency_penalty(region);
+        let work = self.cluster.crash_instance(id, self.now);
+        for seq in &work.finished {
+            let extra =
+                router::routing_latency(&self.cfg.routing, seq.req.origin, region) + penalty;
+            let ttft = seq.prefill_done - seq.req.arrival + extra;
+            let e2e = seq.completed_at.expect("finished seq has a completion") - seq.req.arrival
+                + extra;
+            self.metrics.record_outcome(&seq.req, region, ttft, e2e);
+            self.retry_attempt.remove(&seq.req.id);
+        }
+        for req in work.killed {
+            self.metrics.failures.record_killed(req.model, req.tier, req.origin);
+            self.on_request_killed(req);
+        }
+        let mut ctx = self.ctx();
+        ctx.record_ledgers(model, region);
+    }
+
+    /// A killed request either schedules a retry (capped exponential
+    /// backoff, original arrival time kept for SLA accounting) or — past
+    /// `max_attempts` kills — is permanently lost.
+    fn on_request_killed(&mut self, req: Request) {
+        let attempt = {
+            let a = self.retry_attempt.entry(req.id).or_insert(0);
+            *a += 1;
+            *a
+        };
+        if attempt > self.cfg.faults.retry.max_attempts {
+            self.retry_attempt.remove(&req.id);
+            self.metrics.failures.record_lost(req.model, req.tier, req.origin);
+            return;
+        }
+        let delay = self.cfg.faults.retry.backoff(attempt);
+        self.pending_retries.insert(req.id, req);
+        self.events.push(self.now + delay, Event::RetryDue { id: req.id });
+    }
+
+    /// Backoff expired: fail the request over to a live (preferably
+    /// clean) region.  No routable region or no instance ⇒ the kill
+    /// counter ticks again and the request backs off or is lost.
+    fn on_retry_due(&mut self, id: u64) {
+        let Some(req) = self.pending_retries.remove(&id) else {
+            return; // already resolved (e.g. lost via a later kill)
+        };
+        let dest = router::route_retry(
+            &self.cluster,
+            &self.cfg.routing,
+            req.model,
+            req.origin,
+            req.total_tokens(),
+        );
+        let inst = dest.and_then(|region| {
+            router::route_instance_sku_aware(
+                &self.cluster,
+                &self.cfg.routing,
+                req.model,
+                region,
+                req.tier,
+                req.total_tokens(),
+            )
+        });
+        match inst {
+            Some(id) => {
+                self.metrics.failures.retries += 1;
+                self.cluster.push_waiting(id, req);
+                self.kick_instance(id);
+            }
+            None => self.on_request_killed(req),
+        }
+    }
+
+    /// Active + provisioning instances across every model endpoint of a
+    /// region (the recovery target and its progress measure).
+    fn region_active_count(&self, region: Region) -> usize {
+        let mut n = 0;
+        for idx in 0..self.cluster.endpoints.len() {
+            let (model, r) = self.cluster.endpoints.key_at(idx);
+            if r == region {
+                n += self.cluster.allocated_count(model, r);
+            }
+        }
+        n
+    }
+
+    /// Region goes dark: mask it out of routing/provisioning, kill every
+    /// roster VM (all models, provisioning included), reclaim the whole
+    /// donated spot pool, and open a recovery watch against the
+    /// pre-outage capacity level.
+    fn on_outage_start(&mut self, idx: usize) {
+        let region = self.cfg.faults.outages[idx].region;
+        let target = self.region_active_count(region);
+        let incident = self.metrics.failures.open_incident("region-outage", region, self.now);
+        self.recovery_watch.push(RecoveryWatch { outage: idx, region, target, incident });
+        self.cluster.set_region_dark(region, true);
+        let mut victims: Vec<InstanceId> = Vec::new();
+        for ep_idx in 0..self.cluster.endpoints.len() {
+            let (model, r) = self.cluster.endpoints.key_at(ep_idx);
+            if r == region {
+                victims.extend(&self.cluster.endpoints[&(model, r)].instances);
+            }
+        }
+        for id in victims {
+            self.kill_instance(id);
+        }
+        let pool = self.cluster.spot_count(region);
+        if pool > 0 {
+            self.cluster.preempt_spot(region, pool);
+        }
+        // Spot ledgers for the region change wholesale; re-record every
+        // endpoint once (kill_instance covered non-empty rosters, this
+        // covers endpoints that only had donated VMs in the pool).
+        self.record_region_ledgers(region);
+    }
+
+    /// Outage window closes: lift the mask and re-seed each of the
+    /// region's endpoints back to the `min_instances` floor at realistic
+    /// provisioning lead time — demand-driven scaling grows the rest,
+    /// and the recovery watch stamps time-to-recover when the pre-outage
+    /// level is back.
+    fn on_outage_end(&mut self, idx: usize) {
+        let region = self.cfg.faults.outages[idx].region;
+        self.cluster.set_region_dark(region, false);
+        if let Some(w) = self.recovery_watch.iter().find(|w| w.outage == idx) {
+            self.metrics.failures.set_fault_end(w.incident, self.now);
+        }
+        let floor = self.cfg.scaling.min_instances;
+        let pools = self.cfg.strategy.initial_pools(1);
+        let seed_pool = pools[0].0;
+        for ep_idx in 0..self.cluster.endpoints.len() {
+            let (model, r) = self.cluster.endpoints.key_at(ep_idx);
+            if r != region {
+                continue;
+            }
+            while self.cluster.allocated_count(model, region) < floor {
+                if !self.provision_replacement(model, region, seed_pool) {
+                    break; // no budget / no SKU left
+                }
+            }
+        }
+        self.check_recovery(region);
+    }
+
+    /// Provision one replacement VM (cheapest SKU with capacity),
+    /// mirroring the autoscaler's commit: ProvisionDone scheduled at the
+    /// realistic lead time, ledgers re-recorded.
+    fn provision_replacement(
+        &mut self,
+        model: ModelKind,
+        region: Region,
+        pool: crate::sim::cluster::PoolTag,
+    ) -> bool {
+        let order = self.cluster.gpus_cost_asc.clone();
+        for gpu in order {
+            let got = self.cluster.scale_out(model, region, pool, gpu, self.now, &mut self.metrics);
+            if let Some((id, ready, prev)) = got {
+                self.events.push(ready, Event::ProvisionDone { instance: id });
+                let mut ctx = self.ctx();
+                ctx.record_ledgers(model, region);
+                if prev != model {
+                    let mut ctx = self.ctx();
+                    ctx.record_ledgers(prev, region);
+                }
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Spot-market preemption shock: the external market claims `frac`
+    /// of every region's donated pool (rounded up), for good.
+    fn on_spot_shock(&mut self, idx: usize) {
+        let frac = self.cfg.faults.spot_shocks[idx].frac;
+        for region in Region::ALL {
+            let pool = self.cluster.spot_count(region);
+            let n = (pool as f64 * frac).ceil() as usize;
+            if n == 0 {
+                continue;
+            }
+            let taken = self.cluster.preempt_spot(region, n);
+            if taken > 0 {
+                let i = self.metrics.failures.open_incident("spot-shock", region, self.now);
+                self.metrics.failures.set_fault_end(i, self.now);
+                self.record_region_ledgers(region);
+            }
+        }
+    }
+
+    /// Counter-seeded VM-crash hazard tick `k` (at `k × crash_check_secs`):
+    /// each roster VM flips an independent coin from a tick-pure RNG —
+    /// no RNG state rides the handoff, so chunked == sequential.  Victims
+    /// get same-endpoint replacements immediately (the health checker's
+    /// replace-on-failure), at full provisioning lead time.
+    fn on_crash_tick(&mut self, k: u64) {
+        let p = self.cfg.faults.crash_prob_per_tick();
+        let mut rng = FaultPlan::crash_rng(self.cfg.trace.seed, k);
+        let mut victims: Vec<InstanceId> = Vec::new();
+        // Dense endpoint order + roster order: a deterministic walk.
+        for ep_idx in 0..self.cluster.endpoints.len() {
+            let key = self.cluster.endpoints.key_at(ep_idx);
+            for &iid in &self.cluster.endpoints[&key].instances {
+                if rng.f64() < p {
+                    victims.push(iid);
+                }
+            }
+        }
+        for id in victims {
+            let (model, region) = {
+                let inst = &self.cluster.instances[id];
+                (inst.model, inst.region)
+            };
+            let pool = self.cluster.instances[id].pool;
+            self.kill_instance(id);
+            if self.cluster.region_available(region) {
+                self.provision_replacement(model, region, pool);
+            }
+        }
+        if self.now < self.end_time {
+            self.events
+                .push(self.now + self.cfg.faults.crash_check_secs, Event::FaultCrashTick { k: k + 1 });
+        }
+    }
+
+    /// Close any recovery watch whose region is live again at (or above)
+    /// its pre-incident capacity.
+    fn check_recovery(&mut self, region: Region) {
+        let mut i = 0;
+        while i < self.recovery_watch.len() {
+            let w = &self.recovery_watch[i];
+            if w.region == region
+                && self.cluster.region_available(region)
+                && self.region_active_count(region) >= w.target
+            {
+                self.metrics.failures.set_recovered(w.incident, self.now);
+                self.recovery_watch.remove(i);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Re-record every ledger touching one region (bulk fault events —
+    /// outage sweeps, spot shocks — change many at once).
+    fn record_region_ledgers(&mut self, region: Region) {
+        for ep_idx in 0..self.cluster.endpoints.len() {
+            let (model, r) = self.cluster.endpoints.key_at(ep_idx);
+            if r == region {
+                let mut ctx = self.ctx();
+                ctx.record_ledgers(model, region);
+            }
+        }
     }
 
     // ------------------------------------------------------------------
@@ -593,6 +959,20 @@ impl Simulation {
             Event::ScaleTick => self.on_scale_tick(),
             Event::QmTick => self.on_qm_tick(),
             Event::ControlEpoch => self.on_control_epoch(),
+            Event::FaultOutageStart { idx } => self.on_outage_start(idx),
+            Event::FaultOutageEnd { idx } => self.on_outage_end(idx),
+            Event::FaultDegradeStart { idx } => {
+                let d = &self.cfg.faults.degradations[idx];
+                let (region, extra) = (d.region, d.extra);
+                self.cluster.set_region_degraded(region, extra);
+            }
+            Event::FaultDegradeEnd { idx } => {
+                let region = self.cfg.faults.degradations[idx].region;
+                self.cluster.clear_region_degraded(region);
+            }
+            Event::FaultSpotShock { idx } => self.on_spot_shock(idx),
+            Event::FaultCrashTick { k } => self.on_crash_tick(k),
+            Event::RetryDue { id } => self.on_retry_due(id),
         }
     }
 
@@ -609,6 +989,10 @@ impl Simulation {
             reroutes: Vec::new(),
         };
         self.autoscaler.on_tick(&mut ctx, &observed, elapsed);
+        // Backstop: convert Draining instances that can no longer make
+        // progress (empty batch, no chunk in flight) — see
+        // `ScaleCtx::sweep_stalled_drains`.  A no-op on healthy runs.
+        ctx.sweep_stalled_drains();
         let rr = std::mem::take(&mut ctx.reroutes);
         for r in rr {
             self.route_interactive_like(r);
@@ -618,7 +1002,15 @@ impl Simulation {
         // endpoint keeps signalling while it has headroom, so the queue
         // drains at the endpoints' actual spare capacity; the
         // waiting-aware utilization makes the loop self-limiting.
-        if self.cfg.strategy.uses_queue_manager() && self.qm.total_depth() > 0 {
+        //
+        // Graceful degradation (fault plane): while any region is dark,
+        // NIW releases are deferred entirely — the surviving capacity
+        // serves interactive traffic first, and batch work waits (or is
+        // shed by the QmTick sweep) rather than compete for it.
+        if self.cfg.strategy.uses_queue_manager()
+            && self.qm.total_depth() > 0
+            && !self.cluster.any_region_dark()
+        {
             // Index-based endpoint walk: no per-tick key Vec.
             for idx in 0..self.cluster.endpoints.len() {
                 let (model, region) = self.cluster.endpoints.key_at(idx);
@@ -672,8 +1064,40 @@ impl Simulation {
         for req in aged {
             self.route_interactive_like(req);
         }
+        // Graceful degradation: under a region outage, shed the NIW
+        // backlog beyond what the surviving fleet can plausibly absorb
+        // (active instances × batch cap per model).  Interactive traffic
+        // is never shed — only NIW work parks in the queue manager.
+        if self.cluster.any_region_dark()
+            && self.cfg.strategy.uses_queue_manager()
+            && self.qm.total_depth() > 0
+        {
+            self.shed_niw_over_capacity();
+        }
         if self.now < self.end_time + 4.0 * HOUR {
             self.events.push(self.now + MINUTE, Event::QmTick);
+        }
+    }
+
+    /// Shed each model's parked NIW backlog down to the surviving
+    /// fleet's absorbable depth (Σ live instances × [`MAX_BATCH`]),
+    /// newest-first so the oldest (deadline-nearest) requests keep their
+    /// place.  Shed requests are counted exactly once — they never
+    /// re-enter any queue or instance.
+    fn shed_niw_over_capacity(&mut self) {
+        let models = self.cfg.trace.models.clone();
+        for model in models {
+            let mut live = 0usize;
+            for r in Region::ALL {
+                if self.cluster.region_available(r) {
+                    live += self.cluster.allocated_count(model, r);
+                }
+            }
+            let cap = live * crate::sim::instance::MAX_BATCH;
+            let shed = self.qm.shed_over_depth(model, cap);
+            for req in shed {
+                self.metrics.failures.record_shed(req.model, req.tier, req.origin);
+            }
         }
     }
 
@@ -894,6 +1318,118 @@ mod tests {
         sim.run_chunk(reqs[cut..].iter().copied(), None);
         sim.finish();
         assert!(sim.metrics == reference.metrics);
+    }
+
+    #[test]
+    fn empty_fault_plan_gate_is_bit_identical() {
+        // The engine's fault paths are gated on `FaultPlan::is_empty`,
+        // not on byte-equality with the default: a plan whose retry
+        // knobs differ but that schedules nothing must leave every
+        // accumulator cell bit-identical to the default run.
+        let reference = run_quick(Strategy::LtUa);
+        let mut cfg = quick_config(Strategy::LtUa, 0.1, 0.005);
+        cfg.scaling.max_instances = 10;
+        cfg.faults.retry.max_attempts = 2;
+        assert!(cfg.faults.is_empty());
+        let sim = run_simulation(cfg);
+        assert!(sim.metrics == reference.metrics);
+    }
+
+    #[test]
+    fn killed_request_keeps_original_arrival_and_backs_off() {
+        let mut sim = Simulation::new(quick_config(Strategy::Reactive, 0.01, 0.001));
+        let req = Request {
+            id: 99,
+            arrival: 5.0,
+            model: ModelKind::Llama2_70B,
+            origin: Region::EastUs,
+            tier: Tier::IwF,
+            app: crate::trace::types::AppKind::Chat,
+            input_tokens: 100,
+            output_tokens: 10,
+        };
+        sim.now = 100.0;
+        sim.on_request_killed(req);
+        // Parked with its ORIGINAL arrival time (SLA clock keeps running).
+        assert_eq!(sim.pending_retries[&99].arrival, 5.0);
+        assert_eq!(sim.retry_attempt[&99], 1);
+        // First backoff: base (1 s) after the kill instant.
+        let due = loop {
+            let (t, ev) = sim.events.pop().unwrap();
+            if let Event::RetryDue { id } = ev {
+                assert_eq!(id, 99);
+                break t;
+            }
+        };
+        assert_eq!(due, 100.0 + sim.cfg.faults.retry.backoff(1));
+        // Second kill doubles the backoff; past max_attempts it is lost.
+        sim.now = 101.0;
+        let r = sim.pending_retries.remove(&99).unwrap();
+        sim.on_request_killed(r);
+        assert_eq!(sim.retry_attempt[&99], 2);
+        for _ in 0..10 {
+            if let Some(r) = sim.pending_retries.remove(&99) {
+                sim.on_request_killed(r);
+            }
+        }
+        assert_eq!(sim.metrics.failures.lost_total(), 1, "exhausted retries must be lost");
+        assert!(!sim.retry_attempt.contains_key(&99), "loss drops the bookkeeping");
+        assert_eq!(sim.pending_retries.len(), 0);
+    }
+
+    #[test]
+    fn fault_run_conserves_every_request_and_recovers() {
+        let mut cfg = quick_config(Strategy::Reactive, 0.1, 0.005);
+        cfg.scaling.max_instances = 10;
+        // Region outage mid-trace, a spot shock after it, and a steady
+        // crash hazard — every fault class at once.
+        cfg.faults = FaultPlan::region_dark(Region::EastUs, 2000.0, 5000.0);
+        cfg.faults.spot_shocks.push(crate::sim::faults::SpotShock { at: 6000.0, frac: 0.5 });
+        cfg.faults.crash_rate_per_day = 2.0;
+        let sim = run_simulation(cfg);
+
+        let gen = TraceGenerator::new(sim.cfg.trace.clone());
+        let total = gen.stream().count() as u64;
+        let f = &sim.metrics.failures;
+        assert!(f.killed_total() > 0, "the outage must kill in-flight work");
+        assert_eq!(
+            sim.metrics.completed + sim.metrics.dropped + f.lost_total() + f.shed_total(),
+            total,
+            "every request must complete, drop, be lost, or be shed — exactly once"
+        );
+        assert_eq!(f.shed_interactive_total(), 0, "only NIW work may ever be shed");
+        // The outage incident is recorded with its window end, and the
+        // region recovered to its pre-outage capacity after the window.
+        let outage = f
+            .incidents
+            .iter()
+            .find(|i| i.kind == "region-outage")
+            .expect("outage incident recorded");
+        assert_eq!(outage.region, Region::EastUs);
+        assert_eq!(outage.start, 2000.0);
+        assert_eq!(outage.fault_end, Some(5000.0));
+        let ttr = outage.time_to_recover().expect("capacity must recover");
+        assert!(ttr >= 3000.0, "cannot recover before the window lifts: {ttr}");
+        assert!(sim.cluster.region_available(Region::EastUs));
+        assert!(sim.cluster.aggregates_consistent());
+        // Retry amplification is measurable and sane.
+        let amp = f.retry_amplification(sim.metrics.completed);
+        assert!(amp >= 1.0 && amp < 2.0, "retry amplification {amp}");
+    }
+
+    #[test]
+    fn fault_runs_are_deterministic() {
+        let mk = || {
+            let mut cfg = quick_config(Strategy::LtUa, 0.1, 0.005);
+            cfg.scaling.max_instances = 10;
+            cfg.faults = FaultPlan::region_dark(Region::CentralUs, 2000.0, 4000.0);
+            cfg.faults.crash_rate_per_day = 2.0;
+            cfg
+        };
+        let a = run_simulation(mk());
+        let b = run_simulation(mk());
+        assert!(a.metrics == b.metrics, "fault injection must replay identically");
+        assert!(a.metrics.failures.killed_total() > 0);
     }
 
     #[test]

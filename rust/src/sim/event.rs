@@ -26,6 +26,51 @@ pub enum Event {
     ScaleTick,
     /// Queue-manager aging scan (§6.2).
     QmTick,
+    /// Fault plane: outage window `idx` of the
+    /// [`FaultPlan`](crate::sim::faults::FaultPlan) opens — the region
+    /// goes dark, its VMs are lost, in-flight work enters the retry path.
+    FaultOutageStart {
+        /// Index into `FaultPlan::outages`.
+        idx: usize,
+    },
+    /// Fault plane: outage window `idx` closes — the availability mask
+    /// lifts and replacement capacity is re-seeded.
+    FaultOutageEnd {
+        /// Index into `FaultPlan::outages`.
+        idx: usize,
+    },
+    /// Fault plane: latency degradation window `idx` opens.
+    FaultDegradeStart {
+        /// Index into `FaultPlan::degradations`.
+        idx: usize,
+    },
+    /// Fault plane: latency degradation window `idx` closes.
+    FaultDegradeEnd {
+        /// Index into `FaultPlan::degradations`.
+        idx: usize,
+    },
+    /// Fault plane: spot-market preemption shock `idx` fires — the
+    /// market reclaims part of every region's donated pool.
+    FaultSpotShock {
+        /// Index into `FaultPlan::spot_shocks`.
+        idx: usize,
+    },
+    /// Fault plane: counter-seeded VM-crash hazard draw number `k`
+    /// (the tick index seeds the RNG, so no generator state is carried
+    /// across chunk handoffs).
+    FaultCrashTick {
+        /// 1-based tick index; tick `k` fires at `k × crash_check_secs`.
+        k: u64,
+    },
+    /// A killed request's capped-exponential backoff expired: re-route
+    /// it through failover routing.  Carries only the request id — the
+    /// request itself (with its *original* arrival time, for SLA
+    /// accounting) waits in the engine's pending-retry map, keeping
+    /// this enum `Eq`-safe.
+    RetryDue {
+        /// Request id keying the engine's pending-retry map.
+        id: u64,
+    },
 }
 
 #[derive(Debug)]

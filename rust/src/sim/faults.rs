@@ -1,0 +1,397 @@
+//! Deterministic fault plane: declarative, counter-seeded fault
+//! schedules the engine injects alongside arrivals (ROADMAP item 3's
+//! region-dark and spot-shock scenarios).
+//!
+//! A [`FaultPlan`] is a *pure description* — region outage windows,
+//! a per-instance VM-crash hazard, spot-market preemption shocks that
+//! reclaim donated capacity, and cross-region latency degradation
+//! windows — compiled by [`FaultPlan::compile`] into fault
+//! [`Event`](crate::sim::event::Event) variants at simulation start.
+//! The engine processes them like any other event: an outage kills the
+//! region's instances and re-enters their in-flight requests through
+//! the retry path ([`RetryPolicy`]); a crash tick draws victims from a
+//! counter-seeded RNG; a spot shock removes donated VMs from the
+//! market pool.
+//!
+//! ## Determinism contract
+//!
+//! * **Empty plan ⇒ zero cost.** [`FaultPlan::compile`] pushes *no*
+//!   events for an empty plan, so the event heap's sequence counter —
+//!   and therefore every pop order, RNG draw and metric — is untouched:
+//!   runs without faults are bit-identical to a build without the fault
+//!   plane at all.
+//! * **Counter-seeded hazard.** Crash draws use
+//!   [`Rng::seed_from_parts`]`(seed, tick, FAULT_STREAM)` — a fresh
+//!   stream per crash tick, exactly like the trace generator's
+//!   per-minute streams — so no RNG *state* exists to carry across
+//!   chunk boundaries and chunked execution stays bit-identical to
+//!   sequential with faults active (`tests/chunked_equivalence.rs`).
+//! * **Handoff.** The mutable fault-plane runtime state (availability
+//!   mask, pending retries, recovery watches) lives in
+//!   [`Cluster`](crate::sim::cluster::Cluster) and
+//!   [`SimHandoff`](crate::sim::engine::SimHandoff); the plan itself is
+//!   immutable config.
+
+use crate::config::{Region, Time, DAY, HOUR, MINUTE};
+use crate::sim::event::{Event, EventQueue};
+use crate::util::rng::Rng;
+
+/// Stream constant for the fault plane's counter-seeded RNG (disjoint
+/// from every trace-generator stream, which are small indices).
+pub const FAULT_STREAM: u64 = 0xFA17_0175;
+
+/// One region-outage window: at `start` every VM in `region` is lost
+/// (in-flight work killed into the retry path, the donated spot pool
+/// reclaimed, the region masked out of routing); at `end` the mask
+/// lifts and the engine re-seeds the region's endpoints with
+/// minimum-floor replacement VMs at realistic provisioning lead time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionOutage {
+    /// The region that goes dark.
+    pub region: Region,
+    /// Outage start (simulated seconds).
+    pub start: Time,
+    /// Outage end — when routing may use the region again.
+    pub end: Time,
+}
+
+/// One spot-market preemption shock: at `at`, the external market
+/// reclaims `frac` of every region's donated spot pool (the VMs are
+/// gone — they do not return when the shock passes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpotShock {
+    /// Shock instant (simulated seconds).
+    pub at: Time,
+    /// Fraction of each region's donated pool reclaimed, in [0, 1].
+    pub frac: f64,
+}
+
+/// One cross-region latency degradation window: requests served in
+/// `region` pay `extra` seconds on top of normal routing latency, and
+/// the *retry* path avoids the region while the window is open (normal
+/// traffic still uses it — degraded beats dead).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyDegradation {
+    /// The degraded region.
+    pub region: Region,
+    /// Window start (simulated seconds).
+    pub start: Time,
+    /// Window end.
+    pub end: Time,
+    /// Extra latency charged per request served in the region (secs).
+    pub extra: Time,
+}
+
+/// Capped-exponential-backoff retry policy for requests killed by
+/// instance loss.  Attempt `n` (1-based) waits
+/// `min(base_backoff · 2^(n−1), max_backoff)` before re-routing; after
+/// `max_attempts` failures the request is permanently lost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryPolicy {
+    /// First-attempt backoff (secs).
+    pub base_backoff: Time,
+    /// Backoff ceiling (secs) — the "capped" in capped exponential.
+    pub max_backoff: Time,
+    /// Kill count after which a request is declared lost.
+    pub max_attempts: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { base_backoff: 1.0, max_backoff: MINUTE, max_attempts: 5 }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff delay before retry attempt `attempt` (1-based), capped
+    /// at [`RetryPolicy::max_backoff`].
+    pub fn backoff(&self, attempt: u32) -> Time {
+        let exp = attempt.saturating_sub(1).min(52);
+        (self.base_backoff * (1u64 << exp) as f64).min(self.max_backoff)
+    }
+}
+
+/// A declarative fault schedule.  `FaultPlan::default()` is empty —
+/// the zero-cost no-fault configuration every existing experiment runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Region outage windows.
+    pub outages: Vec<RegionOutage>,
+    /// Latency degradation windows.
+    pub degradations: Vec<LatencyDegradation>,
+    /// Spot-market preemption shocks.
+    pub spot_shocks: Vec<SpotShock>,
+    /// Expected VM crashes per instance-day (0 = no crash hazard).
+    /// Sampled per live instance on a counter-seeded tick cadence.
+    pub crash_rate_per_day: f64,
+    /// Crash-hazard sampling interval (secs).
+    pub crash_check_secs: Time,
+    /// Retry policy applied to every killed request.
+    pub retry: RetryPolicy,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            outages: Vec::new(),
+            degradations: Vec::new(),
+            spot_shocks: Vec::new(),
+            crash_rate_per_day: 0.0,
+            crash_check_secs: MINUTE,
+            retry: RetryPolicy::default(),
+        }
+    }
+}
+
+impl FaultPlan {
+    /// True when the plan injects nothing — the default, and the gate
+    /// for every fault-plane code path in the engine.
+    pub fn is_empty(&self) -> bool {
+        self.outages.is_empty()
+            && self.degradations.is_empty()
+            && self.spot_shocks.is_empty()
+            && self.crash_rate_per_day <= 0.0
+    }
+
+    /// Compile the plan into events.  Pushes **nothing** for an empty
+    /// plan, so the event heap's sequence counter is untouched and
+    /// no-fault runs stay bit-identical to a fault-plane-free build.
+    /// Windows starting at or past `horizon` (trace end) are skipped;
+    /// an end event is always paired with its start.
+    pub fn compile(&self, events: &mut EventQueue, horizon: Time) {
+        for (idx, o) in self.outages.iter().enumerate() {
+            debug_assert!(o.end > o.start, "outage window must be positive");
+            if o.start < horizon {
+                events.push(o.start, Event::FaultOutageStart { idx });
+                events.push(o.end, Event::FaultOutageEnd { idx });
+            }
+        }
+        for (idx, d) in self.degradations.iter().enumerate() {
+            debug_assert!(d.end > d.start, "degradation window must be positive");
+            if d.start < horizon {
+                events.push(d.start, Event::FaultDegradeStart { idx });
+                events.push(d.end, Event::FaultDegradeEnd { idx });
+            }
+        }
+        for (idx, s) in self.spot_shocks.iter().enumerate() {
+            if s.at < horizon {
+                events.push(s.at, Event::FaultSpotShock { idx });
+            }
+        }
+        if self.crash_rate_per_day > 0.0 {
+            debug_assert!(self.crash_check_secs > 0.0);
+            events.push(self.crash_check_secs, Event::FaultCrashTick { k: 1 });
+        }
+    }
+
+    /// The counter-seeded RNG for crash tick `k`: a pure function of
+    /// `(seed, k)`, so chunked and sequential execution draw identical
+    /// hazards with no RNG state in the handoff.
+    pub fn crash_rng(seed: u64, k: u64) -> Rng {
+        Rng::seed_from_parts(seed, k, FAULT_STREAM)
+    }
+
+    /// Per-instance crash probability per [`FaultPlan::crash_check_secs`] tick.
+    pub fn crash_prob_per_tick(&self) -> f64 {
+        (self.crash_rate_per_day * self.crash_check_secs / DAY).clamp(0.0, 1.0)
+    }
+
+    /// Preset: one region dark over `[start, end)`.
+    pub fn region_dark(region: Region, start: Time, end: Time) -> FaultPlan {
+        FaultPlan {
+            outages: vec![RegionOutage { region, start, end }],
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Preset: one market-wide spot preemption shock.
+    pub fn spot_shock(at: Time, frac: f64) -> FaultPlan {
+        FaultPlan { spot_shocks: vec![SpotShock { at, frac }], ..FaultPlan::default() }
+    }
+
+    /// Parse a CLI fault spec: `;`-separated clauses of
+    ///
+    /// * `region-dark=<region>@<start>-<end>` — outage window;
+    /// * `degrade=<region>@<start>-<end>:<extra>` — latency window;
+    /// * `spot-shock=<frac>@<t>` — market preemption shock;
+    /// * `crash=<rate-per-instance-day>` — crash hazard;
+    /// * `retry=<base>/<max>/<attempts>` — retry policy override.
+    ///
+    /// Times accept `s`/`m`/`h`/`d` suffixes (`48h`, `2d`, `90m`,
+    /// `30s`, bare seconds).  Example:
+    /// `region-dark=centralus@48h-60h;crash=0.05`.
+    pub fn parse(s: &str) -> Option<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for clause in s.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            let (key, val) = clause.split_once('=')?;
+            match key.trim() {
+                "region-dark" | "outage" => {
+                    let (region, rest) = val.split_once('@')?;
+                    let (start, end) = parse_window(rest)?;
+                    plan.outages.push(RegionOutage {
+                        region: parse_region(region.trim())?,
+                        start,
+                        end,
+                    });
+                }
+                "degrade" => {
+                    let (region, rest) = val.split_once('@')?;
+                    let (window, extra) = rest.rsplit_once(':')?;
+                    let (start, end) = parse_window(window)?;
+                    plan.degradations.push(LatencyDegradation {
+                        region: parse_region(region.trim())?,
+                        start,
+                        end,
+                        extra: parse_time(extra.trim())?,
+                    });
+                }
+                "spot-shock" => {
+                    let (frac, at) = val.split_once('@')?;
+                    let frac: f64 = frac.trim().parse().ok()?;
+                    if !(0.0..=1.0).contains(&frac) {
+                        return None;
+                    }
+                    plan.spot_shocks.push(SpotShock { at: parse_time(at.trim())?, frac });
+                }
+                "crash" => {
+                    let rate: f64 = val.trim().parse().ok()?;
+                    if !rate.is_finite() || rate < 0.0 {
+                        return None;
+                    }
+                    plan.crash_rate_per_day = rate;
+                }
+                "retry" => {
+                    let mut parts = val.split('/');
+                    let base = parse_time(parts.next()?.trim())?;
+                    let max = parse_time(parts.next()?.trim())?;
+                    let attempts: u32 = parts.next()?.trim().parse().ok()?;
+                    if parts.next().is_some() {
+                        return None;
+                    }
+                    plan.retry = RetryPolicy {
+                        base_backoff: base,
+                        max_backoff: max,
+                        max_attempts: attempts,
+                    };
+                }
+                _ => return None,
+            }
+        }
+        Some(plan)
+    }
+}
+
+/// Parse `<start>-<end>` with time-suffix bounds.
+fn parse_window(s: &str) -> Option<(Time, Time)> {
+    let (a, b) = s.split_once('-')?;
+    let (start, end) = (parse_time(a.trim())?, parse_time(b.trim())?);
+    if end > start {
+        Some((start, end))
+    } else {
+        None
+    }
+}
+
+/// Parse a duration with an optional `s`/`m`/`h`/`d` suffix.
+fn parse_time(s: &str) -> Option<Time> {
+    let (num, mult) = match s.as_bytes().last()? {
+        b'd' => (&s[..s.len() - 1], DAY),
+        b'h' => (&s[..s.len() - 1], HOUR),
+        b'm' => (&s[..s.len() - 1], MINUTE),
+        b's' => (&s[..s.len() - 1], 1.0),
+        _ => (s, 1.0),
+    };
+    let v: f64 = num.trim().parse().ok()?;
+    if v.is_finite() && v >= 0.0 {
+        Some(v * mult)
+    } else {
+        None
+    }
+}
+
+fn parse_region(s: &str) -> Option<Region> {
+    match s.to_ascii_lowercase().as_str() {
+        "eastus" | "east" => Some(Region::EastUs),
+        "centralus" | "central" => Some(Region::CentralUs),
+        "westus" | "west" => Some(Region::WestUs),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_empty_and_compiles_to_nothing() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_empty());
+        let mut q = EventQueue::new();
+        plan.compile(&mut q, 7.0 * DAY);
+        assert!(q.is_empty(), "empty plan must push zero events");
+    }
+
+    #[test]
+    fn compile_pairs_window_events_and_skips_past_horizon() {
+        let mut plan = FaultPlan::region_dark(Region::CentralUs, 2.0 * DAY, 2.5 * DAY);
+        plan.spot_shocks.push(SpotShock { at: 3.0 * DAY, frac: 0.5 });
+        plan.spot_shocks.push(SpotShock { at: 30.0 * DAY, frac: 0.5 }); // past horizon
+        plan.crash_rate_per_day = 0.1;
+        assert!(!plan.is_empty());
+        let mut q = EventQueue::new();
+        plan.compile(&mut q, 7.0 * DAY);
+        // outage start + end, one in-horizon shock, first crash tick.
+        assert_eq!(q.len(), 4);
+        let (t, e) = q.pop().unwrap();
+        assert_eq!(t, MINUTE);
+        assert_eq!(e, Event::FaultCrashTick { k: 1 });
+    }
+
+    #[test]
+    fn backoff_is_exponential_and_capped() {
+        let pol = RetryPolicy::default();
+        assert_eq!(pol.backoff(1), 1.0);
+        assert_eq!(pol.backoff(2), 2.0);
+        assert_eq!(pol.backoff(3), 4.0);
+        assert_eq!(pol.backoff(7), 60.0, "must cap at max_backoff");
+        assert_eq!(pol.backoff(60), 60.0, "huge attempt counts must not overflow");
+        let tight = RetryPolicy { base_backoff: 0.5, max_backoff: 3.0, max_attempts: 9 };
+        assert_eq!(tight.backoff(1), 0.5);
+        assert_eq!(tight.backoff(4), 3.0);
+    }
+
+    #[test]
+    fn crash_rng_is_a_pure_function_of_seed_and_tick() {
+        let a = FaultPlan::crash_rng(42, 7).next_u64();
+        let b = FaultPlan::crash_rng(42, 7).next_u64();
+        assert_eq!(a, b);
+        assert_ne!(a, FaultPlan::crash_rng(42, 8).next_u64());
+        assert_ne!(a, FaultPlan::crash_rng(43, 7).next_u64());
+    }
+
+    #[test]
+    fn parse_roundtrips_the_clause_grammar() {
+        let plan = FaultPlan::parse(
+            "region-dark=centralus@48h-60h; spot-shock=0.5@72h; crash=0.25; \
+             degrade=westus@1d-2d:0.2s; retry=2s/30s/4",
+        )
+        .expect("valid spec");
+        assert_eq!(plan.outages.len(), 1);
+        assert_eq!(plan.outages[0].region, Region::CentralUs);
+        assert_eq!(plan.outages[0].start, 48.0 * HOUR);
+        assert_eq!(plan.outages[0].end, 60.0 * HOUR);
+        assert_eq!(plan.spot_shocks, vec![SpotShock { at: 72.0 * HOUR, frac: 0.5 }]);
+        assert_eq!(plan.crash_rate_per_day, 0.25);
+        assert_eq!(plan.degradations[0].region, Region::WestUs);
+        assert_eq!(plan.degradations[0].extra, 0.2);
+        assert_eq!(
+            plan.retry,
+            RetryPolicy { base_backoff: 2.0, max_backoff: 30.0, max_attempts: 4 }
+        );
+
+        assert!(FaultPlan::parse("region-dark=nowhere@1h-2h").is_none());
+        assert!(FaultPlan::parse("spot-shock=1.5@1h").is_none(), "frac > 1 rejected");
+        assert!(FaultPlan::parse("region-dark=eastus@2h-1h").is_none(), "inverted window");
+        assert!(FaultPlan::parse("bogus=1").is_none());
+    }
+}

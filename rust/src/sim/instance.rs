@@ -45,6 +45,11 @@ pub enum InstState {
     Draining,
     /// Donated to the spot pool (serving external traffic, reclaimable).
     Spot,
+    /// VM lost to the fault plane (crash, region outage, or spot
+    /// preemption).  Terminal: dead instances keep their arena slot so
+    /// stale `ChunkDone`/`ProvisionDone` events resolve harmlessly, but
+    /// they are out of every roster and never admit or schedule again.
+    Dead,
 }
 
 /// A running sequence.
@@ -97,6 +102,19 @@ pub struct InstanceSim {
     pub chunk_scheduled: bool,
     /// End time of the chunk currently executing.
     pub busy_until: Time,
+}
+
+/// What [`InstanceSim::crash`] swept off a dying VM: sequences whose
+/// completion already happened before the crash instant (their outcomes
+/// are still recordable) and requests killed mid-flight (they re-enter
+/// the coordinator through the retry path).
+#[derive(Debug, Default)]
+pub struct CrashedWork {
+    /// Sequences that finished strictly before the crash (deferred
+    /// outcome recording had not retired them yet).
+    pub finished: Vec<ActiveSeq>,
+    /// In-flight and queued requests killed by the VM loss.
+    pub killed: Vec<Request>,
 }
 
 /// What a scheduled chunk will do — produced by [`InstanceSim::plan_chunk`]
@@ -325,6 +343,33 @@ impl InstanceSim {
         self.chunk_scheduled = true;
         Some(plan)
     }
+
+    /// The fault plane kills this VM at `now`: the batch and waiting
+    /// queue are swept into a [`CrashedWork`] report, every cached
+    /// counter is zeroed (this runs inside
+    /// [`Cluster::mutate`](crate::sim::cluster::Cluster::mutate), so the
+    /// endpoint aggregates stay coherent), and the instance goes
+    /// terminally [`InstState::Dead`].
+    ///
+    /// Sequences whose planned completion time is at or before `now`
+    /// genuinely finished before the VM died — they are returned as
+    /// `finished` so the engine can still record their outcomes;
+    /// everything else is `killed` and re-enters via the retry path.
+    pub fn crash(&mut self, now: Time) -> CrashedWork {
+        let mut work = CrashedWork { killed: self.take_waiting(), ..CrashedWork::default() };
+        for seq in self.batch.drain(..) {
+            match seq.completed_at {
+                Some(t) if t <= now => work.finished.push(seq),
+                _ => work.killed.push(seq.req),
+            }
+        }
+        self.kv_used = 0;
+        self.running_tokens = 0;
+        self.chunk_scheduled = false;
+        self.busy_until = now;
+        self.state = InstState::Dead;
+        work
+    }
 }
 
 #[cfg(test)]
@@ -514,6 +559,30 @@ mod tests {
         let admitted = i.admit(0.0, u64::MAX, MAX_BATCH);
         assert_eq!(admitted.len(), 1);
         assert!(i.kv_used <= i.kv_capacity);
+    }
+
+    #[test]
+    fn crash_splits_finished_from_killed_and_zeroes_state() {
+        let mut i = inst();
+        i.push_waiting(req(1, 100, 6)); // finishes inside the first chunk
+        i.push_waiting(req(2, 1000, 200)); // spans many chunks
+        let adm = i.admit(0.0, u64::MAX, MAX_BATCH);
+        let plan = i.plan_chunk(0.0, adm, &perf()).unwrap();
+        assert_eq!(plan.completions.len(), 1);
+        i.push_waiting(req(3, 50, 50)); // arrives mid-chunk, still queued
+        // Crash after the short request finished but before the chunk ends.
+        let work = i.crash(plan.completions[0].1 + 1e-6);
+        assert_eq!(work.finished.len(), 1);
+        assert_eq!(work.finished[0].req.id, 1);
+        let mut killed: Vec<u64> = work.killed.iter().map(|r| r.id).collect();
+        killed.sort_unstable();
+        assert_eq!(killed, vec![2, 3]);
+        assert_eq!(i.state, InstState::Dead);
+        assert!(i.batch.is_empty() && i.waiting.is_empty());
+        assert_eq!(i.kv_used, 0);
+        assert_eq!(i.pending_tokens(), 0);
+        assert!(!i.chunk_scheduled);
+        assert_eq!(i.recount_tokens(), (0, 0));
     }
 
     #[test]

@@ -11,15 +11,20 @@
 //! * [`chunked`] — epoch-sliced chunked execution of a single run:
 //!   pipelined generation, explicit state handoff at every boundary,
 //!   bit-identical to the sequential engine.
+//! * [`faults`] — the deterministic fault plane: declarative,
+//!   counter-seeded schedules of region outages, VM crashes, spot
+//!   preemption shocks and latency degradation.
 
 pub mod chunked;
 pub mod cluster;
 pub mod engine;
 pub mod event;
+pub mod faults;
 pub mod instance;
 
 pub use chunked::{run_chunked, run_simulation_chunked, ChunkedOptions};
 pub use cluster::{Cluster, InstanceId, PoolTag};
 pub use engine::{SimConfig, SimHandoff, Simulation, Strategy};
 pub use event::{Event, EventQueue};
+pub use faults::{FaultPlan, RetryPolicy};
 pub use instance::{InstState, InstanceSim};

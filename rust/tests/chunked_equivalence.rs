@@ -5,9 +5,10 @@
 //! full streaming-state equality: every accumulator cell, histogram
 //! bucket and ledger point.
 
-use sageserve::config::FleetSpec;
+use sageserve::config::{FleetSpec, Region};
 use sageserve::sim::chunked::{run_simulation_chunked, ChunkedOptions};
 use sageserve::sim::engine::{quick_config, run_simulation, SimConfig, Strategy};
+use sageserve::sim::faults::{FaultPlan, SpotShock};
 use sageserve::trace::generator::TraceGenerator;
 
 /// Multi-day config so chunk boundaries cross diurnal peaks, control
@@ -88,6 +89,46 @@ fn chunked_shared_buffer_source_matches_generator_pipeline() {
     cfg.shared_trace = Some(TraceGenerator::new(cfg.trace.clone()).materialize_shared());
     let sliced = run_simulation_chunked(cfg, &ChunkedOptions { chunk_epochs: 3, workers: 2 });
     assert!(piped.metrics == sliced.metrics);
+}
+
+#[test]
+fn chunked_bit_identical_with_active_fault_schedule() {
+    // Fault plane × chunked execution: kills, retry backoff events, shed
+    // NIW, recovery provisioning and the counter-seeded crash-tick RNG
+    // must all ride the `SimHandoff`.  The schedule stacks a region
+    // outage mid-trace, a market-wide spot shock at day 1 and a
+    // continuous VM-crash hazard; Reactive exercises the queue-manager
+    // shed path, LT-UA the forecast epochs re-provisioning around the
+    // dark region.
+    let plan = || {
+        let mut p =
+            FaultPlan::region_dark(Region::EastUs, 0.5 * 86_400.0, 0.7 * 86_400.0);
+        p.spot_shocks.push(SpotShock { at: 86_400.0, frac: 0.5 });
+        p.crash_rate_per_day = 1.0;
+        p
+    };
+    for strategy in [Strategy::Reactive, Strategy::LtUa] {
+        let mk = || {
+            let mut cfg = multi_day_config(strategy, None);
+            cfg.faults = plan();
+            cfg
+        };
+        let seq = run_simulation(mk());
+        assert!(
+            seq.metrics.failures.killed_total() > 0,
+            "{}: the fault schedule never fired — the test is vacuous",
+            strategy.name()
+        );
+        for (chunk_epochs, workers) in [(1usize, 1usize), (1, 8), (24, 1), (24, 8)] {
+            let ch = run_simulation_chunked(mk(), &ChunkedOptions { chunk_epochs, workers });
+            assert!(
+                seq.metrics == ch.metrics,
+                "{} / {chunk_epochs} epoch(s) × {workers} worker(s): chunked \
+                 diverged from sequential with faults active",
+                strategy.name()
+            );
+        }
+    }
 }
 
 #[test]
