@@ -8,15 +8,16 @@
 
 CARGO_DIR := rust
 
-.PHONY: check verify build test bench bench-quick smoke-faults timing docs clean
+.PHONY: check verify build test bench bench-quick smoke-faults smoke-ilp timing docs clean
 
 check: build test bench-quick
 
 # The verify flow: tier-1 build + tests plus the bench smoke that
 # refreshes BENCH_sim.json (see PERF.md "Verify flow"), the fault-plane
-# smoke (quick-mode `exp faults`), plus the rustdoc gate (every
-# public-surface doc link and `missing_docs` audit must hold).
-verify: check smoke-faults docs
+# and ILP-solver smokes (quick-mode `exp faults` / `exp ilp`), plus the
+# rustdoc gate (every public-surface doc link and `missing_docs` audit
+# must hold).
+verify: check smoke-faults smoke-ilp docs
 
 # Fault-plane smoke: the quick-mode fault ablation — 1-day trace, capped
 # scale — drives the kill/retry/failover/re-provision path end-to-end
@@ -26,11 +27,18 @@ verify: check smoke-faults docs
 smoke-faults:
 	cd $(CARGO_DIR) && SAGESERVE_EXP_QUICK=1 cargo run --release -- exp faults --out ../results-smoke
 
+# ILP-solver smoke: the quick-mode §5 runtime table — the two smallest
+# sizes through the bounded B&B (cold + warm re-solve) and the dense
+# oracle, writing ilp_solver_runtime.csv under results-smoke/.
+smoke-ilp:
+	cd $(CARGO_DIR) && SAGESERVE_EXP_QUICK=1 cargo run --release -- exp ilp --out ../results-smoke
+
 # Rustdoc gate: broken intra-doc links, bad HTML in docs and missing
-# docs on the audited modules (config, perf, coordinator::router,
-# coordinator::queue_manager, coordinator::autoscaler, metrics,
-# sim::cluster, sim::engine, sim::chunked, sim::event, sim::instance,
-# sim::faults — see lib.rs) all fail the build.
+# docs on the audited modules (config, perf, opt, coordinator::router,
+# coordinator::queue_manager, coordinator::autoscaler,
+# coordinator::controller, metrics, sim::cluster, sim::engine,
+# sim::chunked, sim::event, sim::instance, sim::faults — see lib.rs)
+# all fail the build.
 docs:
 	cd $(CARGO_DIR) && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
@@ -41,15 +49,18 @@ test:
 	cd $(CARGO_DIR) && cargo test -q
 
 # Full-length benches (several minutes): end-to-end simulator throughput
-# + the routing/aggregate hot path.  Writes ../BENCH_sim.json.
+# + the routing/aggregate hot path + the §5 capacity solver (cold vs
+# warm re-solve).  Writes ../BENCH_sim.json.
 bench:
 	cd $(CARGO_DIR) && SAGESERVE_BENCH_OUT=../BENCH_sim.json cargo bench --bench simulator
 	cd $(CARGO_DIR) && cargo bench --bench router_hotpath
+	cd $(CARGO_DIR) && cargo bench --bench ilp_solver
 
 # Smoke mode: same benches, capped iterations — still emits BENCH_sim.json.
 bench-quick:
 	cd $(CARGO_DIR) && SAGESERVE_BENCH_QUICK=1 SAGESERVE_BENCH_OUT=../BENCH_sim.json cargo bench --bench simulator
 	cd $(CARGO_DIR) && SAGESERVE_BENCH_QUICK=1 cargo bench --bench router_hotpath
+	cd $(CARGO_DIR) && SAGESERVE_BENCH_QUICK=1 cargo bench --bench ilp_solver
 
 # Paper-scale wall-clock AND peak-RSS per experiment (PERF.md records
 # the numbers).  Each id runs once at --scale 1.0 under

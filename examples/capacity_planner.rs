@@ -10,7 +10,7 @@
 use std::collections::BTreeMap;
 
 use sageserve::config::{GpuKind, ModelKind, Region, ScalingParams, Tier, HOUR};
-use sageserve::coordinator::controller::{run_epoch, Telemetry};
+use sageserve::coordinator::controller::{run_epoch, SolverStates, Telemetry};
 use sageserve::forecast::{Forecaster, NativeArForecaster, PjrtForecaster};
 use sageserve::perf::PerfTable;
 use sageserve::trace::generator::{TraceConfig, TraceGenerator};
@@ -64,8 +64,11 @@ fn main() -> anyhow::Result<()> {
              params.epsilon, params.niw_buffer_frac * 100.0);
     println!("{:<14} {:<10} {:>8} {:>8} {:>8} {:>14}",
              "model", "region", "current", "δ H100", "δ A100", "forecast TPS");
+    let mut solvers = SolverStates::new();
     let t0 = std::time::Instant::now();
-    let plan = run_epoch(&telemetry, forecaster.as_mut(), &perf, &gpus, &params, &counts, 0.0);
+    let plan = run_epoch(
+        &telemetry, forecaster.as_mut(), &perf, &gpus, &params, &counts, &mut solvers, 0.0,
+    );
     let solve = t0.elapsed().as_secs_f64();
     for entry in &plan {
         println!(

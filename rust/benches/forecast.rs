@@ -7,7 +7,7 @@
 use std::collections::BTreeMap;
 
 use sageserve::config::{GpuKind, ModelKind, Region, ScalingParams, Tier};
-use sageserve::coordinator::controller::{run_epoch, Telemetry};
+use sageserve::coordinator::controller::{run_epoch, SolverStates, Telemetry};
 use sageserve::forecast::{Forecaster, NativeArForecaster, PjrtForecaster};
 use sageserve::perf::PerfTable;
 use sageserve::trace::generator::{TraceConfig, TraceGenerator};
@@ -63,9 +63,26 @@ fn main() {
     // Dense per-SKU counts: one row per telemetry key, GpuKind::index order.
     let n_keys = models.len() * Region::ALL.len();
     let counts = vec![[6usize, 0, 0]; n_keys];
+    // Cold epoch: fresh solver state every iteration (first epoch after
+    // a controller restart).
+    let mut fc_cold = NativeArForecaster::new(96, 8, 4);
+    bench("full control epoch, cold solves (forecast + 4 ILPs)", quick_iters(500, 5), || {
+        run_epoch(
+            &telemetry, &mut fc_cold, &perf, &[GpuKind::H100x8], &params, &counts,
+            &mut SolverStates::new(), 0.0,
+        )
+        .len()
+    });
+
+    // Steady state: the solver states persist across iterations, so every
+    // epoch after the first dual-re-solves from the previous basis.
     let mut fc = NativeArForecaster::new(96, 8, 4);
-    bench("full control epoch (forecast + 4 ILPs)", quick_iters(500, 5), || {
-        run_epoch(&telemetry, &mut fc, &perf, &[GpuKind::H100x8], &params, &counts, 0.0).len()
+    let mut solvers = SolverStates::new();
+    bench("full control epoch, warm solves (forecast + 4 ILPs)", quick_iters(500, 5), || {
+        run_epoch(
+            &telemetry, &mut fc, &perf, &[GpuKind::H100x8], &params, &counts, &mut solvers, 0.0,
+        )
+        .len()
     });
 
     // The 2-SKU epoch: per-model ILPs now carry a [region][gpu] grid.
@@ -73,8 +90,12 @@ fn main() {
     let perf2 = PerfTable::for_fleet(&fleet, &models);
     let counts2 = vec![[3usize, 3, 0]; n_keys];
     let mut fc2 = NativeArForecaster::new(96, 8, 4);
+    let mut solvers2 = SolverStates::new();
     bench("full control epoch, 2-SKU fleet (forecast + 4 ILPs)", quick_iters(500, 5), || {
-        run_epoch(&telemetry, &mut fc2, &perf2, &fleet, &params, &counts2, 0.0).len()
+        run_epoch(
+            &telemetry, &mut fc2, &perf2, &fleet, &params, &counts2, &mut solvers2, 0.0,
+        )
+        .len()
     });
 
     // The 3-SKU epoch (H100 + A100 + MI300): each per-model ILP carries
@@ -84,8 +105,12 @@ fn main() {
     let perf3 = PerfTable::for_fleet(&fleet3, &models);
     let counts3 = vec![[2usize, 2, 2]; n_keys];
     let mut fc3 = NativeArForecaster::new(96, 8, 4);
+    let mut solvers3 = SolverStates::new();
     bench("full control epoch, 3-SKU fleet (forecast + 4 ILPs)", quick_iters(500, 5), || {
-        run_epoch(&telemetry, &mut fc3, &perf3, &fleet3, &params, &counts3, 0.0).len()
+        run_epoch(
+            &telemetry, &mut fc3, &perf3, &fleet3, &params, &counts3, &mut solvers3, 0.0,
+        )
+        .len()
     });
     println!("\npaper reference: ~0.7 s forecast + ~1.5 s ILP per hourly epoch");
 }

@@ -1,18 +1,48 @@
 //! Bench: §5 ILP solver runtime (paper: 1.41 s at l=4,r=3,g=1; 33 s at
-//! l=20,r=20,g=5 with a commercial solver).  Our exact B&B with per-model
-//! decomposition should beat both by orders of magnitude.
+//! l=20,r=20,g=5 with a commercial solver).  Two modes per size:
+//!
+//! * `cold` — bounded-variable B&B from an empty `CapacitySolver` (first
+//!   epoch after a controller restart);
+//! * `warm` — the steady state: demand drifted 2%, re-solved through the
+//!   retained state (rhs swap + dual re-solve from the previous basis).
+//!
+//! The warm/cold ratio is the headline of the bounded-solver rewrite —
+//! see `cargo run --release -- exp ilp` for the table with the old dense
+//! path alongside.
 
-use sageserve::opt::capacity::{optimize_capacity, synthetic_inputs};
+use sageserve::opt::capacity::{
+    optimize_capacity_warm, perturb_inputs, synthetic_inputs, CapacitySolver,
+};
 use sageserve::util::bench::{bench, quick_iters};
 
 fn main() {
-    println!("ILP capacity solver (per-model decomposition; exact B&B)\n");
-    for (l, r, g) in [(4usize, 3usize, 1usize), (8, 6, 2), (20, 20, 5)] {
-        bench(&format!("ilp l={l} r={r} g={g} (all {l} models)"), quick_iters(50, 3), || {
+    println!("ILP capacity solver (per-model decomposition; bounded-variable B&B)\n");
+    for (l, r, g) in [(4usize, 3usize, 1usize), (8, 6, 2), (20, 20, 5), (20, 20, 10)] {
+        bench(&format!("ilp_cold l={l} r={r} g={g} (all {l} models)"), quick_iters(50, 3), || {
             let mut total_delta = 0i64;
             for model in 0..l {
                 let inp = synthetic_inputs(r, g, model as u64 * 7919 + 1);
-                if let Some(plan) = optimize_capacity(&inp) {
+                if let Some(plan) = optimize_capacity_warm(&inp, &mut CapacitySolver::new()) {
+                    total_delta += plan.deltas.iter().flatten().sum::<i64>();
+                }
+            }
+            total_delta
+        });
+
+        // Warm steady state: build each model's state once outside the
+        // timed region, then measure the epoch-over-epoch re-solve.
+        let mut solvers: Vec<CapacitySolver> = (0..l).map(|_| CapacitySolver::new()).collect();
+        let epochs: Vec<_> = (0..l)
+            .filter_map(|model| {
+                let inp = synthetic_inputs(r, g, model as u64 * 7919 + 1);
+                let plan = optimize_capacity_warm(&inp, &mut solvers[model])?;
+                Some((model, perturb_inputs(&inp, &plan, 0.02)))
+            })
+            .collect();
+        bench(&format!("ilp_warm l={l} r={r} g={g} (all {l} models)"), quick_iters(50, 3), || {
+            let mut total_delta = 0i64;
+            for (model, next) in &epochs {
+                if let Some(plan) = optimize_capacity_warm(next, &mut solvers[*model]) {
                     total_delta += plan.deltas.iter().flatten().sum::<i64>();
                 }
             }

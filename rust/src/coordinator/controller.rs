@@ -6,22 +6,28 @@
 //! (PJRT-compiled seasonal-AR in production), add the β NIW-headroom
 //! buffer (10% of last hour's NIW load), and solve the §5 capacity ILP
 //! per model.  The resulting δ plans feed the Scaling Logic (§6.4).
-
-// Rustdoc debt: public surface not yet audited for `missing_docs`
-// (PR 4 audited config, perf, coordinator::router and sim::cluster);
-// drop this allow once every pub item here is documented.
-#![allow(missing_docs)]
+//!
+//! The per-model ILPs are independent (no §5 constraint couples models),
+//! so [`run_epoch`] fans them across the scoped worker pool from
+//! [`crate::experiments::sweep`] — results are position-stable and
+//! identical to the sequential path ([`run_epoch_sequential`], which the
+//! equivalence test pins).  Each model's solve reuses its
+//! [`CapacitySolver`] from [`SolverStates`]: demand drift between epochs
+//! only moves the ILP's right-hand side, so epoch N's basis dual-re-solves
+//! epoch N+1 in a handful of pivots instead of a cold two-phase run.
 
 use std::collections::BTreeMap;
 
 use crate::config::{GpuKind, ModelKind, Region, ScalingParams, Time};
+use crate::experiments::sweep::sweep;
 use crate::forecast::Forecaster;
-use crate::opt::capacity::{optimize_capacity, CapacityInputs};
+use crate::opt::capacity::{optimize_capacity_warm, CapacityInputs, CapacitySolver};
 use crate::perf::PerfTable;
 
 /// 15-minute-bucketed input-TPS telemetry per (model, region), split into
 /// IW (the forecast target) and NIW (the buffer input).
 pub struct Telemetry {
+    /// Bucket width in seconds (900 = the paper's 15 minutes).
     pub bucket_secs: Time,
     keys: Vec<(ModelKind, Region)>,
     iw_tokens: BTreeMap<(ModelKind, Region), Vec<f64>>,
@@ -31,6 +37,7 @@ pub struct Telemetry {
 }
 
 impl Telemetry {
+    /// Empty store covering `models` × every [`Region`].
     pub fn new(models: &[ModelKind], bucket_secs: Time) -> Self {
         let mut keys = Vec::new();
         for &m in models {
@@ -114,6 +121,7 @@ impl Telemetry {
         (start..end).map(|i| v.get(i).copied().unwrap_or(0.0)).sum()
     }
 
+    /// The (model, region) keys this store tracks, in row order.
     pub fn keys(&self) -> &[(ModelKind, Region)] {
         &self.keys
     }
@@ -121,9 +129,11 @@ impl Telemetry {
 
 /// One epoch's scaling plan entry: per-SKU instance-count deltas for one
 /// (model, region), aligned with the GPU axis `run_epoch` was given.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct EpochPlanEntry {
+    /// The model this entry scales.
     pub model: ModelKind,
+    /// The region this entry scales.
     pub region: Region,
     /// δ_{j,k} per GPU SKU, fleet order.
     pub deltas: Vec<i64>,
@@ -138,7 +148,41 @@ impl EpochPlanEntry {
     }
 }
 
+/// One control epoch's full scaling plan (every (model, region) pair).
 pub type EpochPlan = Vec<EpochPlanEntry>;
+
+/// Per-model warm-start state carried across control epochs (and across
+/// [`crate::sim::chunked`] chunk boundaries via the engine handoff): each
+/// model keeps its factorized tableau, last basis and last plan, so the
+/// next epoch's ILP re-solves warm.  Dropping the state is always safe —
+/// the next epoch just solves cold.
+#[derive(Debug, Clone, Default)]
+pub struct SolverStates {
+    by_model: BTreeMap<ModelKind, CapacitySolver>,
+}
+
+impl SolverStates {
+    /// Empty state: every model's first solve runs cold.
+    pub fn new() -> SolverStates {
+        SolverStates::default()
+    }
+
+    /// The warm-start state for `model`, created on first use.
+    pub fn for_model(&mut self, model: ModelKind) -> &mut CapacitySolver {
+        self.by_model.entry(model).or_default()
+    }
+}
+
+/// One model's ready-to-solve problem plus the metadata needed to turn
+/// its [`crate::opt::CapacityPlan`] (or fallback) into plan entries.
+struct ModelJob {
+    model: ModelKind,
+    inputs: CapacityInputs,
+    /// (telemetry-key row, region) pairs for this model, ILP row order.
+    region_order: Vec<(usize, Region)>,
+    /// Per-region forecast peak TPS (β buffer included).
+    peaks: Vec<f64>,
+}
 
 /// Run one forecast + ILP epoch (§6.3) over the full `[region][gpu]`
 /// capacity formulation of §5.
@@ -149,6 +193,11 @@ pub type EpochPlan = Vec<EpochPlanEntry>;
 /// buffer straight off the `EndpointMap` aggregates; no per-epoch map
 /// allocation).  θ_{i,k} (per-instance input TPS) comes from the perf
 /// table, α_k/σ_k from the SKU price sheet.  Returns the per-SKU δ plan.
+///
+/// `solvers` carries each model's warm-start state from the previous
+/// epoch; the per-model ILPs run concurrently on the sweep pool
+/// (set `SAGESERVE_SEQUENTIAL=1` to pin them to one thread).
+#[allow(clippy::too_many_arguments)]
 pub fn run_epoch(
     telemetry: &Telemetry,
     forecaster: &mut dyn Forecaster,
@@ -156,7 +205,42 @@ pub fn run_epoch(
     gpus: &[GpuKind],
     params: &ScalingParams,
     current_counts: &[[usize; GpuKind::COUNT]],
+    solvers: &mut SolverStates,
     now: Time,
+) -> EpochPlan {
+    run_epoch_impl(telemetry, forecaster, perf, gpus, params, current_counts, solvers, now, true)
+}
+
+/// [`run_epoch`] with the per-model solves forced onto the caller's
+/// thread, in model order.  The parallel path is asserted identical to
+/// this one (solves share no state, so the fan-out cannot change the
+/// answer); it exists as the reference for that test and for callers
+/// that must not spawn.
+#[allow(clippy::too_many_arguments)]
+pub fn run_epoch_sequential(
+    telemetry: &Telemetry,
+    forecaster: &mut dyn Forecaster,
+    perf: &PerfTable,
+    gpus: &[GpuKind],
+    params: &ScalingParams,
+    current_counts: &[[usize; GpuKind::COUNT]],
+    solvers: &mut SolverStates,
+    now: Time,
+) -> EpochPlan {
+    run_epoch_impl(telemetry, forecaster, perf, gpus, params, current_counts, solvers, now, false)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_epoch_impl(
+    telemetry: &Telemetry,
+    forecaster: &mut dyn Forecaster,
+    perf: &PerfTable,
+    gpus: &[GpuKind],
+    params: &ScalingParams,
+    current_counts: &[[usize; GpuKind::COUNT]],
+    solvers: &mut SolverStates,
+    now: Time,
+    parallel: bool,
 ) -> EpochPlan {
     let keys = telemetry.keys().to_vec();
     assert_eq!(
@@ -169,7 +253,6 @@ pub fn run_epoch(
     let g = gpus.len();
 
     // Group per model (the ILP decouples across models).
-    let mut plan = EpochPlan::new();
     let models: Vec<ModelKind> = {
         let mut ms: Vec<ModelKind> = keys.iter().map(|&(m, _)| m).collect();
         ms.dedup();
@@ -177,49 +260,86 @@ pub fn run_epoch(
         ms.dedup();
         ms
     };
-    for model in models {
-        let mut current = Vec::new();
-        let mut forecast_tps = Vec::new();
-        // (telemetry-key row, region) pairs for this model.
-        let mut region_order: Vec<(usize, Region)> = Vec::new();
-        for (i, &(m, r)) in keys.iter().enumerate() {
-            if m != model {
-                continue;
+    let jobs: Vec<ModelJob> = models
+        .iter()
+        .map(|&model| {
+            let mut current = Vec::new();
+            let mut forecast_tps: Vec<Vec<f64>> = Vec::new();
+            let mut region_order: Vec<(usize, Region)> = Vec::new();
+            for (i, &(m, r)) in keys.iter().enumerate() {
+                if m != model {
+                    continue;
+                }
+                region_order.push((i, r));
+                current.push(
+                    gpus.iter().map(|&k| current_counts[i][k.index()] as f64).collect::<Vec<f64>>(),
+                );
+                // β buffer: 10% of last hour's NIW load as TPS headroom (§6.3).
+                let beta =
+                    params.niw_buffer_frac * telemetry.niw_tokens_last_hour((m, r), now) / 3600.0;
+                forecast_tps.push(forecasts[i].iter().map(|&f| f + beta).collect::<Vec<f64>>());
             }
-            region_order.push((i, r));
-            current.push(
-                gpus.iter().map(|&k| current_counts[i][k.index()] as f64).collect::<Vec<f64>>(),
-            );
-            // β buffer: 10% of last hour's NIW load as TPS headroom (§6.3).
-            let beta = params.niw_buffer_frac * telemetry.niw_tokens_last_hour((m, r), now) / 3600.0;
-            forecast_tps.push(forecasts[i].iter().map(|&f| f + beta).collect::<Vec<f64>>());
-        }
-        let inputs = CapacityInputs {
-            current,
-            tps_per_instance: gpus.iter().map(|&k| perf.profile(model, k).input_tps_capacity()).collect(),
-            forecast_tps: forecast_tps.clone(),
-            vm_cost: gpus.iter().map(|&k| k.dollars_per_hour()).collect(),
-            start_cost: gpus
+            let peaks = forecast_tps
                 .iter()
-                .map(|&k| k.dollars_per_hour() * (params.local_redeploy_secs / 3600.0))
-                .collect(),
-            epsilon: params.epsilon,
-            // The ILP's lower bound applies per x_{j,k}; for a
-            // heterogeneous fleet that would force min_instances of
-            // *every* SKU in every region, so multi-SKU epochs bound at
-            // zero and rely on the executing layer's per-endpoint floor.
-            min_instances: if g == 1 { params.min_instances as f64 } else { 0.0 },
-            max_instances: params.max_instances as f64,
-        };
-        match optimize_capacity(&inputs) {
+                .map(|row| row.iter().copied().fold(0.0, f64::max))
+                .collect();
+            let inputs = CapacityInputs {
+                current,
+                tps_per_instance: gpus
+                    .iter()
+                    .map(|&k| perf.profile(model, k).input_tps_capacity())
+                    .collect(),
+                forecast_tps,
+                vm_cost: gpus.iter().map(|&k| k.dollars_per_hour()).collect(),
+                start_cost: gpus
+                    .iter()
+                    .map(|&k| k.dollars_per_hour() * (params.local_redeploy_secs / 3600.0))
+                    .collect(),
+                epsilon: params.epsilon,
+                // The ILP's lower bound applies per x_{j,k}; for a
+                // heterogeneous fleet that would force min_instances of
+                // *every* SKU in every region, so multi-SKU epochs bound at
+                // zero and rely on the executing layer's per-endpoint floor.
+                min_instances: if g == 1 { params.min_instances as f64 } else { 0.0 },
+                max_instances: params.max_instances as f64,
+            };
+            ModelJob { model, inputs, region_order, peaks }
+        })
+        .collect();
+
+    // Pair each job with its model's persistent solver state.  `models`
+    // is sorted + deduped and the BTreeMap iterates in key order, so the
+    // filtered iteration aligns positionally with `jobs`.
+    for job in &jobs {
+        solvers.by_model.entry(job.model).or_default();
+    }
+    let solver_refs: Vec<&mut CapacitySolver> = solvers
+        .by_model
+        .iter_mut()
+        .filter(|(m, _)| models.binary_search(m).is_ok())
+        .map(|(_, s)| s)
+        .collect();
+    debug_assert_eq!(solver_refs.len(), jobs.len());
+    let work: Vec<(&ModelJob, &mut CapacitySolver)> = jobs.iter().zip(solver_refs).collect();
+    let solve = |(job, solver): (&ModelJob, &mut CapacitySolver)| {
+        optimize_capacity_warm(&job.inputs, solver)
+    };
+    let results = if parallel {
+        sweep(work, solve)
+    } else {
+        work.into_iter().map(solve).collect::<Vec<_>>()
+    };
+
+    let mut plan = EpochPlan::new();
+    for (job, result) in jobs.iter().zip(results) {
+        match result {
             Some(cap_plan) => {
-                for (j, &(_, r)) in region_order.iter().enumerate() {
-                    let peak = forecast_tps[j].iter().copied().fold(0.0, f64::max);
+                for (j, &(_, r)) in job.region_order.iter().enumerate() {
                     plan.push(EpochPlanEntry {
-                        model,
+                        model: job.model,
                         region: r,
                         deltas: cap_plan.deltas[j].clone(),
-                        forecast_tps: peak,
+                        forecast_tps: job.peaks[j],
                     });
                 }
             }
@@ -235,13 +355,17 @@ pub fn run_epoch(
                             .unwrap()
                     })
                     .unwrap_or(0);
-                for (j, &(ki, r)) in region_order.iter().enumerate() {
+                for (j, &(ki, r)) in job.region_order.iter().enumerate() {
                     let cur: i64 =
                         gpus.iter().map(|&k| current_counts[ki][k.index()] as i64).sum();
-                    let peak = forecast_tps[j].iter().copied().fold(0.0, f64::max);
                     let mut deltas = vec![0i64; g];
                     deltas[cheapest] = params.max_instances as i64 - cur;
-                    plan.push(EpochPlanEntry { model, region: r, deltas, forecast_tps: peak });
+                    plan.push(EpochPlanEntry {
+                        model: job.model,
+                        region: r,
+                        deltas,
+                        forecast_tps: job.peaks[j],
+                    });
                 }
             }
         }
@@ -311,8 +435,10 @@ mod tests {
         let mut forecaster = SeasonalNaive::new(96, 4);
         // One dense row per telemetry key (3 regions), GpuKind::index order.
         let counts = vec![[2usize, 0, 0]; Region::ALL.len()];
+        let mut solvers = SolverStates::new();
         let plan = run_epoch(
-            &telemetry, &mut forecaster, &perf, &[GpuKind::H100x8], &params, &counts, 0.0,
+            &telemetry, &mut forecaster, &perf, &[GpuKind::H100x8], &params, &counts,
+            &mut solvers, 0.0,
         );
         assert_eq!(plan.len(), 3);
         // θ ≈ 3.1k ⇒ East local floor ceil(0.6·20000/θ) = 4 (delta ≥ 2
@@ -338,7 +464,8 @@ mod tests {
         let mut forecaster = SeasonalNaive::new(96, 4);
         let counts = vec![[20usize, 0, 0]; Region::ALL.len()];
         let plan = run_epoch(
-            &telemetry, &mut forecaster, &perf, &[GpuKind::H100x8], &params, &counts, 0.0,
+            &telemetry, &mut forecaster, &perf, &[GpuKind::H100x8], &params, &counts,
+            &mut SolverStates::new(), 0.0,
         );
         for entry in &plan {
             assert_eq!(entry.delta_total(), -18, "idle endpoints drop to min_instances");
@@ -365,7 +492,10 @@ mod tests {
         let mut forecaster = SeasonalNaive::new(96, 4);
         // Incumbents are all H100 (row index 0 in GpuKind::index order).
         let counts = vec![[2usize, 0, 0]; Region::ALL.len()];
-        let plan = run_epoch(&telemetry, &mut forecaster, &perf, &gpus, &params, &counts, 0.0);
+        let plan = run_epoch(
+            &telemetry, &mut forecaster, &perf, &gpus, &params, &counts,
+            &mut SolverStates::new(), 0.0,
+        );
         assert_eq!(plan.len(), 3);
         let east = plan.iter().find(|p| p.region == Region::EastUs).unwrap();
         assert_eq!(east.deltas.len(), 2);
@@ -373,5 +503,82 @@ mod tests {
         // H100 incumbents are not grown.
         assert!(east.deltas[1] >= 4, "A100 delta {}", east.deltas[1]);
         assert!(east.deltas[0] <= 0, "H100 delta {}", east.deltas[0]);
+    }
+
+    /// Multi-model telemetry for the fan-out tests: distinct demand per
+    /// model so the per-model ILPs produce distinct plans.
+    fn multi_model_telemetry(models: &[ModelKind]) -> Telemetry {
+        let mut telemetry = Telemetry::new(models, 900.0);
+        let mut warm = BTreeMap::new();
+        for (mi, &m) in models.iter().enumerate() {
+            for (ri, r) in Region::ALL.into_iter().enumerate() {
+                let tps = 2_000.0 * (mi + 1) as f64 + 300.0 * ri as f64;
+                warm.insert((m, r), vec![tps; 192]);
+            }
+        }
+        telemetry.warmup(&warm);
+        telemetry
+    }
+
+    /// The §5 ILPs share no state across models, so fanning them over the
+    /// sweep pool must reproduce the sequential plan bit-for-bit.
+    #[test]
+    fn parallel_epoch_matches_sequential() {
+        let models = [ModelKind::Llama2_70B, ModelKind::Llama31_8B, ModelKind::Llama32_3B];
+        let telemetry = multi_model_telemetry(&models);
+        let perf = PerfTable::new(GpuKind::H100x8, &models);
+        let params = ScalingParams::default();
+        let counts = vec![[3usize, 0, 0]; models.len() * Region::ALL.len()];
+        let mut f_par = SeasonalNaive::new(96, 4);
+        let mut f_seq = SeasonalNaive::new(96, 4);
+        let par = run_epoch(
+            &telemetry, &mut f_par, &perf, &[GpuKind::H100x8], &params, &counts,
+            &mut SolverStates::new(), 0.0,
+        );
+        let seq = run_epoch_sequential(
+            &telemetry, &mut f_seq, &perf, &[GpuKind::H100x8], &params, &counts,
+            &mut SolverStates::new(), 0.0,
+        );
+        assert_eq!(par.len(), models.len() * Region::ALL.len());
+        assert_eq!(par, seq);
+    }
+
+    /// Epoch N+1 with slightly drifted demand reuses epoch N's basis:
+    /// the second run's solves come back warm and its plan matches a
+    /// cold-state run of the same epoch.
+    #[test]
+    fn epoch_warm_state_survives_to_next_epoch() {
+        let models = [ModelKind::Llama2_70B, ModelKind::Llama32_3B];
+        let telemetry = multi_model_telemetry(&models);
+        let perf = PerfTable::new(GpuKind::H100x8, &models);
+        let params = ScalingParams::default();
+        let counts = vec![[3usize, 0, 0]; models.len() * Region::ALL.len()];
+        let mut solvers = SolverStates::new();
+        let mut forecaster = SeasonalNaive::new(96, 4);
+        let first = run_epoch(
+            &telemetry, &mut forecaster, &perf, &[GpuKind::H100x8], &params, &counts,
+            &mut solvers, 0.0,
+        );
+        // Next epoch, 15 minutes on: same matrix (θ, α, σ unchanged), new
+        // rhs — the solver state must be reused, and the answer must match
+        // a from-scratch solve of the same epoch.
+        let mut f2 = SeasonalNaive::new(96, 4);
+        let second = run_epoch(
+            &telemetry, &mut f2, &perf, &[GpuKind::H100x8], &params, &counts,
+            &mut solvers, 900.0,
+        );
+        let mut f3 = SeasonalNaive::new(96, 4);
+        let cold = run_epoch(
+            &telemetry, &mut f3, &perf, &[GpuKind::H100x8], &params, &counts,
+            &mut SolverStates::new(), 900.0,
+        );
+        assert_eq!(second, cold);
+        assert_eq!(first.len(), second.len());
+        for m in models {
+            assert!(
+                solvers.for_model(m).has_state(),
+                "solver state for {m:?} should persist across epochs"
+            );
+        }
     }
 }

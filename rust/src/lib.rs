@@ -25,8 +25,9 @@
 // --no-deps` with `-D warnings`).  The lint is crate-wide; modules whose
 // public surface has not been audited yet carry a file-level
 // `#![allow(missing_docs)]` with a debt note — drop those as they are
-// documented.  config, perf, coordinator::router,
-// coordinator::queue_manager, coordinator::autoscaler, sim::cluster,
+// documented.  config, perf, opt (bounded, ilp, simplex, capacity),
+// coordinator::router, coordinator::queue_manager,
+// coordinator::autoscaler, coordinator::controller, sim::cluster,
 // sim::engine, sim::chunked, sim::event, sim::instance, sim::faults and
 // metrics are fully documented.
 #![warn(missing_docs)]

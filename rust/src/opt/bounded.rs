@@ -1,0 +1,1069 @@
+//! Bounded-variable simplex with warm starts.
+//!
+//! The dense solver in [`crate::opt::simplex`] treats every variable as
+//! `x ≥ 0` and therefore needs an explicit row (plus slack, plus possibly
+//! an artificial) for each `x ≤ max`, `x ≥ min` and `u ≥ x − n` bound in
+//! the capacity formulation — roughly `3·r·g` extra rows at (r regions,
+//! g SKUs).  This module keeps bounds *in the tableau* instead: every
+//! variable carries `[lo, hi]` and a nonbasic variable rests at one of its
+//! finite bounds (a flag, not a row).  The row count for a capacity
+//! instance drops from `~3rg + r + 1` to `r + 1 + rg`, shrinking the
+//! dense tableau by roughly an order of magnitude at r=20, g=10.
+//!
+//! Beyond the smaller tableau, the state object is **warm-startable**:
+//!
+//! * [`SimplexState::set_rhs`] swaps the right-hand side in O(m²) using
+//!   the identity that slack column `r` of the tableau is column `r` of
+//!   the basis inverse — no refactorization, no rebuild.
+//! * [`SimplexState::set_bounds`] tightens or relaxes variable bounds in
+//!   O(n) — branch-and-bound nodes become bound edits, not row appends.
+//! * [`SimplexState::solve_warm`] re-optimizes from the current basis
+//!   with the **dual simplex** (the basis stays dual-feasible under rhs
+//!   and bound changes), falling back to a cold two-phase primal solve
+//!   when the basis is not reusable.
+//!
+//! Termination: the primal uses Bland's rule extended to bounds (entering
+//! = smallest eligible index; ratio ties broken by smallest variable
+//! index, with the entering variable's own bound flip competing under its
+//! own index).  The dual uses a max-violation leaving rule under a hard
+//! iteration cap — on cap the caller falls back to a cold solve, so the
+//! warm path is an optimization, never a correctness risk.  After the
+//! dual reaches primal feasibility a primal cleanup pass runs, so warm
+//! results are optimal to the same tolerance as cold ones.
+
+use crate::opt::simplex::Cmp;
+
+/// Reduced-cost pricing threshold.
+const EPS_D: f64 = 1e-7;
+/// Pivot-element magnitude floor for ratio-test candidacy.
+const EPS_A: f64 = 1e-8;
+/// Primal bound-violation tolerance (dual leaving test, feasibility checks).
+const EPS_X: f64 = 1e-6;
+/// Tie tolerance in ratio tests.
+const EPS_TIE: f64 = 1e-9;
+/// Reduced costs are refreshed from the cost row every this many pivots to
+/// bound drift from the incremental updates.
+const D_REFRESH: u64 = 64;
+
+/// A linear program with per-variable bounds (minimization).
+///
+/// Minimizes `c·x` subject to `rows` and `lo ≤ x ≤ hi`.  Lower bounds must
+/// be finite; upper bounds may be `f64::INFINITY`.  Unlike
+/// [`crate::opt::simplex::LinProg`] there is no implicit `x ≥ 0` — bounds
+/// are explicit and live in the tableau, not in rows.
+#[derive(Debug, Clone)]
+pub struct BoundedLp {
+    /// Number of structural variables.
+    pub n: usize,
+    /// Objective coefficients (length `n`).
+    pub c: Vec<f64>,
+    /// Constraint rows: (coefficients length `n`, cmp, rhs).
+    pub rows: Vec<(Vec<f64>, Cmp, f64)>,
+    /// Per-variable lower bounds (finite, length `n`).
+    pub lo: Vec<f64>,
+    /// Per-variable upper bounds (may be `INFINITY`, length `n`).
+    pub hi: Vec<f64>,
+}
+
+impl BoundedLp {
+    /// Lift a nonnegative-variable [`crate::opt::simplex::LinProg`] into
+    /// the bounded form (`lo = 0`, `hi = ∞`).
+    pub fn from_linprog(lp: &crate::opt::simplex::LinProg) -> BoundedLp {
+        BoundedLp {
+            n: lp.n,
+            c: lp.c.clone(),
+            rows: lp.rows.clone(),
+            lo: vec![0.0; lp.n],
+            hi: vec![f64::INFINITY; lp.n],
+        }
+    }
+}
+
+/// Solver outcome for the bounded simplex.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BoundedOutcome {
+    /// An optimal vertex: structural values and objective `c·x`.
+    Optimal {
+        /// Structural variable values (length `n`), clamped into bounds.
+        x: Vec<f64>,
+        /// Objective value `c·x`.
+        obj: f64,
+    },
+    /// No point satisfies the rows and bounds.
+    Infeasible,
+    /// The objective decreases without bound along a feasible ray.
+    Unbounded,
+}
+
+enum PrimalEnd {
+    Optimal,
+    Unbounded,
+}
+
+enum DualEnd {
+    /// Primal feasibility restored; basis is optimal modulo a primal
+    /// cleanup pass.
+    Feasible,
+    /// A violated row admits no entering column — primal infeasible
+    /// (a Farkas certificate, independent of reduced-cost accuracy).
+    Infeasible,
+    /// The current basis is not dual-feasible; cold solve required.
+    NotDualFeasible,
+    /// Iteration cap hit; cold solve required.
+    IterLimit,
+}
+
+/// Persistent tableau + basis for one bounded LP, reusable across
+/// right-hand-side changes (control epochs) and bound tightenings
+/// (branch-and-bound nodes).
+///
+/// The matrix (rows and costs) is fixed at construction; callers mutate
+/// the rhs via [`set_rhs`](SimplexState::set_rhs) and structural bounds
+/// via [`set_bounds`](SimplexState::set_bounds), then call
+/// [`resolve`](SimplexState::resolve) which tries the warm dual path and
+/// falls back to a cold two-phase primal solve.
+#[derive(Debug, Clone)]
+pub struct SimplexState {
+    // --- immutable problem data (set at construction) ---
+    m: usize,
+    n: usize,
+    /// Sign-normalized structural matrix, m×n row-major (`Ge` rows are
+    /// stored negated so every slack has coefficient +1).
+    a0: Vec<f64>,
+    /// Sign-normalized right-hand side (updated by `set_rhs`).
+    b0: Vec<f64>,
+    /// +1 / −1 applied to each original row at build time.
+    row_sign: Vec<f64>,
+    /// Structural costs.
+    c: Vec<f64>,
+
+    // --- live solver state ---
+    /// Active column count: n structurals + m slacks + live artificials.
+    ncols: usize,
+    /// Artificial columns currently appended (`ncols - n - m`).
+    n_art: usize,
+    /// Row-major tableau, m × width with the rhs at column `n + 2m`.
+    /// Columns `[ncols, n + 2m)` are reserved (zero) artificial slots.
+    t: Vec<f64>,
+    width: usize,
+    /// Basic column per row.
+    basis: Vec<usize>,
+    is_basic: Vec<bool>,
+    /// Nonbasic variables rest at `lo` unless this flag says `hi`
+    /// (only ever set for finite upper bounds).
+    at_hi: Vec<bool>,
+    /// Per-column bounds (structurals first, then slacks, then artificials).
+    lo: Vec<f64>,
+    hi: Vec<f64>,
+    /// Reduced costs (maintained incrementally, refreshed periodically).
+    d: Vec<f64>,
+    /// Values of the basic variables per row.
+    beta: Vec<f64>,
+    /// Scratch copy of the pivot row.
+    prow: Vec<f64>,
+    /// Whether the tableau currently holds a factorized basis (a cold
+    /// solve has run since construction).
+    built: bool,
+    /// Total pivots performed over the lifetime of this state (primal +
+    /// dual + bound flips); snapshot around solves for per-solve counts.
+    pivots: u64,
+}
+
+impl SimplexState {
+    /// Build a state for `lp`.  No solve happens here; the first
+    /// [`resolve`](SimplexState::resolve) runs cold.
+    pub fn new(lp: &BoundedLp) -> SimplexState {
+        let n = lp.n;
+        let m = lp.rows.len();
+        assert_eq!(lp.c.len(), n);
+        assert_eq!(lp.lo.len(), n);
+        assert_eq!(lp.hi.len(), n);
+        let width = n + 2 * m + 1;
+        let mut a0 = vec![0.0; m * n];
+        let mut b0 = vec![0.0; m];
+        let mut row_sign = vec![1.0; m];
+        // Bounds over the full column space: structurals, slacks (Le/Ge
+        // → [0, ∞), Eq → fixed [0, 0]), reserved artificial slots.
+        let mut lo = vec![0.0; n + 2 * m];
+        let mut hi = vec![f64::INFINITY; n + 2 * m];
+        lo[..n].copy_from_slice(&lp.lo);
+        hi[..n].copy_from_slice(&lp.hi);
+        for (j, (&l, &h)) in lp.lo.iter().zip(&lp.hi).enumerate() {
+            assert!(l.is_finite(), "lower bound of x{j} must be finite");
+            assert!(l <= h + EPS_TIE, "empty bound interval on x{j}");
+        }
+        for (r, (coeffs, cmp, rhs)) in lp.rows.iter().enumerate() {
+            assert_eq!(coeffs.len(), n);
+            let sign = if *cmp == Cmp::Ge { -1.0 } else { 1.0 };
+            row_sign[r] = sign;
+            for (j, &a) in coeffs.iter().enumerate() {
+                a0[r * n + j] = sign * a;
+            }
+            b0[r] = sign * rhs;
+            if *cmp == Cmp::Eq {
+                hi[n + r] = 0.0; // fixed slack
+            }
+        }
+        SimplexState {
+            m,
+            n,
+            a0,
+            b0,
+            row_sign,
+            c: lp.c.clone(),
+            ncols: n + m,
+            n_art: 0,
+            t: vec![0.0; m * width],
+            width,
+            basis: (n..n + m).collect(),
+            is_basic: vec![false; n + 2 * m],
+            at_hi: vec![false; n + 2 * m],
+            lo,
+            hi,
+            d: vec![0.0; n + 2 * m],
+            beta: vec![0.0; m],
+            prow: vec![0.0; width],
+            built: false,
+            pivots: 0,
+        }
+    }
+
+    /// Total pivots performed so far (primal + dual + bound flips).
+    pub fn pivot_count(&self) -> u64 {
+        self.pivots
+    }
+
+    /// Objective `c·x` of a structural point under this problem's costs.
+    pub fn objective_of(&self, x: &[f64]) -> f64 {
+        self.c.iter().zip(x).map(|(c, v)| c * v).sum()
+    }
+
+    /// Replace the right-hand side with the *original-form* values `b`
+    /// (the same orientation the rows were given in; `Ge` rows are
+    /// re-normalized internally).  O(m²): the rhs column is recomputed
+    /// through the basis inverse read off the slack columns.
+    pub fn set_rhs(&mut self, b: &[f64]) {
+        assert_eq!(b.len(), self.m);
+        for r in 0..self.m {
+            self.b0[r] = self.row_sign[r] * b[r];
+        }
+        if !self.built {
+            return;
+        }
+        // Slack column r of the tableau is column r of B⁻¹, so the new
+        // rhs column is Σ_r b'_r · t[:, slack(r)].
+        let w = self.width;
+        let rhs = self.n + 2 * self.m;
+        for rr in 0..self.m {
+            let mut s = 0.0;
+            for r in 0..self.m {
+                let br = self.b0[r];
+                if br != 0.0 {
+                    s += br * self.t[rr * w + self.n + r];
+                }
+            }
+            self.prow[rr] = s;
+        }
+        for rr in 0..self.m {
+            self.t[rr * w + rhs] = self.prow[rr];
+        }
+    }
+
+    /// Replace the structural bounds.  Returns `false` when some interval
+    /// is empty (`lo > hi`) — the caller should treat the node as
+    /// infeasible without solving.
+    pub fn set_bounds(&mut self, lo: &[f64], hi: &[f64]) -> bool {
+        assert_eq!(lo.len(), self.n);
+        assert_eq!(hi.len(), self.n);
+        let mut ok = true;
+        for j in 0..self.n {
+            self.lo[j] = lo[j];
+            self.hi[j] = hi[j];
+            if lo[j] > hi[j] + EPS_TIE {
+                ok = false;
+            }
+            // A nonbasic variable parked at an upper bound that just
+            // became infinite has nowhere to rest; move it to lo.
+            if self.at_hi[j] && !hi[j].is_finite() {
+                self.at_hi[j] = false;
+            }
+        }
+        ok
+    }
+
+    /// Warm re-optimize from the current basis via the dual simplex.
+    /// Returns `None` when the basis is not reusable (never built, not
+    /// dual-feasible, or the iteration cap tripped) — fall back to
+    /// [`solve_cold`](SimplexState::solve_cold).
+    pub fn solve_warm(&mut self) -> Option<BoundedOutcome> {
+        if !self.built {
+            return None;
+        }
+        match self.dual() {
+            DualEnd::Infeasible => Some(BoundedOutcome::Infeasible),
+            DualEnd::NotDualFeasible | DualEnd::IterLimit => None,
+            DualEnd::Feasible => match self.primal(false) {
+                PrimalEnd::Unbounded => Some(BoundedOutcome::Unbounded),
+                PrimalEnd::Optimal => Some(self.extract()),
+            },
+        }
+    }
+
+    /// Cold solve: rebuild the tableau from the stored matrix and run the
+    /// two-phase primal simplex under the current rhs and bounds.
+    pub fn solve_cold(&mut self) -> BoundedOutcome {
+        self.rebuild();
+        if self.n_art > 0 {
+            match self.primal(true) {
+                // Phase 1 minimizes a sum of bounded-below variables; it
+                // cannot be unbounded, but fail closed if it reports so.
+                PrimalEnd::Unbounded => return BoundedOutcome::Infeasible,
+                PrimalEnd::Optimal => {}
+            }
+            let art_sum: f64 = (0..self.m)
+                .filter(|&r| self.basis[r] >= self.n + self.m)
+                .map(|r| self.beta[r].max(0.0))
+                .sum();
+            if art_sum > 1e-6 {
+                return BoundedOutcome::Infeasible;
+            }
+            // Freeze the artificials at zero.  Ones still basic (at ~0)
+            // stay: their [0, 0] bounds pin them through every later
+            // ratio test, which is exactly the original row — no
+            // drive-out pivots needed (and none through tiny elements).
+            for a in self.n + self.m..self.ncols {
+                self.lo[a] = 0.0;
+                self.hi[a] = 0.0;
+            }
+            self.recompute_beta();
+        }
+        match self.primal(false) {
+            PrimalEnd::Unbounded => BoundedOutcome::Unbounded,
+            PrimalEnd::Optimal => self.extract(),
+        }
+    }
+
+    /// Warm solve with automatic cold fallback.  Returns the outcome and
+    /// whether the warm path succeeded.
+    pub fn resolve(&mut self) -> (BoundedOutcome, bool) {
+        if let Some(out) = self.solve_warm() {
+            return (out, true);
+        }
+        (self.solve_cold(), false)
+    }
+
+    // ----- internals -------------------------------------------------
+
+    /// Nonbasic resting value of column `j`.
+    #[inline]
+    fn val(&self, j: usize) -> f64 {
+        if self.at_hi[j] {
+            self.hi[j]
+        } else {
+            self.lo[j]
+        }
+    }
+
+    /// Reset the tableau to the all-slack basis (structurals nonbasic at
+    /// their lower bounds) and install artificial columns for rows whose
+    /// slack value would violate its bounds.
+    fn rebuild(&mut self) {
+        let (n, m, w) = (self.n, self.m, self.width);
+        let rhs = n + 2 * m;
+        self.t.iter_mut().for_each(|v| *v = 0.0);
+        for r in 0..m {
+            let row = &mut self.t[r * w..r * w + w];
+            row[..n].copy_from_slice(&self.a0[r * n..r * n + n]);
+            row[n + r] = 1.0;
+            row[rhs] = self.b0[r];
+            self.basis[r] = n + r;
+        }
+        self.ncols = n + m;
+        self.n_art = 0;
+        for j in 0..n + 2 * m {
+            self.is_basic[j] = false;
+            self.at_hi[j] = false;
+        }
+        for r in 0..m {
+            self.is_basic[n + r] = true;
+            // Reset artificial slots to a harmless default.
+            self.lo[n + m + r] = 0.0;
+            self.hi[n + m + r] = f64::INFINITY;
+        }
+        self.built = true;
+        self.recompute_beta();
+        // Install artificials where the initial slack value is outside
+        // its bounds: below zero, or above zero on a fixed (Eq) slack.
+        for r in 0..m {
+            let s = n + r;
+            if !self.is_basic[s] || self.basis[r] != s {
+                continue;
+            }
+            let b = self.beta[r];
+            let sign = if b < -EPS_X {
+                -1.0
+            } else if b > self.hi[s] + EPS_X {
+                1.0
+            } else {
+                continue;
+            };
+            let col = self.ncols;
+            self.ncols += 1;
+            self.n_art += 1;
+            self.lo[col] = 0.0;
+            self.hi[col] = f64::INFINITY;
+            self.t[r * w + col] = sign;
+            self.is_basic[s] = false;
+            self.at_hi[s] = false; // rests at lo = 0
+            self.pivot(r, col);
+            self.basis[r] = col;
+            self.is_basic[col] = true;
+        }
+        if self.n_art > 0 {
+            self.recompute_beta();
+        }
+    }
+
+    /// Gaussian pivot on (row, col); updates the tableau only — basis
+    /// bookkeeping and reduced costs are the caller's job.
+    fn pivot(&mut self, row: usize, col: usize) {
+        let w = self.width;
+        let rhs = self.n + 2 * self.m;
+        let piv = self.t[row * w + col];
+        debug_assert!(piv.abs() > EPS_A);
+        let inv = 1.0 / piv;
+        for c in 0..self.ncols {
+            self.t[row * w + c] *= inv;
+        }
+        self.t[row * w + rhs] *= inv;
+        self.t[row * w + col] = 1.0;
+        self.prow[..self.ncols].copy_from_slice(&self.t[row * w..row * w + self.ncols]);
+        self.prow[rhs] = self.t[row * w + rhs];
+        for r in 0..self.m {
+            if r == row {
+                continue;
+            }
+            let f = self.t[r * w + col];
+            if f.abs() > 1e-12 {
+                for c in 0..self.ncols {
+                    self.t[r * w + c] -= f * self.prow[c];
+                }
+                self.t[r * w + rhs] -= f * self.prow[rhs];
+                self.t[r * w + col] = 0.0;
+            }
+        }
+    }
+
+    /// Recompute basic values from the tableau and the nonbasic resting
+    /// points: `β = B⁻¹b − Σ_{nonbasic j} (B⁻¹A)_j · val(j)`.
+    fn recompute_beta(&mut self) {
+        let w = self.width;
+        let rhs = self.n + 2 * self.m;
+        for r in 0..self.m {
+            self.beta[r] = self.t[r * w + rhs];
+        }
+        for j in 0..self.ncols {
+            if self.is_basic[j] {
+                continue;
+            }
+            let v = self.val(j);
+            if v != 0.0 {
+                for r in 0..self.m {
+                    self.beta[r] -= self.t[r * w + j] * v;
+                }
+            }
+        }
+    }
+
+    /// Phase-aware cost of column `j`: phase 1 prices artificials at 1,
+    /// phase 2 prices structurals at `c`.
+    #[inline]
+    fn cost(&self, j: usize, phase1: bool) -> f64 {
+        if phase1 {
+            if j >= self.n + self.m {
+                1.0
+            } else {
+                0.0
+            }
+        } else if j < self.n {
+            self.c[j]
+        } else {
+            0.0
+        }
+    }
+
+    /// Recompute reduced costs from scratch for the given phase.
+    fn recompute_d(&mut self, phase1: bool) {
+        let w = self.width;
+        for j in 0..self.ncols {
+            self.d[j] = self.cost(j, phase1);
+        }
+        for r in 0..self.m {
+            let cb = self.cost(self.basis[r], phase1);
+            if cb != 0.0 {
+                for c in 0..self.ncols {
+                    self.d[c] -= cb * self.t[r * w + c];
+                }
+            }
+        }
+        for r in 0..self.m {
+            self.d[self.basis[r]] = 0.0;
+        }
+    }
+
+    /// Bounded primal simplex (Bland's rule with bound flips).  Assumes
+    /// `beta` is current and the basis is primal-feasible on entry.
+    fn primal(&mut self, phase1: bool) -> PrimalEnd {
+        let w = self.width;
+        self.recompute_d(phase1);
+        let mut since_refresh = 0u64;
+        loop {
+            if since_refresh >= D_REFRESH {
+                // Incremental updates drift; refresh from scratch.
+                self.recompute_d(phase1);
+                self.recompute_beta();
+                since_refresh = 0;
+            }
+            // Entering: smallest-index nonbasic, non-fixed column whose
+            // reduced cost improves in the feasible direction.
+            let mut enter = None;
+            for j in 0..self.ncols {
+                if self.is_basic[j] || !(self.hi[j] - self.lo[j] > EPS_TIE) {
+                    continue;
+                }
+                let dj = self.d[j];
+                if (!self.at_hi[j] && dj < -EPS_D) || (self.at_hi[j] && dj > EPS_D) {
+                    enter = Some(j);
+                    break;
+                }
+            }
+            let Some(j) = enter else {
+                return PrimalEnd::Optimal;
+            };
+            let dir = if self.at_hi[j] { -1.0 } else { 1.0 };
+            // Ratio test: the entering variable's own bound span competes
+            // with every basic variable's slack to its nearer bound.
+            // Bland ties go to the smallest variable index.
+            let mut best_t = self.hi[j] - self.lo[j]; // may be ∞
+            let mut best_idx = j;
+            let mut leave: Option<usize> = None;
+            for r in 0..self.m {
+                let a = self.t[r * w + j];
+                let rate = dir * a;
+                let bi = self.basis[r];
+                let lim = if rate > EPS_A {
+                    (self.beta[r] - self.lo[bi]).max(0.0) / rate
+                } else if rate < -EPS_A {
+                    let hb = self.hi[bi];
+                    if !hb.is_finite() {
+                        continue;
+                    }
+                    (hb - self.beta[r]).max(0.0) / (-rate)
+                } else {
+                    continue;
+                };
+                if lim < best_t - EPS_TIE || (lim < best_t + EPS_TIE && bi < best_idx) {
+                    best_t = lim.min(best_t);
+                    best_idx = bi;
+                    leave = Some(r);
+                }
+            }
+            if !best_t.is_finite() {
+                return PrimalEnd::Unbounded;
+            }
+            self.pivots += 1;
+            since_refresh += 1;
+            // Incremental basic-value update: moving the entering
+            // variable by θ changes β_r at rate −dir·a_rj.
+            let theta = best_t;
+            match leave {
+                None => {
+                    // Bound flip: the entering variable crosses its whole
+                    // interval; the basis is unchanged.
+                    for r in 0..self.m {
+                        self.beta[r] -= dir * self.t[r * w + j] * theta;
+                    }
+                    self.at_hi[j] = !self.at_hi[j];
+                }
+                Some(row) => {
+                    let new_val = self.val(j) + dir * theta;
+                    for r in 0..self.m {
+                        if r != row {
+                            self.beta[r] -= dir * self.t[r * w + j] * theta;
+                        }
+                    }
+                    let a = self.t[row * w + j];
+                    let rate = dir * a;
+                    let leaving = self.basis[row];
+                    // Increasing β means the leaving variable hit hi.
+                    self.at_hi[leaving] = rate < 0.0;
+                    self.is_basic[leaving] = false;
+                    let f = self.d[j];
+                    self.pivot(row, j);
+                    self.basis[row] = j;
+                    self.is_basic[j] = true;
+                    self.at_hi[j] = false;
+                    self.beta[row] = new_val;
+                    if f != 0.0 {
+                        for c in 0..self.ncols {
+                            self.d[c] -= f * self.t[row * w + c];
+                        }
+                    }
+                    self.d[j] = 0.0;
+                }
+            }
+        }
+    }
+
+    /// Bounded dual simplex from the current basis.  Repairs primal
+    /// feasibility while keeping reduced-cost signs; used for warm
+    /// re-solves after rhs or bound changes.
+    fn dual(&mut self) -> DualEnd {
+        let w = self.width;
+        self.recompute_d(false);
+        // The basis must be dual-feasible for the dual method to apply;
+        // tolerate small drift — the primal cleanup in `solve_warm`
+        // restores exact optimality.
+        for j in 0..self.ncols {
+            if self.is_basic[j] || !(self.hi[j] - self.lo[j] > EPS_TIE) {
+                continue;
+            }
+            let dj = self.d[j];
+            if (!self.at_hi[j] && dj < -EPS_X) || (self.at_hi[j] && dj > EPS_X) {
+                return DualEnd::NotDualFeasible;
+            }
+        }
+        self.recompute_beta();
+        let cap = 10 * (self.m + self.ncols) as u64 + 500;
+        let mut iters = 0u64;
+        let mut since_refresh = 0u64;
+        loop {
+            if since_refresh >= D_REFRESH {
+                // Incremental updates drift; refresh from scratch.
+                self.recompute_d(false);
+                self.recompute_beta();
+                since_refresh = 0;
+            }
+            // Leaving: the basic variable with the largest bound
+            // violation (ties → smallest basis index).
+            let mut sel: Option<(usize, f64, bool)> = None; // (row, viol, above)
+            for r in 0..self.m {
+                let bi = self.basis[r];
+                let b = self.beta[r];
+                let (viol, above) = if b < self.lo[bi] - EPS_X {
+                    (self.lo[bi] - b, false)
+                } else if self.hi[bi].is_finite() && b > self.hi[bi] + EPS_X {
+                    (b - self.hi[bi], true)
+                } else {
+                    continue;
+                };
+                match sel {
+                    None => sel = Some((r, viol, above)),
+                    Some((sr, sv, _)) => {
+                        if viol > sv + EPS_TIE
+                            || (viol > sv - EPS_TIE && self.basis[r] < self.basis[sr])
+                        {
+                            sel = Some((r, viol, above));
+                        }
+                    }
+                }
+            }
+            let Some((row, _, above)) = sel else {
+                return DualEnd::Feasible;
+            };
+            iters += 1;
+            if iters > cap {
+                return DualEnd::IterLimit;
+            }
+            // Entering: dual ratio test over eligible nonbasic columns.
+            // Eligibility: moving the entering variable off its bound in
+            // its feasible direction must push the leaving variable back
+            // toward the violated bound.
+            let mut enter: Option<(usize, f64)> = None;
+            for j in 0..self.ncols {
+                if self.is_basic[j] || !(self.hi[j] - self.lo[j] > EPS_TIE) {
+                    continue;
+                }
+                let a = self.t[row * w + j];
+                if a.abs() <= EPS_A {
+                    continue;
+                }
+                // Feasible move direction of nonbasic j: up from lo,
+                // down from hi.  β_row changes at rate −dir·a.
+                let dir = if self.at_hi[j] { -1.0 } else { 1.0 };
+                let pushes_up = dir * a < 0.0;
+                if pushes_up != !above {
+                    // `above` needs β to decrease; `below` needs increase.
+                    continue;
+                }
+                let ratio = self.d[j].abs() / a.abs();
+                match enter {
+                    None => enter = Some((j, ratio)),
+                    Some((ej, er)) => {
+                        if ratio < er - EPS_TIE || (ratio < er + EPS_TIE && j < ej) {
+                            enter = Some((j, ratio));
+                        }
+                    }
+                }
+            }
+            let Some((j, _)) = enter else {
+                // The violated row cannot be repaired under the bounds —
+                // a primal infeasibility certificate.
+                return DualEnd::Infeasible;
+            };
+            self.pivots += 1;
+            since_refresh += 1;
+            let leaving = self.basis[row];
+            // The entering variable moves exactly far enough to land the
+            // leaving variable on its violated bound.
+            let a = self.t[row * w + j];
+            let dir = if self.at_hi[j] { -1.0 } else { 1.0 };
+            let target = if above { self.hi[leaving] } else { self.lo[leaving] };
+            let theta = ((self.beta[row] - target) / (dir * a)).max(0.0);
+            let new_val = self.val(j) + dir * theta;
+            for r in 0..self.m {
+                if r != row {
+                    self.beta[r] -= dir * self.t[r * w + j] * theta;
+                }
+            }
+            self.at_hi[leaving] = above; // rests at the bound it violated
+            self.is_basic[leaving] = false;
+            let f = self.d[j];
+            self.pivot(row, j);
+            self.basis[row] = j;
+            self.is_basic[j] = true;
+            self.at_hi[j] = false;
+            self.beta[row] = new_val;
+            if f != 0.0 {
+                for c in 0..self.ncols {
+                    self.d[c] -= f * self.t[row * w + c];
+                }
+            }
+            self.d[j] = 0.0;
+        }
+    }
+
+    /// Read the optimal structural point out of the state.
+    fn extract(&mut self) -> BoundedOutcome {
+        // One exact refresh so incremental drift never reaches callers.
+        self.recompute_beta();
+        let mut x = vec![0.0; self.n];
+        for j in 0..self.n {
+            if !self.is_basic[j] {
+                x[j] = self.val(j);
+            }
+        }
+        for r in 0..self.m {
+            if self.basis[r] < self.n {
+                x[self.basis[r]] = self.beta[r];
+            }
+        }
+        for j in 0..self.n {
+            if x[j] < self.lo[j] {
+                x[j] = self.lo[j];
+            }
+            if x[j] > self.hi[j] {
+                x[j] = self.hi[j];
+            }
+        }
+        let obj = self.objective_of(&x);
+        BoundedOutcome::Optimal { x, obj }
+    }
+}
+
+/// Solve a [`BoundedLp`] cold (fresh state, two-phase primal).
+pub fn solve_bounded(lp: &BoundedLp) -> BoundedOutcome {
+    SimplexState::new(lp).solve_cold()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::simplex::{Cmp, LinProg};
+
+    fn optimal(lp: &BoundedLp) -> (Vec<f64>, f64) {
+        match solve_bounded(lp) {
+            BoundedOutcome::Optimal { x, obj } => (x, obj),
+            other => panic!("expected optimal, got {other:?}"),
+        }
+    }
+
+    fn lift(n: usize, c: Vec<f64>, rows: Vec<(Vec<f64>, Cmp, f64)>) -> BoundedLp {
+        BoundedLp::from_linprog(&LinProg { n, c, rows })
+    }
+
+    #[test]
+    fn textbook_maximization() {
+        // max 3x + 5y s.t. x<=4, 2y<=12, 3x+2y<=18 → x=2,y=6, obj=36.
+        let lp = lift(
+            2,
+            vec![-3.0, -5.0],
+            vec![
+                (vec![1.0, 0.0], Cmp::Le, 4.0),
+                (vec![0.0, 2.0], Cmp::Le, 12.0),
+                (vec![3.0, 2.0], Cmp::Le, 18.0),
+            ],
+        );
+        let (x, obj) = optimal(&lp);
+        assert!((x[0] - 2.0).abs() < 1e-6 && (x[1] - 6.0).abs() < 1e-6);
+        assert!((obj + 36.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ge_rows_need_artificials() {
+        // min x + y s.t. x + y >= 10, x >= 3 → obj 10.
+        let lp = lift(
+            2,
+            vec![1.0, 1.0],
+            vec![(vec![1.0, 1.0], Cmp::Ge, 10.0), (vec![1.0, 0.0], Cmp::Ge, 3.0)],
+        );
+        let (x, obj) = optimal(&lp);
+        assert!((obj - 10.0).abs() < 1e-6);
+        assert!(x[0] >= 3.0 - 1e-9);
+    }
+
+    #[test]
+    fn equality_rows() {
+        // min 2x + 3y s.t. x + y = 5, x - y = 1 → x=3, y=2, obj 12.
+        let lp = lift(
+            2,
+            vec![2.0, 3.0],
+            vec![(vec![1.0, 1.0], Cmp::Eq, 5.0), (vec![1.0, -1.0], Cmp::Eq, 1.0)],
+        );
+        let (x, obj) = optimal(&lp);
+        assert!((x[0] - 3.0).abs() < 1e-6 && (x[1] - 2.0).abs() < 1e-6);
+        assert!((obj - 12.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn detects_infeasible() {
+        let lp = lift(
+            1,
+            vec![1.0],
+            vec![(vec![1.0], Cmp::Le, 1.0), (vec![1.0], Cmp::Ge, 2.0)],
+        );
+        assert_eq!(solve_bounded(&lp), BoundedOutcome::Infeasible);
+    }
+
+    #[test]
+    fn detects_unbounded() {
+        let lp = lift(1, vec![-1.0], vec![(vec![1.0], Cmp::Ge, 0.0)]);
+        assert_eq!(solve_bounded(&lp), BoundedOutcome::Unbounded);
+    }
+
+    #[test]
+    fn degenerate_does_not_cycle() {
+        // Classic degeneracy stressor; Bland-with-bounds must terminate.
+        let lp = lift(
+            4,
+            vec![-0.75, 150.0, -0.02, 6.0],
+            vec![
+                (vec![0.25, -60.0, -0.04, 9.0], Cmp::Le, 0.0),
+                (vec![0.5, -90.0, -0.02, 3.0], Cmp::Le, 0.0),
+                (vec![0.0, 0.0, 1.0, 0.0], Cmp::Le, 1.0),
+            ],
+        );
+        let (_, obj) = optimal(&lp);
+        assert!((obj + 0.05).abs() < 1e-6);
+    }
+
+    #[test]
+    fn upper_bound_replaces_row() {
+        // max x with x ∈ [0, 4] and no rows at all: a single bound flip.
+        let lp = BoundedLp {
+            n: 1,
+            c: vec![-1.0],
+            rows: vec![],
+            lo: vec![0.0],
+            hi: vec![4.0],
+        };
+        let (x, obj) = optimal(&lp);
+        assert!((x[0] - 4.0).abs() < 1e-9);
+        assert!((obj + 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lower_bound_holds_without_rows() {
+        // min 3x with x ∈ [2, 40] → x = 2.
+        let lp = BoundedLp {
+            n: 1,
+            c: vec![3.0],
+            rows: vec![],
+            lo: vec![2.0],
+            hi: vec![40.0],
+        };
+        let (x, obj) = optimal(&lp);
+        assert!((x[0] - 2.0).abs() < 1e-9);
+        assert!((obj - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fixed_variable_is_respected() {
+        // min x + y, x fixed at 3, x + y >= 5 → y = 2.
+        let lp = BoundedLp {
+            n: 2,
+            c: vec![1.0, 1.0],
+            rows: vec![(vec![1.0, 1.0], Cmp::Ge, 5.0)],
+            lo: vec![3.0, 0.0],
+            hi: vec![3.0, f64::INFINITY],
+        };
+        let (x, obj) = optimal(&lp);
+        assert!((x[0] - 3.0).abs() < 1e-9);
+        assert!((x[1] - 2.0).abs() < 1e-6);
+        assert!((obj - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn capacity_shaped_instance() {
+        // One region, one SKU: min 98x + 16u s.t. 500x ≥ 1800,
+        // x − u ≤ 10, x ∈ [2, 20], u ≥ 0 → x = 3.6, u = 0.
+        let lp = BoundedLp {
+            n: 2,
+            c: vec![98.0, 16.0],
+            rows: vec![
+                (vec![500.0, 0.0], Cmp::Ge, 1800.0),
+                (vec![1.0, -1.0], Cmp::Le, 10.0),
+            ],
+            lo: vec![2.0, 0.0],
+            hi: vec![20.0, f64::INFINITY],
+        };
+        let (x, obj) = optimal(&lp);
+        assert!((x[0] - 3.6).abs() < 1e-6, "x = {:?}", x);
+        assert!(x[1].abs() < 1e-6);
+        assert!((obj - 352.8).abs() < 1e-4);
+    }
+
+    #[test]
+    fn warm_bound_tightening_matches_cold() {
+        // The branch-and-bound motion: solve the relaxation, tighten the
+        // integer bound, dual-resolve — identical to a cold solve.
+        let lp = BoundedLp {
+            n: 2,
+            c: vec![98.0, 16.0],
+            rows: vec![
+                (vec![500.0, 0.0], Cmp::Ge, 1800.0),
+                (vec![1.0, -1.0], Cmp::Le, 10.0),
+            ],
+            lo: vec![2.0, 0.0],
+            hi: vec![20.0, f64::INFINITY],
+        };
+        let mut st = SimplexState::new(&lp);
+        let root = st.solve_cold();
+        assert!(matches!(root, BoundedOutcome::Optimal { .. }));
+
+        // Up-branch x ≥ 4.
+        assert!(st.set_bounds(&[4.0, 0.0], &[20.0, f64::INFINITY]));
+        let (up, warm) = st.resolve();
+        assert!(warm, "bound tightening should stay on the dual path");
+        match up {
+            BoundedOutcome::Optimal { x, obj } => {
+                assert!((x[0] - 4.0).abs() < 1e-6);
+                assert!((obj - 392.0).abs() < 1e-4);
+            }
+            other => panic!("expected optimal, got {other:?}"),
+        }
+
+        // Down-branch x ≤ 3 is infeasible (needs x ≥ 3.6).
+        assert!(st.set_bounds(&[2.0, 0.0], &[3.0, f64::INFINITY]));
+        let (down, _) = st.resolve();
+        assert_eq!(down, BoundedOutcome::Infeasible);
+    }
+
+    #[test]
+    fn warm_rhs_change_matches_cold() {
+        let mk = |demand: f64| BoundedLp {
+            n: 2,
+            c: vec![98.0, 16.0],
+            rows: vec![
+                (vec![500.0, 0.0], Cmp::Ge, demand),
+                (vec![1.0, -1.0], Cmp::Le, 10.0),
+            ],
+            lo: vec![2.0, 0.0],
+            hi: vec![20.0, f64::INFINITY],
+        };
+        let mut st = SimplexState::new(&mk(1800.0));
+        assert!(matches!(st.solve_cold(), BoundedOutcome::Optimal { .. }));
+        let before = st.pivot_count();
+        // Demand moves between epochs; only the rhs changes.
+        st.set_rhs(&[2600.0, 10.0]);
+        let (out, warm) = st.resolve();
+        assert!(warm, "rhs swap should stay on the dual path");
+        let warm_pivots = st.pivot_count() - before;
+        let cold = solve_bounded(&mk(2600.0));
+        match (out, cold) {
+            (
+                BoundedOutcome::Optimal { obj: a, .. },
+                BoundedOutcome::Optimal { obj: b, .. },
+            ) => assert!((a - b).abs() < 1e-6, "warm {a} vs cold {b}"),
+            (a, b) => panic!("outcomes diverged: warm {a:?} cold {b:?}"),
+        }
+        assert!(warm_pivots <= 4, "rhs nudge took {warm_pivots} pivots");
+    }
+
+    #[test]
+    fn negative_cost_with_infinite_upper_bound_is_caught() {
+        // min -u with u free above and no binding row: unbounded.
+        let lp = BoundedLp {
+            n: 1,
+            c: vec![-1.0],
+            rows: vec![(vec![1.0], Cmp::Ge, 0.0)],
+            lo: vec![0.0],
+            hi: vec![f64::INFINITY],
+        };
+        assert_eq!(solve_bounded(&lp), BoundedOutcome::Unbounded);
+    }
+
+    #[test]
+    fn empty_bound_interval_reports_infeasible_via_set_bounds() {
+        let lp = BoundedLp {
+            n: 1,
+            c: vec![1.0],
+            rows: vec![],
+            lo: vec![0.0],
+            hi: vec![5.0],
+        };
+        let mut st = SimplexState::new(&lp);
+        st.solve_cold();
+        assert!(!st.set_bounds(&[4.0], &[3.0]));
+    }
+
+    #[test]
+    fn matches_dense_solver_on_shared_forms() {
+        // Cross-check against the dense oracle on its own test problems.
+        let problems = vec![
+            LinProg {
+                n: 2,
+                c: vec![-3.0, -5.0],
+                rows: vec![
+                    (vec![1.0, 0.0], Cmp::Le, 4.0),
+                    (vec![0.0, 2.0], Cmp::Le, 12.0),
+                    (vec![3.0, 2.0], Cmp::Le, 18.0),
+                ],
+            },
+            LinProg {
+                n: 2,
+                c: vec![2.0, 3.0],
+                rows: vec![
+                    (vec![1.0, 1.0], Cmp::Eq, 5.0),
+                    (vec![1.0, -1.0], Cmp::Eq, 1.0),
+                ],
+            },
+            LinProg {
+                n: 1,
+                c: vec![-1.0],
+                rows: vec![(vec![-1.0], Cmp::Ge, -5.0)],
+            },
+        ];
+        for lp in &problems {
+            let dense = crate::opt::simplex::solve(lp);
+            let bounded = solve_bounded(&BoundedLp::from_linprog(lp));
+            match (dense, bounded) {
+                (
+                    crate::opt::simplex::LpOutcome::Optimal { obj: a, .. },
+                    BoundedOutcome::Optimal { obj: b, .. },
+                ) => assert!((a - b).abs() < 1e-6, "dense {a} vs bounded {b}"),
+                (d, b) => panic!("outcomes diverged: dense {d:?} bounded {b:?}"),
+            }
+        }
+    }
+}

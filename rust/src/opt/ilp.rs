@@ -3,19 +3,47 @@
 //! Depth-first with best-incumbent pruning and most-fractional branching.
 //! The capacity problems this solves are small and near-integral (network
 //! structure), so the tree rarely exceeds a handful of nodes.
+//!
+//! Two implementations live here:
+//!
+//! * [`solve_ilp_bounded_with`] — the production path.  Nodes are
+//!   per-variable **bound tightenings** applied to one persistent
+//!   [`SimplexState`] tableau; each node re-solves warm via the dual
+//!   simplex from whatever basis the previous node left behind (cold
+//!   fallback is automatic), and the root-rounding incumbent pins
+//!   integers through bounds instead of appending `Eq` rows (which would
+//!   force a fresh phase 1).  Nodes whose parent relaxation already
+//!   cannot beat the incumbent are discarded *without* an LP solve.
+//! * [`solve_ilp`] / [`solve_ilp_counted`] — the original dense path
+//!   (clones the whole [`LinProg`] per node, rows for branches), retained
+//!   as the independent equivalence oracle the bounded path is tested
+//!   against.
 
+use crate::opt::bounded::{BoundedLp, BoundedOutcome, SimplexState};
 use crate::opt::simplex::{solve, Cmp, LinProg, LpOutcome};
 
 /// An LP plus the set of variables required to be integral.
 #[derive(Debug, Clone)]
 pub struct IntLinProg {
+    /// The relaxation.
     pub lp: LinProg,
+    /// Indices of variables constrained to integer values.
+    pub int_vars: Vec<usize>,
+}
+
+/// A bounded-form LP plus the set of variables required to be integral.
+#[derive(Debug, Clone)]
+pub struct BoundedIntLinProg {
+    /// The relaxation, with per-variable bounds.
+    pub lp: BoundedLp,
+    /// Indices of variables constrained to integer values.
     pub int_vars: Vec<usize>,
 }
 
 /// Search limits (defense against pathological instances).
 #[derive(Debug, Clone, Copy)]
 pub struct IlpLimits {
+    /// Maximum branch-and-bound nodes whose relaxation is solved.
     pub max_nodes: usize,
     /// Relative optimality gap: a node is pruned when its relaxation
     /// cannot beat the incumbent by more than `gap·|incumbent|` (the same
@@ -29,11 +57,214 @@ impl Default for IlpLimits {
     }
 }
 
+/// Work counters from one branch-and-bound run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IlpStats {
+    /// Nodes whose LP relaxation was solved during the tree walk — the
+    /// same accounting as [`solve_ilp_counted`], so the two are directly
+    /// comparable.  The root solve and root-rounding probe are outside
+    /// the count on both paths.
+    pub nodes: usize,
+    /// Nodes discarded on their parent's bound without an LP solve.
+    pub pruned_unsolved: usize,
+    /// Simplex pivots across all node solves (primal + dual + flips).
+    pub pivots: u64,
+    /// Node LPs served by the warm dual path.
+    pub lp_warm: usize,
+    /// Node LPs that fell back to a cold two-phase solve.
+    pub lp_cold: usize,
+}
+
 const INT_TOL: f64 = 1e-6;
 
-/// Solve the ILP; returns (x, objective) or None if infeasible / node
+/// Solve the ILP on the bounded stack with a fresh tableau.  Returns
+/// `(solution, stats)`; the solution is `None` if infeasible or the node
 /// limit exhausted without an incumbent.
+pub fn solve_ilp_bounded(
+    problem: &BoundedIntLinProg,
+    limits: IlpLimits,
+) -> (Option<(Vec<f64>, f64)>, IlpStats) {
+    let mut state = SimplexState::new(&problem.lp);
+    solve_ilp_bounded_with(
+        &mut state,
+        &problem.int_vars,
+        &problem.lp.lo,
+        &problem.lp.hi,
+        limits,
+        None,
+    )
+}
+
+/// Solve an ILP whose matrix already lives in `state`, branching through
+/// per-variable bound tightenings of `[root_lo, root_hi]`.
+///
+/// `state` may carry the basis of a previous solve over the same matrix
+/// (an earlier control epoch after [`SimplexState::set_rhs`]); the root
+/// then re-optimizes warm via the dual simplex.  `seed` is an optional
+/// incumbent `(x, obj)` the caller has already verified feasible for
+/// *this* instance — it prunes the tree from node one.
+pub fn solve_ilp_bounded_with(
+    state: &mut SimplexState,
+    int_vars: &[usize],
+    root_lo: &[f64],
+    root_hi: &[f64],
+    limits: IlpLimits,
+    seed: Option<(Vec<f64>, f64)>,
+) -> (Option<(Vec<f64>, f64)>, IlpStats) {
+    let mut stats = IlpStats::default();
+    let pivots0 = state.pivot_count();
+    let mut incumbent: Option<(Vec<f64>, f64)> = seed;
+
+    // Root relaxation (warm when the state carries a basis).
+    let mut solve_node = |state: &mut SimplexState, stats: &mut IlpStats| {
+        let (out, warm) = state.resolve();
+        if warm {
+            stats.lp_warm += 1;
+        } else {
+            stats.lp_cold += 1;
+        }
+        out
+    };
+
+    if !state.set_bounds(root_lo, root_hi) {
+        stats.pivots = state.pivot_count() - pivots0;
+        return (None, stats);
+    }
+    let root = solve_node(state, &mut stats);
+    let root_x = match root {
+        BoundedOutcome::Optimal { x, .. } => x,
+        // Root infeasible/unbounded ⇒ no integer point either (a seed
+        // would certify feasibility, so none can exist here).
+        _ => {
+            stats.pivots = state.pivot_count() - pivots0;
+            return (None, stats);
+        }
+    };
+
+    // Root-rounding incumbent: pin every integer variable to the ceiling
+    // of its relaxation value *through bounds* and re-solve warm.  For
+    // covering-style problems (all the capacity instances) the rounded
+    // point is feasible, giving B&B a strong initial bound for the cost
+    // of one dual re-solve instead of a fresh phase 1.
+    {
+        let mut lo = root_lo.to_vec();
+        let mut hi = root_hi.to_vec();
+        let mut pin_ok = true;
+        for &v in int_vars {
+            let pin = root_x[v].ceil();
+            if pin < root_lo[v] - INT_TOL || pin > root_hi[v] + INT_TOL {
+                pin_ok = false;
+                break;
+            }
+            lo[v] = pin;
+            hi[v] = pin;
+        }
+        if pin_ok && state.set_bounds(&lo, &hi) {
+            if let BoundedOutcome::Optimal { x, obj } = solve_node(state, &mut stats) {
+                match &incumbent {
+                    Some((_, best)) if obj >= *best => {}
+                    _ => incumbent = Some((x, obj)),
+                }
+            }
+        }
+    }
+
+    // Each node = (structural lower bounds, upper bounds, parent's
+    // relaxation objective — a valid bound on every descendant).
+    let mut stack: Vec<(Vec<f64>, Vec<f64>, f64)> =
+        vec![(root_lo.to_vec(), root_hi.to_vec(), f64::NEG_INFINITY)];
+
+    while let Some((nlo, nhi, parent_bound)) = stack.pop() {
+        // Parent-bound prune: no LP solve, not counted as a node.
+        if let Some((_, best)) = &incumbent {
+            let tol = (limits.gap * best.abs()).max(1e-9);
+            if parent_bound >= *best - tol {
+                stats.pruned_unsolved += 1;
+                continue;
+            }
+        }
+        stats.nodes += 1;
+        if stats.nodes > limits.max_nodes {
+            break;
+        }
+        if !state.set_bounds(&nlo, &nhi) {
+            continue; // empty bound interval: infeasible without solving
+        }
+        let (x, obj) = match solve_node(state, &mut stats) {
+            BoundedOutcome::Optimal { x, obj } => (x, obj),
+            _ => continue, // infeasible or unbounded branch
+        };
+        if let Some((_, best)) = &incumbent {
+            let tol = (limits.gap * best.abs()).max(1e-9);
+            if obj >= *best - tol {
+                continue; // bound: can't meaningfully beat the incumbent
+            }
+        }
+        // Most-fractional branching variable.
+        let mut branch: Option<(usize, f64, f64)> = None; // (var, value, frac dist)
+        for &v in int_vars {
+            let frac = (x[v] - x[v].round()).abs();
+            if frac > INT_TOL {
+                let dist = (x[v].fract() - 0.5).abs();
+                match branch {
+                    None => branch = Some((v, x[v], dist)),
+                    Some((_, _, bd)) if dist < bd => branch = Some((v, x[v], dist)),
+                    _ => {}
+                }
+            }
+        }
+        match branch {
+            None => {
+                // Integral: round cleanly and accept as incumbent.
+                let mut xi = x;
+                for &v in int_vars {
+                    xi[v] = xi[v].round();
+                }
+                let obj = state.objective_of(&xi);
+                match &incumbent {
+                    None => incumbent = Some((xi, obj)),
+                    Some((_, best)) if obj < *best => incumbent = Some((xi, obj)),
+                    _ => {}
+                }
+            }
+            Some((v, val, _)) => {
+                // x_v ≤ floor
+                let mut lo_hi = nhi.clone();
+                lo_hi[v] = val.floor();
+                let lo_child = (nlo.clone(), lo_hi, obj);
+                // x_v ≥ ceil
+                let mut hi_lo = nlo;
+                hi_lo[v] = val.ceil();
+                let hi_child = (hi_lo, nhi, obj);
+                // DFS: push the branch nearer the LP value last (explored
+                // first) to find good incumbents early.
+                if val.fract() < 0.5 {
+                    stack.push(hi_child);
+                    stack.push(lo_child);
+                } else {
+                    stack.push(lo_child);
+                    stack.push(hi_child);
+                }
+            }
+        }
+    }
+    stats.pivots = state.pivot_count() - pivots0;
+    (incumbent, stats)
+}
+
+/// Solve the ILP on the dense oracle path; returns `(x, objective)` or
+/// `None` if infeasible / node limit exhausted without an incumbent.
 pub fn solve_ilp(problem: &IntLinProg, limits: IlpLimits) -> Option<(Vec<f64>, f64)> {
+    solve_ilp_counted(problem, limits).0
+}
+
+/// [`solve_ilp`] plus the number of nodes whose relaxation was solved —
+/// the baseline the bounded path's node counts are regression-tested
+/// against.
+pub fn solve_ilp_counted(
+    problem: &IntLinProg,
+    limits: IlpLimits,
+) -> (Option<(Vec<f64>, f64)>, usize) {
     // Each node = extra bound rows appended to the base LP.
     let mut stack: Vec<Vec<(Vec<f64>, Cmp, f64)>> = vec![vec![]];
     // Seed the incumbent by rounding the root relaxation *up* (covering
@@ -107,7 +338,7 @@ pub fn solve_ilp(problem: &IntLinProg, limits: IlpLimits) -> Option<(Vec<f64>, f
             }
         }
     }
-    incumbent
+    (incumbent, nodes)
 }
 
 /// Solve the root LP, round every integer variable up (ceil), and
@@ -135,6 +366,24 @@ fn root_rounding_incumbent(problem: &IntLinProg) -> Option<(Vec<f64>, f64)> {
 mod tests {
     use super::*;
 
+    /// Run a dense-form problem through both paths and require agreement.
+    fn both(p: &IntLinProg) -> Option<(Vec<f64>, f64)> {
+        let dense = solve_ilp(p, IlpLimits::default());
+        let bp = BoundedIntLinProg {
+            lp: BoundedLp::from_linprog(&p.lp),
+            int_vars: p.int_vars.clone(),
+        };
+        let (bounded, _) = solve_ilp_bounded(&bp, IlpLimits::default());
+        match (&dense, &bounded) {
+            (Some((_, a)), Some((_, b))) => {
+                assert!((a - b).abs() < 1e-6, "dense obj {a} vs bounded obj {b}")
+            }
+            (None, None) => {}
+            (d, b) => panic!("paths diverged: dense {d:?} bounded {b:?}"),
+        }
+        bounded
+    }
+
     #[test]
     fn knapsack_like() {
         // max 5a + 4b s.t. 6a + 4b <= 24, a + 2b <= 6, integer.
@@ -150,7 +399,7 @@ mod tests {
             },
             int_vars: vec![0, 1],
         };
-        let (x, obj) = solve_ilp(&p, IlpLimits::default()).unwrap();
+        let (x, obj) = both(&p).unwrap();
         assert_eq!((x[0].round() as i64, x[1].round() as i64), (4, 0));
         assert!((obj + 20.0).abs() < 1e-6);
     }
@@ -165,7 +414,7 @@ mod tests {
             },
             int_vars: vec![0],
         };
-        let (x, obj) = solve_ilp(&p, IlpLimits::default()).unwrap();
+        let (x, obj) = both(&p).unwrap();
         assert_eq!(x[0], 3.0);
         assert!((obj - 3.0).abs() < 1e-9);
     }
@@ -181,7 +430,7 @@ mod tests {
             },
             int_vars: vec![0],
         };
-        let (x, _) = solve_ilp(&p, IlpLimits::default()).unwrap();
+        let (x, _) = both(&p).unwrap();
         assert_eq!(x[0], 4.0);
     }
 
@@ -198,7 +447,7 @@ mod tests {
             },
             int_vars: vec![0],
         };
-        assert!(solve_ilp(&p, IlpLimits::default()).is_none());
+        assert!(both(&p).is_none());
     }
 
     #[test]
@@ -212,8 +461,82 @@ mod tests {
             },
             int_vars: vec![0],
         };
-        let (x, obj) = solve_ilp(&p, IlpLimits::default()).unwrap();
+        let (x, obj) = both(&p).unwrap();
         assert!((obj - 2.5).abs() < 1e-6);
         assert!((x[0] - x[0].round()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bounded_nodes_are_branch_tightenings_not_rows() {
+        // Integer bounds arrive through the tableau: a bounded knapsack
+        // whose branches must respect the original hi bound.
+        let p = BoundedIntLinProg {
+            lp: BoundedLp {
+                n: 2,
+                c: vec![-5.0, -4.0],
+                rows: vec![(vec![6.0, 4.0], Cmp::Le, 24.0)],
+                lo: vec![0.0, 0.0],
+                hi: vec![3.0, 10.0],
+            },
+            int_vars: vec![0, 1],
+        };
+        let (sol, stats) = solve_ilp_bounded(&p, IlpLimits::default());
+        let (x, obj) = sol.unwrap();
+        // x0 capped at 3 → 6·3 = 18 used, 4·b ≤ 6 → b = 1: obj −19.
+        assert_eq!((x[0].round() as i64, x[1].round() as i64), (3, 1));
+        assert!((obj + 19.0).abs() < 1e-6);
+        assert!(stats.nodes >= 1);
+    }
+
+    #[test]
+    fn seed_incumbent_prunes_but_never_worsens() {
+        // min x s.t. 3x >= 10, integer → 4.  Seed with the known optimum:
+        // the answer must be identical and the tree all but collapse.
+        let p = BoundedIntLinProg {
+            lp: BoundedLp {
+                n: 1,
+                c: vec![1.0],
+                rows: vec![(vec![3.0], Cmp::Ge, 10.0)],
+                lo: vec![0.0],
+                hi: vec![f64::INFINITY],
+            },
+            int_vars: vec![0],
+        };
+        let mut state = SimplexState::new(&p.lp);
+        let seed = Some((vec![4.0], 4.0));
+        let (sol, _) = solve_ilp_bounded_with(
+            &mut state,
+            &p.int_vars,
+            &p.lp.lo,
+            &p.lp.hi,
+            IlpLimits::default(),
+            seed,
+        );
+        let (x, obj) = sol.unwrap();
+        assert_eq!(x[0], 4.0);
+        assert!((obj - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reused_state_warm_starts_across_rhs_changes() {
+        // Same matrix, drifting demand: the second solve must reuse the
+        // basis (warm dual) and agree with a from-scratch solve.
+        let lp = BoundedLp {
+            n: 1,
+            c: vec![1.0],
+            rows: vec![(vec![3.0], Cmp::Ge, 10.0)],
+            lo: vec![0.0],
+            hi: vec![f64::INFINITY],
+        };
+        let mut state = SimplexState::new(&lp);
+        let (first, _) =
+            solve_ilp_bounded_with(&mut state, &[0], &lp.lo, &lp.hi, IlpLimits::default(), None);
+        assert_eq!(first.unwrap().0[0], 4.0);
+
+        state.set_rhs(&[14.0]); // 3x ≥ 14 → LP 4.67 → ILP 5
+        let (second, stats) =
+            solve_ilp_bounded_with(&mut state, &[0], &lp.lo, &lp.hi, IlpLimits::default(), None);
+        assert_eq!(second.unwrap().0[0], 5.0);
+        assert!(stats.lp_warm > 0, "expected warm solves, got {stats:?}");
     }
 }

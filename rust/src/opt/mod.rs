@@ -1,22 +1,31 @@
 //! The §5 optimization stack, built from scratch:
 //!
-//! * [`simplex`] — dense two-phase primal simplex with Bland's rule.
-//! * [`ilp`] — branch-and-bound integer programming on top of the LP
-//!   relaxation.
+//! * [`bounded`] — the production LP core: bounded-variable primal/dual
+//!   simplex with a persistent, warm-startable [`SimplexState`] (rhs swaps
+//!   and bound tightenings reuse the factorized basis).
+//! * [`ilp`] — branch-and-bound integer programming: the incremental
+//!   bounded path (nodes are bound tightenings over one shared tableau,
+//!   warm dual re-solves) plus the original dense path kept as the
+//!   equivalence oracle.
+//! * [`simplex`] — the dense two-phase primal simplex the oracle runs on.
 //! * [`capacity`] — the SageServe instance-allocation problem: builds one
 //!   ILP per model (the formulation decouples across models — no
 //!   constraint in §5 couples different `i`) and returns the δ_{i,j,k}
-//!   instance-count changes.
+//!   instance-count changes.  [`CapacitySolver`] carries per-model warm
+//!   state across control epochs.
 
-// Rustdoc debt: public surface not yet audited for `missing_docs`
-// (PR 4 audited config, perf, coordinator::router and sim::cluster);
-// drop this allow once every pub item here is documented.
-#![allow(missing_docs)]
-
+pub mod bounded;
 pub mod capacity;
 pub mod ilp;
 pub mod simplex;
 
-pub use capacity::{CapacityInputs, CapacityPlan, optimize_capacity};
-pub use ilp::{solve_ilp, IlpLimits, IntLinProg};
+pub use bounded::{solve_bounded, BoundedLp, BoundedOutcome, SimplexState};
+pub use capacity::{
+    optimize_capacity, optimize_capacity_dense, optimize_capacity_warm, perturb_inputs,
+    synthetic_inputs, CapacityInputs, CapacityPlan, CapacitySolver,
+};
+pub use ilp::{
+    solve_ilp, solve_ilp_bounded, solve_ilp_bounded_with, solve_ilp_counted, BoundedIntLinProg,
+    IlpLimits, IlpStats, IntLinProg,
+};
 pub use simplex::{Cmp, LinProg, LpOutcome};

@@ -7,12 +7,20 @@
 //! Problem sizes here are small (the capacity ILP decouples per model —
 //! ≤ a few hundred rows), so a dense tableau is simpler and faster than a
 //! revised implementation.
+//!
+//! The production capacity path now runs on the bounded-variable stack in
+//! [`crate::opt::bounded`] (bounds in the tableau, warm starts); this
+//! solver is retained as the independent equivalence oracle it is tested
+//! against — keep the two implementations decoupled.
 
 /// Row comparison operator.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Cmp {
+    /// `a·x ≤ b`.
     Le,
+    /// `a·x ≥ b`.
     Ge,
+    /// `a·x = b`.
     Eq,
 }
 
@@ -30,8 +38,16 @@ pub struct LinProg {
 /// Solver outcome.
 #[derive(Debug, Clone, PartialEq)]
 pub enum LpOutcome {
-    Optimal { x: Vec<f64>, obj: f64 },
+    /// An optimal vertex was found.
+    Optimal {
+        /// Variable values (length `n`).
+        x: Vec<f64>,
+        /// Objective value `c·x`.
+        obj: f64,
+    },
+    /// No point satisfies the rows (with `x ≥ 0`).
     Infeasible,
+    /// The objective decreases without bound along a feasible ray.
     Unbounded,
 }
 
@@ -157,7 +173,9 @@ pub fn solve(lp: &LinProg) -> LpOutcome {
 
     let mut s_idx = n;
     let mut a_idx = n + n_slack;
-    let mut art_cols = Vec::with_capacity(n_art);
+    // Boolean column mask: O(1) artificial tests instead of scanning a
+    // Vec per row per phase.
+    let mut is_art = vec![false; ncols];
     for (r, (coeffs, cmp, rhs)) in lp.rows.iter().enumerate() {
         debug_assert!(coeffs.len() == n);
         let (sign, cmp, rhs) = if *rhs < 0.0 { (-1.0, flip(*cmp), -*rhs) } else { (1.0, *cmp, *rhs) };
@@ -176,13 +194,13 @@ pub fn solve(lp: &LinProg) -> LpOutcome {
                 s_idx += 1;
                 *tab.at_mut(r, a_idx) = 1.0;
                 tab.basis[r] = a_idx;
-                art_cols.push(a_idx);
+                is_art[a_idx] = true;
                 a_idx += 1;
             }
             Cmp::Eq => {
                 *tab.at_mut(r, a_idx) = 1.0;
                 tab.basis[r] = a_idx;
-                art_cols.push(a_idx);
+                is_art[a_idx] = true;
                 a_idx += 1;
             }
         }
@@ -191,13 +209,15 @@ pub fn solve(lp: &LinProg) -> LpOutcome {
     // Phase 1: minimize the sum of artificials.
     if n_art > 0 {
         let mut obj = vec![0.0; ncols];
-        for &c in &art_cols {
-            obj[c] = 1.0;
+        for (c, &art) in is_art.iter().enumerate() {
+            if art {
+                obj[c] = 1.0;
+            }
         }
         let mut obj_val = 0.0;
         // Price out initial basis (artificials start basic).
         for r in 0..m {
-            if art_cols.contains(&tab.basis[r]) {
+            if is_art[tab.basis[r]] {
                 for c in 0..ncols {
                     obj[c] -= tab.at(r, c);
                 }
@@ -206,16 +226,19 @@ pub fn solve(lp: &LinProg) -> LpOutcome {
         }
         match tab.run(&mut obj, obj_val, ncols) {
             Some(v) => {
+                // `run` maintains obj_val = −(phase-1 objective), so −v is
+                // the artificial mass left at the phase-1 optimum: any
+                // residual means no feasible point exists.
                 if -v > 1e-6 {
-                    // remaining artificial infeasibility (we minimized, the
-                    // run returns the shifted value; reconstruct below)
+                    return LpOutcome::Infeasible;
                 }
             }
             None => return LpOutcome::Infeasible,
         }
-        // Feasibility check: artificial basic vars must be ~0.
+        // Belt-and-braces: the basic artificial values must agree with
+        // the reduced objective (guards drift in the maintained obj_val).
         let art_sum: f64 = (0..m)
-            .filter(|&r| art_cols.contains(&tab.basis[r]))
+            .filter(|&r| is_art[tab.basis[r]])
             .map(|r| tab.at(r, ncols))
             .sum();
         if art_sum > 1e-6 {
@@ -223,7 +246,7 @@ pub fn solve(lp: &LinProg) -> LpOutcome {
         }
         // Drive remaining artificials out of the basis when possible.
         for r in 0..m {
-            if art_cols.contains(&tab.basis[r]) {
+            if is_art[tab.basis[r]] {
                 if let Some(c) = (0..n + n_slack).find(|&c| tab.at(r, c).abs() > EPS) {
                     tab.pivot(r, c);
                 }

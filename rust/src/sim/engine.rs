@@ -33,7 +33,7 @@ use crate::config::{
 };
 pub use crate::coordinator::autoscaler::Strategy;
 use crate::coordinator::autoscaler::{Autoscaler, ScaleCtx};
-use crate::coordinator::controller::{run_epoch, Telemetry};
+use crate::coordinator::controller::{run_epoch, SolverStates, Telemetry};
 use crate::coordinator::queue_manager::QueueManager;
 use crate::coordinator::router;
 use crate::coordinator::scheduler::SchedPolicy;
@@ -153,6 +153,8 @@ pub struct Simulation {
     events: EventQueue,
     autoscaler: Autoscaler,
     forecaster: Box<dyn Forecaster>,
+    /// Per-model ILP warm-start state, reused every control epoch.
+    solvers: SolverStates,
     end_time: Time,
     epoch_start: Time,
     tick_count: u64,
@@ -203,6 +205,11 @@ pub struct SimHandoff {
     pub autoscaler: Autoscaler,
     /// Forecaster state (AR model / PJRT executable handle).
     pub forecaster: Box<dyn Forecaster>,
+    /// Per-model ILP warm-start state.  Carried so a resumed chunk's
+    /// first control epoch re-solves warm exactly like the unchunked run
+    /// (the plan is identical either way — warm starts change pivot
+    /// counts, not answers — but carrying it keeps the perf contract).
+    pub solvers: SolverStates,
     /// Start time of the current control epoch.
     pub epoch_start: Time,
     /// ScaleTick counter (drives the 15-minute utilization sampling).
@@ -272,6 +279,7 @@ impl Simulation {
             events: EventQueue::new(),
             autoscaler,
             forecaster,
+            solvers: SolverStates::new(),
             end_time,
             epoch_start: 0.0,
             tick_count: 0,
@@ -439,6 +447,7 @@ impl Simulation {
             events,
             autoscaler,
             forecaster,
+            solvers,
             end_time: _,
             epoch_start,
             tick_count,
@@ -458,6 +467,7 @@ impl Simulation {
                 events,
                 autoscaler,
                 forecaster,
+                solvers,
                 epoch_start,
                 tick_count,
                 pending_retries,
@@ -482,6 +492,7 @@ impl Simulation {
             events: h.events,
             autoscaler: h.autoscaler,
             forecaster: h.forecaster,
+            solvers: h.solvers,
             end_time,
             epoch_start: h.epoch_start,
             tick_count: h.tick_count,
@@ -1125,6 +1136,7 @@ impl Simulation {
             &self.cluster.gpus,
             &self.cfg.scaling,
             &self.epoch_counts,
+            &mut self.solvers,
             self.now,
         );
         let mut ctx = ScaleCtx {

@@ -209,7 +209,7 @@ fn sku_aware_routing_no_worse_than_blind_on_mixed_fleet() {
 /// summed per-SKU allocation always matches the endpoint roster.
 #[test]
 fn k3_epoch_plans_align_with_fleet_axis() {
-    use sageserve::coordinator::controller::{run_epoch, Telemetry};
+    use sageserve::coordinator::controller::{run_epoch, SolverStates, Telemetry};
     use sageserve::forecast::SeasonalNaive;
     use sageserve::config::{Region, ScalingParams};
     use sageserve::perf::PerfTable;
@@ -229,7 +229,10 @@ fn k3_epoch_plans_align_with_fleet_axis() {
     let mut forecaster = SeasonalNaive::new(96, 4);
     // Dense per-SKU counts: one row per telemetry key, GpuKind::index order.
     let counts = vec![[1usize, 1, 1]; Region::ALL.len()];
-    let plan = run_epoch(&telemetry, &mut forecaster, &perf, &gpus, &params, &counts, 0.0);
+    let plan = run_epoch(
+        &telemetry, &mut forecaster, &perf, &gpus, &params, &counts,
+        &mut SolverStates::new(), 0.0,
+    );
     assert_eq!(plan.len(), 3, "one entry per region");
     for entry in &plan {
         assert_eq!(entry.deltas.len(), 3, "k=3 plans carry one delta per SKU");

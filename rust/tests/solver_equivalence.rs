@@ -1,0 +1,124 @@
+//! Equivalence oracle for the bounded-variable solver stack (§5).
+//!
+//! The dense two-phase simplex + row-based B&B predates the bounded
+//! rewrite and shares no tableau code with it, so agreement on randomized
+//! instances is a strong independent check.  Objectives are compared at
+//! `3e-4·|obj| + 1e-6`: both paths prune at a 1e-4 relative optimality
+//! gap, so each may legitimately stop within `gap·|opt|` of the optimum
+//! on opposite sides.
+
+use sageserve::opt::capacity::{
+    optimize_capacity, optimize_capacity_dense, optimize_capacity_warm, perturb_inputs,
+    synthetic_inputs, CapacityInputs, CapacityPlan, CapacitySolver,
+};
+
+fn agree(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 3e-4 * a.abs().max(b.abs()) + 1e-6
+}
+
+/// The executed allocation `current + δ` must satisfy every §5 row: the
+/// per-region floors, the global cover, and the per-variable bounds.
+fn assert_feasible(inp: &CapacityInputs, plan: &CapacityPlan) {
+    let r = inp.current.len();
+    let g = inp.tps_per_instance.len();
+    let x: Vec<Vec<f64>> = (0..r)
+        .map(|j| (0..g).map(|k| inp.current[j][k] + plan.deltas[j][k] as f64).collect())
+        .collect();
+    for j in 0..r {
+        let peak = inp.forecast_tps[j].iter().copied().fold(0.0, f64::max);
+        let cap: f64 = (0..g).map(|k| x[j][k] * inp.tps_per_instance[k]).sum();
+        assert!(
+            cap >= inp.epsilon * peak - 1e-6,
+            "region {j} floor violated: {cap} < {}",
+            inp.epsilon * peak
+        );
+        for k in 0..g {
+            assert!(x[j][k] >= inp.min_instances - 1e-6, "x[{j}][{k}] under floor");
+            assert!(x[j][k] <= inp.max_instances + 1e-6, "x[{j}][{k}] over cap");
+            assert!((x[j][k] - x[j][k].round()).abs() < 1e-6, "x[{j}][{k}] not integral");
+        }
+    }
+    let windows = inp.forecast_tps[0].len();
+    let global_peak = (0..windows)
+        .map(|w| (0..r).map(|j| inp.forecast_tps[j][w]).sum::<f64>())
+        .fold(0.0f64, f64::max);
+    let total: f64 =
+        (0..r).map(|j| (0..g).map(|k| x[j][k] * inp.tps_per_instance[k]).sum::<f64>()).sum();
+    assert!(total >= global_peak - 1e-6, "global cover violated: {total} < {global_peak}");
+}
+
+/// Randomized instances: the bounded path and the dense oracle must find
+/// plans of equal cost, and both plans must be feasible.
+#[test]
+fn randomized_instances_agree_with_dense_oracle() {
+    for (r, g) in [(3usize, 1usize), (3, 2), (5, 2), (6, 3)] {
+        for seed in 0..8u64 {
+            let inp = synthetic_inputs(r, g, seed * 1201 + 17);
+            let new = optimize_capacity(&inp)
+                .unwrap_or_else(|| panic!("bounded failed at r={r} g={g} seed={seed}"));
+            let old = optimize_capacity_dense(&inp)
+                .unwrap_or_else(|| panic!("dense failed at r={r} g={g} seed={seed}"));
+            assert!(
+                agree(new.objective, old.objective),
+                "objectives diverged at r={r} g={g} seed={seed}: \
+                 bounded {} vs dense {}",
+                new.objective,
+                old.objective
+            );
+            assert_feasible(&inp, &new);
+            assert_feasible(&inp, &old);
+        }
+    }
+}
+
+/// Epoch-over-epoch warm re-solves (rhs swap + dual simplex from the old
+/// basis) must match a from-scratch solve of the drifted instance.
+#[test]
+fn warm_resolves_match_cold_solves() {
+    for (r, g) in [(4usize, 1usize), (5, 2), (8, 3)] {
+        for seed in 0..4u64 {
+            let inp = synthetic_inputs(r, g, seed * 733 + 5);
+            let mut solver = CapacitySolver::new();
+            let first = optimize_capacity_warm(&inp, &mut solver).expect("first solve");
+            assert!(!first.warm, "first epoch must be cold");
+
+            let mut next = inp.clone();
+            let mut prev = first;
+            for epoch in 0..3 {
+                next = perturb_inputs(&next, &prev, 0.02);
+                let warm = optimize_capacity_warm(&next, &mut solver)
+                    .unwrap_or_else(|| panic!("warm epoch {epoch} failed"));
+                assert!(warm.warm, "epoch {epoch} should reuse state (r={r} g={g} seed={seed})");
+                let cold = optimize_capacity(&next).expect("cold reference");
+                assert!(
+                    agree(warm.objective, cold.objective),
+                    "warm/cold diverged at r={r} g={g} seed={seed} epoch={epoch}: \
+                     {} vs {}",
+                    warm.objective,
+                    cold.objective
+                );
+                assert_feasible(&next, &warm);
+                prev = warm;
+            }
+        }
+    }
+}
+
+/// The bounded branch-and-bound explores the same tree as the dense
+/// oracle (same branching rule, same incumbent seeding) minus the nodes
+/// it discards on the parent bound without a solve — so on any fixed
+/// instance its solved-node count never exceeds the oracle's.
+#[test]
+fn bounded_node_counts_never_exceed_dense() {
+    for (r, g, seed) in [(3usize, 1usize, 1u64), (3, 1, 2), (4, 2, 1), (4, 2, 3), (6, 2, 2)] {
+        let inp = synthetic_inputs(r, g, seed * 5077 + 11);
+        let new = optimize_capacity(&inp).expect("bounded");
+        let old = optimize_capacity_dense(&inp).expect("dense");
+        assert!(
+            new.nodes <= old.nodes,
+            "bounded explored {} nodes vs dense {} at r={r} g={g} seed={seed}",
+            new.nodes,
+            old.nodes
+        );
+    }
+}
