@@ -8,16 +8,16 @@
 
 CARGO_DIR := rust
 
-.PHONY: check verify build test bench bench-quick smoke-faults smoke-ilp timing docs clean
+.PHONY: check verify build test bench bench-quick smoke-faults smoke-ilp smoke-disagg timing docs clean
 
 check: build test bench-quick
 
 # The verify flow: tier-1 build + tests plus the bench smoke that
-# refreshes BENCH_sim.json (see PERF.md "Verify flow"), the fault-plane
-# and ILP-solver smokes (quick-mode `exp faults` / `exp ilp`), plus the
-# rustdoc gate (every public-surface doc link and `missing_docs` audit
-# must hold).
-verify: check smoke-faults smoke-ilp docs
+# refreshes BENCH_sim.json (see PERF.md "Verify flow"), the fault-plane,
+# ILP-solver and disaggregation smokes (quick-mode `exp faults` /
+# `exp ilp` / `exp disagg`), plus the rustdoc gate (every public-surface
+# doc link and `missing_docs` audit must hold).
+verify: check smoke-faults smoke-ilp smoke-disagg docs
 
 # Fault-plane smoke: the quick-mode fault ablation — 1-day trace, capped
 # scale — drives the kill/retry/failover/re-provision path end-to-end
@@ -33,12 +33,20 @@ smoke-faults:
 smoke-ilp:
 	cd $(CARGO_DIR) && SAGESERVE_EXP_QUICK=1 cargo run --release -- exp ilp --out ../results-smoke
 
+# Disaggregation smoke: the quick-mode unified-vs-disaggregated ablation
+# — 1-day trace, capped scale — drives the prefill/decode pools, the
+# KV-transfer handoff and the per-phase capacity solves end-to-end,
+# asserts handoff conservation and writes disagg_ablation.csv under
+# results-smoke/.
+smoke-disagg:
+	cd $(CARGO_DIR) && SAGESERVE_EXP_QUICK=1 cargo run --release -- exp disagg --out ../results-smoke
+
 # Rustdoc gate: broken intra-doc links, bad HTML in docs and missing
 # docs on the audited modules (config, perf, opt, coordinator::router,
 # coordinator::queue_manager, coordinator::autoscaler,
-# coordinator::controller, metrics, sim::cluster, sim::engine,
-# sim::chunked, sim::event, sim::instance, sim::faults — see lib.rs)
-# all fail the build.
+# coordinator::controller, coordinator::scheduler, metrics,
+# sim::cluster, sim::engine, sim::chunked, sim::event, sim::instance,
+# sim::faults, experiments — see lib.rs) all fail the build.
 docs:
 	cd $(CARGO_DIR) && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 

@@ -178,6 +178,38 @@ fn main() {
         report.insert("fault_injection_epoch".to_string(), Json::Obj(entry));
     }
 
+    // Disaggregated week: LT-UA with prefill/decode pools, the
+    // KV-transfer handoff and the paired per-phase capacity solves on a
+    // multi-day trace (1 day in quick mode).  Compared against the
+    // unified `simulate_lt-ua` entries this records the disaggregation
+    // machinery's simulation-throughput cost; a disabled `disagg` gate
+    // is bit-identical by `tests/disagg_equivalence.rs`, so only the
+    // enabled path can ever move.
+    {
+        use sageserve::config::DisaggParams;
+        let days = if quick_mode() { 1.0 } else { 7.0 };
+        let cfg = || SimConfig {
+            trace: TraceConfig { days, scale: 0.05, ..Default::default() },
+            strategy: Strategy::LtUa,
+            disagg: DisaggParams::enabled(),
+            ..Default::default()
+        };
+        let n_requests = TraceGenerator::new(cfg().trace.clone()).stream().count();
+        let result =
+            bench(&format!("simulate disagg week, {days} day(s) ({n_requests} reqs)"), iters, || {
+                run_simulation(cfg()).metrics.completed as usize
+            });
+        let reqs_per_sec = n_requests as f64 / (result.mean_ns / 1e9);
+        println!("    → {:.2} M simulated requests / wall-second\n", reqs_per_sec / 1e6);
+        let mut entry = BTreeMap::new();
+        entry.insert("n_requests".to_string(), Json::Num(n_requests as f64));
+        entry.insert("days".to_string(), Json::Num(days));
+        entry.insert("mean_ns".to_string(), Json::Num(result.mean_ns));
+        entry.insert("p50_ns".to_string(), Json::Num(result.p50_ns));
+        entry.insert("reqs_per_wall_sec".to_string(), Json::Num(reqs_per_sec));
+        report.insert("simulate_disagg_week".to_string(), Json::Obj(entry));
+    }
+
     // Metrics recording alone (the completion hot path): per-request
     // cost of the streaming accumulators — two histogram bucketings plus
     // O(1) cell updates, no outcome-log growth.

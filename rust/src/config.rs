@@ -560,6 +560,49 @@ impl Default for RoutingParams {
     }
 }
 
+/// Prefill/decode disaggregation parameters (ROADMAP item 2; the sageLLM
+/// / OServe spatial-temporal split).  When enabled, every endpoint's
+/// instances are partitioned into a prefill pool (sized against the TTFT
+/// target) and a decode pool (sized against the ITL target); a completed
+/// prefill hands its KV cache to a decode instance at an explicit
+/// per-SKU transfer cost.  When disabled — the default — every instance
+/// runs both phases (`Phase::Unified`) and **no disaggregation code path
+/// executes**, so disagg-off runs are bit-identical to the
+/// pre-disaggregation engine (guarded by `tests/disagg_equivalence.rs`,
+/// the PR-7 empty-`FaultPlan` pattern).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DisaggParams {
+    /// Master switch.  `false` (default) keeps the unified engine.
+    pub enabled: bool,
+    /// Initial fraction of each endpoint's instances assigned to the
+    /// prefill pool; the controller refines it each epoch from the
+    /// per-phase capacity solves.
+    pub prefill_fraction: f64,
+    /// TTFT target (seconds) that gates prefill-pool sizing.
+    pub ttft_target: Time,
+    /// Inter-token-latency target (seconds/token) that gates decode-pool
+    /// sizing.
+    pub itl_target: Time,
+}
+
+impl DisaggParams {
+    /// Disaggregation on, with the default pool split and SLO targets.
+    pub fn enabled() -> Self {
+        DisaggParams { enabled: true, ..DisaggParams::default() }
+    }
+}
+
+impl Default for DisaggParams {
+    fn default() -> Self {
+        DisaggParams {
+            enabled: false,
+            prefill_fraction: 0.35,
+            ttft_target: 1.0,
+            itl_target: 0.2,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -691,6 +734,20 @@ mod tests {
         );
         let custom = FleetSpec::parse("mi300:0.5,a100:0.5").unwrap();
         assert_eq!(custom.primary(), GpuKind::Mi300x8);
+    }
+
+    #[test]
+    fn disagg_defaults_are_off_and_targets_match_tier_slas() {
+        let d = DisaggParams::default();
+        assert!(!d.enabled);
+        assert!(d.prefill_fraction > 0.0 && d.prefill_fraction < 1.0);
+        // The TTFT target mirrors the IW-F SLA; ITL is a streaming
+        // smoothness target well under it.
+        assert_eq!(Some(d.ttft_target), Tier::IwF.ttft_sla());
+        assert!(d.itl_target < d.ttft_target);
+        let on = DisaggParams::enabled();
+        assert!(on.enabled);
+        assert_eq!(on.prefill_fraction, d.prefill_fraction);
     }
 
     #[test]

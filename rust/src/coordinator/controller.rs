@@ -18,7 +18,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::config::{GpuKind, ModelKind, Region, ScalingParams, Time};
+use crate::config::{DisaggParams, GpuKind, ModelKind, Region, ScalingParams, Time};
 use crate::experiments::sweep::sweep;
 use crate::forecast::Forecaster;
 use crate::opt::capacity::{optimize_capacity_warm, CapacityInputs, CapacitySolver};
@@ -243,13 +243,138 @@ fn run_epoch_impl(
     parallel: bool,
 ) -> EpochPlan {
     let keys = telemetry.keys().to_vec();
+    let history: Vec<Vec<f64>> = keys.iter().map(|&k| telemetry.history_tps(k, now)).collect();
+    let forecasts = forecaster.forecast(&history);
+    let theta = |m: ModelKind, k: GpuKind| perf.profile(m, k).input_tps_capacity();
+    // The ILP's lower bound applies per x_{j,k}; for a heterogeneous
+    // fleet that would force min_instances of *every* SKU in every
+    // region, so multi-SKU epochs bound at zero and rely on the
+    // executing layer's per-endpoint floor.
+    let min_instances = if gpus.len() == 1 { params.min_instances as f64 } else { 0.0 };
+    solve_epoch(
+        telemetry,
+        &keys,
+        &forecasts,
+        &theta,
+        gpus,
+        params,
+        current_counts,
+        solvers,
+        now,
+        min_instances,
+        params.max_instances as f64,
+        parallel,
+    )
+}
+
+/// Run the per-phase §5 solves for a disaggregated fleet: one capacity
+/// ILP sized by the TTFT-gated prefill throughput
+/// ([`crate::perf::PerfProfile::prefill_input_tps_capacity`]) over the
+/// prefill sub-fleet, and one sized by the ITL-gated decode throughput
+/// ([`crate::perf::PerfProfile::decode_input_tps_capacity`]) over the
+/// decode sub-fleet.  Both phases see the *same* forecast demand rows —
+/// every request is prefilled once and decoded once, so input-equivalent
+/// TPS is the common currency — and they share one GPU budget: prefill
+/// may claim at most `round(prefill_fraction · max_instances)` slots per
+/// endpoint, decode the remainder, each phase keeping at least one.
+///
+/// The forecast runs **once** (the [`Forecaster`] may be stateful); the
+/// two solves reuse it.  Each phase carries its own [`SolverStates`] so
+/// warm bases never cross phases (the θ columns differ, which would
+/// invalidate the factorization anyway).
+///
+/// Returns the merged per-SKU δ plan (prefill + decode deltas summed per
+/// (model, region, SKU) — the executing layer scales endpoints and the
+/// roster assigns phases) plus the **refined prefill fraction**: the
+/// share of the combined post-plan target that the prefill solve claimed,
+/// clamped to `[0.1, 0.9]`.  Callers feed it back into
+/// [`crate::sim::cluster::Cluster::set_disagg`]-managed state so future
+/// roster phase assignments track what the ILPs actually sized.
+#[allow(clippy::too_many_arguments)]
+pub fn run_epoch_disagg(
+    telemetry: &Telemetry,
+    forecaster: &mut dyn Forecaster,
+    perf: &PerfTable,
+    gpus: &[GpuKind],
+    params: &ScalingParams,
+    disagg: &DisaggParams,
+    prefill_counts: &[[usize; GpuKind::COUNT]],
+    decode_counts: &[[usize; GpuKind::COUNT]],
+    solvers_prefill: &mut SolverStates,
+    solvers_decode: &mut SolverStates,
+    now: Time,
+) -> (EpochPlan, f64) {
+    let keys = telemetry.keys().to_vec();
+    let history: Vec<Vec<f64>> = keys.iter().map(|&k| telemetry.history_tps(k, now)).collect();
+    let forecasts = forecaster.forecast(&history);
+    let max = params.max_instances as f64;
+    let max_prefill = (max * disagg.prefill_fraction).round().max(1.0).min((max - 1.0).max(1.0));
+    let max_decode = (max - max_prefill).max(1.0);
+    let min_instances = if gpus.len() == 1 { 1.0 } else { 0.0 };
+    let theta_p =
+        |m: ModelKind, k: GpuKind| perf.profile(m, k).prefill_input_tps_capacity(disagg.ttft_target);
+    let theta_d =
+        |m: ModelKind, k: GpuKind| perf.profile(m, k).decode_input_tps_capacity(disagg.itl_target);
+    let prefill = solve_epoch(
+        telemetry, &keys, &forecasts, &theta_p, gpus, params, prefill_counts,
+        solvers_prefill, now, min_instances, max_prefill, true,
+    );
+    let decode = solve_epoch(
+        telemetry, &keys, &forecasts, &theta_d, gpus, params, decode_counts,
+        solvers_decode, now, min_instances, max_decode, true,
+    );
+
+    // Merge positionally: both solves group the same telemetry keys by
+    // the same sorted model order, so entries align 1:1.
+    debug_assert_eq!(prefill.len(), decode.len());
+    let mut plan = EpochPlan::with_capacity(prefill.len());
+    for (p, d) in prefill.iter().zip(&decode) {
+        debug_assert_eq!((p.model, p.region), (d.model, d.region));
+        plan.push(EpochPlanEntry {
+            model: p.model,
+            region: p.region,
+            deltas: p.deltas.iter().zip(&d.deltas).map(|(&a, &b)| a + b).collect(),
+            forecast_tps: p.forecast_tps,
+        });
+    }
+
+    // Refined split: share of the combined post-plan target the prefill
+    // solve claimed.  Degenerate (empty) targets keep the configured
+    // fraction; the clamp keeps both phases alive at the roster layer.
+    let cur_p: i64 = prefill_counts.iter().flatten().map(|&c| c as i64).sum();
+    let cur_d: i64 = decode_counts.iter().flatten().map(|&c| c as i64).sum();
+    let target_p = (cur_p + prefill.iter().map(|e| e.delta_total()).sum::<i64>()).max(0) as f64;
+    let target_d = (cur_d + decode.iter().map(|e| e.delta_total()).sum::<i64>()).max(0) as f64;
+    let frac = if target_p + target_d > 0.0 {
+        (target_p / (target_p + target_d)).clamp(0.1, 0.9)
+    } else {
+        disagg.prefill_fraction
+    };
+    (plan, frac)
+}
+
+/// The shared solve core: forecasts already computed, θ supplied by the
+/// caller (unified vs per-phase capacities), instance bounds explicit.
+#[allow(clippy::too_many_arguments)]
+fn solve_epoch(
+    telemetry: &Telemetry,
+    keys: &[(ModelKind, Region)],
+    forecasts: &[Vec<f64>],
+    theta: &dyn Fn(ModelKind, GpuKind) -> f64,
+    gpus: &[GpuKind],
+    params: &ScalingParams,
+    current_counts: &[[usize; GpuKind::COUNT]],
+    solvers: &mut SolverStates,
+    now: Time,
+    min_instances: f64,
+    max_instances: f64,
+    parallel: bool,
+) -> EpochPlan {
     assert_eq!(
         current_counts.len(),
         keys.len(),
         "current_counts rows must align with telemetry keys"
     );
-    let history: Vec<Vec<f64>> = keys.iter().map(|&k| telemetry.history_tps(k, now)).collect();
-    let forecasts = forecaster.forecast(&history);
     let g = gpus.len();
 
     // Group per model (the ILP decouples across models).
@@ -285,10 +410,7 @@ fn run_epoch_impl(
                 .collect();
             let inputs = CapacityInputs {
                 current,
-                tps_per_instance: gpus
-                    .iter()
-                    .map(|&k| perf.profile(model, k).input_tps_capacity())
-                    .collect(),
+                tps_per_instance: gpus.iter().map(|&k| theta(model, k)).collect(),
                 forecast_tps,
                 vm_cost: gpus.iter().map(|&k| k.dollars_per_hour()).collect(),
                 start_cost: gpus
@@ -296,12 +418,8 @@ fn run_epoch_impl(
                     .map(|&k| k.dollars_per_hour() * (params.local_redeploy_secs / 3600.0))
                     .collect(),
                 epsilon: params.epsilon,
-                // The ILP's lower bound applies per x_{j,k}; for a
-                // heterogeneous fleet that would force min_instances of
-                // *every* SKU in every region, so multi-SKU epochs bound at
-                // zero and rely on the executing layer's per-endpoint floor.
-                min_instances: if g == 1 { params.min_instances as f64 } else { 0.0 },
-                max_instances: params.max_instances as f64,
+                min_instances,
+                max_instances,
             };
             ModelJob { model, inputs, region_order, peaks }
         })
@@ -359,7 +477,7 @@ fn run_epoch_impl(
                     let cur: i64 =
                         gpus.iter().map(|&k| current_counts[ki][k.index()] as i64).sum();
                     let mut deltas = vec![0i64; g];
-                    deltas[cheapest] = params.max_instances as i64 - cur;
+                    deltas[cheapest] = max_instances as i64 - cur;
                     plan.push(EpochPlanEntry {
                         model: job.model,
                         region: r,
@@ -503,6 +621,69 @@ mod tests {
         // H100 incumbents are not grown.
         assert!(east.deltas[1] >= 4, "A100 delta {}", east.deltas[1]);
         assert!(east.deltas[0] <= 0, "H100 delta {}", east.deltas[0]);
+    }
+
+    /// Single hot region, disaggregated epoch: the merged plan grows the
+    /// busy endpoint, respects the shared per-endpoint budget (the phase
+    /// caps sum to `max_instances`), and reports a usable refined split.
+    #[test]
+    fn disagg_epoch_sizes_both_phases_under_one_budget() {
+        let models = [ModelKind::Llama2_70B];
+        let mut telemetry = Telemetry::new(&models, 900.0);
+        let mut warm = BTreeMap::new();
+        for r in Region::ALL {
+            let tps = if r == Region::EastUs { 20_000.0 } else { 50.0 };
+            warm.insert((ModelKind::Llama2_70B, r), vec![tps; 192]);
+        }
+        telemetry.warmup(&warm);
+        let perf = PerfTable::new(GpuKind::H100x8, &models);
+        let params = ScalingParams::default();
+        let disagg = DisaggParams::enabled();
+        let mut forecaster = SeasonalNaive::new(96, 4);
+        let pre = vec![[1usize, 0, 0]; Region::ALL.len()];
+        let dec = vec![[1usize, 0, 0]; Region::ALL.len()];
+        let (plan, frac) = run_epoch_disagg(
+            &telemetry, &mut forecaster, &perf, &[GpuKind::H100x8], &params, &disagg,
+            &pre, &dec, &mut SolverStates::new(), &mut SolverStates::new(), 0.0,
+        );
+        assert_eq!(plan.len(), 3);
+        assert!((0.1..=0.9).contains(&frac), "refined fraction {frac}");
+        let east = plan.iter().find(|p| p.region == Region::EastUs).unwrap();
+        assert!(east.delta_total() > 0, "east delta {}", east.delta_total());
+        for e in &plan {
+            // One prefill + one decode incumbent per endpoint.
+            let total = 2 + e.delta_total();
+            assert!(total <= params.max_instances as i64, "{:?} total {total}", e.region);
+        }
+    }
+
+    /// A tighter ITL target shrinks per-instance decode throughput, so
+    /// the decode solve claims a (weakly) larger share of the budget.
+    #[test]
+    fn tighter_itl_target_shifts_budget_toward_decode() {
+        let models = [ModelKind::Llama2_70B];
+        let mut telemetry = Telemetry::new(&models, 900.0);
+        let mut warm = BTreeMap::new();
+        for r in Region::ALL {
+            warm.insert((ModelKind::Llama2_70B, r), vec![4_000.0; 192]);
+        }
+        telemetry.warmup(&warm);
+        let perf = PerfTable::new(GpuKind::H100x8, &models);
+        let params = ScalingParams::default();
+        let pre = vec![[1usize, 0, 0]; Region::ALL.len()];
+        let dec = vec![[1usize, 0, 0]; Region::ALL.len()];
+        let mut frac_for = |itl: f64| {
+            let disagg = DisaggParams { itl_target: itl, ..DisaggParams::enabled() };
+            let mut forecaster = SeasonalNaive::new(96, 4);
+            run_epoch_disagg(
+                &telemetry, &mut forecaster, &perf, &[GpuKind::H100x8], &params, &disagg,
+                &pre, &dec, &mut SolverStates::new(), &mut SolverStates::new(), 0.0,
+            )
+            .1
+        };
+        let loose = frac_for(0.5);
+        let tight = frac_for(0.05);
+        assert!(tight <= loose + 1e-9, "tight {tight} vs loose {loose}");
     }
 
     /// Multi-model telemetry for the fan-out tests: distinct demand per

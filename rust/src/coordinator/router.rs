@@ -297,6 +297,150 @@ pub fn route_instance_sku_aware(
     best_active.or(best_prov).map(|(_, i)| i)
 }
 
+/// Prefill-queue JSQ: instance selection for *admissions* on a
+/// disaggregated fleet.  Arrivals must land on prefill instances (the
+/// pool sized against the TTFT target), so this walks the endpoint's
+/// prefill roster — JSQ on pending tokens over tier-eligible active
+/// instances, provisioning ones as the fallback, exactly mirroring
+/// [`route_instance`]'s tie-breaks.  If the prefill roster has no
+/// eligible instance at all (e.g. every prefill VM crashed), the blind
+/// unified path decides so the request is not stranded; the engine
+/// records such degenerate completions without a handoff.
+///
+/// Never called when disaggregation is off — unified runs keep the
+/// existing code path untouched.
+pub fn route_instance_prefill(
+    cluster: &Cluster,
+    model: ModelKind,
+    region: Region,
+    tier: Tier,
+) -> Option<InstanceId> {
+    let ep = cluster.endpoints.get(&(model, region))?;
+    let mut best_active: Option<(u64, InstanceId)> = None;
+    let mut best_prov: Option<(u64, InstanceId)> = None;
+    for &i in &ep.prefill_instances {
+        let inst = &cluster.instances[i];
+        let eligible = if tier.is_interactive() {
+            inst.pool.serves_iw()
+        } else {
+            inst.pool.serves_niw()
+        };
+        if !eligible {
+            continue;
+        }
+        let slot = match inst.state {
+            InstState::Active => &mut best_active,
+            InstState::Provisioning { .. } => &mut best_prov,
+            _ => continue,
+        };
+        let key = inst.pending_tokens();
+        match slot {
+            Some((bk, _)) if *bk <= key => {}
+            _ => *slot = Some((key, i)),
+        }
+    }
+    best_active
+        .or(best_prov)
+        .map(|(_, i)| i)
+        .or_else(|| route_instance(cluster, model, region, tier))
+}
+
+/// Decode placement for a completed prefill: prefer the KV-transfer
+/// cheapest live decode instance.  Transfer cost is
+/// `tokens × kv_bytes_per_token / per-SKU transfer rate`, so within a
+/// region the fastest-transfer SKU wins (ties broken by JSQ on pending
+/// tokens); regions are tried in preference order from the prefill
+/// region — an intra-region transfer always beats paying the
+/// inter-region hop.  Headroom-free instances are skipped on the first
+/// pass; if no live decode instance anywhere has headroom the prefill
+/// region's blind decode JSQ decides, and `None` is returned only when
+/// no live region holds any admitting decode instance (the engine then
+/// re-arms the handoff and retries after a backoff).
+pub fn route_instance_decode(
+    cluster: &Cluster,
+    params: &RoutingParams,
+    model: ModelKind,
+    from_region: Region,
+    tier: Tier,
+    input_tokens: u64,
+) -> Option<InstanceId> {
+    let eligible = |inst: &crate::sim::instance::InstanceSim| {
+        if tier.is_interactive() {
+            inst.pool.serves_iw()
+        } else {
+            inst.pool.serves_niw()
+        }
+    };
+    // Pass 1: cheapest transfer among headroom instances, nearest region
+    // first.
+    for r in preference_order(from_region) {
+        if !cluster.region_available(r) {
+            continue;
+        }
+        let Some(ep) = cluster.endpoints.get(&(model, r)) else {
+            continue;
+        };
+        // (transfer time, pending tokens) lexicographic minimum; strict
+        // `<` keeps the first minimum, matching the JSQ tie-break.
+        let mut best: Option<(f64, u64, InstanceId)> = None;
+        for &i in &ep.decode_instances {
+            let inst = &cluster.instances[i];
+            if inst.state != InstState::Active || !eligible(inst) {
+                continue;
+            }
+            let occupied = inst.kv_used + inst.waiting_tokens();
+            if (occupied as f64) >= params.sku_headroom_util * inst.kv_capacity as f64 {
+                continue;
+            }
+            let cost = cluster.perf.profile(model, inst.gpu).kv_transfer_time(input_tokens);
+            let pending = inst.pending_tokens();
+            let better = match best {
+                Some((bc, bp, _)) => cost < bc || (cost == bc && pending < bp),
+                None => true,
+            };
+            if better {
+                best = Some((cost, pending, i));
+            }
+        }
+        if let Some((_, _, i)) = best {
+            return Some(i);
+        }
+    }
+    // Pass 2: every decode instance is past the headroom fraction —
+    // blind JSQ over live decode rosters, nearest region first, active
+    // before provisioning (work queues until capacity frees up).
+    for r in preference_order(from_region) {
+        if !cluster.region_available(r) {
+            continue;
+        }
+        let Some(ep) = cluster.endpoints.get(&(model, r)) else {
+            continue;
+        };
+        let mut best_active: Option<(u64, InstanceId)> = None;
+        let mut best_prov: Option<(u64, InstanceId)> = None;
+        for &i in &ep.decode_instances {
+            let inst = &cluster.instances[i];
+            if !eligible(inst) {
+                continue;
+            }
+            let slot = match inst.state {
+                InstState::Active => &mut best_active,
+                InstState::Provisioning { .. } => &mut best_prov,
+                _ => continue,
+            };
+            let key = inst.pending_tokens();
+            match slot {
+                Some((bk, _)) if *bk <= key => {}
+                _ => *slot = Some((key, i)),
+            }
+        }
+        if let Some((_, i)) = best_active.or(best_prov) {
+            return Some(i);
+        }
+    }
+    None
+}
+
 /// Failover routing for a retried (killed) request.  Like
 /// [`route_region_sku_aware`], but with the fault plane in view:
 ///

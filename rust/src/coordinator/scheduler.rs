@@ -4,11 +4,6 @@
 //! admits in that order until GPU memory is exhausted.  `d_r` is the
 //! remaining time to the request's TTFT deadline (negative = expired).
 
-// Rustdoc debt: public surface not yet audited for `missing_docs`
-// (PR 4 audited config, perf, coordinator::router and sim::cluster);
-// drop this allow once every pub item here is documented.
-#![allow(missing_docs)]
-
 use crate::config::{Tier, Time};
 use crate::trace::types::Request;
 

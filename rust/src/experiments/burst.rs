@@ -11,6 +11,7 @@ use crate::experiments::{print_table, ExpOptions};
 use crate::sim::engine::{SimConfig, Strategy};
 use crate::trace::generator::TraceConfig;
 
+/// Run the burst-management ablation and write `fig16a_burst.csv`.
 pub fn fig16a(opts: &ExpOptions) -> Result<()> {
     let strategies = [Strategy::LtI, Strategy::LtU, Strategy::LtUa];
     let cfgs: Vec<SimConfig> = strategies

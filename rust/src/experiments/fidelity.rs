@@ -21,6 +21,8 @@ const VARIANTS: [(usize, usize); 3] = [(32, 64), (64, 128), (128, 256)];
 const REPEATS: usize = 7;
 const DECODE_STEPS: usize = 36;
 
+/// Measure prefill/decode runtime fidelity against the linear cost
+/// model and write the fig9 CSVs.
 pub fn fig9(opts: &ExpOptions) -> Result<()> {
     let mut prefill_pts: Vec<(f64, f64)> = Vec::new(); // (S·B tokens, secs)
     let mut decode_pts: Vec<(f64, f64)> = Vec::new(); // (M, secs)

@@ -56,6 +56,8 @@ pub fn sweep_rows() -> Vec<(&'static str, &'static str, FleetSpec, bool)> {
     rows
 }
 
+/// Run the heterogeneous-fleet sweep (homogeneous baselines vs mixed
+/// fleets, SKU-aware vs SKU-blind routing) and write `hetero_fleet.csv`.
 pub fn hetero(opts: &ExpOptions) -> Result<()> {
     let grid = sweep_rows();
     let cfgs: Vec<SimConfig> = grid

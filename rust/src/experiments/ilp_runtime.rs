@@ -35,6 +35,8 @@ fn quick_mode() -> bool {
     std::env::var("SAGESERVE_EXP_QUICK").map_or(false, |v| !v.is_empty() && v != "0")
 }
 
+/// Time the capacity ILP across problem sizes (Table: solver runtime)
+/// and write `ilp_runtime.csv`.
 pub fn solver_table(opts: &ExpOptions) -> Result<()> {
     let full: &[(usize, usize, usize)] =
         &[(4, 3, 1), (8, 6, 2), (12, 10, 3), (20, 20, 5), (20, 20, 10)];

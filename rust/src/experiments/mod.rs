@@ -7,22 +7,31 @@
 //! the *shape* — who wins, by roughly what factor — is the reproduction
 //! target, and EXPERIMENTS.md records paper-vs-measured for each.
 
-// Rustdoc debt: public surface not yet audited for `missing_docs`
-// (PR 4 audited config, perf, coordinator::router and sim::cluster);
-// drop this allow once every pub item here is documented.
-#![allow(missing_docs)]
-
+/// §7.2.7 / Fig 16a — burst management under synthetic traffic spikes.
 pub mod burst;
+/// §7.1 workload characterization figures (Figs 1–6, 10).
 pub mod characterization;
+/// Unified vs prefill/decode-disaggregated fleets at equal SLO targets.
+pub mod disagg;
+/// Fault-plane ablation: outages and spot shocks across strategies.
 pub mod faults;
+/// Fig 9 — runtime fidelity of the linear prefill/decode cost model.
 pub mod fidelity;
+/// Heterogeneous-fleet sweep: mixed SKUs, SKU-aware vs blind routing.
 pub mod hetero;
+/// Capacity-ILP solver runtime table and forecast-accuracy check.
 pub mod ilp_runtime;
+/// 30-day chunked-engine run (dispatchable, not part of `exp all`).
 pub mod month;
+/// §7.2.5 / Fig 14 — five-model scalability check.
 pub mod scalability;
+/// §6.5 / Fig 15 — instance-level scheduling policy comparison.
 pub mod scheduling;
+/// Main strategy comparisons (Fig 8 / Table 1, Figs 11–13, ablations).
 pub mod strategies;
+/// Shared run infrastructure: trace sharing and the parallel sweep runner.
 pub mod sweep;
+/// §7.2.8 / Fig 16b — week-long strategy comparison.
 pub mod week;
 
 use anyhow::{Context, Result};
@@ -32,12 +41,15 @@ use std::path::PathBuf;
 /// Common experiment options (CLI-provided).
 #[derive(Debug, Clone)]
 pub struct ExpOptions {
+    /// Directory the CSV outputs are written into.
     pub out_dir: PathBuf,
     /// Trace volume multiplier (1.0 = paper scale, ≈10 M req/day).
     pub scale: f64,
     /// Use the PJRT forecaster artifact instead of the native replica.
     pub pjrt: bool,
+    /// Directory holding compiled runtime artifacts (PJRT executables).
     pub artifacts_dir: String,
+    /// Trace-generator seed shared by every run of an experiment.
     pub seed: u64,
 }
 
@@ -56,6 +68,8 @@ impl Default for ExpOptions {
 }
 
 impl ExpOptions {
+    /// Write `name` under the out-dir with the given header and rows;
+    /// returns the path written.
     pub fn csv(&self, name: &str, header: &str, rows: &[String]) -> Result<PathBuf> {
         std::fs::create_dir_all(&self.out_dir)
             .with_context(|| format!("create {}", self.out_dir.display()))?;
@@ -105,6 +119,10 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
         // region outage + spot shock × 3 strategies; `SAGESERVE_EXP_QUICK=1`
         // shrinks it to the `make verify` smoke run.
         "faults" => faults::faults(opts),
+        // Unified vs prefill/decode-disaggregated fleets at equal SLO
+        // targets; `SAGESERVE_EXP_QUICK=1` shrinks it to the `make
+        // verify` smoke run (`smoke-disagg`).
+        "disagg" => disagg::disagg(opts),
         "all" => {
             // fig11/12/13 share one run; dedup here.
             let mut seen_strategies = false;

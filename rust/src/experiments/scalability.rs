@@ -8,6 +8,7 @@ use crate::experiments::{print_table, ExpOptions};
 use crate::sim::engine::{run_simulation, SimConfig, Strategy};
 use crate::trace::generator::TraceConfig;
 
+/// Run the five-model scalability check and write `fig14_scalability.csv`.
 pub fn fig14(opts: &ExpOptions) -> Result<()> {
     let mut table = Vec::new();
     let mut rows = Vec::new();

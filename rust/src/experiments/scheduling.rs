@@ -13,6 +13,8 @@ fn sageserve_scaling_default() -> crate::config::ScalingParams {
     crate::config::ScalingParams::default()
 }
 
+/// Compare the four instance-level scheduling policies (§6.5) and
+/// write `fig15_scheduling.csv`.
 pub fn fig15(opts: &ExpOptions) -> Result<()> {
     let policies: [(&str, SchedPolicy); 4] = [
         ("fcfs", SchedPolicy::Fcfs),

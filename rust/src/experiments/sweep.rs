@@ -74,9 +74,13 @@ where
 /// Everything the experiment reports read from a finished simulation,
 /// detached from the `Simulation` so it can cross threads.
 pub struct RunResult {
+    /// Strategy the run executed under.
     pub strategy: Strategy,
+    /// Trace end time (seconds) — the ledger-integration cutoff.
     pub end_time: f64,
+    /// Full streaming metrics accumulator of the finished run.
     pub metrics: Metrics,
+    /// Models the run served (drives per-model report rows).
     pub models: Vec<ModelKind>,
 }
 

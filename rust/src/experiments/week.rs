@@ -11,6 +11,7 @@ use crate::experiments::{print_table, ExpOptions};
 use crate::sim::engine::{SimConfig, Strategy};
 use crate::trace::generator::TraceConfig;
 
+/// Run the week-long strategy comparison and write `fig16b_week.csv`.
 pub fn fig16b(opts: &ExpOptions) -> Result<()> {
     let strategies = [Strategy::Reactive, Strategy::LtU, Strategy::LtUa];
     let cfgs: Vec<SimConfig> = strategies

@@ -27,9 +27,10 @@
 // `#![allow(missing_docs)]` with a debt note — drop those as they are
 // documented.  config, perf, opt (bounded, ilp, simplex, capacity),
 // coordinator::router, coordinator::queue_manager,
-// coordinator::autoscaler, coordinator::controller, sim::cluster,
-// sim::engine, sim::chunked, sim::event, sim::instance, sim::faults and
-// metrics are fully documented.
+// coordinator::autoscaler, coordinator::controller,
+// coordinator::scheduler, sim::cluster, sim::engine, sim::chunked,
+// sim::event, sim::instance, sim::faults, metrics and experiments are
+// fully documented.
 #![warn(missing_docs)]
 
 pub mod config;

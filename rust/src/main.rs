@@ -8,6 +8,7 @@
 //!                    [--fleet SPEC] [--routing sku-aware|blind]
 //!                    [--metrics streaming|exact] [--pjrt] [--faults PLAN]
 //!                    [--chunked] [--chunk-epochs N] [--chunk-workers N]
+//!                    [--disagg] [--ttft-target S] [--itl-target S]
 //! sageserve serve [--requests N] [--max-new N] [--artifacts DIR]
 //! sageserve trace --out FILE [--days F] [--scale F] [--epoch E]
 //! sageserve selftest [--artifacts DIR]
@@ -38,7 +39,7 @@ fn main() {
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     let mut pos = Vec::new();
     let mut flags = HashMap::new();
-    let bools = ["--pjrt", "--chunked"];
+    let bools = ["--pjrt", "--chunked", "--disagg"];
     let mut i = 0;
     while i < args.len() {
         let a = &args[i];
@@ -155,6 +156,15 @@ fn dispatch(args: &[String]) -> Result<()> {
             }
             if let Some(t) = f("replay") {
                 cfg.replay_trace = Some(t.into());
+            }
+            if flags.contains_key("disagg") {
+                cfg.disagg = sageserve::config::DisaggParams::enabled();
+            }
+            if let Some(t) = f("ttft-target") {
+                cfg.disagg.ttft_target = t.parse().with_context(|| format!("--ttft-target {t}"))?;
+            }
+            if let Some(t) = f("itl-target") {
+                cfg.disagg.itl_target = t.parse().with_context(|| format!("--itl-target {t}"))?;
             }
             if let Some(spec) = f("faults") {
                 cfg.faults = sageserve::sim::FaultPlan::parse(&spec).with_context(|| {
@@ -289,6 +299,21 @@ fn report_simulation(sim: &sageserve::sim::engine::Simulation) {
         sim.metrics.scaling_waste.total_events(),
         sim.metrics.spot_hours(end),
     );
+    // Disaggregation accounting (all-zero — and silent — on unified runs).
+    if sim.metrics.handoffs > 0 {
+        println!(
+            "  disagg: {} handoffs ({} admitted, {} dropped), {:.1}s KV transfer; \
+             TTFT attainment {:.2}% @ {:.2}s, ITL attainment {:.2}% @ {:.3}s",
+            sim.metrics.handoffs,
+            sim.metrics.handoff_admissions,
+            sim.metrics.handoff_drops,
+            sim.metrics.kv_transfer_secs,
+            sim.metrics.ttft_attainment(sim.cfg.disagg.ttft_target) * 100.0,
+            sim.cfg.disagg.ttft_target,
+            sim.metrics.itl_attainment(sim.cfg.disagg.itl_target) * 100.0,
+            sim.cfg.disagg.itl_target,
+        );
+    }
     // Failure accounting (all-zero — and silent — on fault-free runs).
     let fails = &sim.metrics.failures;
     if fails.killed_total() + fails.lost_total() + fails.shed_total() > 0 {
@@ -338,6 +363,7 @@ USAGE:
       [--routing sku-aware|blind] [--metrics streaming|exact]
       [--pjrt] [--replay trace.csv] [--faults PLAN]
       [--chunked] [--chunk-epochs N] [--chunk-workers N]
+      [--disagg] [--ttft-target S] [--itl-target S]
       (--fleet picks the GPU fleet; mixed fleets report per-SKU GPU-hours,
        on-demand cost, spot revenue and net cost; --routing toggles
        per-request SKU affinity — see also `exp hetero`; --metrics exact
@@ -347,7 +373,10 @@ USAGE:
        peak memory O(chunk), results bit-identical to the default engine;
        --faults injects a deterministic fault schedule, `;`-separated
        clauses: region-dark=centralus@2d-2.5d, degrade=eastus@1d-2d:0.5,
-       spot-shock=0.6@3d, crash=1.0, retry=1s/60s/5 — see `exp faults`)
+       spot-shock=0.6@3d, crash=1.0, retry=1s/60s/5 — see `exp faults`;
+       --disagg splits each endpoint into prefill/decode pools with an
+       explicit KV-cache handoff, sized per control epoch against the
+       TTFT/ITL targets — see `exp disagg`)
   sageserve serve [--requests N] [--max-new N] [--artifacts DIR]
       real batched inference on the AOT transformer via PJRT
   sageserve trace --out FILE [--days F] [--scale F] [--epoch E] [--seed N]

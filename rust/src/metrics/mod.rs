@@ -72,6 +72,10 @@ pub struct RequestOutcome {
     pub ttft: Time,
     /// End-to-end latency, seconds.
     pub e2e: Time,
+    /// Mean inter-token latency over the streamed decode, seconds:
+    /// `(e2e − ttft) / max(1, output_tokens − 1)`.  Zero-gap requests
+    /// (single-token outputs) report 0.
+    pub itl: Time,
     /// Arrival time, seconds since simulation start.
     pub arrival: Time,
     /// Prompt length, tokens.
@@ -138,10 +142,16 @@ pub struct GroupCell {
     pub sum_ttft: f64,
     /// Sum of end-to-end latencies, seconds.
     pub sum_e2e: f64,
+    /// Sum of per-request mean inter-token latencies, seconds.
+    pub sum_itl: f64,
     /// TTFT distribution.
     pub ttft: LatencyHistogram,
     /// End-to-end latency distribution.
     pub e2e: LatencyHistogram,
+    /// Inter-token latency distribution (per-request decode-stream
+    /// means) — the streaming-SLO axis disaggregated decode sizing is
+    /// gated on.
+    pub itl: LatencyHistogram,
 }
 
 impl GroupCell {
@@ -150,8 +160,10 @@ impl GroupCell {
         self.violations += other.violations;
         self.sum_ttft += other.sum_ttft;
         self.sum_e2e += other.sum_e2e;
+        self.sum_itl += other.sum_itl;
         self.ttft.merge(&other.ttft);
         self.e2e.merge(&other.e2e);
+        self.itl.merge(&other.itl);
     }
 }
 
@@ -684,6 +696,18 @@ pub struct Metrics {
     pub scaling_waste: ScalingWasteLedger,
     /// Dropped/unserved requests (should stay 0 in healthy runs).
     pub dropped: u64,
+    /// Prefill→decode handoffs initiated (disaggregated runs only; stays
+    /// 0 in unified runs, preserving bit-identity with them).
+    pub handoffs: u64,
+    /// Handoffs admitted to a decode instance (the rest were either
+    /// still in flight at cutoff or dropped).
+    pub handoff_admissions: u64,
+    /// Handoffs abandoned because no live decode instance ever admitted
+    /// them.
+    pub handoff_drops: u64,
+    /// Total KV-cache migration time paid by handoffs, seconds — the
+    /// explicit disaggregation tax (`exp disagg`'s overhead column).
+    pub kv_transfer_secs: f64,
     /// Fault-plane failure accounting (all-zero without a fault plan).
     pub failures: FailureStats,
     /// Whole-run cells, dense `[model][tier][region]`; empty until the
@@ -719,6 +743,10 @@ impl Metrics {
             spot_instances_by_gpu: BTreeMap::new(),
             scaling_waste: ScalingWasteLedger::default(),
             dropped: 0,
+            handoffs: 0,
+            handoff_admissions: 0,
+            handoff_drops: 0,
+            kv_transfer_secs: 0.0,
             failures: FailureStats::default(),
             cells: Vec::new(),
             bins: Vec::new(),
@@ -748,6 +776,12 @@ impl Metrics {
         };
         self.completed += 1;
         let (m, t, r) = (req.model.index(), req.tier.index(), region.index());
+        // Per-request mean inter-token latency: the decode stream emits
+        // `output_tokens − 1` gaps after the first token.  Computed the
+        // same way in unified and disaggregated runs, so the histograms
+        // stay comparable (and bit-identical for identical outcomes).
+        let gaps = req.output_tokens.saturating_sub(1).max(1);
+        let itl = ((e2e - ttft) / gaps as f64).max(0.0);
         // Bucket each latency once; both the whole-run and the binned
         // histogram reuse the index.
         let tb = bucket_of(ttft);
@@ -763,8 +797,10 @@ impl Metrics {
         }
         cell.sum_ttft += ttft;
         cell.sum_e2e += e2e;
+        cell.sum_itl += itl;
         cell.ttft.record_at(tb, ttft);
         cell.e2e.record_at(eb, e2e);
+        cell.itl.record(itl);
 
         if self.bins.is_empty() {
             self.bins.resize_with(MODELS * REGIONS, Vec::new);
@@ -793,6 +829,7 @@ impl Metrics {
                 region,
                 ttft,
                 e2e,
+                itl,
                 arrival: req.arrival,
                 input_tokens: req.input_tokens,
                 output_tokens: req.output_tokens,
@@ -880,6 +917,46 @@ impl Metrics {
     /// `exp hetero` SLA-attainment cell).
     pub fn interactive_latency(&self) -> LatencySummary {
         self.summarize_cells(|_, t, _| t.is_interactive())
+    }
+
+    /// Fold one histogram axis over the interactive whole-run cells.
+    fn fold_iw_hist(&self, pick: impl Fn(&GroupCell) -> &LatencyHistogram) -> LatencyHistogram {
+        let mut h = LatencyHistogram::default();
+        if self.cells.is_empty() {
+            return h;
+        }
+        for mi in 0..MODELS {
+            for (ti, tier) in Tier::ALL.iter().enumerate() {
+                if !tier.is_interactive() {
+                    continue;
+                }
+                for ri in 0..REGIONS {
+                    h.merge(pick(&self.cells[(mi * TIERS + ti) * REGIONS + ri]));
+                }
+            }
+        }
+        h
+    }
+
+    /// Fraction of interactive completions whose TTFT met `target`
+    /// (bucket-granular, see [`LatencyHistogram::fraction_leq`]); 1.0
+    /// with no interactive traffic.  The prefill-sizing attainment
+    /// column of `exp disagg`.
+    pub fn ttft_attainment(&self, target: Time) -> f64 {
+        self.fold_iw_hist(|c| &c.ttft).fraction_leq(target)
+    }
+
+    /// Fraction of interactive completions whose mean inter-token
+    /// latency met `target`; 1.0 with no interactive traffic.  The
+    /// decode-sizing attainment column of `exp disagg`.
+    pub fn itl_attainment(&self, target: Time) -> f64 {
+        self.fold_iw_hist(|c| &c.itl).fraction_leq(target)
+    }
+
+    /// 95th-percentile interactive inter-token latency, seconds
+    /// (histogram-derived, ≤ ~3.7 % relative error).
+    pub fn itl_p95(&self) -> f64 {
+        self.fold_iw_hist(|c| &c.itl).percentile(95.0)
     }
 
     /// Every non-empty (model, tier) latency summary — one stack fold
@@ -1115,6 +1192,10 @@ impl Metrics {
         );
         self.completed += other.completed;
         self.dropped += other.dropped;
+        self.handoffs += other.handoffs;
+        self.handoff_admissions += other.handoff_admissions;
+        self.handoff_drops += other.handoff_drops;
+        self.kv_transfer_secs += other.kv_transfer_secs;
         self.failures.merge(&other.failures);
         self.outcomes.extend(other.outcomes.iter().cloned());
         if !other.cells.is_empty() {
@@ -1258,6 +1339,26 @@ mod tests {
         assert_eq!(m.completed, 2);
         // Streaming mode keeps no outcome log.
         assert!(m.outcomes.is_empty());
+    }
+
+    #[test]
+    fn itl_and_attainment_accounting() {
+        let mut m = Metrics::new(MetricsConfig { mode: MetricsMode::Exact, bin: 900.0 });
+        // 10 output tokens ⇒ 9 gaps; e2e − ttft = 0.9 ⇒ itl = 0.1.
+        let r = req(0, 0.0, ModelKind::Llama2_70B, Tier::IwF);
+        m.record_outcome(&r, Region::EastUs, 0.5, 1.4);
+        assert!((m.outcomes[0].itl - 0.1).abs() < 1e-12);
+        // A second request with a slow decode stream: itl = 0.5.
+        m.record_outcome(&r, Region::EastUs, 0.5, 5.0);
+        // Attainment is bucket-granular: a 0.2 s target keeps only the
+        // 0.1 s request.
+        assert!((m.itl_attainment(0.2) - 0.5).abs() < 1e-9);
+        assert_eq!(m.itl_attainment(10.0), 1.0);
+        assert_eq!(m.ttft_attainment(1.0), 1.0);
+        assert!(m.itl_p95() > 0.4);
+        // No interactive traffic: attainment is vacuously perfect.
+        assert_eq!(Metrics::default().itl_attainment(0.2), 1.0);
+        assert_eq!(Metrics::default().ttft_attainment(1.0), 1.0);
     }
 
     #[test]

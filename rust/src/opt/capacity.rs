@@ -594,17 +594,23 @@ mod tests {
     }
 
     #[test]
-    fn paper_scale_solves_quickly() {
+    fn paper_scale_solves_within_pivot_budget() {
         // §5: l=20, r=20, g=5 took 33 s with a commercial solver.  The
-        // bounded-variable stack must clear the 20-model batch in a small
-        // fraction of that even in debug builds (see benches for release
-        // numbers; the pre-overhaul bound here was 30 s).
-        let mut total = 0.0;
+        // old assertion here bounded summed wall-clock (< 3 s), which
+        // flaked on loaded CI machines; pivots and B&B nodes measure the
+        // same algorithmic work deterministically, so budget those
+        // instead.  Wall-clock lives in benches/ilp_solver.rs and
+        // PERF.md, where variance is expected and tracked, not asserted.
+        let (mut pivots, mut nodes) = (0u64, 0usize);
         for model in 0..20u64 {
             let inp = synthetic_inputs(20, 5, model);
             let plan = optimize_capacity(&inp).expect("solvable");
-            total += plan.solve_time;
+            assert!(plan.pivots < 50_000, "model {model}: {} pivots", plan.pivots);
+            assert!(plan.nodes < 2_000, "model {model}: {} B&B nodes", plan.nodes);
+            pivots += plan.pivots;
+            nodes += plan.nodes;
         }
-        assert!(total < 3.0, "20-model solve took {total}s");
+        assert!(pivots < 400_000, "20-model batch took {pivots} pivots");
+        assert!(nodes < 16_000, "20-model batch explored {nodes} nodes");
     }
 }

@@ -179,7 +179,69 @@ impl PerfProfile {
         self.prefill_time(input as u64)
             + output as f64 * self.decode_iter_time(batch.max(1), kv_tokens)
     }
+
+    /// Interconnect bandwidth available for prefill→decode KV-cache
+    /// migration, bytes/sec per SKU (NVLink/IB-class fabrics; the H100
+    /// generation ships the fastest links, the A100 half that, the MI300
+    /// class in between).
+    pub fn kv_transfer_bytes_per_sec(&self) -> f64 {
+        match self.gpu {
+            GpuKind::H100x8 => 50.0e9,
+            GpuKind::A100x8 => 25.0e9,
+            GpuKind::Mi300x8 => 40.0e9,
+        }
+    }
+
+    /// Time to migrate a request's prompt KV cache from a prefill
+    /// instance to a decode instance: a fixed per-transfer setup plus
+    /// `tokens × kv_bytes_per_token` over the SKU's migration bandwidth.
+    /// This is the explicit disaggregation tax — the router minimizes it
+    /// when placing decode work, and the metrics layer accounts every
+    /// second of it under `kv_transfer_secs`.
+    pub fn kv_transfer_time(&self, tokens: u64) -> Time {
+        KV_TRANSFER_SETUP
+            + tokens as f64 * self.kv_bytes_per_token as f64 / self.kv_transfer_bytes_per_sec()
+    }
+
+    /// θ for a **prefill-only** instance under a TTFT target, in input
+    /// TPS.  Prefill is compute-bound and effectively serial per batch,
+    /// so the raw rate is `REF_INPUT / prefill_time(REF_INPUT)`; the
+    /// sustainable utilization is gated by queueing: keeping the wait
+    /// under the TTFT budget needs `ρ ≤ 1 − service/target` (the M/D/1
+    /// wait `service·ρ/(1−ρ)` stays under `target − service` there),
+    /// clamped into `[0.1, CAPACITY_HEADROOM]` so θ never exceeds the
+    /// fleet-wide planning headroom and never degenerates to zero.
+    pub fn prefill_input_tps_capacity(&self, ttft_target: Time) -> f64 {
+        let service = self.prefill_time(REF_INPUT_TOKENS);
+        let rho = (1.0 - service / ttft_target.max(service)).clamp(0.1, CAPACITY_HEADROOM);
+        rho * REF_INPUT_TOKENS as f64 / service
+    }
+
+    /// θ for a **decode-only** instance under an ITL target, expressed in
+    /// *input-equivalent* TPS (the §5 demand currency).  The ITL target
+    /// caps the continuous-batching depth — the largest `b` whose
+    /// iteration time stays inside the target at reference KV residency —
+    /// and the resulting output token rate converts to input TPS via the
+    /// reference mix, derated by the planning headroom.
+    pub fn decode_input_tps_capacity(&self, itl_target: Time) -> f64 {
+        let kv_mib_per_seq = (REF_TOTAL_TOKENS / 2) as f64 * self.kv_bytes_per_token as f64
+            / (1u64 << 20) as f64;
+        let per_seq = self.tbt_per_seq + self.tbt_per_kv_mib * kv_mib_per_seq;
+        let b = if itl_target > self.tbt_base + per_seq {
+            ((itl_target - self.tbt_base) / per_seq) as usize
+        } else {
+            1
+        };
+        let b = b.clamp(1, self.max_concurrency());
+        let iter = self.decode_iter_time(b, b as u64 * REF_TOTAL_TOKENS / 2);
+        let out_tps = b as f64 / iter;
+        CAPACITY_HEADROOM * out_tps * REF_INPUT_TOKENS as f64 / REF_OUTPUT_TOKENS as f64
+    }
 }
+
+/// Fixed per-transfer setup cost of a KV-cache migration (connection +
+/// layout negotiation), sec.
+pub const KV_TRANSFER_SETUP: Time = 0.002;
 
 /// Profile table for a simulation run: one [`PerfProfile`] per
 /// (model, GPU SKU) pair in the fleet.  The §5 formulation is per-SKU
@@ -299,6 +361,65 @@ mod tests {
         let t32 = p.decode_iter_time(32, 1_000);
         let t32kv = p.decode_iter_time(32, 1_000_000);
         assert!(t1 < t32 && t32 < t32kv);
+    }
+
+    /// The phase-split bracketing property the disaggregated pipeline
+    /// relies on, checked per (model, SKU, batch): unified E2E for the
+    /// reference request is at least the slowest single phase and at most
+    /// the phase sum plus the KV-transfer tax.
+    #[test]
+    fn phase_split_brackets_unified_e2e() {
+        for m in ModelKind::EVAL5 {
+            for g in GpuKind::ALL {
+                let p = PerfProfile::get(m, g);
+                for b in [1usize, 8, 32] {
+                    let b = b.min(p.max_concurrency());
+                    let kv = b as u64 * REF_TOTAL_TOKENS / 2;
+                    let prefill = p.prefill_time(REF_INPUT_TOKENS);
+                    let decode = REF_OUTPUT_TOKENS as f64 * p.decode_iter_time(b, kv);
+                    let unified =
+                        p.request_time(REF_INPUT_TOKENS as u32, REF_OUTPUT_TOKENS as u32, b, kv);
+                    let transfer = p.kv_transfer_time(REF_INPUT_TOKENS);
+                    assert!(transfer > 0.0, "{m} on {g}: transfer {transfer}");
+                    assert!(
+                        unified >= prefill.max(decode) - 1e-12,
+                        "{m} on {g} b={b}: unified {unified} < max phase {}",
+                        prefill.max(decode)
+                    );
+                    assert!(
+                        unified <= prefill + decode + transfer + 1e-12,
+                        "{m} on {g} b={b}: unified {unified} > split {}",
+                        prefill + decode + transfer
+                    );
+                }
+            }
+        }
+    }
+
+    /// Per-phase θ: positive everywhere, weakly monotone in the SLO
+    /// target (tighter targets never buy throughput), and the transfer
+    /// model orders SKUs by link speed.
+    #[test]
+    fn phase_capacities_positive_and_monotone_in_targets() {
+        for m in ModelKind::EVAL5 {
+            for g in GpuKind::ALL {
+                let p = PerfProfile::get(m, g);
+                let tp_loose = p.prefill_input_tps_capacity(1.0);
+                let tp_tight = p.prefill_input_tps_capacity(0.12);
+                assert!(tp_tight > 0.0, "{m} on {g}");
+                assert!(tp_tight <= tp_loose + 1e-9, "{m} on {g}: {tp_tight} > {tp_loose}");
+                let td_loose = p.decode_input_tps_capacity(0.2);
+                let td_tight = p.decode_input_tps_capacity(0.05);
+                assert!(td_tight > 0.0, "{m} on {g}");
+                assert!(td_tight <= td_loose + 1e-9, "{m} on {g}: {td_tight} > {td_loose}");
+                // Transfer time grows with tokens.
+                assert!(p.kv_transfer_time(10_000) > p.kv_transfer_time(100));
+            }
+        }
+        // Faster links transfer the same KV strictly faster.
+        let h = PerfProfile::get(ModelKind::Llama2_70B, GpuKind::H100x8);
+        let a = PerfProfile::get(ModelKind::Llama2_70B, GpuKind::A100x8);
+        assert!(h.kv_transfer_time(50_000) < a.kv_transfer_time(50_000));
     }
 
     #[test]

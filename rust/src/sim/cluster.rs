@@ -31,11 +31,11 @@
 //! [`Cluster::aggregates_consistent`] recounts everything from scratch
 //! for tests.
 
-use crate::config::{FleetSpec, GpuKind, ModelKind, Region, ScalingParams, Time};
+use crate::config::{DisaggParams, FleetSpec, GpuKind, ModelKind, Region, ScalingParams, Time};
 use crate::coordinator::scheduler::SchedPolicy;
 use crate::metrics::Metrics;
 use crate::perf::PerfTable;
-use crate::sim::instance::{ChunkPlan, CrashedWork, InstState, InstanceSim};
+use crate::sim::instance::{ChunkPlan, CrashedWork, InstState, InstanceSim, Phase};
 use crate::trace::types::Request;
 use std::collections::BTreeMap;
 use std::ops::Index;
@@ -132,6 +132,13 @@ pub struct Endpoint {
     pub iw_instances: Vec<InstanceId>,
     /// Roster cache: instances whose pool may serve NIW traffic.
     pub niw_instances: Vec<InstanceId>,
+    /// Roster cache: instances running the prefill phase (empty unless
+    /// disaggregation is enabled — unified fleets never populate it, so
+    /// the disagg-off engine walks zero extra entries).
+    pub prefill_instances: Vec<InstanceId>,
+    /// Roster cache: instances running the decode phase (empty unless
+    /// disaggregation is enabled).
+    pub decode_instances: Vec<InstanceId>,
     /// Last reactive scaling event (cooldown enforcement).
     pub last_scale: Time,
     /// LT-U / LT-UA deferred target from the last control epoch.
@@ -315,6 +322,9 @@ pub struct Cluster {
     pub perf: PerfTable,
     /// Provisioning and scaling constants (§2.3, §4, §6).
     pub params: ScalingParams,
+    /// Prefill/decode disaggregation policy.  Off by default; flipped on
+    /// (and the live roster partitioned) via [`Cluster::set_disagg`].
+    pub disagg: DisaggParams,
     /// Instances with a non-empty batch or waiting queue — the engine's
     /// O(1) all-idle check.
     busy_instances: usize,
@@ -392,6 +402,7 @@ impl Cluster {
             local_weights: Region::ALL.iter().map(|&r| (r, models.to_vec())).collect(),
             perf,
             params,
+            disagg: DisaggParams::default(),
             busy_instances: 0,
             dark: [false; 3],
             degraded: [false; 3],
@@ -443,18 +454,56 @@ impl Cluster {
         id
     }
 
+    /// Phase for the next instance joining an endpoint that currently
+    /// has `n_before` rostered instances, `prefill_before` of them
+    /// prefill: keep the prefill share tracking the configured fraction
+    /// while guaranteeing at least one instance of each phase once the
+    /// endpoint holds two or more.  A one-instance endpoint stays
+    /// `Unified` (it serves both phases in place — a lone prefill VM
+    /// would strand every handoff).
+    fn next_phase(&self, n_before: usize, prefill_before: usize) -> Phase {
+        if !self.disagg.enabled {
+            return Phase::Unified;
+        }
+        let n_after = n_before + 1;
+        if n_after < 2 {
+            return Phase::Unified;
+        }
+        let want = ((n_after as f64) * self.disagg.prefill_fraction).ceil() as usize;
+        let want = want.max(1).min(n_after - 1);
+        if prefill_before < want {
+            Phase::Prefill
+        } else {
+            Phase::Decode
+        }
+    }
+
     fn roster_add(&mut self, model: ModelKind, region: Region, pool: PoolTag, id: InstanceId) {
         let gpu = self.instances[id].gpu;
+        let (already, n_before, prefill_before) = {
+            let ep = self.endpoints.get(&(model, region)).unwrap();
+            (ep.instances.contains(&id), ep.instances.len(), ep.prefill_instances.len())
+        };
+        if already {
+            return;
+        }
+        let phase = self.next_phase(n_before, prefill_before);
+        // Phase is not part of the aggregate snapshot, so the direct
+        // write is coherent without a `mutate` round-trip.
+        self.instances[id].phase = phase;
         let ep = self.endpoints.get_mut(&(model, region)).unwrap();
-        if !ep.instances.contains(&id) {
-            ep.instances.push(id);
-            ep.alloc_by_gpu[gpu.index()] += 1;
-            if pool.serves_iw() {
-                ep.iw_instances.push(id);
-            }
-            if pool.serves_niw() {
-                ep.niw_instances.push(id);
-            }
+        ep.instances.push(id);
+        ep.alloc_by_gpu[gpu.index()] += 1;
+        if pool.serves_iw() {
+            ep.iw_instances.push(id);
+        }
+        if pool.serves_niw() {
+            ep.niw_instances.push(id);
+        }
+        match phase {
+            Phase::Prefill => ep.prefill_instances.push(id),
+            Phase::Decode => ep.decode_instances.push(id),
+            Phase::Unified => {}
         }
     }
 
@@ -467,7 +516,72 @@ impl Cluster {
             }
             ep.iw_instances.retain(|&x| x != id);
             ep.niw_instances.retain(|&x| x != id);
+            ep.prefill_instances.retain(|&x| x != id);
+            ep.decode_instances.retain(|&x| x != id);
         }
+        // The instance keeps its phase tag while de-rostered (the engine
+        // still reads it when classifying a crashed VM's finished work);
+        // `roster_add` re-assigns a fresh phase on any later reclaim.
+    }
+
+    /// Flip the disaggregation policy on a freshly built cluster and
+    /// deterministically partition every endpoint's roster: the first
+    /// `ceil(fraction · n)` instances (roster order) become prefill, the
+    /// rest decode, with at least one of each phase wherever `n ≥ 2`.
+    /// A disabled `params` leaves the cluster untouched — the unified
+    /// engine never calls into any phase path.
+    pub fn set_disagg(&mut self, params: DisaggParams) {
+        self.disagg = params;
+        if !self.disagg.enabled {
+            return;
+        }
+        for s in 0..self.endpoints.len() {
+            let key = self.endpoints.key_at(s);
+            let ids = self.endpoints[&key].instances.clone();
+            let n = ids.len();
+            if n < 2 {
+                continue; // lone instance stays Unified (see next_phase)
+            }
+            let want = ((n as f64) * self.disagg.prefill_fraction).ceil() as usize;
+            let want = want.max(1).min(n - 1);
+            let mut prefill = Vec::with_capacity(want);
+            let mut decode = Vec::with_capacity(n - want);
+            for (k, &id) in ids.iter().enumerate() {
+                let phase = if k < want { Phase::Prefill } else { Phase::Decode };
+                self.instances[id].phase = phase;
+                if phase == Phase::Prefill {
+                    prefill.push(id);
+                } else {
+                    decode.push(id);
+                }
+            }
+            let ep = self.endpoints.get_mut(&key).unwrap();
+            ep.prefill_instances = prefill;
+            ep.decode_instances = decode;
+        }
+    }
+
+    /// Allocated instance counts per GPU SKU for one phase of an
+    /// endpoint — the controller's per-phase n_{j,k}.  Walks the phase
+    /// roster (a handful of entries, once per control epoch).
+    pub fn phase_alloc_by_gpu(
+        &self,
+        model: ModelKind,
+        region: Region,
+        phase: Phase,
+    ) -> [usize; GpuKind::COUNT] {
+        let mut out = [0usize; GpuKind::COUNT];
+        if let Some(ep) = self.endpoints.get(&(model, region)) {
+            let roster = match phase {
+                Phase::Prefill => &ep.prefill_instances,
+                Phase::Decode => &ep.decode_instances,
+                Phase::Unified => &ep.instances,
+            };
+            for &i in roster {
+                out[self.instances[i].gpu.index()] += 1;
+            }
+        }
+        out
     }
 
     fn snapshot(&self, id: InstanceId) -> InstSnapshot {
@@ -570,8 +684,12 @@ impl Cluster {
             let profile = perf.profile(inst.model, inst.gpu);
             // Per-chunk prefill budget ≈ 0.5 s of prompt throughput:
             // bounds the TTFT impact of bulk admissions (NIW chunking,
-            // §6.2).
-            let prefill_budget = (profile.prompt_tps * 0.5) as u64;
+            // §6.2).  Decode-phase instances receive already-prefilled
+            // work, so no prompt-compute budget gates their admissions.
+            let prefill_budget = match inst.phase {
+                Phase::Decode => u64::MAX,
+                _ => (profile.prompt_tps * 0.5) as u64,
+            };
             let admitted = if inst.state == InstState::Active {
                 inst.admit(now, prefill_budget, profile.max_batch)
             } else {
@@ -1027,6 +1145,10 @@ impl Cluster {
                 // Roster caches agree with pool eligibility.
                 ok &= ep.iw_instances.contains(&i) == inst.pool.serves_iw();
                 ok &= ep.niw_instances.contains(&i) == inst.pool.serves_niw();
+                // Phase rosters agree with each instance's phase tag
+                // (both empty on unified fleets).
+                ok &= ep.prefill_instances.contains(&i) == (inst.phase == Phase::Prefill);
+                ok &= ep.decode_instances.contains(&i) == (inst.phase == Phase::Decode);
             }
             ok &= agg == ep.agg;
             ok &= alloc_by_gpu == ep.alloc_by_gpu;
@@ -1428,6 +1550,66 @@ mod tests {
         c.clear_region_degraded(r);
         assert!(!c.region_degraded(r));
         assert_eq!(c.latency_penalty(r), 0.0);
+    }
+
+    #[test]
+    fn set_disagg_partitions_rosters_and_scaling_keeps_the_split() {
+        let mut c = cluster();
+        let mut metrics = Metrics::default();
+        c.set_disagg(crate::config::DisaggParams::enabled());
+        let (m, r) = (ModelKind::Llama2_70B, Region::EastUs);
+        // 3 instances, fraction 0.35 ⇒ ceil(1.05) = 2 prefill, 1 decode.
+        let ep = &c.endpoints[&(m, r)];
+        assert_eq!(ep.prefill_instances.len(), 2);
+        assert_eq!(ep.decode_instances.len(), 1);
+        for &i in &ep.prefill_instances {
+            assert_eq!(c.instances[i].phase, Phase::Prefill);
+        }
+        for &i in &ep.decode_instances {
+            assert_eq!(c.instances[i].phase, Phase::Decode);
+        }
+        assert!(c.aggregates_consistent());
+        // Scale-out keeps the split tracking the fraction: the 4th
+        // instance joins decode (want = ceil(0.35·4) = 2 ≤ prefill's 2).
+        let (id, _, _) = c
+            .scale_out(m, r, PoolTag::Unified, GpuKind::A100x8, 0.0, &mut metrics)
+            .unwrap();
+        assert_eq!(c.instances[id].phase, Phase::Decode);
+        // Drain + donate a prefill VM, then reclaim it: the phase is
+        // re-assigned from the endpoint's balance, not remembered.
+        let pid = c.endpoints[&(m, r)].prefill_instances[0];
+        c.mutate(pid, |inst| inst.state = InstState::Draining);
+        c.finish_drain(pid);
+        assert!(!c.endpoints[&(m, r)].prefill_instances.contains(&pid));
+        let (rid, _, _) = c
+            .scale_out(m, r, PoolTag::Unified, GpuKind::A100x8, 0.0, &mut metrics)
+            .unwrap();
+        assert_eq!(rid, pid);
+        // 3 rostered before the reclaim, 1 of them prefill ⇒ want =
+        // ceil(0.35·4) = 2 > 1 ⇒ prefill again.
+        assert_eq!(c.instances[rid].phase, Phase::Prefill);
+        assert!(c.aggregates_consistent());
+        // Per-phase SKU counts stay coherent with the rosters.
+        let pre = c.phase_alloc_by_gpu(m, r, Phase::Prefill);
+        let dec = c.phase_alloc_by_gpu(m, r, Phase::Decode);
+        let total: usize = pre.iter().chain(dec.iter()).sum();
+        assert_eq!(total, c.allocated_count(m, r));
+    }
+
+    #[test]
+    fn unified_cluster_keeps_phase_rosters_empty() {
+        let mut c = cluster();
+        let mut metrics = Metrics::default();
+        let (m, r) = (ModelKind::Llama2_70B, Region::EastUs);
+        let id = c.scale_in(m, r, None, None).unwrap();
+        c.finish_drain(id);
+        c.scale_out(m, r, PoolTag::Unified, GpuKind::A100x8, 0.0, &mut metrics).unwrap();
+        for (_, ep) in c.endpoints.iter() {
+            assert!(ep.prefill_instances.is_empty());
+            assert!(ep.decode_instances.is_empty());
+        }
+        assert!(c.instances.iter().all(|i| i.phase == Phase::Unified));
+        assert!(c.aggregates_consistent());
     }
 
     #[test]

@@ -28,12 +28,12 @@
 use std::collections::BTreeMap;
 
 use crate::config::{
-    Epoch, FleetSpec, GpuKind, ModelKind, Region, RoutingParams, ScalingParams, Tier, Time, HOUR,
-    MINUTE,
+    DisaggParams, Epoch, FleetSpec, GpuKind, ModelKind, Region, RoutingParams, ScalingParams, Tier,
+    Time, HOUR, MINUTE,
 };
 pub use crate::coordinator::autoscaler::Strategy;
 use crate::coordinator::autoscaler::{Autoscaler, ScaleCtx};
-use crate::coordinator::controller::{run_epoch, SolverStates, Telemetry};
+use crate::coordinator::controller::{run_epoch, run_epoch_disagg, SolverStates, Telemetry};
 use crate::coordinator::queue_manager::QueueManager;
 use crate::coordinator::router;
 use crate::coordinator::scheduler::SchedPolicy;
@@ -43,7 +43,7 @@ use crate::perf::PerfTable;
 use crate::sim::cluster::{Cluster, InstanceId};
 use crate::sim::event::{Event, EventQueue};
 use crate::sim::faults::FaultPlan;
-use crate::sim::instance::InstState;
+use crate::sim::instance::{InstState, Phase};
 use crate::trace::generator::{TraceConfig, TraceGenerator};
 use crate::trace::types::Request;
 
@@ -92,6 +92,12 @@ pub struct SimConfig {
     /// paths never run, so fault-free runs stay bit-identical to builds
     /// without the fault plane.
     pub faults: FaultPlan,
+    /// Prefill/decode disaggregation (§2.3 phase split).  Disabled by
+    /// default: every gate in the engine checks `disagg.enabled`, so the
+    /// unified path executes byte-identical float operations and runs
+    /// stay bit-identical to pre-disaggregation builds
+    /// (`tests/disagg_equivalence.rs`).
+    pub disagg: DisaggParams,
 }
 
 impl Default for SimConfig {
@@ -111,6 +117,7 @@ impl Default for SimConfig {
             shared_trace: None,
             metrics: MetricsConfig::default(),
             faults: FaultPlan::default(),
+            disagg: DisaggParams::default(),
         }
     }
 }
@@ -153,14 +160,23 @@ pub struct Simulation {
     events: EventQueue,
     autoscaler: Autoscaler,
     forecaster: Box<dyn Forecaster>,
-    /// Per-model ILP warm-start state, reused every control epoch.
+    /// Per-model ILP warm-start state, reused every control epoch.  On
+    /// disaggregated fleets this holds the *prefill* column's state.
     solvers: SolverStates,
+    /// Warm-start state for the decode-phase capacity solves (the θ
+    /// columns differ per phase, so warm bases never cross phases).
+    /// Unused — and empty — on unified fleets.
+    solvers_decode: SolverStates,
     end_time: Time,
     epoch_start: Time,
     tick_count: u64,
     /// Reused per-epoch buffer of per-SKU allocated counts, rows in
     /// `telemetry.keys()` order — no per-epoch map/Vec allocation.
+    /// On disaggregated fleets this holds the prefill-pool counts.
     epoch_counts: Vec<[usize; GpuKind::COUNT]>,
+    /// Decode-pool counterpart of `epoch_counts` (scratch, same
+    /// lifecycle).  Empty on unified fleets.
+    epoch_counts_decode: Vec<[usize; GpuKind::COUNT]>,
     /// Requests killed by instance loss, parked between their kill and
     /// their `RetryDue` event (keyed by request id — the event carries
     /// only the key, keeping `Event: Eq` trivial).
@@ -168,6 +184,14 @@ pub struct Simulation {
     /// Kill count per in-flight request id (drives the capped
     /// exponential backoff; entries are dropped on completion or loss).
     retry_attempt: BTreeMap<u64, u32>,
+    /// Disaggregation: requests whose prefill finished, parked between
+    /// the KV-transfer start and their `HandoffDue` decode admission.
+    /// Values carry the already-computed TTFT and the prefill region
+    /// (decode placement prefers transfer-cheap targets near it).
+    pending_handoffs: BTreeMap<u64, (Request, Time, Region)>,
+    /// Disaggregation: TTFT of requests admitted to a decode instance,
+    /// consumed when the decode completion records the outcome.
+    inflight_decode: BTreeMap<u64, Time>,
     /// Open incidents awaiting capacity recovery.
     recovery_watch: Vec<RecoveryWatch>,
 }
@@ -180,8 +204,9 @@ pub struct Simulation {
 ///
 /// Two `Simulation` fields are deliberately absent:
 /// * `end_time` — derived from `cfg.trace.days`, recomputed on resume;
-/// * `epoch_counts` — a scratch buffer cleared at the start of every
-///   control epoch, so an empty one is equivalent state.
+/// * `epoch_counts` / `epoch_counts_decode` — scratch buffers cleared at
+///   the start of every control epoch, so empty ones are equivalent
+///   state.
 pub struct SimHandoff {
     /// Simulated clock at suspension.
     pub now: Time,
@@ -210,6 +235,9 @@ pub struct SimHandoff {
     /// (the plan is identical either way — warm starts change pivot
     /// counts, not answers — but carrying it keeps the perf contract).
     pub solvers: SolverStates,
+    /// Decode-phase warm-start state (disaggregated fleets only; empty
+    /// and inert on unified runs, carried for the same perf contract).
+    pub solvers_decode: SolverStates,
     /// Start time of the current control epoch.
     pub epoch_start: Time,
     /// ScaleTick counter (drives the 15-minute utilization sampling).
@@ -218,6 +246,11 @@ pub struct SimHandoff {
     pub pending_retries: BTreeMap<u64, Request>,
     /// Fault plane: kill counts backing the retry backoff.
     pub retry_attempt: BTreeMap<u64, u32>,
+    /// Disaggregation: requests between prefill completion and decode
+    /// admission (with TTFT and prefill region).
+    pub pending_handoffs: BTreeMap<u64, (Request, Time, Region)>,
+    /// Disaggregation: TTFTs of requests in flight on decode instances.
+    pub inflight_decode: BTreeMap<u64, Time>,
     /// Fault plane: incidents still awaiting capacity recovery.
     pub recovery_watch: Vec<RecoveryWatch>,
 }
@@ -230,8 +263,11 @@ impl Simulation {
         let models = cfg.trace.models.clone();
         let perf = PerfTable::for_fleet(&cfg.fleet.gpus(), &models);
         let pools = cfg.strategy.initial_pools(cfg.initial_instances);
-        let cluster =
+        let mut cluster =
             Cluster::new_fleet(&models, perf, cfg.scaling.clone(), &pools, cfg.vm_budget, &cfg.fleet);
+        // Partition the initial rosters into prefill/decode pools (a
+        // no-op that only copies the params when disaggregation is off).
+        cluster.set_disagg(cfg.disagg.clone());
 
         // Telemetry with one week of warm-up history from the generator's
         // expected rates (the "previous week" the forecaster trains on).
@@ -280,12 +316,16 @@ impl Simulation {
             autoscaler,
             forecaster,
             solvers: SolverStates::new(),
+            solvers_decode: SolverStates::new(),
             end_time,
             epoch_start: 0.0,
             tick_count: 0,
             epoch_counts: Vec::new(),
+            epoch_counts_decode: Vec::new(),
             pending_retries: BTreeMap::new(),
             retry_attempt: BTreeMap::new(),
+            pending_handoffs: BTreeMap::new(),
+            inflight_decode: BTreeMap::new(),
             recovery_watch: Vec::new(),
             cfg,
         };
@@ -402,6 +442,7 @@ impl Simulation {
                 && self.cluster.is_all_idle()
                 && self.qm.total_depth() == 0
                 && self.pending_retries.is_empty()
+                && self.pending_handoffs.is_empty()
             {
                 break;
             }
@@ -428,9 +469,20 @@ impl Simulation {
             if self.cluster.is_all_idle()
                 && self.qm.total_depth() == 0
                 && self.pending_retries.is_empty()
+                && self.pending_handoffs.is_empty()
             {
                 break;
             }
+        }
+        // Disaggregation backstop: handoffs that never found a decode
+        // instance before the drain horizon are counted as dropped (once
+        // each), keeping request conservation exact even under a total
+        // decode blackout.
+        if !self.pending_handoffs.is_empty() {
+            let n = self.pending_handoffs.len() as u64;
+            self.metrics.handoff_drops += n;
+            self.metrics.dropped += n;
+            self.pending_handoffs.clear();
         }
     }
 
@@ -448,12 +500,16 @@ impl Simulation {
             autoscaler,
             forecaster,
             solvers,
+            solvers_decode,
             end_time: _,
             epoch_start,
             tick_count,
             epoch_counts: _,
+            epoch_counts_decode: _,
             pending_retries,
             retry_attempt,
+            pending_handoffs,
+            inflight_decode,
             recovery_watch,
         } = self;
         (
@@ -468,10 +524,13 @@ impl Simulation {
                 autoscaler,
                 forecaster,
                 solvers,
+                solvers_decode,
                 epoch_start,
                 tick_count,
                 pending_retries,
                 retry_attempt,
+                pending_handoffs,
+                inflight_decode,
                 recovery_watch,
             },
         )
@@ -493,12 +552,16 @@ impl Simulation {
             autoscaler: h.autoscaler,
             forecaster: h.forecaster,
             solvers: h.solvers,
+            solvers_decode: h.solvers_decode,
             end_time,
             epoch_start: h.epoch_start,
             tick_count: h.tick_count,
             epoch_counts: Vec::new(),
+            epoch_counts_decode: Vec::new(),
             pending_retries: h.pending_retries,
             retry_attempt: h.retry_attempt,
+            pending_handoffs: h.pending_handoffs,
+            inflight_decode: h.inflight_decode,
             recovery_watch: h.recovery_watch,
             cfg,
         }
@@ -555,14 +618,22 @@ impl Simulation {
     }
 
     fn dispatch_to_region(&mut self, req: Request, region: Region) {
-        match router::route_instance_sku_aware(
-            &self.cluster,
-            &self.cfg.routing,
-            req.model,
-            region,
-            req.tier,
-            req.total_tokens(),
-        ) {
+        // Disaggregated fleets admit through the prefill-queue JSQ —
+        // arrivals must land on prefill instances, which hand their KV
+        // off to a decode instance at prefill completion.
+        let inst = if self.cfg.disagg.enabled {
+            router::route_instance_prefill(&self.cluster, req.model, region, req.tier)
+        } else {
+            router::route_instance_sku_aware(
+                &self.cluster,
+                &self.cfg.routing,
+                req.model,
+                region,
+                req.tier,
+                req.total_tokens(),
+            )
+        };
+        match inst {
             Some(id) => {
                 // Cross-region latency is recomputed at completion from
                 // the serving instance's region — no per-request side
@@ -609,16 +680,123 @@ impl Simulation {
         // eagerly — byte-identical to the fault-plane-free engine.
         let served_region = self.cluster.instances[id].region;
         if self.cfg.faults.is_empty() {
-            for &(idx, t_done) in &plan.completions {
-                let seq = &self.cluster.instances[id].batch[idx];
-                let extra =
-                    router::routing_latency(&self.cfg.routing, seq.req.origin, served_region);
-                let ttft = seq.prefill_done - seq.req.arrival + extra;
-                let e2e = t_done - seq.req.arrival + extra;
-                self.metrics.record_outcome(&seq.req, served_region, ttft, e2e);
+            match self.cluster.instances[id].phase {
+                // Prefill pool: a "completion" is a finished prefill —
+                // start the KV transfer and park the request for decode
+                // admission instead of recording an outcome.
+                Phase::Prefill => {
+                    for &(idx, t_done) in &plan.completions {
+                        let (req, prefill_done) = {
+                            let seq = &self.cluster.instances[id].batch[idx];
+                            (seq.req, seq.prefill_done)
+                        };
+                        self.record_handoff(id, req, prefill_done, t_done, 0.0);
+                    }
+                }
+                // Decode pool: the TTFT was stamped at the prefill
+                // handoff; only the E2E is measured here.
+                Phase::Decode => {
+                    for &(idx, t_done) in &plan.completions {
+                        let (req, prefill_done) = {
+                            let seq = &self.cluster.instances[id].batch[idx];
+                            (seq.req, seq.prefill_done)
+                        };
+                        self.record_decode_completion(req, prefill_done, t_done, served_region, 0.0);
+                    }
+                }
+                Phase::Unified => {
+                    for &(idx, t_done) in &plan.completions {
+                        let seq = &self.cluster.instances[id].batch[idx];
+                        let extra =
+                            router::routing_latency(&self.cfg.routing, seq.req.origin, served_region);
+                        let ttft = seq.prefill_done - seq.req.arrival + extra;
+                        let e2e = t_done - seq.req.arrival + extra;
+                        self.metrics.record_outcome(&seq.req, served_region, ttft, e2e);
+                    }
+                }
             }
         }
         self.events.push(now + plan.duration, Event::ChunkDone { instance: id });
+    }
+
+    /// Record a finished prefill on a disaggregated fleet: stamp the
+    /// TTFT (first token emerges at prefill completion), charge the
+    /// KV-cache migration at the source SKU's transfer rate, and
+    /// schedule the decode admission for when the transfer lands.
+    fn record_handoff(
+        &mut self,
+        id: InstanceId,
+        req: Request,
+        prefill_done: Time,
+        t_done: Time,
+        penalty: f64,
+    ) {
+        let (region, gpu, model) = {
+            let inst = &self.cluster.instances[id];
+            (inst.region, inst.gpu, inst.model)
+        };
+        let extra = router::routing_latency(&self.cfg.routing, req.origin, region) + penalty;
+        let ttft = prefill_done - req.arrival + extra;
+        let transfer =
+            self.cluster.perf.profile(model, gpu).kv_transfer_time(req.input_tokens as u64);
+        self.metrics.handoffs += 1;
+        self.metrics.kv_transfer_secs += transfer;
+        self.pending_handoffs.insert(req.id, (req, ttft, region));
+        self.events
+            .push((t_done + transfer).max(self.now), Event::HandoffDue { id: req.id });
+    }
+
+    /// Record a finished decode on a disaggregated fleet: the TTFT
+    /// travels through `inflight_decode` from the handoff; a request
+    /// that reached a decode instance without one (the degenerate
+    /// no-prefill-roster fallback) falls back to its in-batch
+    /// `prefill_done` stamp, which for a decode-phase instance is its
+    /// admission time.
+    fn record_decode_completion(
+        &mut self,
+        req: Request,
+        prefill_done: Time,
+        t_done: Time,
+        served_region: Region,
+        penalty: f64,
+    ) {
+        let extra = router::routing_latency(&self.cfg.routing, req.origin, served_region) + penalty;
+        let e2e = t_done - req.arrival + extra;
+        let ttft = self
+            .inflight_decode
+            .remove(&req.id)
+            .unwrap_or(prefill_done - req.arrival + extra);
+        self.metrics.record_outcome(&req, served_region, ttft, e2e);
+        self.retry_attempt.remove(&req.id);
+    }
+
+    /// KV transfer landed: admit the request to a decode instance.  No
+    /// live decode instance anywhere ⇒ re-arm after a backoff (capacity
+    /// may return after an outage); `finish` counts anything still
+    /// parked at the drain horizon as dropped.
+    fn on_handoff_due(&mut self, id: u64) {
+        let Some(&(req, ttft, from_region)) = self.pending_handoffs.get(&id) else {
+            return; // already resolved
+        };
+        match router::route_instance_decode(
+            &self.cluster,
+            &self.cfg.routing,
+            req.model,
+            from_region,
+            req.tier,
+            req.input_tokens as u64,
+        ) {
+            Some(inst) => {
+                self.pending_handoffs.remove(&id);
+                self.metrics.handoff_admissions += 1;
+                self.inflight_decode.insert(id, ttft);
+                self.cluster.push_waiting(inst, req);
+                self.kick_instance(inst);
+            }
+            None => {
+                self.events.push(self.now + MINUTE, Event::HandoffDue { id });
+            }
+        }
     }
 
     /// Fault-plan outcome recording at a chunk boundary: every batch
@@ -629,16 +807,28 @@ impl Simulation {
     fn record_completed_outcomes(&mut self, id: InstanceId) {
         let served_region = self.cluster.instances[id].region;
         let penalty = self.cluster.latency_penalty(served_region);
+        let phase = self.cluster.instances[id].phase;
         for idx in 0..self.cluster.instances[id].batch.len() {
-            let seq = &self.cluster.instances[id].batch[idx];
-            let Some(t_done) = seq.completed_at else { continue };
-            let extra = router::routing_latency(&self.cfg.routing, seq.req.origin, served_region)
-                + penalty;
-            let ttft = seq.prefill_done - seq.req.arrival + extra;
-            let e2e = t_done - seq.req.arrival + extra;
-            let (req, rid) = (seq.req, seq.req.id);
-            self.metrics.record_outcome(&req, served_region, ttft, e2e);
-            self.retry_attempt.remove(&rid);
+            let (req, prefill_done, completed) = {
+                let seq = &self.cluster.instances[id].batch[idx];
+                (seq.req, seq.prefill_done, seq.completed_at)
+            };
+            let Some(t_done) = completed else { continue };
+            match phase {
+                Phase::Prefill => self.record_handoff(id, req, prefill_done, t_done, penalty),
+                Phase::Decode => {
+                    self.record_decode_completion(req, prefill_done, t_done, served_region, penalty)
+                }
+                Phase::Unified => {
+                    let extra =
+                        router::routing_latency(&self.cfg.routing, req.origin, served_region)
+                            + penalty;
+                    let ttft = prefill_done - req.arrival + extra;
+                    let e2e = t_done - req.arrival + extra;
+                    self.metrics.record_outcome(&req, served_region, ttft, e2e);
+                    self.retry_attempt.remove(&req.id);
+                }
+            }
         }
     }
 
@@ -708,14 +898,29 @@ impl Simulation {
         };
         let penalty = self.cluster.latency_penalty(region);
         let work = self.cluster.crash_instance(id, self.now);
+        // The de-rostered instance keeps its phase tag precisely so
+        // finished-before-the-crash work can be classified here:
+        // prefill-pool completions become handoffs, decode-pool
+        // completions consume their in-flight TTFT.
+        let phase = self.cluster.instances[id].phase;
         for seq in &work.finished {
-            let extra =
-                router::routing_latency(&self.cfg.routing, seq.req.origin, region) + penalty;
-            let ttft = seq.prefill_done - seq.req.arrival + extra;
-            let e2e = seq.completed_at.expect("finished seq has a completion") - seq.req.arrival
-                + extra;
-            self.metrics.record_outcome(&seq.req, region, ttft, e2e);
-            self.retry_attempt.remove(&seq.req.id);
+            let t_done = seq.completed_at.expect("finished seq has a completion");
+            match phase {
+                Phase::Prefill => {
+                    self.record_handoff(id, seq.req, seq.prefill_done, t_done, penalty)
+                }
+                Phase::Decode => {
+                    self.record_decode_completion(seq.req, seq.prefill_done, t_done, region, penalty)
+                }
+                Phase::Unified => {
+                    let extra =
+                        router::routing_latency(&self.cfg.routing, seq.req.origin, region) + penalty;
+                    let ttft = seq.prefill_done - seq.req.arrival + extra;
+                    let e2e = t_done - seq.req.arrival + extra;
+                    self.metrics.record_outcome(&seq.req, region, ttft, e2e);
+                    self.retry_attempt.remove(&seq.req.id);
+                }
+            }
         }
         for req in work.killed {
             self.metrics.failures.record_killed(req.model, req.tier, req.origin);
@@ -729,6 +934,9 @@ impl Simulation {
     /// backoff, original arrival time kept for SLA accounting) or — past
     /// `max_attempts` kills — is permanently lost.
     fn on_request_killed(&mut self, req: Request) {
+        // A killed decode-phase request redoes its prefill on retry, so
+        // its stamped TTFT is stale — drop it (no-op on unified runs).
+        self.inflight_decode.remove(&req.id);
         let attempt = {
             let a = self.retry_attempt.entry(req.id).or_insert(0);
             *a += 1;
@@ -759,14 +967,20 @@ impl Simulation {
             req.total_tokens(),
         );
         let inst = dest.and_then(|region| {
-            router::route_instance_sku_aware(
-                &self.cluster,
-                &self.cfg.routing,
-                req.model,
-                region,
-                req.tier,
-                req.total_tokens(),
-            )
+            if self.cfg.disagg.enabled {
+                // Retries redo their prefill: admission goes back through
+                // the prefill-queue JSQ, and the decode handoff repeats.
+                router::route_instance_prefill(&self.cluster, req.model, region, req.tier)
+            } else {
+                router::route_instance_sku_aware(
+                    &self.cluster,
+                    &self.cfg.routing,
+                    req.model,
+                    region,
+                    req.tier,
+                    req.total_tokens(),
+                )
+            }
         });
         match inst {
             Some(id) => {
@@ -984,6 +1198,7 @@ impl Simulation {
             Event::FaultSpotShock { idx } => self.on_spot_shock(idx),
             Event::FaultCrashTick { k } => self.on_crash_tick(k),
             Event::RetryDue { id } => self.on_retry_due(id),
+            Event::HandoffDue { id } => self.on_handoff_due(id),
         }
     }
 
@@ -1119,26 +1334,54 @@ impl Simulation {
         // reused buffer, replacing the per-epoch `BTreeMap<_, Vec<usize>>`
         // snapshot.  (The 15 s tick's `recent_tps_all` map is the one
         // remaining recurring control-path allocation.)
-        self.epoch_counts.clear();
-        for &(m, r) in self.telemetry.keys() {
-            self.epoch_counts.push(
-                self.cluster
-                    .endpoints
-                    .get(&(m, r))
-                    .map(|ep| ep.alloc_by_gpu)
-                    .unwrap_or([0; GpuKind::COUNT]),
+        let plan = if self.cfg.disagg.enabled {
+            // Disaggregated control epoch: per-phase counts feed two
+            // capacity solves under one shared budget (TTFT gates the
+            // prefill column, ITL the decode column), and the refined
+            // pool split steers how future scale-outs are partitioned.
+            self.epoch_counts.clear();
+            self.epoch_counts_decode.clear();
+            for &(m, r) in self.telemetry.keys() {
+                self.epoch_counts.push(self.cluster.phase_alloc_by_gpu(m, r, Phase::Prefill));
+                self.epoch_counts_decode.push(self.cluster.phase_alloc_by_gpu(m, r, Phase::Decode));
+            }
+            let (plan, frac) = run_epoch_disagg(
+                &self.telemetry,
+                self.forecaster.as_mut(),
+                &self.cluster.perf,
+                &self.cluster.gpus,
+                &self.cfg.scaling,
+                &self.cfg.disagg,
+                &self.epoch_counts,
+                &self.epoch_counts_decode,
+                &mut self.solvers,
+                &mut self.solvers_decode,
+                self.now,
             );
-        }
-        let plan = run_epoch(
-            &self.telemetry,
-            self.forecaster.as_mut(),
-            &self.cluster.perf,
-            &self.cluster.gpus,
-            &self.cfg.scaling,
-            &self.epoch_counts,
-            &mut self.solvers,
-            self.now,
-        );
+            self.cluster.disagg.prefill_fraction = frac;
+            plan
+        } else {
+            self.epoch_counts.clear();
+            for &(m, r) in self.telemetry.keys() {
+                self.epoch_counts.push(
+                    self.cluster
+                        .endpoints
+                        .get(&(m, r))
+                        .map(|ep| ep.alloc_by_gpu)
+                        .unwrap_or([0; GpuKind::COUNT]),
+                );
+            }
+            run_epoch(
+                &self.telemetry,
+                self.forecaster.as_mut(),
+                &self.cluster.perf,
+                &self.cluster.gpus,
+                &self.cfg.scaling,
+                &self.epoch_counts,
+                &mut self.solvers,
+                self.now,
+            )
+        };
         let mut ctx = ScaleCtx {
             now: self.now,
             cluster: &mut self.cluster,
@@ -1442,6 +1685,56 @@ mod tests {
         let b = run_simulation(mk());
         assert!(a.metrics == b.metrics, "fault injection must replay identically");
         assert!(a.metrics.failures.killed_total() > 0);
+    }
+
+    #[test]
+    fn disagg_run_conserves_and_hands_off() {
+        let mut cfg = quick_config(Strategy::LtUa, 0.1, 0.005);
+        cfg.scaling.max_instances = 10;
+        cfg.disagg = DisaggParams::enabled();
+        let sim = run_simulation(cfg);
+        let total = TraceGenerator::new(sim.cfg.trace.clone()).stream().count() as u64;
+        assert!(sim.metrics.handoffs > 0, "disagg run must hand off prefills");
+        assert!(sim.metrics.kv_transfer_secs > 0.0, "KV migration must be charged");
+        assert_eq!(
+            sim.metrics.completed + sim.metrics.dropped,
+            total,
+            "every request must complete or be explicitly dropped"
+        );
+        assert_eq!(
+            sim.metrics.handoffs,
+            sim.metrics.handoff_admissions + sim.metrics.handoff_drops,
+            "every handoff must be admitted or dropped — exactly once"
+        );
+        assert!(sim.pending_handoffs.is_empty(), "no handoff may be left parked");
+        assert!(sim.inflight_decode.is_empty(), "no decode TTFT may be left dangling");
+        assert!(sim.cluster.aggregates_consistent());
+        // ITL is live as a first-class streaming metric.
+        assert!(sim.metrics.itl_p95() > 0.0);
+        assert_eq!(sim.metrics.itl_attainment(f64::INFINITY), 1.0);
+    }
+
+    #[test]
+    fn disagg_runs_are_deterministic() {
+        let mk = || {
+            let mut cfg = quick_config(Strategy::LtUa, 0.1, 0.005);
+            cfg.scaling.max_instances = 10;
+            cfg.disagg = DisaggParams::enabled();
+            cfg
+        };
+        let a = run_simulation(mk());
+        let b = run_simulation(mk());
+        assert!(a.metrics == b.metrics, "disagg runs must replay identically");
+        assert!(a.metrics.handoffs > 0);
+    }
+
+    #[test]
+    fn unified_run_keeps_disagg_counters_at_zero() {
+        let sim = run_quick(Strategy::LtUa);
+        assert_eq!(sim.metrics.handoffs, 0);
+        assert_eq!(sim.metrics.handoff_admissions, 0);
+        assert_eq!(sim.metrics.handoff_drops, 0);
+        assert_eq!(sim.metrics.kv_transfer_secs, 0.0);
     }
 
     #[test]

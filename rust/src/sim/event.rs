@@ -71,6 +71,15 @@ pub enum Event {
         /// Request id keying the engine's pending-retry map.
         id: u64,
     },
+    /// Disaggregated serving: a prefilled request's KV-cache migration
+    /// finished and the request is due for decode admission.  Carries
+    /// only the request id — the request and its prefill-completion
+    /// timestamp wait in the engine's pending-handoff map (same
+    /// `Eq`-safe pattern as [`Event::RetryDue`]).
+    HandoffDue {
+        /// Request id keying the engine's pending-handoff map.
+        id: u64,
+    },
 }
 
 #[derive(Debug)]

@@ -34,6 +34,24 @@ pub const CHUNK_ITERS: u32 = 8;
 /// as the documentation anchor.
 pub const MAX_BATCH: usize = 64;
 
+/// Which serving phase an instance executes (prefill/decode
+/// disaggregation, SplitWise-style).  Assigned by the cluster roster
+/// when disaggregation is enabled; every instance in a unified fleet
+/// stays [`Phase::Unified`] and executes the exact pre-disaggregation
+/// batch model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Classic colocated serving: prefill and decode on one instance.
+    Unified,
+    /// Prompt processing only — a sequence's instance-local work ends at
+    /// prefill completion; its KV cache then migrates to a decode
+    /// instance (the engine's handoff path).
+    Prefill,
+    /// Token generation only — admits handed-off prompts whose prefill
+    /// already ran elsewhere, so admission carries no prompt-time cost.
+    Decode,
+}
+
 /// Instance lifecycle (§2.3 provisioning, §6.4 scaling, spot donation).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum InstState {
@@ -83,6 +101,10 @@ pub struct InstanceSim {
     /// Hardware SKU of the underlying 8-GPU VM — fixed for the VM's
     /// life (weights redeploy across models, not across silicon).
     pub gpu: GpuKind,
+    /// Serving phase (unified, or one side of a disaggregated pool).
+    /// Owned by the cluster roster; [`Phase::Unified`] unless the run
+    /// enables disaggregation.
+    pub phase: Phase,
     /// Lifecycle state (provisioning / active / draining / spot).
     pub state: InstState,
     /// Sequences currently decoding.
@@ -146,6 +168,7 @@ impl InstanceSim {
             region,
             pool,
             gpu,
+            phase: Phase::Unified,
             state,
             batch: Vec::new(),
             waiting: Vec::new(),
@@ -292,8 +315,17 @@ impl InstanceSim {
         perf: &PerfProfile,
     ) -> Option<ChunkPlan> {
         let prefill_tokens: u64 = admitted.iter().map(|r| r.input_tokens as u64).sum();
-        let prefill_time = perf.prefill_time(prefill_tokens);
-        let prefill_done = now + prefill_time;
+        // Decode-phase admissions carry no prompt cost: their prefill
+        // already ran on a prefill instance and the KV arrived via the
+        // handoff path.  The `_` arm is the exact pre-disaggregation
+        // computation, so unified fleets stay bit-identical.
+        let (prefill_time, prefill_done) = match self.phase {
+            Phase::Decode => (0.0, now),
+            _ => {
+                let t = perf.prefill_time(prefill_tokens);
+                (t, now + t)
+            }
+        };
         let mut plan = ChunkPlan::default();
         for req in admitted {
             plan.prefills.push((req.id, prefill_done));
@@ -310,6 +342,25 @@ impl InstanceSim {
             self.chunk_scheduled = false;
             self.running_tokens = 0;
             return None;
+        }
+
+        if self.phase == Phase::Prefill {
+            // Prefill-only: every live sequence's instance-local work
+            // ends at prefill completion — the decode half runs elsewhere
+            // after the KV handoff, and the engine records these
+            // completions as handoffs, not outcomes.
+            for (i, seq) in self.batch.iter_mut().enumerate() {
+                if seq.completed_at.is_none() {
+                    seq.completed_at = Some(seq.prefill_done);
+                    seq.remaining = 0;
+                    plan.completions.push((i, seq.prefill_done));
+                }
+            }
+            plan.duration = prefill_time;
+            self.running_tokens = 0;
+            self.busy_until = now + plan.duration;
+            self.chunk_scheduled = true;
+            return Some(plan);
         }
 
         let batch_n = self.batch.len();
@@ -559,6 +610,40 @@ mod tests {
         let admitted = i.admit(0.0, u64::MAX, MAX_BATCH);
         assert_eq!(admitted.len(), 1);
         assert!(i.kv_used <= i.kv_capacity);
+    }
+
+    #[test]
+    fn prefill_phase_completes_at_prefill_done() {
+        let mut i = inst();
+        i.phase = Phase::Prefill;
+        i.push_waiting(req(1, 1000, 200)); // long decode — irrelevant here
+        let adm = i.admit(0.0, u64::MAX, MAX_BATCH);
+        let plan = i.plan_chunk(0.0, adm, &perf()).unwrap();
+        assert_eq!(plan.completions.len(), 1);
+        let expect = perf().prefill_time(1000);
+        assert!((plan.completions[0].1 - expect).abs() < 1e-9);
+        assert!((plan.duration - expect).abs() < 1e-9);
+        assert_eq!(i.pending_tokens(), 0, "no decode work is retained");
+        i.retire_completed();
+        assert!(i.batch.is_empty());
+        assert_eq!(i.kv_used, 0);
+        // Idle afterwards: nothing left to schedule.
+        assert!(i.plan_chunk(plan.duration, vec![], &perf()).is_none());
+    }
+
+    #[test]
+    fn decode_phase_skips_prefill_cost() {
+        let mut i = inst();
+        i.phase = Phase::Decode;
+        i.push_waiting(req(1, 1000, 6));
+        let adm = i.admit(0.0, u64::MAX, MAX_BATCH);
+        let plan = i.plan_chunk(0.0, adm, &perf()).unwrap();
+        assert_eq!(plan.completions.len(), 1);
+        let tbt = perf().decode_iter_time(1, 1006);
+        assert!((plan.completions[0].1 - 6.0 * tbt).abs() < 1e-9);
+        // Prefill timestamps degenerate to "now": TTFT for handed-off
+        // sequences comes from the engine's handoff bookkeeping.
+        assert!((plan.prefills[0].1 - 0.0).abs() < 1e-12);
     }
 
     #[test]

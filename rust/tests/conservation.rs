@@ -1,0 +1,109 @@
+//! Disaggregation invariant layer, part 2: conservation ledgers.
+//!
+//! Table-driven sweep over {strategy} × {unified, disaggregated} ×
+//! {no-fault, region-dark}.  Each cell must satisfy, exactly:
+//!
+//! * **Request conservation** — `completed + dropped + lost + shed`
+//!   equals the arrival count of the materialized trace; nothing is
+//!   double-counted or silently forgotten, even when an outage kills
+//!   work mid-phase.
+//! * **Handoff conservation** — every prefill→decode handoff is either
+//!   admitted to a decode instance or explicitly dropped, exactly once
+//!   (in-flight handoffs at the drain cutoff are counted as drops).
+//! * **Hour-ledger consistency** — the per-SKU GPU-hour ledgers and the
+//!   per-model instance-hour ledgers are recorded at the same change
+//!   points, so their fleet totals must agree.
+//! * **Gate hygiene** — unified cells keep every disaggregation counter
+//!   at zero (the bit-identity guarantee rests on this), and no cell
+//!   ever sheds interactive traffic.
+
+use sageserve::config::{DisaggParams, ModelKind, Region};
+use sageserve::sim::engine::{quick_config, run_simulation, SimConfig, Strategy};
+use sageserve::sim::faults::FaultPlan;
+use sageserve::trace::generator::TraceGenerator;
+
+struct Cell {
+    strategy: Strategy,
+    disagg: bool,
+    fault: bool,
+}
+
+fn cell_config(cell: &Cell) -> SimConfig {
+    let mut cfg = quick_config(cell.strategy, 0.1, 0.005);
+    cfg.scaling.max_instances = 10;
+    if cell.disagg {
+        cfg.disagg = DisaggParams::enabled();
+    }
+    if cell.fault {
+        cfg.faults = FaultPlan::region_dark(Region::EastUs, 2000.0, 5000.0);
+    }
+    cfg
+}
+
+#[test]
+fn every_cell_conserves_requests_handoffs_and_hours() {
+    let mut cells = Vec::new();
+    for strategy in [Strategy::Reactive, Strategy::LtUa, Strategy::Chiron] {
+        for disagg in [false, true] {
+            for fault in [false, true] {
+                cells.push(Cell { strategy, disagg, fault });
+            }
+        }
+    }
+
+    for cell in &cells {
+        let tag = format!(
+            "{}/{}/{}",
+            cell.strategy.name(),
+            if cell.disagg { "disagg" } else { "unified" },
+            if cell.fault { "region-dark" } else { "no-fault" }
+        );
+        let sim = run_simulation(cell_config(cell));
+        let m = &sim.metrics;
+        let f = &m.failures;
+        let arrivals = TraceGenerator::new(sim.cfg.trace.clone()).stream().count() as u64;
+        assert!(arrivals > 100, "{tag}: trace too small to exercise anything");
+
+        // Request conservation, exact.
+        assert_eq!(
+            m.completed + m.dropped + f.lost_total() + f.shed_total(),
+            arrivals,
+            "{tag}: every arrival must complete, drop, be lost, or be shed — once"
+        );
+        assert_eq!(f.shed_interactive_total(), 0, "{tag}: IW traffic must never be shed");
+
+        // Handoff conservation and gate hygiene.
+        if cell.disagg {
+            assert!(m.handoffs > 0, "{tag}: disaggregated cell never handed off");
+            assert_eq!(
+                m.handoffs,
+                m.handoff_admissions + m.handoff_drops,
+                "{tag}: handoffs must be admitted or dropped, exactly once"
+            );
+            assert!(m.kv_transfer_secs > 0.0, "{tag}: handoffs must pay KV transfer");
+        } else {
+            assert_eq!(m.handoffs, 0, "{tag}: unified cell must not hand off");
+            assert_eq!(m.handoff_admissions, 0, "{tag}");
+            assert_eq!(m.handoff_drops, 0, "{tag}");
+            assert_eq!(m.kv_transfer_secs, 0.0, "{tag}: unified cell must not pay KV");
+        }
+
+        // Hour-ledger consistency: the per-SKU and per-model ledgers
+        // observe the same roster change points.
+        let end = sim.end_time();
+        let by_sku: f64 = m.gpu_hours_by_sku(end).values().sum();
+        let by_model: f64 =
+            ModelKind::ALL.iter().map(|&mk| m.model_instance_hours(mk, end)).sum();
+        assert!(
+            (by_sku - by_model).abs() < 1e-6 * by_model.max(1.0),
+            "{tag}: per-SKU hours {by_sku} diverge from per-model hours {by_model}"
+        );
+        assert!(by_model > 0.0, "{tag}: the fleet must have run *something*");
+
+        // The phase rosters themselves stayed coherent.
+        assert!(sim.cluster.aggregates_consistent(), "{tag}: cluster aggregates drifted");
+        if cell.fault {
+            assert!(f.killed_total() > 0, "{tag}: the outage must kill in-flight work");
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Disaggregation invariant layer, part 1: equivalence.
+//!
+//! * A fleet with disaggregation **off** must be *bit-identical* to the
+//!   pre-disaggregation engine — the same empty-gate discipline the
+//!   fault plane established (PR 7): the gates check `disagg.enabled`,
+//!   so knob values behind a disabled switch must not perturb a single
+//!   accumulator cell.
+//! * A fleet with disaggregation **on** must replay bit-identically
+//!   under the chunked executor for every (chunk size, worker count) —
+//!   the handoff/in-flight maps and the decode-phase solver state ride
+//!   the `SimHandoff` or this breaks.
+
+use sageserve::config::DisaggParams;
+use sageserve::sim::chunked::{run_simulation_chunked, ChunkedOptions};
+use sageserve::sim::engine::{quick_config, run_simulation, SimConfig, Strategy};
+
+fn base_config(strategy: Strategy) -> SimConfig {
+    let mut cfg = quick_config(strategy, 0.1, 0.005);
+    cfg.scaling.max_instances = 10;
+    cfg
+}
+
+#[test]
+fn disabled_disagg_knobs_are_bit_identical_to_default() {
+    // The engine's disaggregation paths are gated on `disagg.enabled`,
+    // not on byte-equality with the default params: a config whose
+    // split/target knobs differ but whose switch is off must leave
+    // every accumulator cell bit-identical to the default run.
+    for strategy in [Strategy::Reactive, Strategy::LtUa] {
+        let reference = run_simulation(base_config(strategy));
+        let mut cfg = base_config(strategy);
+        cfg.disagg.prefill_fraction = 0.7;
+        cfg.disagg.ttft_target = 0.25;
+        cfg.disagg.itl_target = 0.05;
+        assert!(!cfg.disagg.enabled);
+        let sim = run_simulation(cfg);
+        assert!(
+            sim.metrics == reference.metrics,
+            "{}: disabled disagg knobs perturbed the unified engine",
+            strategy.name()
+        );
+        assert_eq!(sim.metrics.handoffs, 0);
+        assert_eq!(sim.metrics.kv_transfer_secs, 0.0);
+    }
+}
+
+#[test]
+fn chunked_disagg_bit_identical_to_sequential() {
+    // Chunk boundaries must be able to land *between* a prefill
+    // completion and its decode admission: the pending-handoff map, the
+    // in-flight TTFT map and the decode-column warm-start state all
+    // cross the handoff.  A 2-day trace crosses diurnal peaks and many
+    // control epochs, so both pools scale while requests are mid-phase.
+    let mk = || {
+        let mut cfg = quick_config(Strategy::LtUa, 2.0, 0.002);
+        cfg.scaling.max_instances = 8;
+        cfg.disagg = DisaggParams::enabled();
+        cfg
+    };
+    let seq = run_simulation(mk());
+    assert!(
+        seq.metrics.handoffs > 0,
+        "no prefill ever handed off — the test is vacuous"
+    );
+    assert!(seq.metrics.completed > 1000, "trace too small to be meaningful");
+    for (chunk_epochs, workers) in [(1usize, 1usize), (1, 8), (24, 1), (24, 8)] {
+        let ch = run_simulation_chunked(mk(), &ChunkedOptions { chunk_epochs, workers });
+        assert!(
+            seq.metrics == ch.metrics,
+            "{chunk_epochs} epoch(s) × {workers} worker(s): chunked disagg \
+             diverged from sequential"
+        );
+    }
+}
+
+#[test]
+fn disagg_suspend_resume_roundtrip_is_identity() {
+    // The explicit handoff roundtrip (the primitive under the chunked
+    // executor) with disaggregation on: suspending before the run and
+    // resuming must not perturb anything.
+    use sageserve::sim::engine::Simulation;
+    let mk = || {
+        let mut cfg = base_config(Strategy::LtUa);
+        cfg.disagg = DisaggParams::enabled();
+        cfg
+    };
+    let (cfg, handoff) = Simulation::new(mk()).suspend();
+    let mut resumed = Simulation::resume(cfg, handoff);
+    resumed.run();
+    let reference = run_simulation(mk());
+    assert!(resumed.metrics == reference.metrics);
+    assert!(resumed.metrics.handoffs > 0);
+}

@@ -104,6 +104,39 @@ fn warm_resolves_match_cold_solves() {
     }
 }
 
+/// Deterministic cost regression guard: the work a solve performs is
+/// measured in pivots and B&B nodes, never wall-clock (wall-clock
+/// assertions flake on loaded CI machines — timing lives in the benches
+/// and PERF.md instead).  A warm epoch chain at paper scale must both
+/// stay under the cold budget and shrink per-epoch work substantially.
+#[test]
+fn warm_epoch_chain_stays_within_pivot_budget() {
+    let inp = synthetic_inputs(20, 5, 42);
+    let mut solver = CapacitySolver::new();
+    let cold = optimize_capacity_warm(&inp, &mut solver).expect("cold solve");
+    assert!(cold.pivots < 50_000, "cold solve took {} pivots", cold.pivots);
+    assert!(cold.nodes < 2_000, "cold solve explored {} nodes", cold.nodes);
+
+    let cold_pivots = cold.pivots;
+    let mut next = inp;
+    let mut prev = cold;
+    let mut warm_pivots = 0u64;
+    for epoch in 0..4 {
+        next = perturb_inputs(&next, &prev, 0.02);
+        let warm = optimize_capacity_warm(&next, &mut solver)
+            .unwrap_or_else(|| panic!("warm epoch {epoch} failed"));
+        assert!(warm.warm, "epoch {epoch} must reuse the carried basis");
+        warm_pivots += warm.pivots;
+        prev = warm;
+    }
+    // Four warm re-solves together must stay well under four cold
+    // solves — the whole point of carrying the basis across epochs.
+    assert!(
+        warm_pivots <= cold_pivots.max(1) * 2 && warm_pivots < 50_000,
+        "warm chain took {warm_pivots} pivots vs {cold_pivots} cold"
+    );
+}
+
 /// The bounded branch-and-bound explores the same tree as the dense
 /// oracle (same branching rule, same incumbent seeding) minus the nodes
 /// it discards on the parent bound without a solve — so on any fixed
