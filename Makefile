@@ -8,16 +8,17 @@
 
 CARGO_DIR := rust
 
-.PHONY: check verify build test bench bench-quick smoke-faults smoke-ilp smoke-disagg timing docs clean
+.PHONY: check verify build test bench bench-quick smoke-faults smoke-ilp smoke-disagg smoke-guardrails timing docs clean
 
 check: build test bench-quick
 
 # The verify flow: tier-1 build + tests plus the bench smoke that
 # refreshes BENCH_sim.json (see PERF.md "Verify flow"), the fault-plane,
-# ILP-solver and disaggregation smokes (quick-mode `exp faults` /
-# `exp ilp` / `exp disagg`), plus the rustdoc gate (every public-surface
-# doc link and `missing_docs` audit must hold).
-verify: check smoke-faults smoke-ilp smoke-disagg docs
+# ILP-solver, disaggregation and control-plane-guardrail smokes
+# (quick-mode `exp faults` / `exp ilp` / `exp disagg` /
+# `exp guardrails`), plus the rustdoc gate (every public-surface doc
+# link and `missing_docs` audit must hold).
+verify: check smoke-faults smoke-ilp smoke-disagg smoke-guardrails docs
 
 # Fault-plane smoke: the quick-mode fault ablation — 1-day trace, capped
 # scale — drives the kill/retry/failover/re-provision path end-to-end
@@ -41,12 +42,21 @@ smoke-ilp:
 smoke-disagg:
 	cd $(CARGO_DIR) && SAGESERVE_EXP_QUICK=1 cargo run --release -- exp disagg --out ../results-smoke
 
+# Control-plane guardrail smoke: the quick-mode guardrail ablation —
+# 1-day trace, capped scale — drives a forecast blackout and a telemetry
+# freeze through the naive, guarded and reactive controllers, asserts
+# the degraded-time invariant (degraded exactly when guarded + faulted)
+# and writes guardrail_ablation.csv under results-smoke/.
+smoke-guardrails:
+	cd $(CARGO_DIR) && SAGESERVE_EXP_QUICK=1 cargo run --release -- exp guardrails --out ../results-smoke
+
 # Rustdoc gate: broken intra-doc links, bad HTML in docs and missing
 # docs on the audited modules (config, perf, opt, coordinator::router,
 # coordinator::queue_manager, coordinator::autoscaler,
 # coordinator::controller, coordinator::scheduler, metrics,
 # sim::cluster, sim::engine, sim::chunked, sim::event, sim::instance,
-# sim::faults, experiments — see lib.rs) all fail the build.
+# sim::faults, forecast, trace, experiments — see lib.rs) all fail the
+# build.
 docs:
 	cd $(CARGO_DIR) && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 

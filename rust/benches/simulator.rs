@@ -178,6 +178,48 @@ fn main() {
         report.insert("fault_injection_epoch".to_string(), Json::Obj(entry));
     }
 
+    // Control-plane guardrails: the identical LT-UA single run with the
+    // guarded controller armed and a control-fault schedule that walks
+    // the full cascade — a forecast blackout over the middle of the
+    // trace plus an actuation-delay window.  Compared against
+    // `single_run_sequential` this records what the watchdog + residual
+    // tracker + fallback machinery costs per epoch; with the guardrails
+    // off and an empty plan the engine is bit-identical
+    // (`tests/guardrail_equivalence.rs`), so only the armed path can
+    // ever move.
+    {
+        use sageserve::config::GuardrailParams;
+        use sageserve::sim::faults::ControlFaultPlan;
+        let span = 0.1 * 86_400.0;
+        let cfg = || {
+            let mut plan = ControlFaultPlan::forecast_blackout(span * 0.3, span * 0.7);
+            plan.actuation_delays.push(sageserve::sim::faults::ActuationDelay {
+                start: span * 0.5,
+                end: span * 0.9,
+                extra: 60.0,
+            });
+            SimConfig {
+                trace: TraceConfig { days: 0.1, scale: 0.05, ..Default::default() },
+                strategy: Strategy::LtUa,
+                control_faults: plan,
+                guardrails: GuardrailParams::enabled(),
+                ..Default::default()
+            }
+        };
+        let n_requests = TraceGenerator::new(cfg().trace.clone()).stream().count();
+        let result = bench(&format!("guardrail epoch ({n_requests} reqs)"), iters, || {
+            run_simulation(cfg()).metrics.completed as usize
+        });
+        let reqs_per_sec = n_requests as f64 / (result.mean_ns / 1e9);
+        println!("    → {:.2} M simulated requests / wall-second\n", reqs_per_sec / 1e6);
+        let mut entry = BTreeMap::new();
+        entry.insert("n_requests".to_string(), Json::Num(n_requests as f64));
+        entry.insert("mean_ns".to_string(), Json::Num(result.mean_ns));
+        entry.insert("p50_ns".to_string(), Json::Num(result.p50_ns));
+        entry.insert("reqs_per_wall_sec".to_string(), Json::Num(reqs_per_sec));
+        report.insert("guardrail_epoch".to_string(), Json::Obj(entry));
+    }
+
     // Disaggregated week: LT-UA with prefill/decode pools, the
     // KV-transfer handoff and the paired per-phase capacity solves on a
     // multi-day trace (1 day in quick mode).  Compared against the

@@ -603,6 +603,61 @@ impl Default for DisaggParams {
     }
 }
 
+/// Control-plane guardrail parameters (the defense half of the
+/// control-fault plane; see `coordinator::controller`'s guardrail
+/// layer).  When enabled, every control epoch runs through a watchdog
+/// (input-age stamping), a residual tracker (trailing forecast error →
+/// θ safety margin, ROADMAP item 4) and the fallback cascade — fresh
+/// ILP plan → held last-good plan with safety inflation → reactive
+/// proportional control.  When disabled — the default — **no guardrail
+/// code path executes**, so guardrail-off runs are bit-identical to the
+/// pre-guardrail engine (guarded by `tests/guardrail_equivalence.rs`,
+/// the empty-`FaultPlan` / disagg-off pattern).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GuardrailParams {
+    /// Master switch.  `false` (default) keeps the naive controller.
+    pub enabled: bool,
+    /// Watchdog tolerance: telemetry older than this (seconds) at epoch
+    /// time trips the fallback cascade.
+    pub max_telemetry_age: Time,
+    /// Trailing residuals kept per (model, region) for the
+    /// forecast-error variance estimate.
+    pub residual_window: usize,
+    /// θ margin per unit of residual standard deviation (the
+    /// error-variance inflation gain).
+    pub inflation_gain: f64,
+    /// Hard cap on the θ margin (a fraction; 0.5 = at most 50% extra
+    /// capacity commanded by the residual tracker).
+    pub max_inflation: f64,
+    /// Multiplier applied to the held last-good targets while on the
+    /// middle cascade rung.
+    pub held_inflation: f64,
+    /// Control epochs the last-good plan may be held before the cascade
+    /// drops to reactive control.
+    pub max_held_epochs: u32,
+}
+
+impl GuardrailParams {
+    /// Guardrails on, with the default watchdog/margin/cascade tuning.
+    pub fn enabled() -> Self {
+        GuardrailParams { enabled: true, ..GuardrailParams::default() }
+    }
+}
+
+impl Default for GuardrailParams {
+    fn default() -> Self {
+        GuardrailParams {
+            enabled: false,
+            max_telemetry_age: 30.0 * MINUTE,
+            residual_window: 24,
+            inflation_gain: 1.0,
+            max_inflation: 0.5,
+            held_inflation: 1.25,
+            max_held_epochs: 2,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -748,6 +803,25 @@ mod tests {
         let on = DisaggParams::enabled();
         assert!(on.enabled);
         assert_eq!(on.prefill_fraction, d.prefill_fraction);
+    }
+
+    #[test]
+    fn guardrail_defaults_are_off_and_sane() {
+        let g = GuardrailParams::default();
+        assert!(!g.enabled, "guardrails must default off (bit-identity gate)");
+        // Watchdog tolerance sits between the telemetry bucket (15 min)
+        // and the control interval (1 h): one stale bucket is normal,
+        // a whole stale epoch is not.
+        assert!(g.max_telemetry_age > 15.0 * MINUTE);
+        assert!(g.max_telemetry_age < HOUR);
+        assert!(g.residual_window > 0);
+        assert!(g.inflation_gain >= 0.0);
+        assert!(g.max_inflation > 0.0 && g.max_inflation <= 1.0);
+        assert!(g.held_inflation >= 1.0, "holding must never shrink the plan");
+        assert!(g.max_held_epochs >= 1);
+        let on = GuardrailParams::enabled();
+        assert!(on.enabled);
+        assert_eq!(on.held_inflation, g.held_inflation);
     }
 
     #[test]

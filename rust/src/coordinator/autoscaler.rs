@@ -112,6 +112,13 @@ pub struct ScaleCtx<'a> {
     /// Requests displaced by immediate drains; the engine re-routes these
     /// after the autoscaler call returns.
     pub reroutes: Vec<crate::trace::types::Request>,
+    /// Control-fault plane: scale-outs are silently swallowed this tick
+    /// (the scaler is told they succeeded; no VM ever comes).
+    pub act_drop: bool,
+    /// Control-fault plane: extra provisioning lead time (secs) added to
+    /// every scale-out committed this tick.  0 when no delay window is
+    /// open — the untouched path.
+    pub act_extra_lead: Time,
 }
 
 impl ScaleCtx<'_> {
@@ -129,6 +136,15 @@ impl ScaleCtx<'_> {
         ready: Time,
         prev_model: ModelKind,
     ) {
+        // Actuation-delay fault: the cloud control plane acknowledged
+        // the request but executes it late.  Branch (never add 0.0) so
+        // delay-free runs stay bit-identical.
+        let ready = if self.act_extra_lead > 0.0 {
+            self.metrics.guardrails.actuations_delayed += 1;
+            ready + self.act_extra_lead
+        } else {
+            ready
+        };
         self.events.push(ready, Event::ProvisionDone { instance: id });
         self.record_ledgers(model, region);
         if prev_model != model {
@@ -136,9 +152,22 @@ impl ScaleCtx<'_> {
         }
     }
 
+    /// Actuation-drop fault: report success without touching the fleet
+    /// — the scaler (and its cooldown logic) believes capacity is
+    /// coming, but it never does.  Returns true when the drop fired.
+    fn drop_actuation(&mut self) -> bool {
+        if self.act_drop {
+            self.metrics.guardrails.actuations_dropped += 1;
+        }
+        self.act_drop
+    }
+
     /// Scale out one instance of an explicit SKU and schedule its
     /// ProvisionDone event.
     fn scale_out(&mut self, model: ModelKind, region: Region, pool: PoolTag, gpu: GpuKind) -> bool {
+        if self.drop_actuation() {
+            return true;
+        }
         let Some((id, ready, prev)) =
             self.cluster.scale_out(model, region, pool, gpu, self.now, self.metrics)
         else {
@@ -170,6 +199,9 @@ impl ScaleCtx<'_> {
         region: Region,
         pool: PoolTag,
     ) -> bool {
+        if self.drop_actuation() {
+            return true;
+        }
         let (order, n) = self.gpus_by_spot_value();
         for &gpu in &order[..n] {
             let Some((id, ready, prev)) =
@@ -532,6 +564,36 @@ impl Autoscaler {
         }
     }
 
+    /// The guardrail cascade's bottom rung: a per-tick reactive backstop
+    /// over the **Unified** pool, used by the LT strategies when the
+    /// control plane is so degraded that no plan — fresh or held — is
+    /// trustworthy.  Same 70/30 thresholds as the Reactive strategy,
+    /// driven from the scale tick instead of per request, and reading
+    /// live cluster utilization rather than the telemetry feed (the
+    /// feed may be the very thing that failed).  Scale-in stops at the
+    /// configured floor: a blind backstop must never drain an endpoint.
+    pub fn guardrail_reactive_tick(&mut self, ctx: &mut ScaleCtx) {
+        for idx in 0..ctx.cluster.endpoints.len() {
+            let (model, region) = ctx.cluster.endpoints.key_at(idx);
+            if !ctx.cooldown_ok(model, region, &self.params) {
+                continue;
+            }
+            let util = ctx.cluster.pool_util(model, region, None);
+            if util > self.params.scale_out_util {
+                if ctx.scale_out_spot_then_cheapest(model, region, PoolTag::Unified) {
+                    ctx.touch_cooldown(model, region);
+                }
+            } else if util < self.params.scale_in_util {
+                let allocated = ctx.cluster.allocated_count(model, region);
+                if allocated > self.params.min_instances
+                    && ctx.scale_in_dearest(model, region, None)
+                {
+                    ctx.touch_cooldown(model, region);
+                }
+            }
+        }
+    }
+
     /// One LT-U progression step toward the armed per-SKU targets:
     /// cheapest SKU still below its target first; if every per-SKU
     /// target is met (reactive drift between epochs), the unpinned
@@ -738,7 +800,7 @@ mod tests {
         let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::Reactive, 4);
         load_instances(&mut cluster, 0.9);
         let before = cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs);
-        let mut ctx = ScaleCtx { now: 100.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        let mut ctx = ScaleCtx { now: 100.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new(), act_drop: false, act_extra_lead: 0.0 };
         scaler.on_request(&mut ctx, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF);
         assert_eq!(cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs), before + 1);
         assert_eq!(events.len(), 1); // ProvisionDone scheduled
@@ -748,7 +810,7 @@ mod tests {
     fn reactive_scales_in_below_threshold() {
         let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::Reactive, 4);
         load_instances(&mut cluster, 0.05);
-        let mut ctx = ScaleCtx { now: 100.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        let mut ctx = ScaleCtx { now: 100.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new(), act_drop: false, act_extra_lead: 0.0 };
         scaler.on_request(&mut ctx, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF);
         // The instance was idle, so it converted to spot immediately.
         assert_eq!(cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs), 3);
@@ -759,9 +821,9 @@ mod tests {
     fn cooldown_blocks_rapid_scaling() {
         let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::Reactive, 4);
         load_instances(&mut cluster, 0.9);
-        let mut ctx = ScaleCtx { now: 100.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        let mut ctx = ScaleCtx { now: 100.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new(), act_drop: false, act_extra_lead: 0.0 };
         scaler.on_request(&mut ctx, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF);
-        let mut ctx = ScaleCtx { now: 105.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        let mut ctx = ScaleCtx { now: 105.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new(), act_drop: false, act_extra_lead: 0.0 };
         scaler.on_request(&mut ctx, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF);
         // Second call inside the 15 s cooldown: no extra instance.
         assert_eq!(events.len(), 1);
@@ -778,10 +840,10 @@ mod tests {
                 });
             }
         }
-        let mut ctx = ScaleCtx { now: 50.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        let mut ctx = ScaleCtx { now: 50.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new(), act_drop: false, act_extra_lead: 0.0 };
         scaler.on_request(&mut ctx, ModelKind::Llama2_70B, Region::EastUs, Tier::Niw);
         // But an IW request must not trigger anything (IW pool is idle).
-        let mut ctx = ScaleCtx { now: 200.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        let mut ctx = ScaleCtx { now: 200.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new(), act_drop: false, act_extra_lead: 0.0 };
         scaler.on_request(&mut ctx, ModelKind::Llama2_70B, Region::EastUs, Tier::IwF);
         // one scale_out from NIW, and the idle IW pool triggers scale_in
         let niw_pool: Vec<_> = cluster.endpoints[&(ModelKind::Llama2_70B, Region::EastUs)]
@@ -804,7 +866,7 @@ mod tests {
     #[test]
     fn lt_i_applies_delta_immediately() {
         let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::LtI, 4);
-        let mut ctx = ScaleCtx { now: 3600.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        let mut ctx = ScaleCtx { now: 3600.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new(), act_drop: false, act_extra_lead: 0.0 };
         scaler.on_epoch(&mut ctx, &plan1(3, 1000.0));
         assert_eq!(cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs), 7);
     }
@@ -812,18 +874,18 @@ mod tests {
     #[test]
     fn lt_u_defers_until_util_breach() {
         let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::LtU, 4);
-        let mut ctx = ScaleCtx { now: 3600.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        let mut ctx = ScaleCtx { now: 3600.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new(), act_drop: false, act_extra_lead: 0.0 };
         scaler.on_epoch(&mut ctx, &plan1(3, 1000.0));
         // Target armed but nothing applied yet.
         assert_eq!(cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs), 4);
         // Low util tick: still nothing.
         let obs = BTreeMap::new();
-        let mut ctx = ScaleCtx { now: 3700.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        let mut ctx = ScaleCtx { now: 3700.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new(), act_drop: false, act_extra_lead: 0.0 };
         scaler.on_tick(&mut ctx, &obs, 100.0);
         assert_eq!(cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs), 4);
         // Util breach: one step toward the target per tick+cooldown.
         load_instances(&mut cluster, 0.9);
-        let mut ctx = ScaleCtx { now: 3800.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        let mut ctx = ScaleCtx { now: 3800.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new(), act_drop: false, act_extra_lead: 0.0 };
         scaler.on_tick(&mut ctx, &obs, 200.0);
         assert_eq!(cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs), 5);
     }
@@ -831,13 +893,13 @@ mod tests {
     #[test]
     fn lt_ua_overrides_on_forecast_gap() {
         let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::LtUa, 4);
-        let mut ctx = ScaleCtx { now: 3600.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        let mut ctx = ScaleCtx { now: 3600.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new(), act_drop: false, act_extra_lead: 0.0 };
         scaler.on_epoch(&mut ctx, &plan1(0, 100.0));
         // Observed TPS 8× the forecast, inside the last-20-min window, at
         // target count ⇒ scale out beyond the target.
         let mut obs = BTreeMap::new();
         obs.insert((ModelKind::Llama2_70B, Region::EastUs), 800.0);
-        let mut ctx = ScaleCtx { now: 7000.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        let mut ctx = ScaleCtx { now: 7000.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new(), act_drop: false, act_extra_lead: 0.0 };
         scaler.on_tick(&mut ctx, &obs, 3000.0); // elapsed 3000 ≥ 3600-1200
         assert_eq!(cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs), 5);
     }
@@ -845,11 +907,11 @@ mod tests {
     #[test]
     fn lt_u_does_not_override_on_gap() {
         let (mut cluster, mut metrics, mut events, mut scaler) = setup(Strategy::LtU, 4);
-        let mut ctx = ScaleCtx { now: 3600.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        let mut ctx = ScaleCtx { now: 3600.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new(), act_drop: false, act_extra_lead: 0.0 };
         scaler.on_epoch(&mut ctx, &plan1(0, 100.0));
         let mut obs = BTreeMap::new();
         obs.insert((ModelKind::Llama2_70B, Region::EastUs), 800.0);
-        let mut ctx = ScaleCtx { now: 7000.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new() };
+        let mut ctx = ScaleCtx { now: 7000.0, cluster: &mut cluster, metrics: &mut metrics, events: &mut events, reroutes: Vec::new(), act_drop: false, act_extra_lead: 0.0 };
         scaler.on_tick(&mut ctx, &obs, 3000.0);
         assert_eq!(cluster.allocated_count(ModelKind::Llama2_70B, Region::EastUs), 4);
     }
@@ -881,6 +943,8 @@ mod tests {
             metrics: &mut metrics,
             events: &mut events,
             reroutes: Vec::new(),
+            act_drop: false,
+            act_extra_lead: 0.0,
         };
         let swept = ctx.sweep_stalled_drains();
         assert_eq!(swept, 1, "the stalled drain must be converted");
@@ -896,6 +960,8 @@ mod tests {
             metrics: &mut metrics,
             events: &mut events,
             reroutes: Vec::new(),
+            act_drop: false,
+            act_extra_lead: 0.0,
         };
         assert_eq!(ctx.sweep_stalled_drains(), 0);
     }
@@ -970,6 +1036,8 @@ mod tests {
             metrics: &mut metrics,
             events: &mut events,
             reroutes: Vec::new(),
+            act_drop: false,
+            act_extra_lead: 0.0,
         };
         scaler.on_tick(&mut ctx, &obs, 0.0);
         // A fresh instance lands in Provisioning, so count it via the

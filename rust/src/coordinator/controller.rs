@@ -18,10 +18,13 @@
 
 use std::collections::BTreeMap;
 
-use crate::config::{DisaggParams, GpuKind, ModelKind, Region, ScalingParams, Time};
+use crate::config::{
+    DisaggParams, GpuKind, GuardrailParams, ModelKind, Region, ScalingParams, Time,
+};
 use crate::experiments::sweep::sweep;
 use crate::forecast::Forecaster;
-use crate::opt::capacity::{optimize_capacity_warm, CapacityInputs, CapacitySolver};
+use crate::metrics::{GuardrailMode, GuardrailStats};
+use crate::opt::capacity::{optimize_capacity_warm_faulted, CapacityInputs, CapacitySolver};
 use crate::perf::PerfTable;
 
 /// 15-minute-bucketed input-TPS telemetry per (model, region), split into
@@ -173,6 +176,270 @@ impl SolverStates {
     }
 }
 
+/// Per-epoch control-input modifiers — the watchdog's stamp of what the
+/// control-plane fault plane is doing to this epoch's inputs, computed
+/// by the engine from [`crate::sim::faults::ControlFaultPlan`] and
+/// consumed by [`run_epoch_modded`] / [`guardrail_epoch`].
+///
+/// The clean value changes **no** code path: every modifier is applied
+/// behind a branch (or, for the θ deflation, as an exact `x / 1.0`
+/// division), so `run_epoch` with clean mods is bit-identical to the
+/// pre-guardrail controller.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlEpochMods {
+    /// The forecaster's output is suppressed (consumed as zero demand).
+    pub forecast_blackout: bool,
+    /// `(scale, bias)` distortion applied to every forecast value.
+    pub forecast_corruption: Option<(f64, f64)>,
+    /// When the telemetry feed is frozen: the last good telemetry time.
+    /// All telemetry reads (IW history, NIW buffer) are taken as of this
+    /// instant instead of `now` — the controller sees the world as it
+    /// was when the feed died.
+    pub telemetry_now: Option<Time>,
+    /// Every capacity solve this epoch reports the
+    /// infeasible/iteration-cap outcome.
+    pub solver_fault: bool,
+    /// θ safety margin from the residual tracker: every per-instance
+    /// capacity is divided by `1 + theta_deflate`, so the ILP plans as
+    /// if instances were that much slower — commanding proportionally
+    /// more of them.  0 (the clean value) divides by exactly 1.0.
+    pub theta_deflate: f64,
+}
+
+impl ControlEpochMods {
+    /// The no-fault, no-margin value — the naive controller's view.
+    pub fn clean() -> ControlEpochMods {
+        ControlEpochMods {
+            forecast_blackout: false,
+            forecast_corruption: None,
+            telemetry_now: None,
+            solver_fault: false,
+            theta_deflate: 0.0,
+        }
+    }
+
+    /// True when every modifier is at its identity value.
+    pub fn is_clean(&self) -> bool {
+        *self == ControlEpochMods::clean()
+    }
+}
+
+impl Default for ControlEpochMods {
+    fn default() -> Self {
+        ControlEpochMods::clean()
+    }
+}
+
+/// The guardrail controller's carried state: trailing forecast
+/// residuals, the forecasts awaiting verification, the last-good plan
+/// and the cascade rung — carried across control epochs (and across
+/// chunk boundaries via the engine handoff, which is what keeps chunked
+/// guarded runs bit-identical to sequential ones).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct GuardrailState {
+    /// Trailing relative forecast residuals per (model, region), oldest
+    /// first, capped at [`GuardrailParams::residual_window`].
+    residuals: BTreeMap<(ModelKind, Region), Vec<f64>>,
+    /// Forecast peaks issued by the previous Fresh epoch, awaiting
+    /// comparison against observed demand.
+    pending: BTreeMap<(ModelKind, Region), f64>,
+    /// The last-good plan as absolute targets:
+    /// (model, region) → (total instance target, forecast peak TPS).
+    last_good: BTreeMap<(ModelKind, Region), (i64, f64)>,
+    /// Current cascade rung.  Starts (and, healthy, stays) at `Fresh`.
+    pub mode: GuardrailMode,
+    /// Consecutive epochs spent on the `Held` rung.
+    held_epochs: u32,
+}
+
+impl GuardrailState {
+    /// Fresh state: no residual history, no last-good plan.
+    pub fn new() -> GuardrailState {
+        GuardrailState::default()
+    }
+
+    /// Root-mean-square of the trailing relative residuals, pooled over
+    /// all keys — the error-variance estimate behind the θ margin.  The
+    /// second moment (not the centered variance) is deliberate: a
+    /// consistently-biased forecast is exactly as dangerous as a noisy
+    /// one, and RMS charges for both.
+    pub fn residual_rms(&self) -> f64 {
+        let mut n = 0usize;
+        let mut sumsq = 0.0;
+        for w in self.residuals.values() {
+            for &x in w {
+                n += 1;
+                sumsq += x * x;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            (sumsq / n as f64).sqrt()
+        }
+    }
+
+    /// The θ margin the residual tracker currently commands.
+    pub fn margin(&self, guard: &GuardrailParams) -> f64 {
+        (guard.inflation_gain * self.residual_rms()).clamp(0.0, guard.max_inflation)
+    }
+}
+
+/// One guarded control epoch: watchdog → residual tracker → fallback
+/// cascade.
+///
+/// The watchdog stamps the epoch's inputs with their age (via
+/// `mods.telemetry_now`) and declares the epoch *healthy* iff the
+/// forecaster is answering, the solver is answering, and telemetry is
+/// no older than [`GuardrailParams::max_telemetry_age`].  Healthy
+/// epochs run the real ILP with the residual tracker's θ margin folded
+/// in and refresh the last-good plan.  Unhealthy epochs fall back:
+/// first to the last-good plan held with
+/// [`GuardrailParams::held_inflation`] safety inflation (for at most
+/// [`GuardrailParams::max_held_epochs`] epochs), then to reactive
+/// proportional control — an **empty** plan; the engine's per-tick
+/// reactive backstop (`Autoscaler::guardrail_reactive_tick`) takes
+/// over until the control plane heals.
+///
+/// Every rung change is recorded as a first-class
+/// [`crate::metrics::GuardrailEvent`], and every epoch accrues rung
+/// counts + degraded time in `stats`.
+#[allow(clippy::too_many_arguments)]
+pub fn guardrail_epoch(
+    telemetry: &Telemetry,
+    forecaster: &mut dyn Forecaster,
+    perf: &PerfTable,
+    gpus: &[GpuKind],
+    params: &ScalingParams,
+    guard: &GuardrailParams,
+    current_counts: &[[usize; GpuKind::COUNT]],
+    solvers: &mut SolverStates,
+    now: Time,
+    mods: &ControlEpochMods,
+    state: &mut GuardrailState,
+    stats: &mut GuardrailStats,
+) -> EpochPlan {
+    let t_eff = mods.telemetry_now.unwrap_or(now);
+    let telemetry_fresh = now - t_eff <= guard.max_telemetry_age;
+
+    // Residual tracker: score the previous Fresh epoch's forecasts
+    // against what actually arrived — only from a live feed (frozen
+    // telemetry would teach the tracker that the forecast was perfect).
+    if mods.telemetry_now.is_none() {
+        for (&key, &fc) in &state.pending {
+            let observed = telemetry.recent_tps(key, now);
+            let resid = (observed - fc).abs() / fc.max(1.0);
+            let w = state.residuals.entry(key).or_default();
+            w.push(resid);
+            if w.len() > guard.residual_window {
+                w.remove(0);
+            }
+        }
+        state.pending.clear();
+    }
+    let margin = state.margin(guard);
+
+    let healthy = !mods.forecast_blackout && !mods.solver_fault && telemetry_fresh;
+    let prev_mode = state.mode;
+    let plan = if healthy {
+        let guarded = ControlEpochMods { theta_deflate: margin, ..mods.clone() };
+        let plan = run_epoch_impl(
+            telemetry, forecaster, perf, gpus, params, current_counts, solvers, now, &guarded,
+            true,
+        );
+        state.mode = GuardrailMode::Fresh;
+        state.held_epochs = 0;
+        state.pending =
+            plan.iter().map(|e| ((e.model, e.region), e.forecast_tps)).collect();
+        // Plan entries are model-sorted, which may differ from telemetry
+        // key order — look each entry's counts row up by key.
+        let keys = telemetry.keys();
+        let mut base_total = 0i64;
+        state.last_good = plan
+            .iter()
+            .map(|e| {
+                let row = keys
+                    .iter()
+                    .position(|&k| k == (e.model, e.region))
+                    .expect("plan entry key missing from telemetry");
+                let cur: i64 =
+                    gpus.iter().map(|&k| current_counts[row][k.index()] as i64).sum();
+                let target = (cur + e.delta_total()).max(0);
+                base_total += target;
+                ((e.model, e.region), (target, e.forecast_tps))
+            })
+            .collect();
+        // Capacity-margin ledger: instance-hours of extra capacity the
+        // θ deflation commanded this epoch (the deflated fleet target
+        // includes a `margin/(1+margin)` share of pure safety margin).
+        if margin > 0.0 {
+            stats.margin_instance_hours +=
+                base_total as f64 * (margin / (1.0 + margin)) * (params.control_interval / 3600.0);
+        }
+        plan
+    } else if !state.last_good.is_empty() && state.held_epochs < guard.max_held_epochs {
+        state.mode = GuardrailMode::Held;
+        state.held_epochs += 1;
+        let plan = held_plan(state, gpus, params, guard, telemetry.keys(), current_counts);
+        let base_total: i64 = state.last_good.values().map(|&(t, _)| t).sum();
+        stats.margin_instance_hours += base_total as f64
+            * (guard.held_inflation - 1.0)
+            * (params.control_interval / 3600.0);
+        plan
+    } else {
+        state.mode = GuardrailMode::Reactive;
+        EpochPlan::new()
+    };
+
+    if state.mode != prev_mode {
+        let cause = match (prev_mode, state.mode) {
+            (_, GuardrailMode::Fresh) => "recovered",
+            (GuardrailMode::Held, GuardrailMode::Reactive) if !state.last_good.is_empty() => {
+                "held-expired"
+            }
+            _ if mods.forecast_blackout => "forecast-blackout",
+            _ if !telemetry_fresh => "stale-telemetry",
+            _ if mods.solver_fault => "solver-failure",
+            _ => "degraded",
+        };
+        stats.record_transition(now, prev_mode, state.mode, cause);
+    }
+    stats.record_epoch(state.mode, params.control_interval);
+    plan
+}
+
+/// The middle cascade rung: re-issue the last-good absolute targets,
+/// inflated by the safety factor and clamped to the instance bounds,
+/// as deltas on the cheapest SKU (mirroring the infeasible-clamp idiom
+/// of `solve_epoch`).
+fn held_plan(
+    state: &GuardrailState,
+    gpus: &[GpuKind],
+    params: &ScalingParams,
+    guard: &GuardrailParams,
+    keys: &[(ModelKind, Region)],
+    current_counts: &[[usize; GpuKind::COUNT]],
+) -> EpochPlan {
+    let cheapest = (0..gpus.len())
+        .min_by(|&a, &b| {
+            gpus[a].dollars_per_hour().partial_cmp(&gpus[b].dollars_per_hour()).unwrap()
+        })
+        .unwrap_or(0);
+    let mut plan = EpochPlan::new();
+    for (i, &(m, r)) in keys.iter().enumerate() {
+        let Some(&(target, forecast_tps)) = state.last_good.get(&(m, r)) else {
+            continue;
+        };
+        let inflated = ((target as f64 * guard.held_inflation).ceil() as i64)
+            .clamp(params.min_instances as i64, params.max_instances as i64);
+        let cur: i64 = gpus.iter().map(|&k| current_counts[i][k.index()] as i64).sum();
+        let mut deltas = vec![0i64; gpus.len()];
+        deltas[cheapest] = inflated - cur;
+        plan.push(EpochPlanEntry { model: m, region: r, deltas, forecast_tps });
+    }
+    plan
+}
+
 /// One model's ready-to-solve problem plus the metadata needed to turn
 /// its [`crate::opt::CapacityPlan`] (or fallback) into plan entries.
 struct ModelJob {
@@ -208,7 +475,38 @@ pub fn run_epoch(
     solvers: &mut SolverStates,
     now: Time,
 ) -> EpochPlan {
-    run_epoch_impl(telemetry, forecaster, perf, gpus, params, current_counts, solvers, now, true)
+    run_epoch_impl(
+        telemetry,
+        forecaster,
+        perf,
+        gpus,
+        params,
+        current_counts,
+        solvers,
+        now,
+        &ControlEpochMods::clean(),
+        true,
+    )
+}
+
+/// [`run_epoch`] under the control-plane fault plane: `mods` carries the
+/// epoch's input distortions (blackout, corruption, frozen telemetry,
+/// forced solver failure).  With [`ControlEpochMods::clean`] this is
+/// exactly [`run_epoch`] — the naive controller's path when a
+/// control-fault schedule is active but no window is open.
+#[allow(clippy::too_many_arguments)]
+pub fn run_epoch_modded(
+    telemetry: &Telemetry,
+    forecaster: &mut dyn Forecaster,
+    perf: &PerfTable,
+    gpus: &[GpuKind],
+    params: &ScalingParams,
+    current_counts: &[[usize; GpuKind::COUNT]],
+    solvers: &mut SolverStates,
+    now: Time,
+    mods: &ControlEpochMods,
+) -> EpochPlan {
+    run_epoch_impl(telemetry, forecaster, perf, gpus, params, current_counts, solvers, now, mods, true)
 }
 
 /// [`run_epoch`] with the per-model solves forced onto the caller's
@@ -227,7 +525,18 @@ pub fn run_epoch_sequential(
     solvers: &mut SolverStates,
     now: Time,
 ) -> EpochPlan {
-    run_epoch_impl(telemetry, forecaster, perf, gpus, params, current_counts, solvers, now, false)
+    run_epoch_impl(
+        telemetry,
+        forecaster,
+        perf,
+        gpus,
+        params,
+        current_counts,
+        solvers,
+        now,
+        &ControlEpochMods::clean(),
+        false,
+    )
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -240,12 +549,35 @@ fn run_epoch_impl(
     current_counts: &[[usize; GpuKind::COUNT]],
     solvers: &mut SolverStates,
     now: Time,
+    mods: &ControlEpochMods,
     parallel: bool,
 ) -> EpochPlan {
     let keys = telemetry.keys().to_vec();
-    let history: Vec<Vec<f64>> = keys.iter().map(|&k| telemetry.history_tps(k, now)).collect();
-    let forecasts = forecaster.forecast(&history);
-    let theta = |m: ModelKind, k: GpuKind| perf.profile(m, k).input_tps_capacity();
+    // Frozen telemetry: every read is taken as of the last good instant.
+    let t_eff = mods.telemetry_now.unwrap_or(now);
+    let history: Vec<Vec<f64>> = keys.iter().map(|&k| telemetry.history_tps(k, t_eff)).collect();
+    // The forecaster is always *called* (it may be stateful and must
+    // advance identically for every controller flavor); a blackout
+    // suppresses its output on the way to the ILP.
+    let mut forecasts = forecaster.forecast(&history);
+    if mods.forecast_blackout {
+        for row in &mut forecasts {
+            for v in row.iter_mut() {
+                *v = 0.0;
+            }
+        }
+    } else if let Some((scale, bias)) = mods.forecast_corruption {
+        for row in &mut forecasts {
+            for v in row.iter_mut() {
+                *v = (*v * scale + bias).max(0.0);
+            }
+        }
+    }
+    // θ deflation (residual-tracker margin): dividing by exactly 1.0
+    // when the margin is zero is a bit-exact identity.
+    let deflate = 1.0 + mods.theta_deflate;
+    let theta =
+        |m: ModelKind, k: GpuKind| perf.profile(m, k).input_tps_capacity() / deflate;
     // The ILP's lower bound applies per x_{j,k}; for a heterogeneous
     // fleet that would force min_instances of *every* SKU in every
     // region, so multi-SKU epochs bound at zero and rely on the
@@ -260,9 +592,10 @@ fn run_epoch_impl(
         params,
         current_counts,
         solvers,
-        now,
+        t_eff,
         min_instances,
         params.max_instances as f64,
+        mods.solver_fault,
         parallel,
     )
 }
@@ -317,11 +650,11 @@ pub fn run_epoch_disagg(
         |m: ModelKind, k: GpuKind| perf.profile(m, k).decode_input_tps_capacity(disagg.itl_target);
     let prefill = solve_epoch(
         telemetry, &keys, &forecasts, &theta_p, gpus, params, prefill_counts,
-        solvers_prefill, now, min_instances, max_prefill, true,
+        solvers_prefill, now, min_instances, max_prefill, false, true,
     );
     let decode = solve_epoch(
         telemetry, &keys, &forecasts, &theta_d, gpus, params, decode_counts,
-        solvers_decode, now, min_instances, max_decode, true,
+        solvers_decode, now, min_instances, max_decode, false, true,
     );
 
     // Merge positionally: both solves group the same telemetry keys by
@@ -355,6 +688,11 @@ pub fn run_epoch_disagg(
 
 /// The shared solve core: forecasts already computed, θ supplied by the
 /// caller (unified vs per-phase capacities), instance bounds explicit.
+/// `solver_fault` forces every per-model solve into the
+/// infeasible/iteration-cap outcome (the control-fault plane's
+/// solver-failure injection) — the naive fallback then clamps every
+/// region to `max_instances`, which is exactly the over-provisioning
+/// failure mode `exp guardrails` measures.
 #[allow(clippy::too_many_arguments)]
 fn solve_epoch(
     telemetry: &Telemetry,
@@ -368,6 +706,7 @@ fn solve_epoch(
     now: Time,
     min_instances: f64,
     max_instances: f64,
+    solver_fault: bool,
     parallel: bool,
 ) -> EpochPlan {
     assert_eq!(
@@ -440,7 +779,7 @@ fn solve_epoch(
     debug_assert_eq!(solver_refs.len(), jobs.len());
     let work: Vec<(&ModelJob, &mut CapacitySolver)> = jobs.iter().zip(solver_refs).collect();
     let solve = |(job, solver): (&ModelJob, &mut CapacitySolver)| {
-        optimize_capacity_warm(&job.inputs, solver)
+        optimize_capacity_warm_faulted(&job.inputs, solver, solver_fault)
     };
     let results = if parallel {
         sweep(work, solve)
@@ -722,6 +1061,237 @@ mod tests {
         );
         assert_eq!(par.len(), models.len() * Region::ALL.len());
         assert_eq!(par, seq);
+    }
+
+    /// Hot single-region telemetry shared by the guardrail tests.
+    fn hot_east_telemetry() -> Telemetry {
+        let models = [ModelKind::Llama2_70B];
+        let mut telemetry = Telemetry::new(&models, 900.0);
+        let mut warm = BTreeMap::new();
+        for r in Region::ALL {
+            let tps = if r == Region::EastUs { 20_000.0 } else { 50.0 };
+            warm.insert((ModelKind::Llama2_70B, r), vec![tps; 192]);
+        }
+        telemetry.warmup(&warm);
+        telemetry
+    }
+
+    /// Clean mods must be a bit-exact no-op: `run_epoch_modded` with
+    /// `ControlEpochMods::clean()` equals `run_epoch`.
+    #[test]
+    fn clean_mods_are_identity() {
+        let telemetry = hot_east_telemetry();
+        let perf = PerfTable::new(GpuKind::H100x8, &[ModelKind::Llama2_70B]);
+        let params = ScalingParams::default();
+        let counts = vec![[2usize, 0, 0]; Region::ALL.len()];
+        let mut f1 = SeasonalNaive::new(96, 4);
+        let mut f2 = SeasonalNaive::new(96, 4);
+        let plain = run_epoch(
+            &telemetry, &mut f1, &perf, &[GpuKind::H100x8], &params, &counts,
+            &mut SolverStates::new(), 0.0,
+        );
+        let modded = run_epoch_modded(
+            &telemetry, &mut f2, &perf, &[GpuKind::H100x8], &params, &counts,
+            &mut SolverStates::new(), 0.0, &ControlEpochMods::clean(),
+        );
+        assert!(ControlEpochMods::default().is_clean());
+        assert_eq!(plain, modded);
+    }
+
+    /// A forecast blackout makes the naive controller scale everything
+    /// in (zero forecast ⇒ min targets), and a forced solver fault makes
+    /// it clamp everything to max — the two failure modes the guarded
+    /// cascade exists to absorb.
+    #[test]
+    fn naive_mods_distort_the_plan_as_designed() {
+        let telemetry = hot_east_telemetry();
+        let perf = PerfTable::new(GpuKind::H100x8, &[ModelKind::Llama2_70B]);
+        let params = ScalingParams::default();
+        let counts = vec![[6usize, 0, 0]; Region::ALL.len()];
+        let run = |mods: &ControlEpochMods| {
+            let mut f = SeasonalNaive::new(96, 4);
+            run_epoch_modded(
+                &telemetry, &mut f, &perf, &[GpuKind::H100x8], &params, &counts,
+                &mut SolverStates::new(), 0.0, mods,
+            )
+        };
+        let blackout =
+            run(&ControlEpochMods { forecast_blackout: true, ..ControlEpochMods::clean() });
+        for e in &blackout {
+            assert_eq!(
+                e.delta_total(),
+                params.min_instances as i64 - 6,
+                "blackout ⇒ scale-in to the floor ({:?})",
+                e.region
+            );
+            assert_eq!(e.forecast_tps, 0.0, "blackout zeroes the LT-UA gap reference");
+        }
+        let faulted = run(&ControlEpochMods { solver_fault: true, ..ControlEpochMods::clean() });
+        for e in &faulted {
+            assert_eq!(
+                e.delta_total(),
+                params.max_instances as i64 - 6,
+                "solver fault ⇒ clamp to max ({:?})",
+                e.region
+            );
+        }
+        // Corruption scales the forecast: halving demand must not plan
+        // *more* capacity than the honest epoch in the hot region.
+        let honest = run(&ControlEpochMods::clean());
+        let halved = run(&ControlEpochMods {
+            forecast_corruption: Some((0.5, 0.0)),
+            ..ControlEpochMods::clean()
+        });
+        let east = |p: &EpochPlan| {
+            p.iter().find(|e| e.region == Region::EastUs).unwrap().delta_total()
+        };
+        assert!(east(&halved) < east(&honest), "halved forecast plans less east capacity");
+    }
+
+    /// θ deflation commands extra capacity: a 50% margin on the hot
+    /// region plans at least as many instances as the honest epoch, and
+    /// strictly more in the hot region.
+    #[test]
+    fn theta_deflation_commands_margin_capacity() {
+        let telemetry = hot_east_telemetry();
+        let perf = PerfTable::new(GpuKind::H100x8, &[ModelKind::Llama2_70B]);
+        let params = ScalingParams::default();
+        let counts = vec![[2usize, 0, 0]; Region::ALL.len()];
+        let run = |deflate: f64| {
+            let mut f = SeasonalNaive::new(96, 4);
+            run_epoch_modded(
+                &telemetry, &mut f, &perf, &[GpuKind::H100x8], &params, &counts,
+                &mut SolverStates::new(), 0.0,
+                &ControlEpochMods { theta_deflate: deflate, ..ControlEpochMods::clean() },
+            )
+        };
+        let base = run(0.0);
+        let inflated = run(0.5);
+        let east = |p: &EpochPlan| {
+            p.iter().find(|e| e.region == Region::EastUs).unwrap().delta_total()
+        };
+        assert!(east(&inflated) > east(&base), "50% θ margin grows the hot region");
+    }
+
+    /// Residual tracker math: RMS pools bias and noise, and the margin
+    /// is gain-scaled then capped.
+    #[test]
+    fn residual_rms_and_margin_clamp() {
+        let mut state = GuardrailState::new();
+        assert_eq!(state.residual_rms(), 0.0);
+        let key = (ModelKind::Llama2_70B, Region::EastUs);
+        state.residuals.insert(key, vec![0.3; 4]);
+        assert!((state.residual_rms() - 0.3).abs() < 1e-12, "constant bias is charged");
+        let guard = GuardrailParams::enabled();
+        let expect = (guard.inflation_gain * 0.3).min(guard.max_inflation);
+        assert!((state.margin(&guard) - expect).abs() < 1e-12);
+        // A huge error saturates at the cap.
+        state.residuals.insert(key, vec![10.0; 4]);
+        assert_eq!(state.margin(&guard), guard.max_inflation);
+    }
+
+    /// The full cascade: Fresh under healthy inputs, Held (inflated
+    /// last-good targets) under a blackout, Reactive (empty plan) once
+    /// the hold budget is spent, Fresh again on recovery — with every
+    /// transition and degraded second accounted.
+    #[test]
+    fn cascade_walks_fresh_held_reactive_and_recovers() {
+        let telemetry = hot_east_telemetry();
+        let perf = PerfTable::new(GpuKind::H100x8, &[ModelKind::Llama2_70B]);
+        let params = ScalingParams::default();
+        let guard = GuardrailParams::enabled();
+        let counts = vec![[2usize, 0, 0]; Region::ALL.len()];
+        let mut forecaster = SeasonalNaive::new(96, 4);
+        let mut solvers = SolverStates::new();
+        let mut state = GuardrailState::new();
+        let mut stats = GuardrailStats::default();
+        let mut epoch = |mods: &ControlEpochMods,
+                         state: &mut GuardrailState,
+                         stats: &mut GuardrailStats,
+                         now: Time| {
+            guardrail_epoch(
+                &telemetry, &mut forecaster, &perf, &[GpuKind::H100x8], &params, &guard,
+                &counts, &mut solvers, now, mods, state, stats,
+            )
+        };
+
+        let clean = ControlEpochMods::clean();
+        let dark = ControlEpochMods { forecast_blackout: true, ..ControlEpochMods::clean() };
+        let fresh = epoch(&clean, &mut state, &mut stats, 0.0);
+        assert_eq!(state.mode, GuardrailMode::Fresh);
+        assert!(!fresh.is_empty());
+        let east_target = {
+            let e = fresh.iter().find(|e| e.region == Region::EastUs).unwrap();
+            2 + e.delta_total()
+        };
+        assert!(east_target > 2, "hot region grows under the fresh plan");
+
+        // Blackout epoch 1 + 2: held, targets inflated, never shrunk.
+        let held = epoch(&dark, &mut state, &mut stats, 3600.0);
+        assert_eq!(state.mode, GuardrailMode::Held);
+        let e = held.iter().find(|e| e.region == Region::EastUs).unwrap();
+        let held_target = 2 + e.delta_total();
+        assert!(
+            held_target >= east_target,
+            "held target {held_target} must not shrink below last-good {east_target}"
+        );
+        assert!(e.forecast_tps > 0.0, "held entries keep the last-good LT-UA reference");
+        let _ = epoch(&dark, &mut state, &mut stats, 7200.0);
+        assert_eq!(state.mode, GuardrailMode::Held);
+
+        // Blackout epoch 3: hold budget (2) spent ⇒ reactive, empty plan.
+        let reactive = epoch(&dark, &mut state, &mut stats, 10_800.0);
+        assert_eq!(state.mode, GuardrailMode::Reactive);
+        assert!(reactive.is_empty(), "reactive rung plans nothing; the tick backstop scales");
+
+        // Recovery: straight back to Fresh.
+        let back = epoch(&clean, &mut state, &mut stats, 14_400.0);
+        assert_eq!(state.mode, GuardrailMode::Fresh);
+        assert!(!back.is_empty());
+
+        assert_eq!(stats.epochs_fresh, 2);
+        assert_eq!(stats.epochs_held, 2);
+        assert_eq!(stats.epochs_reactive, 1);
+        assert_eq!(stats.degraded_secs, 3.0 * params.control_interval);
+        let kinds: Vec<(&str, GuardrailMode, GuardrailMode)> =
+            stats.transitions.iter().map(|t| (t.cause, t.from, t.to)).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                ("forecast-blackout", GuardrailMode::Fresh, GuardrailMode::Held),
+                ("held-expired", GuardrailMode::Held, GuardrailMode::Reactive),
+                ("recovered", GuardrailMode::Reactive, GuardrailMode::Fresh),
+            ]
+        );
+        assert!(stats.margin_instance_hours > 0.0, "held inflation fills the margin ledger");
+    }
+
+    /// Stale telemetry beyond the watchdog tolerance trips the cascade
+    /// even though the forecaster and solver are healthy.
+    #[test]
+    fn watchdog_trips_on_stale_telemetry() {
+        let telemetry = hot_east_telemetry();
+        let perf = PerfTable::new(GpuKind::H100x8, &[ModelKind::Llama2_70B]);
+        let params = ScalingParams::default();
+        let guard = GuardrailParams::enabled();
+        let counts = vec![[2usize, 0, 0]; Region::ALL.len()];
+        let mut forecaster = SeasonalNaive::new(96, 4);
+        let mut solvers = SolverStates::new();
+        let mut state = GuardrailState::new();
+        let mut stats = GuardrailStats::default();
+        let _ = guardrail_epoch(
+            &telemetry, &mut forecaster, &perf, &[GpuKind::H100x8], &params, &guard, &counts,
+            &mut solvers, 0.0, &ControlEpochMods::clean(), &mut state, &mut stats,
+        );
+        assert_eq!(state.mode, GuardrailMode::Fresh);
+        // Telemetry frozen a full epoch ago: age 3600 s > 1800 s tolerance.
+        let stale = ControlEpochMods { telemetry_now: Some(0.0), ..ControlEpochMods::clean() };
+        let _ = guardrail_epoch(
+            &telemetry, &mut forecaster, &perf, &[GpuKind::H100x8], &params, &guard, &counts,
+            &mut solvers, 3600.0, &stale, &mut state, &mut stats,
+        );
+        assert_eq!(state.mode, GuardrailMode::Held);
+        assert_eq!(stats.transitions.last().unwrap().cause, "stale-telemetry");
     }
 
     /// Epoch N+1 with slightly drifted demand reuses epoch N's basis:

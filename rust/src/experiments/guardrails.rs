@@ -1,0 +1,199 @@
+//! Guardrail ablation (`exp guardrails`): what a control-plane fault
+//! costs each controller flavor, and what the guardrail cascade buys
+//! back.
+//!
+//! Three scenarios — no fault, a forecast blackout, and a telemetry
+//! freeze (both spanning days 2–4 of the week, long enough to exhaust
+//! the held-plan budget and force the cascade onto its reactive rung) —
+//! each run under three controllers:
+//!
+//! * **naive** — LT-UA with the guardrails off: faulted inputs are
+//!   consumed as truth.  A blackout reads as "demand is zero", so the
+//!   ILP scales the fleet into the floor and the LT-UA gap check
+//!   (gated on a positive forecast) never fires.
+//! * **guarded** — LT-UA behind the watchdog + residual tracker +
+//!   fallback cascade of [`crate::coordinator::controller::guardrail_epoch`].
+//! * **reactive** — the purely reactive strategy: no forecast, no
+//!   solver, nothing for the control-plane fault to poison — the
+//!   paper's "slow but immune" baseline.
+//!
+//! Emits `guardrail_ablation.csv` with per-(scenario, controller) SLA
+//! attainment, GPU-hours/cost, cascade rung counts, degraded time and
+//! the safety-margin capacity ledger.  The run asserts the structural
+//! invariant: degraded time accrues on the guarded controller exactly
+//! when a fault scenario is active, and never elsewhere.
+//!
+//! Quick mode (`SAGESERVE_EXP_QUICK=1`, the `make verify` smoke set)
+//! shrinks the trace to one day with the fault window at the same trace
+//! fractions.
+
+use anyhow::Result;
+
+use crate::config::{Epoch, GuardrailParams, Tier, HOUR};
+use crate::experiments::sweep::run_configs;
+use crate::experiments::{print_table, ExpOptions};
+use crate::sim::engine::{SimConfig, Strategy};
+use crate::sim::faults::ControlFaultPlan;
+use crate::trace::generator::TraceConfig;
+
+/// True when the smoke-mode env toggle is set (same convention as
+/// `SAGESERVE_BENCH_QUICK`).
+fn quick_mode() -> bool {
+    std::env::var("SAGESERVE_EXP_QUICK").map_or(false, |v| !v.is_empty() && v != "0")
+}
+
+/// The scenarios, with fault windows at fixed trace fractions (days 2–4
+/// of a week) so quick mode exercises the identical phases.
+fn scenarios(days: f64) -> Vec<(&'static str, ControlFaultPlan)> {
+    let span = days * 24.0 * HOUR;
+    let (start, end) = (span * 2.0 / 7.0, span * 4.0 / 7.0);
+    vec![
+        ("none", ControlFaultPlan::default()),
+        ("forecast-blackout", ControlFaultPlan::forecast_blackout(start, end)),
+        ("stale-telemetry", ControlFaultPlan::stale_telemetry(start, end)),
+    ]
+}
+
+/// The controller flavors: (label, strategy, guardrails on?).
+const CONTROLLERS: [(&str, Strategy, bool); 3] = [
+    ("naive", Strategy::LtUa, false),
+    ("guarded", Strategy::LtUa, true),
+    ("reactive", Strategy::Reactive, false),
+];
+
+/// Interactive SLA attainment across both IW tiers (count-weighted).
+fn iw_sla_attainment(metrics: &crate::metrics::Metrics) -> f64 {
+    let (mut violations, mut count) = (0.0, 0.0);
+    for tier in Tier::ALL {
+        if !tier.is_interactive() {
+            continue;
+        }
+        let s = metrics.latency_by_tier(tier);
+        violations += s.sla_violation_rate * s.count as f64;
+        count += s.count as f64;
+    }
+    if count > 0.0 {
+        1.0 - violations / count
+    } else {
+        1.0
+    }
+}
+
+/// Run the guardrail ablation and write `guardrail_ablation.csv`.
+pub fn guardrails(opts: &ExpOptions) -> Result<()> {
+    let quick = quick_mode();
+    let days = if quick { 1.0 } else { 7.0 };
+    let scale = if quick { opts.scale.min(0.05) } else { opts.scale };
+
+    let scens = scenarios(days);
+    let mut labels = Vec::new();
+    let mut cfgs = Vec::new();
+    for (scen, plan) in &scens {
+        for &(ctrl, strategy, guarded) in &CONTROLLERS {
+            labels.push((*scen, ctrl));
+            cfgs.push(SimConfig {
+                trace: TraceConfig {
+                    epoch: Epoch::Jul2025,
+                    days,
+                    scale,
+                    seed: opts.seed,
+                    start_weekday: 0,
+                    ..Default::default()
+                },
+                strategy,
+                control_faults: plan.clone(),
+                guardrails: if guarded {
+                    GuardrailParams::enabled()
+                } else {
+                    GuardrailParams::default()
+                },
+                pjrt_forecaster: opts.pjrt,
+                artifacts_dir: opts.artifacts_dir.clone(),
+                ..Default::default()
+            });
+        }
+    }
+    println!(
+        "  running {} guardrail runs ({} scenarios × {} controllers, {days} day(s)) in parallel ...",
+        cfgs.len(),
+        scens.len(),
+        CONTROLLERS.len()
+    );
+    let results = run_configs(cfgs);
+
+    let mut rows = Vec::new();
+    let mut table = Vec::new();
+    for (&(scen, ctrl), res) in labels.iter().zip(&results) {
+        let g = &res.metrics.guardrails;
+        let fault_active = scen != "none";
+        if ctrl == "guarded" {
+            // The acceptance invariant: degraded time > 0 exactly when
+            // control faults are active.
+            assert_eq!(
+                g.degraded_secs > 0.0,
+                fault_active,
+                "guarded {scen}: degraded_secs {} vs fault_active {fault_active}",
+                g.degraded_secs
+            );
+        } else {
+            assert_eq!(
+                g.degraded_secs, 0.0,
+                "{ctrl} {scen}: only the guarded controller walks the cascade"
+            );
+        }
+        let attainment = iw_sla_attainment(&res.metrics);
+        let gpu_hours: f64 =
+            res.models.iter().map(|&m| res.metrics.model_instance_hours(m, res.end_time)).sum();
+        let cost = res.metrics.fleet_dollar_cost(res.end_time);
+        rows.push(format!(
+            "{scen},{ctrl},{},{attainment:.4},{gpu_hours:.1},{cost:.0},{},{},{},{:.0},{},{},{},{:.1}",
+            res.metrics.completed,
+            g.epochs_fresh,
+            g.epochs_held,
+            g.epochs_reactive,
+            g.degraded_secs,
+            g.transition_count(),
+            g.actuations_dropped,
+            g.actuations_delayed,
+            g.margin_instance_hours,
+        ));
+        table.push(vec![
+            scen.to_string(),
+            ctrl.to_string(),
+            format!("{:.2}%", attainment * 100.0),
+            format!("{gpu_hours:.0}"),
+            format!("${cost:.0}"),
+            format!("{}/{}/{}", g.epochs_fresh, g.epochs_held, g.epochs_reactive),
+            format!("{:.1} h", g.degraded_secs / HOUR),
+            g.transition_count().to_string(),
+            format!("{:.1}", g.margin_instance_hours),
+        ]);
+    }
+    opts.csv(
+        "guardrail_ablation.csv",
+        "scenario,controller,completed,iw_sla_attainment,gpu_hours,cost_usd,\
+         epochs_fresh,epochs_held,epochs_reactive,degraded_secs,transitions,\
+         actuations_dropped,actuations_delayed,margin_instance_hours",
+        &rows,
+    )?;
+    print_table(
+        "Guardrail ablation — control-plane faults per controller \
+         (expect: the naive controller burns SLA or GPU-hours inside the \
+          fault window; the guarded cascade holds attainment near the \
+          no-fault row at a modest capacity-margin premium; the reactive \
+          baseline is immune but scales late everywhere)",
+        &[
+            "scenario",
+            "controller",
+            "IW SLA",
+            "gpu-h",
+            "cost",
+            "fresh/held/react",
+            "degraded",
+            "transitions",
+            "margin-ih",
+        ],
+        &table,
+    );
+    Ok(())
+}

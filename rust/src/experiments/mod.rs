@@ -15,6 +15,9 @@ pub mod characterization;
 pub mod disagg;
 /// Fault-plane ablation: outages and spot shocks across strategies.
 pub mod faults;
+/// Control-plane guardrail ablation: forecast blackouts and telemetry
+/// freezes across naive, guarded and reactive controllers.
+pub mod guardrails;
 /// Fig 9 — runtime fidelity of the linear prefill/decode cost model.
 pub mod fidelity;
 /// Heterogeneous-fleet sweep: mixed SKUs, SKU-aware vs blind routing.
@@ -123,6 +126,11 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
         // targets; `SAGESERVE_EXP_QUICK=1` shrinks it to the `make
         // verify` smoke run (`smoke-disagg`).
         "disagg" => disagg::disagg(opts),
+        // Control-plane guardrail ablation (robustness, not a paper
+        // figure): forecast blackout + telemetry freeze × naive/guarded/
+        // reactive controllers; `SAGESERVE_EXP_QUICK=1` shrinks it to
+        // the `make verify` smoke run (`smoke-guardrails`).
+        "guardrails" => guardrails::guardrails(opts),
         "all" => {
             // fig11/12/13 share one run; dedup here.
             let mut seen_strategies = false;

@@ -11,29 +11,32 @@
 //! * [`SeasonalNaive`] — ŷ[t+h] = mean of y at the same phase on previous
 //!   days; the forecasting baseline.
 
-// Rustdoc debt: public surface not yet audited for `missing_docs`
-// (PR 4 audited config, perf, coordinator::router and sim::cluster);
-// drop this allow once every pub item here is documented.
-#![allow(missing_docs)]
-
 use crate::runtime::ForecastExecutable;
 
 /// Multi-series TPS forecaster.  `history` is `[series][t]` (time
 /// ascending, 15-minute buckets); returns `[series][h]`.
 pub trait Forecaster {
+    /// Number of future buckets one [`Forecaster::forecast`] call emits.
     fn horizon(&self) -> usize;
+    /// Forecast every series `horizon` buckets ahead: `history` is
+    /// `[series][t]` (time ascending), the result is `[series][h]`.
     fn forecast(&mut self, history: &[Vec<f64>]) -> Vec<Vec<f64>>;
+    /// Stable identifier for reports and CSV labels.
     fn name(&self) -> &'static str;
 }
 
 /// Seasonal-naive baseline: average the same phase over the last `k` days.
 pub struct SeasonalNaive {
+    /// Buckets per season (96 = one day of 15-minute buckets).
     pub season: usize,
+    /// Buckets forecast per call.
     pub horizon: usize,
+    /// How many previous same-phase days are averaged (`k`).
     pub days_averaged: usize,
 }
 
 impl SeasonalNaive {
+    /// Baseline with the default 3-day same-phase average.
     pub fn new(season: usize, horizon: usize) -> Self {
         SeasonalNaive { season, horizon, days_averaged: 3 }
     }
@@ -80,13 +83,18 @@ impl Forecaster for SeasonalNaive {
 /// `python/compile/forecast_graph.py` (seasonal difference, ridge CSS fit,
 /// iterated forecast, seasonal re-integration).
 pub struct NativeArForecaster {
+    /// Buckets per season (the differencing lag `m`).
     pub season: usize,
+    /// AR order `p` (lags in the CSS fit).
     pub order: usize,
+    /// Buckets forecast per call.
     pub horizon: usize,
+    /// Ridge regularizer added to the normal-equation diagonal.
     pub ridge: f64,
 }
 
 impl NativeArForecaster {
+    /// Forecaster with the pipeline's default ridge (1e-3).
     pub fn new(season: usize, order: usize, horizon: usize) -> Self {
         NativeArForecaster { season, order, horizon, ridge: 1e-3 }
     }
@@ -215,10 +223,13 @@ pub struct PjrtForecaster {
 }
 
 impl PjrtForecaster {
+    /// Load the compiled forecast executable from the artifacts
+    /// directory (produced by `make artifacts`).
     pub fn load(artifacts_dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
         Ok(PjrtForecaster { exe: ForecastExecutable::load(artifacts_dir)? })
     }
 
+    /// The artifact's fixed `(n_series, history, horizon)` shape.
     pub fn shape(&self) -> (usize, usize, usize) {
         (self.exe.shape.n_series, self.exe.shape.history, self.exe.shape.horizon)
     }

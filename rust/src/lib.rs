@@ -29,8 +29,9 @@
 // coordinator::router, coordinator::queue_manager,
 // coordinator::autoscaler, coordinator::controller,
 // coordinator::scheduler, sim::cluster, sim::engine, sim::chunked,
-// sim::event, sim::instance, sim::faults, metrics and experiments are
-// fully documented.
+// sim::event, sim::instance, sim::faults, forecast, trace, metrics and
+// experiments are fully documented; the remaining debt is serve,
+// runtime and util.
 #![warn(missing_docs)]
 
 pub mod config;

@@ -7,6 +7,7 @@
 //! sageserve simulate --strategy S [--days F] [--scale F] [--epoch E] [--policy P]
 //!                    [--fleet SPEC] [--routing sku-aware|blind]
 //!                    [--metrics streaming|exact] [--pjrt] [--faults PLAN]
+//!                    [--control-faults PLAN] [--guardrails]
 //!                    [--chunked] [--chunk-epochs N] [--chunk-workers N]
 //!                    [--disagg] [--ttft-target S] [--itl-target S]
 //! sageserve serve [--requests N] [--max-new N] [--artifacts DIR]
@@ -39,7 +40,7 @@ fn main() {
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     let mut pos = Vec::new();
     let mut flags = HashMap::new();
-    let bools = ["--pjrt", "--chunked", "--disagg"];
+    let bools = ["--pjrt", "--chunked", "--disagg", "--guardrails"];
     let mut i = 0;
     while i < args.len() {
         let a = &args[i];
@@ -167,15 +168,36 @@ fn dispatch(args: &[String]) -> Result<()> {
                 cfg.disagg.itl_target = t.parse().with_context(|| format!("--itl-target {t}"))?;
             }
             if let Some(spec) = f("faults") {
-                cfg.faults = sageserve::sim::FaultPlan::parse(&spec).with_context(|| {
-                    format!(
-                        "bad fault spec '{spec}' (clauses: \
-                         region-dark=<region>@<start>-<end>; \
-                         degrade=<region>@<start>-<end>:<extra>; \
-                         spot-shock=<frac>@<t>; crash=<per-day-rate>; \
-                         retry=<base>/<max>/<attempts>; times take s/m/h/d suffixes)"
-                    )
-                })?;
+                // The parser's error already names the offending clause;
+                // the context line lists the grammar.
+                cfg.faults = sageserve::sim::FaultPlan::parse(&spec)
+                    .map_err(|e| anyhow::anyhow!(e))
+                    .with_context(|| {
+                        format!(
+                            "bad fault spec '{spec}' (clauses: \
+                             region-dark=<region>@<start>-<end>; \
+                             degrade=<region>@<start>-<end>:<extra>; \
+                             spot-shock=<frac>@<t>; crash=<per-day-rate>; \
+                             retry=<base>/<max>/<attempts>; times take s/m/h/d suffixes)"
+                        )
+                    })?;
+            }
+            if let Some(spec) = f("control-faults") {
+                cfg.control_faults = sageserve::sim::ControlFaultPlan::parse(&spec)
+                    .map_err(|e| anyhow::anyhow!(e))
+                    .with_context(|| {
+                        format!(
+                            "bad control-fault spec '{spec}' (clauses: \
+                             forecast-blackout=<start>-<end>; \
+                             forecast-corrupt=<scale>@<start>-<end>[:<bias>]; \
+                             telemetry-freeze=<start>-<end>; \
+                             solver-fail=<start>-<end>; act-drop=<start>-<end>; \
+                             act-delay=<extra>@<start>-<end>; times take s/m/h/d suffixes)"
+                        )
+                    })?;
+            }
+            if flags.contains_key("guardrails") {
+                cfg.guardrails = sageserve::config::GuardrailParams::enabled();
             }
             println!(
                 "simulating {} day(s) at scale {} with strategy {} on fleet [{}] ...",
@@ -334,6 +356,37 @@ fn report_simulation(sim: &sageserve::sim::engine::Simulation) {
             println!("    {} in {} at t={:.0}s: {ttr}", inc.kind, inc.region, inc.start);
         }
     }
+    // Control-plane guardrail accounting (all-zero — and silent — when
+    // no control-fault schedule ran and the guardrails were off).
+    let g = &sim.metrics.guardrails;
+    if !g.is_empty() {
+        println!(
+            "  guardrails: {} fresh / {} held / {} reactive epoch(s); \
+             degraded {:.0}s; exposure {} blackout, {} corrupt, {} stale, \
+             {} solver-fault epoch(s); {} actuation(s) dropped, {} delayed; \
+             safety margin {:.1} instance-hours",
+            g.epochs_fresh,
+            g.epochs_held,
+            g.epochs_reactive,
+            g.degraded_secs,
+            g.blackout_epochs,
+            g.corrupt_epochs,
+            g.stale_epochs,
+            g.solver_fault_epochs,
+            g.actuations_dropped,
+            g.actuations_delayed,
+            g.margin_instance_hours,
+        );
+        for t in &g.transitions {
+            println!(
+                "    t={:.0}s: {} -> {} ({})",
+                t.at,
+                t.from.name(),
+                t.to.name(),
+                t.cause
+            );
+        }
+    }
     // Per-SKU GPU-hours and the spot-vs-on-demand cost split (the
     // heterogeneous-fleet view).
     let by_sku = sim.metrics.gpu_hours_by_sku(end);
@@ -362,6 +415,7 @@ USAGE:
       [--fleet h100|a100|mi300|mixed|mixed3|h100:W,mi300:W]
       [--routing sku-aware|blind] [--metrics streaming|exact]
       [--pjrt] [--replay trace.csv] [--faults PLAN]
+      [--control-faults PLAN] [--guardrails]
       [--chunked] [--chunk-epochs N] [--chunk-workers N]
       [--disagg] [--ttft-target S] [--itl-target S]
       (--fleet picks the GPU fleet; mixed fleets report per-SKU GPU-hours,
@@ -374,6 +428,13 @@ USAGE:
        --faults injects a deterministic fault schedule, `;`-separated
        clauses: region-dark=centralus@2d-2.5d, degrade=eastus@1d-2d:0.5,
        spot-shock=0.6@3d, crash=1.0, retry=1s/60s/5 — see `exp faults`;
+       --control-faults injects a deterministic *control-plane* fault
+       schedule (windows, no events), `;`-separated clauses:
+       forecast-blackout=2d-3d, forecast-corrupt=0.5@2d-3d:100,
+       telemetry-freeze=2d-3d, solver-fail=2d-3d, act-drop=2d-3d,
+       act-delay=120s@2d-3d; --guardrails arms the watchdog + residual
+       tracker + fallback cascade for forecast-driven strategies — see
+       `exp guardrails`;
        --disagg splits each endpoint into prefill/decode pools with an
        explicit KV-cache handoff, sized per control epoch against the
        TTFT/ITL targets — see `exp disagg`)

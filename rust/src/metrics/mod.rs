@@ -632,6 +632,142 @@ impl FailureStats {
     }
 }
 
+/// The guardrail controller's operating mode at one control epoch — the
+/// rungs of the fallback cascade (see `coordinator::controller`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GuardrailMode {
+    /// A fresh ILP plan was computed from live inputs.
+    Fresh,
+    /// The last-good plan is held with safety inflation.
+    Held,
+    /// Reactive proportional control (no usable plan at all).
+    Reactive,
+}
+
+impl Default for GuardrailMode {
+    /// The healthy rung: a fresh ILP plan.
+    fn default() -> Self {
+        GuardrailMode::Fresh
+    }
+}
+
+impl GuardrailMode {
+    /// Short lowercase label for CSV/log output.
+    pub fn name(self) -> &'static str {
+        match self {
+            GuardrailMode::Fresh => "fresh",
+            GuardrailMode::Held => "held",
+            GuardrailMode::Reactive => "reactive",
+        }
+    }
+}
+
+/// One fallback-cascade transition: the guardrail controller moved from
+/// one rung to another, and why.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GuardrailEvent {
+    /// When the transition happened, seconds since simulation start.
+    pub at: Time,
+    /// The mode being left.
+    pub from: GuardrailMode,
+    /// The mode being entered.
+    pub to: GuardrailMode,
+    /// Cause label (`"forecast-blackout"`, `"stale-telemetry"`,
+    /// `"solver-failure"`, `"held-expired"`, `"recovered"`, …).
+    pub cause: &'static str,
+}
+
+/// First-class guardrail accounting: fallback transitions, per-cause
+/// degraded-epoch counts, time in degraded mode and the capacity-margin
+/// ledger.  All-zero when no control faults fire and guardrails are off,
+/// so `Metrics` equality with pre-guardrail runs is preserved
+/// bit-for-bit.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GuardrailStats {
+    /// Every fallback-cascade transition, in occurrence order.
+    pub transitions: Vec<GuardrailEvent>,
+    /// Control epochs planned from a fresh ILP solve (guarded runs only).
+    pub epochs_fresh: u64,
+    /// Control epochs served by the held last-good plan.
+    pub epochs_held: u64,
+    /// Control epochs served by reactive proportional control.
+    pub epochs_reactive: u64,
+    /// Seconds spent below the Fresh rung — time in degraded mode.
+    pub degraded_secs: Time,
+    /// Control epochs that observed a forecast blackout.
+    pub blackout_epochs: u64,
+    /// Control epochs that observed corrupted forecaster output.
+    pub corrupt_epochs: u64,
+    /// Control epochs whose telemetry inputs were stale beyond the
+    /// watchdog's tolerance.
+    pub stale_epochs: u64,
+    /// Control epochs whose capacity solve was forced to fail.
+    pub solver_fault_epochs: u64,
+    /// Scale-out actuations silently dropped by the fault plane.
+    pub actuations_dropped: u64,
+    /// Scale-out actuations landed late by the fault plane.
+    pub actuations_delayed: u64,
+    /// Instance-hours of extra capacity commanded by the residual
+    /// tracker's error-variance margin (the capacity-margin ledger).
+    pub margin_instance_hours: f64,
+}
+
+impl GuardrailStats {
+    /// Record one cascade transition.
+    pub fn record_transition(
+        &mut self,
+        at: Time,
+        from: GuardrailMode,
+        to: GuardrailMode,
+        cause: &'static str,
+    ) {
+        self.transitions.push(GuardrailEvent { at, from, to, cause });
+    }
+
+    /// Count one control epoch spent on the given rung; epochs below
+    /// Fresh also accrue `degraded_secs`.
+    pub fn record_epoch(&mut self, mode: GuardrailMode, epoch_secs: Time) {
+        match mode {
+            GuardrailMode::Fresh => self.epochs_fresh += 1,
+            GuardrailMode::Held => {
+                self.epochs_held += 1;
+                self.degraded_secs += epoch_secs;
+            }
+            GuardrailMode::Reactive => {
+                self.epochs_reactive += 1;
+                self.degraded_secs += epoch_secs;
+            }
+        }
+    }
+
+    /// Total fallback transitions recorded.
+    pub fn transition_count(&self) -> u64 {
+        self.transitions.len() as u64
+    }
+
+    /// True when nothing was recorded — the state of every fault-free,
+    /// guardrail-off run.
+    pub fn is_empty(&self) -> bool {
+        *self == GuardrailStats::default()
+    }
+
+    /// Absorb another shard (summed counters, appended transitions).
+    pub fn merge(&mut self, other: &GuardrailStats) {
+        self.transitions.extend(other.transitions.iter().cloned());
+        self.epochs_fresh += other.epochs_fresh;
+        self.epochs_held += other.epochs_held;
+        self.epochs_reactive += other.epochs_reactive;
+        self.degraded_secs += other.degraded_secs;
+        self.blackout_epochs += other.blackout_epochs;
+        self.corrupt_epochs += other.corrupt_epochs;
+        self.stale_epochs += other.stale_epochs;
+        self.solver_fault_epochs += other.solver_fault_epochs;
+        self.actuations_dropped += other.actuations_dropped;
+        self.actuations_delayed += other.actuations_delayed;
+        self.margin_instance_hours += other.margin_instance_hours;
+    }
+}
+
 /// GPU-hours wasted on scaling: time VMs spend provisioning, by cause
 /// (Fig 13b's ledger).
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -710,6 +846,9 @@ pub struct Metrics {
     pub kv_transfer_secs: f64,
     /// Fault-plane failure accounting (all-zero without a fault plan).
     pub failures: FailureStats,
+    /// Control-plane guardrail accounting (all-zero without control
+    /// faults or guardrails).
+    pub guardrails: GuardrailStats,
     /// Whole-run cells, dense `[model][tier][region]`; empty until the
     /// first completion.
     cells: Vec<GroupCell>,
@@ -748,6 +887,7 @@ impl Metrics {
             handoff_drops: 0,
             kv_transfer_secs: 0.0,
             failures: FailureStats::default(),
+            guardrails: GuardrailStats::default(),
             cells: Vec::new(),
             bins: Vec::new(),
             util: Vec::new(),
@@ -1197,6 +1337,7 @@ impl Metrics {
         self.handoff_drops += other.handoff_drops;
         self.kv_transfer_secs += other.kv_transfer_secs;
         self.failures.merge(&other.failures);
+        self.guardrails.merge(&other.guardrails);
         self.outcomes.extend(other.outcomes.iter().cloned());
         if !other.cells.is_empty() {
             if self.cells.is_empty() {
@@ -1575,6 +1716,40 @@ mod tests {
         assert_eq!(f.killed_total(), 3);
         assert_eq!(f.retries, 4);
         assert_eq!(f.incidents.len(), 1);
+    }
+
+    #[test]
+    fn guardrail_stats_epochs_transitions_and_merge() {
+        let mut g = GuardrailStats::default();
+        assert!(g.is_empty(), "fresh container records nothing");
+        g.record_epoch(GuardrailMode::Fresh, 3600.0);
+        assert_eq!(g.epochs_fresh, 1);
+        assert_eq!(g.degraded_secs, 0.0, "fresh epochs are not degraded time");
+        g.record_transition(3600.0, GuardrailMode::Fresh, GuardrailMode::Held, "forecast-blackout");
+        g.record_epoch(GuardrailMode::Held, 3600.0);
+        g.record_transition(7200.0, GuardrailMode::Held, GuardrailMode::Reactive, "held-expired");
+        g.record_epoch(GuardrailMode::Reactive, 3600.0);
+        assert_eq!(g.transition_count(), 2);
+        assert_eq!(g.degraded_secs, 7200.0);
+        assert!(!g.is_empty());
+        assert_eq!(GuardrailMode::Reactive.name(), "reactive");
+
+        // Merging an empty shard is an identity (the bit-identity
+        // guarantee for fault-free runs), and counters/transitions sum.
+        let snapshot = g.clone();
+        g.merge(&GuardrailStats::default());
+        assert_eq!(g, snapshot);
+        let mut h = GuardrailStats::default();
+        h.record_epoch(GuardrailMode::Held, 1800.0);
+        h.blackout_epochs = 2;
+        h.actuations_dropped = 1;
+        h.margin_instance_hours = 0.5;
+        g.merge(&h);
+        assert_eq!(g.epochs_held, 2);
+        assert_eq!(g.degraded_secs, 9000.0);
+        assert_eq!(g.blackout_epochs, 2);
+        assert_eq!(g.actuations_dropped, 1);
+        assert_eq!(g.transitions.len(), 2);
     }
 
     #[test]

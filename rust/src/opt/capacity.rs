@@ -271,6 +271,25 @@ pub fn optimize_capacity_warm(
     })
 }
 
+/// [`optimize_capacity_warm`] behind the control-plane fault plane's
+/// solver-failure injection: when `fault` is set, the solve reports the
+/// infeasible/iteration-cap outcome (`None`) **without touching the
+/// carried tableau, basis or last solution**, so the first post-fault
+/// epoch still re-solves warm exactly as if the faulted epochs had
+/// never happened.  (Crippling `IlpLimits` would not work here: the
+/// root relaxation and root-rounding incumbent are computed before the
+/// node cap is consulted, so a capped search still returns a plan.)
+pub fn optimize_capacity_warm_faulted(
+    inp: &CapacityInputs,
+    solver: &mut CapacitySolver,
+    fault: bool,
+) -> Option<CapacityPlan> {
+    if fault {
+        return None;
+    }
+    optimize_capacity_warm(inp, solver)
+}
+
 /// The original dense-encoding path (bounds as rows, per-node LP clones)
 /// — kept as the equivalence oracle for tests and the `exp ilp`
 /// old-vs-new comparison.  Same semantics as [`optimize_capacity`].
@@ -580,6 +599,28 @@ mod tests {
             warm.objective,
             fresh.objective
         );
+    }
+
+    #[test]
+    fn faulted_solve_fails_without_corrupting_warm_state() {
+        let inp = synthetic_inputs(20, 5, 7);
+        let mut solver = CapacitySolver::new();
+        let cold = optimize_capacity_warm(&inp, &mut solver).expect("solvable");
+
+        // Forced failure: None, and the carried basis is untouched.
+        assert!(optimize_capacity_warm_faulted(&inp, &mut solver, true).is_none());
+        assert!(solver.has_state(), "fault must not evict the carried tableau");
+
+        // The first post-fault epoch still re-solves warm.
+        let drifted = perturb_inputs(&inp, &cold, 0.03);
+        let warm = optimize_capacity_warm_faulted(&drifted, &mut solver, false)
+            .expect("solvable");
+        assert!(warm.warm, "post-fault solve must reuse the pre-fault basis");
+
+        // And without a fault the entry point is a plain delegate.
+        let mut fresh = CapacitySolver::new();
+        let plain = optimize_capacity_warm_faulted(&inp, &mut fresh, false).expect("solvable");
+        assert_eq!(plain.deltas, cold.deltas);
     }
 
     #[test]

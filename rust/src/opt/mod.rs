@@ -21,8 +21,9 @@ pub mod simplex;
 
 pub use bounded::{solve_bounded, BoundedLp, BoundedOutcome, SimplexState};
 pub use capacity::{
-    optimize_capacity, optimize_capacity_dense, optimize_capacity_warm, perturb_inputs,
-    synthetic_inputs, CapacityInputs, CapacityPlan, CapacitySolver,
+    optimize_capacity, optimize_capacity_dense, optimize_capacity_warm,
+    optimize_capacity_warm_faulted, perturb_inputs, synthetic_inputs, CapacityInputs,
+    CapacityPlan, CapacitySolver,
 };
 pub use ilp::{
     solve_ilp, solve_ilp_bounded, solve_ilp_bounded_with, solve_ilp_counted, BoundedIntLinProg,

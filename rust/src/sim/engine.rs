@@ -28,21 +28,24 @@
 use std::collections::BTreeMap;
 
 use crate::config::{
-    DisaggParams, Epoch, FleetSpec, GpuKind, ModelKind, Region, RoutingParams, ScalingParams, Tier,
-    Time, HOUR, MINUTE,
+    DisaggParams, Epoch, FleetSpec, GpuKind, GuardrailParams, ModelKind, Region, RoutingParams,
+    ScalingParams, Tier, Time, HOUR, MINUTE,
 };
 pub use crate::coordinator::autoscaler::Strategy;
 use crate::coordinator::autoscaler::{Autoscaler, ScaleCtx};
-use crate::coordinator::controller::{run_epoch, run_epoch_disagg, SolverStates, Telemetry};
+use crate::coordinator::controller::{
+    guardrail_epoch, run_epoch, run_epoch_disagg, run_epoch_modded, ControlEpochMods,
+    GuardrailState, SolverStates, Telemetry,
+};
 use crate::coordinator::queue_manager::QueueManager;
 use crate::coordinator::router;
 use crate::coordinator::scheduler::SchedPolicy;
 use crate::forecast::{Forecaster, NativeArForecaster};
-use crate::metrics::{Metrics, MetricsConfig};
+use crate::metrics::{GuardrailMode, Metrics, MetricsConfig};
 use crate::perf::PerfTable;
 use crate::sim::cluster::{Cluster, InstanceId};
 use crate::sim::event::{Event, EventQueue};
-use crate::sim::faults::FaultPlan;
+use crate::sim::faults::{ControlFaultPlan, FaultPlan};
 use crate::sim::instance::{InstState, Phase};
 use crate::trace::generator::{TraceConfig, TraceGenerator};
 use crate::trace::types::Request;
@@ -98,6 +101,21 @@ pub struct SimConfig {
     /// stay bit-identical to pre-disaggregation builds
     /// (`tests/disagg_equivalence.rs`).
     pub disagg: DisaggParams,
+    /// Deterministic **control-plane** fault schedule (forecast
+    /// blackout/corruption, telemetry freezes, solver failures,
+    /// actuation drop/delay).  Unlike [`FaultPlan`] this compiles to no
+    /// events at all — it is a set of pure window predicates the engine
+    /// samples at each control epoch and scale tick.  The default (the
+    /// empty plan) keeps every sampled modifier at its identity value,
+    /// so runs stay bit-identical to pre-guardrail builds
+    /// (`tests/guardrail_equivalence.rs`).
+    pub control_faults: ControlFaultPlan,
+    /// Guardrail controller (watchdog + residual tracker + fallback
+    /// cascade) for forecast-driven strategies.  Off by default: the
+    /// naive controller runs, faulted inputs and all.  Ignored on
+    /// disaggregated fleets (the cascade covers the unified control
+    /// path).
+    pub guardrails: GuardrailParams,
 }
 
 impl Default for SimConfig {
@@ -118,6 +136,8 @@ impl Default for SimConfig {
             metrics: MetricsConfig::default(),
             faults: FaultPlan::default(),
             disagg: DisaggParams::default(),
+            control_faults: ControlFaultPlan::default(),
+            guardrails: GuardrailParams::default(),
         }
     }
 }
@@ -194,6 +214,10 @@ pub struct Simulation {
     inflight_decode: BTreeMap<u64, Time>,
     /// Open incidents awaiting capacity recovery.
     recovery_watch: Vec<RecoveryWatch>,
+    /// Guardrail-controller state (residual window, last-good plan,
+    /// cascade rung).  Inert unless `cfg.guardrails.enabled`; carried in
+    /// the handoff so chunked guarded runs stay bit-identical.
+    guardrail: GuardrailState,
 }
 
 /// Complete mutable simulator state, detached from a [`Simulation`] so it
@@ -253,6 +277,9 @@ pub struct SimHandoff {
     pub inflight_decode: BTreeMap<u64, Time>,
     /// Fault plane: incidents still awaiting capacity recovery.
     pub recovery_watch: Vec<RecoveryWatch>,
+    /// Guardrail-controller state (residual window, last-good plan,
+    /// cascade rung).
+    pub guardrail: GuardrailState,
 }
 
 impl Simulation {
@@ -327,6 +354,7 @@ impl Simulation {
             pending_handoffs: BTreeMap::new(),
             inflight_decode: BTreeMap::new(),
             recovery_watch: Vec::new(),
+            guardrail: GuardrailState::new(),
             cfg,
         };
         // Seed ledgers with the initial allocation.
@@ -349,12 +377,19 @@ impl Simulation {
     }
 
     fn ctx(&mut self) -> ScaleCtx<'_> {
+        // Control-fault actuation sampling: the empty plan yields exactly
+        // `false` / `0.0`, and every consumer branches on those values
+        // (no identity arithmetic), so fault-free runs stay bit-identical.
+        let act_drop = self.cfg.control_faults.actuation_drop_at(self.now);
+        let act_extra_lead = self.cfg.control_faults.actuation_extra_lead_at(self.now);
         ScaleCtx {
             now: self.now,
             cluster: &mut self.cluster,
             metrics: &mut self.metrics,
             events: &mut self.events,
             reroutes: Vec::new(),
+            act_drop,
+            act_extra_lead,
         }
     }
 
@@ -511,6 +546,7 @@ impl Simulation {
             pending_handoffs,
             inflight_decode,
             recovery_watch,
+            guardrail,
         } = self;
         (
             cfg,
@@ -532,6 +568,7 @@ impl Simulation {
                 pending_handoffs,
                 inflight_decode,
                 recovery_watch,
+                guardrail,
             },
         )
     }
@@ -563,6 +600,7 @@ impl Simulation {
             pending_handoffs: h.pending_handoffs,
             inflight_decode: h.inflight_decode,
             recovery_watch: h.recovery_watch,
+            guardrail: h.guardrail,
             cfg,
         }
     }
@@ -587,6 +625,8 @@ impl Simulation {
             metrics: &mut self.metrics,
             events: &mut self.events,
             reroutes: Vec::new(),
+            act_drop: self.cfg.control_faults.actuation_drop_at(self.now),
+            act_extra_lead: self.cfg.control_faults.actuation_extra_lead_at(self.now),
         };
         self.autoscaler.on_request(&mut ctx, m, o, tier);
         let rr = std::mem::take(&mut ctx.reroutes);
@@ -859,6 +899,9 @@ impl Simulation {
                 metrics: &mut self.metrics,
                 events: &mut self.events,
                 reroutes: Vec::new(),
+                // Ledger-only context: no actuation flows through it.
+                act_drop: false,
+                act_extra_lead: 0.0,
             };
             ctx.record_ledgers(model, region);
             for r in stragglers {
@@ -1204,8 +1247,14 @@ impl Simulation {
 
     fn on_scale_tick(&mut self) {
         self.tick_count += 1;
-        // LT/Chiron scaling progression.
-        let observed = self.telemetry.recent_tps_all(self.now);
+        // LT/Chiron scaling progression.  Under a telemetry freeze every
+        // reader — the gap check included — sees the world as of the
+        // moment the feed died (the telemetry store keeps full bucketized
+        // history, so reading at a past instant needs no extra state).
+        // With no freeze `t_obs == now` and the read is byte-identical.
+        let t_obs =
+            self.cfg.control_faults.telemetry_frozen_since(self.now).unwrap_or(self.now);
+        let observed = self.telemetry.recent_tps_all(t_obs);
         let elapsed = self.now - self.epoch_start;
         let mut ctx = ScaleCtx {
             now: self.now,
@@ -1213,8 +1262,20 @@ impl Simulation {
             metrics: &mut self.metrics,
             events: &mut self.events,
             reroutes: Vec::new(),
+            act_drop: self.cfg.control_faults.actuation_drop_at(self.now),
+            act_extra_lead: self.cfg.control_faults.actuation_extra_lead_at(self.now),
         };
         self.autoscaler.on_tick(&mut ctx, &observed, elapsed);
+        // Guardrail cascade, bottom rung: with the control plane degraded
+        // past the held-plan budget, proportional control on *live
+        // cluster* utilization (not telemetry — the cluster's own
+        // aggregates cannot go stale) backstops the stale targets.
+        if self.cfg.guardrails.enabled
+            && self.cfg.strategy.uses_forecast()
+            && self.guardrail.mode == GuardrailMode::Reactive
+        {
+            self.autoscaler.guardrail_reactive_tick(&mut ctx);
+        }
         // Backstop: convert Draining instances that can no longer make
         // progress (empty batch, no chunk in flight) — see
         // `ScaleCtx::sweep_stalled_drains`.  A no-op on healthy runs.
@@ -1371,16 +1432,73 @@ impl Simulation {
                         .unwrap_or([0; GpuKind::COUNT]),
                 );
             }
-            run_epoch(
-                &self.telemetry,
-                self.forecaster.as_mut(),
-                &self.cluster.perf,
-                &self.cluster.gpus,
-                &self.cfg.scaling,
-                &self.epoch_counts,
-                &mut self.solvers,
-                self.now,
-            )
+            let cf = &self.cfg.control_faults;
+            if self.cfg.guardrails.enabled || !cf.is_empty() {
+                // Watchdog stamp: what the control-fault plane is doing
+                // to this epoch's inputs (all identity when no window is
+                // open).  The per-cause counters are engine-level so the
+                // *naive* controller's exposure is visible too; degraded
+                // time, by contrast, only accrues on the guarded path.
+                let mods = ControlEpochMods {
+                    forecast_blackout: cf.forecast_blackout_at(self.now),
+                    forecast_corruption: cf.forecast_corruption_at(self.now),
+                    telemetry_now: cf.telemetry_frozen_since(self.now),
+                    solver_fault: cf.solver_fault_at(self.now),
+                    theta_deflate: 0.0,
+                };
+                let g = &mut self.metrics.guardrails;
+                if mods.forecast_blackout {
+                    g.blackout_epochs += 1;
+                }
+                if mods.forecast_corruption.is_some() {
+                    g.corrupt_epochs += 1;
+                }
+                if mods.telemetry_now.is_some() {
+                    g.stale_epochs += 1;
+                }
+                if mods.solver_fault {
+                    g.solver_fault_epochs += 1;
+                }
+                if self.cfg.guardrails.enabled {
+                    guardrail_epoch(
+                        &self.telemetry,
+                        self.forecaster.as_mut(),
+                        &self.cluster.perf,
+                        &self.cluster.gpus,
+                        &self.cfg.scaling,
+                        &self.cfg.guardrails,
+                        &self.epoch_counts,
+                        &mut self.solvers,
+                        self.now,
+                        &mods,
+                        &mut self.guardrail,
+                        &mut self.metrics.guardrails,
+                    )
+                } else {
+                    run_epoch_modded(
+                        &self.telemetry,
+                        self.forecaster.as_mut(),
+                        &self.cluster.perf,
+                        &self.cluster.gpus,
+                        &self.cfg.scaling,
+                        &self.epoch_counts,
+                        &mut self.solvers,
+                        self.now,
+                        &mods,
+                    )
+                }
+            } else {
+                run_epoch(
+                    &self.telemetry,
+                    self.forecaster.as_mut(),
+                    &self.cluster.perf,
+                    &self.cluster.gpus,
+                    &self.cfg.scaling,
+                    &self.epoch_counts,
+                    &mut self.solvers,
+                    self.now,
+                )
+            }
         };
         let mut ctx = ScaleCtx {
             now: self.now,
@@ -1388,6 +1506,8 @@ impl Simulation {
             metrics: &mut self.metrics,
             events: &mut self.events,
             reroutes: Vec::new(),
+            act_drop: self.cfg.control_faults.actuation_drop_at(self.now),
+            act_extra_lead: self.cfg.control_faults.actuation_extra_lead_at(self.now),
         };
         self.autoscaler.on_epoch(&mut ctx, &plan);
         let rr = std::mem::take(&mut ctx.reroutes);
@@ -1735,6 +1855,119 @@ mod tests {
         assert_eq!(sim.metrics.handoff_admissions, 0);
         assert_eq!(sim.metrics.handoff_drops, 0);
         assert_eq!(sim.metrics.kv_transfer_secs, 0.0);
+    }
+
+    #[test]
+    fn empty_control_fault_plan_is_bit_identical() {
+        // Two identity claims: (a) the empty control-fault plan takes
+        // the untouched `run_epoch` branch; (b) a *non-empty* plan whose
+        // windows never open routes every epoch through
+        // `run_epoch_modded` with clean mods — which must still be
+        // bit-identical (every modifier is branch-gated; no identity
+        // arithmetic anywhere on the clean path).
+        let reference = run_quick(Strategy::LtUa);
+
+        let mut cfg = quick_config(Strategy::LtUa, 0.1, 0.005);
+        cfg.scaling.max_instances = 10;
+        cfg.control_faults = ControlFaultPlan::parse("").unwrap();
+        assert!(cfg.control_faults.is_empty());
+        let sim = run_simulation(cfg);
+        assert!(sim.metrics == reference.metrics);
+        assert!(sim.metrics.guardrails.is_empty());
+
+        let mut cfg = quick_config(Strategy::LtUa, 0.1, 0.005);
+        cfg.scaling.max_instances = 10;
+        // Every fault class armed — all far beyond the 0.1-day horizon.
+        cfg.control_faults = ControlFaultPlan::parse(
+            "forecast-blackout=100d-101d;telemetry-freeze=100d-101d;\
+             solver-fail=100d-101d;act-drop=100d-101d;act-delay=60s@100d-101d",
+        )
+        .unwrap();
+        assert!(!cfg.control_faults.is_empty());
+        let sim = run_simulation(cfg);
+        assert!(sim.metrics == reference.metrics);
+        assert!(sim.metrics.guardrails.is_empty());
+    }
+
+    #[test]
+    fn guarded_run_without_faults_stays_fresh() {
+        let mut cfg = quick_config(Strategy::LtUa, 0.1, 0.005);
+        cfg.scaling.max_instances = 10;
+        cfg.guardrails = GuardrailParams::enabled();
+        let sim = run_simulation(cfg);
+        assert!(sim.metrics.completed > 0);
+        let g = &sim.metrics.guardrails;
+        assert!(g.epochs_fresh > 0, "healthy guarded epochs must count as fresh");
+        assert_eq!(g.epochs_held, 0);
+        assert_eq!(g.epochs_reactive, 0);
+        assert_eq!(g.degraded_secs, 0.0, "no fault, no degraded time");
+        assert_eq!(g.transition_count(), 0);
+        assert_eq!(sim.guardrail.mode, GuardrailMode::Fresh);
+    }
+
+    #[test]
+    fn guarded_blackout_walks_the_cascade_and_is_deterministic() {
+        // Quick trace: control epochs fire at t = 0, 3600 and 7200; a
+        // blackout over the last two walks Fresh → Held → Reactive with
+        // the held budget cut to one epoch.
+        let mk = || {
+            let mut cfg = quick_config(Strategy::LtUa, 0.1, 0.005);
+            cfg.scaling.max_instances = 10;
+            cfg.control_faults = ControlFaultPlan::forecast_blackout(3000.0, 8000.0);
+            cfg.guardrails = GuardrailParams::enabled();
+            cfg.guardrails.max_held_epochs = 1;
+            cfg
+        };
+        let sim = run_simulation(mk());
+        let g = &sim.metrics.guardrails;
+        assert_eq!(g.blackout_epochs, 2, "epochs at 3600 and 7200 are dark");
+        assert_eq!(g.epochs_held, 1);
+        assert_eq!(g.epochs_reactive, 1);
+        assert_eq!(g.degraded_secs, 2.0 * sim.cfg.scaling.control_interval);
+        assert_eq!(g.transition_count(), 2, "Fresh→Held, Held→Reactive");
+        assert_eq!(g.transitions[0].cause, "forecast-blackout");
+        assert_eq!(g.transitions[1].cause, "held-expired");
+        // Request accounting survives the degraded control plane.
+        let total = TraceGenerator::new(sim.cfg.trace.clone()).stream().count() as u64;
+        assert_eq!(sim.metrics.completed + sim.metrics.dropped, total);
+
+        let again = run_simulation(mk());
+        assert!(sim.metrics == again.metrics, "guarded fault runs must replay identically");
+    }
+
+    #[test]
+    fn naive_blackout_counts_exposure_but_never_degrades() {
+        // Same schedule, guardrails off: the naive controller consumes
+        // the zeroed forecasts as truth — exposure counters tick, but no
+        // rung change and no degraded time (there is no cascade to walk).
+        let mut cfg = quick_config(Strategy::LtUa, 0.1, 0.005);
+        cfg.scaling.max_instances = 10;
+        cfg.control_faults = ControlFaultPlan::forecast_blackout(3000.0, 8000.0);
+        let sim = run_simulation(cfg);
+        let g = &sim.metrics.guardrails;
+        assert_eq!(g.blackout_epochs, 2);
+        assert_eq!(g.degraded_secs, 0.0);
+        assert_eq!(g.transition_count(), 0);
+        assert_eq!(g.epochs_fresh + g.epochs_held + g.epochs_reactive, 0);
+        let total = TraceGenerator::new(sim.cfg.trace.clone()).stream().count() as u64;
+        assert_eq!(sim.metrics.completed + sim.metrics.dropped, total);
+    }
+
+    #[test]
+    fn actuation_faults_are_counted() {
+        let mut cfg = quick_config(Strategy::Reactive, 0.1, 0.005);
+        cfg.scaling.max_instances = 10;
+        // Dropped scale-outs over one stretch, delayed ones over another.
+        cfg.control_faults =
+            ControlFaultPlan::parse("act-drop=1000s-3000s;act-delay=120s@4000s-8000s").unwrap();
+        let sim = run_simulation(cfg);
+        let g = &sim.metrics.guardrails;
+        assert!(
+            g.actuations_dropped > 0 || g.actuations_delayed > 0,
+            "a loaded reactive run must attempt scale-outs inside the windows"
+        );
+        let total = TraceGenerator::new(sim.cfg.trace.clone()).stream().count() as u64;
+        assert_eq!(sim.metrics.completed + sim.metrics.dropped, total);
     }
 
     #[test]

@@ -31,6 +31,19 @@
 //!   [`Cluster`](crate::sim::cluster::Cluster) and
 //!   [`SimHandoff`](crate::sim::engine::SimHandoff); the plan itself is
 //!   immutable config.
+//!
+//! ## Control-plane faults
+//!
+//! [`ControlFaultPlan`] is the *control-plane* sibling: instead of
+//! killing VMs it rots the controller's inputs — forecast blackout and
+//! corruption windows, telemetry freezes, forced capacity-solver
+//! failures, and actuation faults (scale-outs silently dropped or
+//! landing late).  Control faults are pure window predicates over `now`
+//! (no events, no RNG), so an empty plan touches neither the event heap
+//! nor any engine state: the bit-identity and chunked-equals-sequential
+//! contracts above carry over for free (`tests/guardrail_equivalence.rs`).
+//! The guardrail layer that keeps serving safe under these faults lives
+//! in [`coordinator::controller`](crate::coordinator::controller).
 
 use crate::config::{Region, Time, DAY, HOUR, MINUTE};
 use crate::sim::event::{Event, EventQueue};
@@ -220,53 +233,76 @@ impl FaultPlan {
     /// Times accept `s`/`m`/`h`/`d` suffixes (`48h`, `2d`, `90m`,
     /// `30s`, bare seconds).  Example:
     /// `region-dark=centralus@48h-60h;crash=0.05`.
-    pub fn parse(s: &str) -> Option<FaultPlan> {
+    ///
+    /// Errors name the offending clause, so `simulate --faults` misuse
+    /// fails loudly instead of silently running faultless.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
         let mut plan = FaultPlan::default();
         for clause in s.split(';').map(str::trim).filter(|c| !c.is_empty()) {
-            let (key, val) = clause.split_once('=')?;
+            let bad = |what: &str| format!("bad fault clause '{clause}': {what}");
+            let (key, val) =
+                clause.split_once('=').ok_or_else(|| bad("expected <key>=<value>"))?;
             match key.trim() {
                 "region-dark" | "outage" => {
-                    let (region, rest) = val.split_once('@')?;
-                    let (start, end) = parse_window(rest)?;
+                    let (region, rest) = val
+                        .split_once('@')
+                        .ok_or_else(|| bad("expected <region>@<start>-<end>"))?;
+                    let (start, end) = parse_window(rest).ok_or_else(|| bad(BAD_WINDOW))?;
                     plan.outages.push(RegionOutage {
-                        region: parse_region(region.trim())?,
+                        region: parse_region(region.trim()).ok_or_else(|| bad(BAD_REGION))?,
                         start,
                         end,
                     });
                 }
                 "degrade" => {
-                    let (region, rest) = val.split_once('@')?;
-                    let (window, extra) = rest.rsplit_once(':')?;
-                    let (start, end) = parse_window(window)?;
+                    let (region, rest) = val
+                        .split_once('@')
+                        .ok_or_else(|| bad("expected <region>@<start>-<end>:<extra>"))?;
+                    let (window, extra) = rest
+                        .rsplit_once(':')
+                        .ok_or_else(|| bad("expected an ':<extra>' latency suffix"))?;
+                    let (start, end) = parse_window(window).ok_or_else(|| bad(BAD_WINDOW))?;
                     plan.degradations.push(LatencyDegradation {
-                        region: parse_region(region.trim())?,
+                        region: parse_region(region.trim()).ok_or_else(|| bad(BAD_REGION))?,
                         start,
                         end,
-                        extra: parse_time(extra.trim())?,
+                        extra: parse_time(extra.trim()).ok_or_else(|| bad(BAD_TIME))?,
                     });
                 }
                 "spot-shock" => {
-                    let (frac, at) = val.split_once('@')?;
-                    let frac: f64 = frac.trim().parse().ok()?;
+                    let (frac, at) = val
+                        .split_once('@')
+                        .ok_or_else(|| bad("expected <frac>@<t>"))?;
+                    let frac: f64 = frac
+                        .trim()
+                        .parse()
+                        .map_err(|_| bad("fraction is not a number"))?;
                     if !(0.0..=1.0).contains(&frac) {
-                        return None;
+                        return Err(bad("fraction must be in [0, 1]"));
                     }
-                    plan.spot_shocks.push(SpotShock { at: parse_time(at.trim())?, frac });
+                    let at = parse_time(at.trim()).ok_or_else(|| bad(BAD_TIME))?;
+                    plan.spot_shocks.push(SpotShock { at, frac });
                 }
                 "crash" => {
-                    let rate: f64 = val.trim().parse().ok()?;
+                    let rate: f64 =
+                        val.trim().parse().map_err(|_| bad("rate is not a number"))?;
                     if !rate.is_finite() || rate < 0.0 {
-                        return None;
+                        return Err(bad("rate must be finite and >= 0"));
                     }
                     plan.crash_rate_per_day = rate;
                 }
                 "retry" => {
                     let mut parts = val.split('/');
-                    let base = parse_time(parts.next()?.trim())?;
-                    let max = parse_time(parts.next()?.trim())?;
-                    let attempts: u32 = parts.next()?.trim().parse().ok()?;
+                    let mut next =
+                        || parts.next().ok_or_else(|| bad("expected <base>/<max>/<attempts>"));
+                    let base = parse_time(next()?.trim()).ok_or_else(|| bad(BAD_TIME))?;
+                    let max = parse_time(next()?.trim()).ok_or_else(|| bad(BAD_TIME))?;
+                    let attempts: u32 = next()?
+                        .trim()
+                        .parse()
+                        .map_err(|_| bad("attempt count is not an integer"))?;
                     if parts.next().is_some() {
-                        return None;
+                        return Err(bad("expected exactly <base>/<max>/<attempts>"));
                     }
                     plan.retry = RetryPolicy {
                         base_backoff: base,
@@ -274,12 +310,263 @@ impl FaultPlan {
                         max_attempts: attempts,
                     };
                 }
-                _ => return None,
+                other => {
+                    return Err(bad(&format!(
+                        "unknown key '{other}' \
+                         (region-dark|outage|degrade|spot-shock|crash|retry)"
+                    )))
+                }
             }
         }
-        Some(plan)
+        Ok(plan)
     }
 }
+
+/// One forecast-corruption window: while it is open, every forecast
+/// value the controller consumes is distorted to
+/// `max(0, value * scale + bias)` before it reaches the capacity ILP.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ForecastCorruption {
+    /// Window start (simulated seconds).
+    pub start: Time,
+    /// Window end.
+    pub end: Time,
+    /// Multiplicative distortion applied to every forecast value.
+    pub scale: f64,
+    /// Additive bias (input TPS) applied after scaling.
+    pub bias: f64,
+}
+
+/// One actuation-delay window: every scale-out committed while it is
+/// open lands `extra` seconds later than the provisioning model says
+/// (the cloud control plane acknowledged the request but executed it
+/// late).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ActuationDelay {
+    /// Window start (simulated seconds).
+    pub start: Time,
+    /// Window end.
+    pub end: Time,
+    /// Extra provisioning lead time (secs) added to each scale-out.
+    pub extra: Time,
+}
+
+/// A declarative *control-plane* fault schedule — the sibling of
+/// [`FaultPlan`] that rots the controller's inputs and outputs instead
+/// of the data plane's VMs.
+///
+/// Every fault is a half-open `[start, end)` window queried as a pure
+/// function of `now`: nothing is compiled into events and no RNG is
+/// drawn, so `ControlFaultPlan::default()` (empty) leaves the engine
+/// bit-identical to a build without control faults at all, and chunked
+/// execution stays bit-identical to sequential with faults active
+/// (the window predicates are stateless; the guardrail state they
+/// provoke rides [`SimHandoff`](crate::sim::engine::SimHandoff)).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ControlFaultPlan {
+    /// Forecast blackout windows: the forecaster returns nothing, which
+    /// a naive controller consumes as zero predicted demand.
+    pub forecast_blackouts: Vec<(Time, Time)>,
+    /// Forecast corruption windows (scaled/biased forecaster output).
+    pub forecast_corruptions: Vec<ForecastCorruption>,
+    /// Telemetry freeze windows: the controller sees utilization and
+    /// queue-depth signals frozen at the last pre-freeze sample.
+    pub telemetry_freezes: Vec<(Time, Time)>,
+    /// Solver failure windows: every capacity solve reports the
+    /// infeasible/iteration-cap outcome (`None`).
+    pub solver_failures: Vec<(Time, Time)>,
+    /// Actuation drop windows: scale-outs are silently swallowed — the
+    /// controller believes they succeeded.
+    pub actuation_drops: Vec<(Time, Time)>,
+    /// Actuation delay windows: scale-outs land with extra lead time.
+    pub actuation_delays: Vec<ActuationDelay>,
+}
+
+/// Is `now` inside any half-open `[start, end)` window?
+fn in_window(windows: &[(Time, Time)], now: Time) -> bool {
+    windows.iter().any(|&(s, e)| now >= s && now < e)
+}
+
+impl ControlFaultPlan {
+    /// True when the plan injects nothing — the default, and the gate
+    /// for every control-fault code path in the engine and controller.
+    pub fn is_empty(&self) -> bool {
+        self.forecast_blackouts.is_empty()
+            && self.forecast_corruptions.is_empty()
+            && self.telemetry_freezes.is_empty()
+            && self.solver_failures.is_empty()
+            && self.actuation_drops.is_empty()
+            && self.actuation_delays.is_empty()
+    }
+
+    /// Is a forecast blackout open at `now`?
+    pub fn forecast_blackout_at(&self, now: Time) -> bool {
+        in_window(&self.forecast_blackouts, now)
+    }
+
+    /// The `(scale, bias)` of the first forecast-corruption window open
+    /// at `now`, if any.
+    pub fn forecast_corruption_at(&self, now: Time) -> Option<(f64, f64)> {
+        self.forecast_corruptions
+            .iter()
+            .find(|c| now >= c.start && now < c.end)
+            .map(|c| (c.scale, c.bias))
+    }
+
+    /// Is the telemetry feed frozen at `now`?
+    pub fn telemetry_frozen_at(&self, now: Time) -> bool {
+        in_window(&self.telemetry_freezes, now)
+    }
+
+    /// The last good telemetry instant while frozen: the earliest start
+    /// among freeze windows containing `now`, or `None` when live.
+    pub fn telemetry_frozen_since(&self, now: Time) -> Option<Time> {
+        self.telemetry_freezes
+            .iter()
+            .filter(|&&(s, e)| now >= s && now < e)
+            .map(|&(s, _)| s)
+            .fold(None, |acc: Option<Time>, s| Some(acc.map_or(s, |a| a.min(s))))
+    }
+
+    /// Is the capacity solver forced to fail at `now`?
+    pub fn solver_fault_at(&self, now: Time) -> bool {
+        in_window(&self.solver_failures, now)
+    }
+
+    /// Are scale-out actuations silently dropped at `now`?
+    pub fn actuation_drop_at(&self, now: Time) -> bool {
+        in_window(&self.actuation_drops, now)
+    }
+
+    /// Extra provisioning lead time for a scale-out committed at `now`
+    /// (the worst open delay window; 0 when none is open).
+    pub fn actuation_extra_lead_at(&self, now: Time) -> Time {
+        self.actuation_delays
+            .iter()
+            .filter(|d| now >= d.start && now < d.end)
+            .map(|d| d.extra)
+            .fold(0.0, f64::max)
+    }
+
+    /// Is *any* control fault open at `now`?  (Degraded-mode accounting.)
+    pub fn any_fault_at(&self, now: Time) -> bool {
+        self.forecast_blackout_at(now)
+            || self.forecast_corruption_at(now).is_some()
+            || self.telemetry_frozen_at(now)
+            || self.solver_fault_at(now)
+            || self.actuation_drop_at(now)
+            || self.actuation_extra_lead_at(now) > 0.0
+    }
+
+    /// Preset: one forecast blackout over `[start, end)` — the
+    /// `exp guardrails` headline scenario.
+    pub fn forecast_blackout(start: Time, end: Time) -> ControlFaultPlan {
+        ControlFaultPlan {
+            forecast_blackouts: vec![(start, end)],
+            ..ControlFaultPlan::default()
+        }
+    }
+
+    /// Preset: one telemetry freeze over `[start, end)`.
+    pub fn stale_telemetry(start: Time, end: Time) -> ControlFaultPlan {
+        ControlFaultPlan {
+            telemetry_freezes: vec![(start, end)],
+            ..ControlFaultPlan::default()
+        }
+    }
+
+    /// Parse a CLI control-fault spec: `;`-separated clauses of
+    ///
+    /// * `forecast-blackout=<start>-<end>` — forecaster returns nothing;
+    /// * `forecast-corrupt=<scale>@<start>-<end>[:<bias>]` — scaled
+    ///   (and optionally biased, in input TPS) forecaster output;
+    /// * `telemetry-freeze=<start>-<end>` — stale telemetry window;
+    /// * `solver-fail=<start>-<end>` — forced capacity-solve failures;
+    /// * `act-drop=<start>-<end>` — scale-outs silently dropped;
+    /// * `act-delay=<extra>@<start>-<end>` — scale-outs land late.
+    ///
+    /// Times accept the same `s`/`m`/`h`/`d` suffixes as
+    /// [`FaultPlan::parse`]; errors name the offending clause.  Example:
+    /// `forecast-blackout=36h-60h;act-delay=20m@36h-60h`.
+    pub fn parse(s: &str) -> Result<ControlFaultPlan, String> {
+        let mut plan = ControlFaultPlan::default();
+        for clause in s.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            let bad = |what: &str| format!("bad control-fault clause '{clause}': {what}");
+            let (key, val) =
+                clause.split_once('=').ok_or_else(|| bad("expected <key>=<value>"))?;
+            match key.trim() {
+                "forecast-blackout" => {
+                    plan.forecast_blackouts
+                        .push(parse_window(val).ok_or_else(|| bad(BAD_WINDOW))?);
+                }
+                "forecast-corrupt" => {
+                    let (scale, rest) = val
+                        .split_once('@')
+                        .ok_or_else(|| bad("expected <scale>@<start>-<end>[:<bias>]"))?;
+                    let scale: f64 =
+                        scale.trim().parse().map_err(|_| bad("scale is not a number"))?;
+                    if !scale.is_finite() || scale < 0.0 {
+                        return Err(bad("scale must be finite and >= 0"));
+                    }
+                    let (window, bias) = match rest.rsplit_once(':') {
+                        Some((w, b)) => {
+                            let bias: f64 =
+                                b.trim().parse().map_err(|_| bad("bias is not a number"))?;
+                            if !bias.is_finite() {
+                                return Err(bad("bias must be finite"));
+                            }
+                            (w, bias)
+                        }
+                        None => (rest, 0.0),
+                    };
+                    let (start, end) = parse_window(window).ok_or_else(|| bad(BAD_WINDOW))?;
+                    plan.forecast_corruptions.push(ForecastCorruption {
+                        start,
+                        end,
+                        scale,
+                        bias,
+                    });
+                }
+                "telemetry-freeze" => {
+                    plan.telemetry_freezes
+                        .push(parse_window(val).ok_or_else(|| bad(BAD_WINDOW))?);
+                }
+                "solver-fail" => {
+                    plan.solver_failures
+                        .push(parse_window(val).ok_or_else(|| bad(BAD_WINDOW))?);
+                }
+                "act-drop" => {
+                    plan.actuation_drops
+                        .push(parse_window(val).ok_or_else(|| bad(BAD_WINDOW))?);
+                }
+                "act-delay" => {
+                    let (extra, window) = val
+                        .split_once('@')
+                        .ok_or_else(|| bad("expected <extra>@<start>-<end>"))?;
+                    let extra = parse_time(extra.trim()).ok_or_else(|| bad(BAD_TIME))?;
+                    let (start, end) = parse_window(window).ok_or_else(|| bad(BAD_WINDOW))?;
+                    plan.actuation_delays.push(ActuationDelay { start, end, extra });
+                }
+                other => {
+                    return Err(bad(&format!(
+                        "unknown key '{other}' (forecast-blackout|forecast-corrupt|\
+                         telemetry-freeze|solver-fail|act-drop|act-delay)"
+                    )))
+                }
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// Shared parse-error fragments (clause context is prepended by the
+/// caller).
+const BAD_WINDOW: &str =
+    "expected a <start>-<end> window with end > start (s/m/h/d suffixes)";
+/// See [`BAD_WINDOW`].
+const BAD_TIME: &str = "expected a duration (s/m/h/d suffixes, >= 0)";
+/// See [`BAD_WINDOW`].
+const BAD_REGION: &str = "unknown region (eastus|centralus|westus)";
 
 /// Parse `<start>-<end>` with time-suffix bounds.
 fn parse_window(s: &str) -> Option<(Time, Time)> {
@@ -389,9 +676,90 @@ mod tests {
             RetryPolicy { base_backoff: 2.0, max_backoff: 30.0, max_attempts: 4 }
         );
 
-        assert!(FaultPlan::parse("region-dark=nowhere@1h-2h").is_none());
-        assert!(FaultPlan::parse("spot-shock=1.5@1h").is_none(), "frac > 1 rejected");
-        assert!(FaultPlan::parse("region-dark=eastus@2h-1h").is_none(), "inverted window");
-        assert!(FaultPlan::parse("bogus=1").is_none());
+        let err = FaultPlan::parse("region-dark=nowhere@1h-2h").unwrap_err();
+        assert!(err.contains("region-dark=nowhere@1h-2h"), "error names the clause: {err}");
+        assert!(FaultPlan::parse("spot-shock=1.5@1h").is_err(), "frac > 1 rejected");
+        assert!(FaultPlan::parse("region-dark=eastus@2h-1h").is_err(), "inverted window");
+        let err = FaultPlan::parse("bogus=1").unwrap_err();
+        assert!(err.contains("unknown key 'bogus'"), "unknown keys are named: {err}");
+        assert!(FaultPlan::parse("crash").is_err(), "missing '=' rejected");
+    }
+
+    #[test]
+    fn control_plan_default_is_empty_and_queries_false() {
+        let plan = ControlFaultPlan::default();
+        assert!(plan.is_empty());
+        assert!(!plan.any_fault_at(0.0));
+        assert!(!plan.forecast_blackout_at(HOUR));
+        assert!(plan.forecast_corruption_at(HOUR).is_none());
+        assert_eq!(plan.actuation_extra_lead_at(HOUR), 0.0);
+    }
+
+    #[test]
+    fn control_windows_are_half_open() {
+        let plan = ControlFaultPlan::forecast_blackout(HOUR, 2.0 * HOUR);
+        assert!(!plan.is_empty());
+        assert!(!plan.forecast_blackout_at(HOUR - 1.0));
+        assert!(plan.forecast_blackout_at(HOUR));
+        assert!(plan.forecast_blackout_at(2.0 * HOUR - 1.0));
+        assert!(!plan.forecast_blackout_at(2.0 * HOUR), "end is exclusive");
+        assert!(plan.any_fault_at(HOUR));
+
+        let stale = ControlFaultPlan::stale_telemetry(0.0, HOUR);
+        assert!(stale.telemetry_frozen_at(0.0));
+        assert!(!stale.telemetry_frozen_at(HOUR));
+        assert!(!stale.forecast_blackout_at(0.5 * HOUR), "presets are independent");
+    }
+
+    #[test]
+    fn control_parse_roundtrips_the_clause_grammar() {
+        let plan = ControlFaultPlan::parse(
+            "forecast-blackout=36h-60h; forecast-corrupt=0.5@1d-2d:-100; \
+             telemetry-freeze=12h-18h; solver-fail=2d-3d; act-drop=1h-2h; \
+             act-delay=20m@36h-60h",
+        )
+        .expect("valid spec");
+        assert_eq!(plan.forecast_blackouts, vec![(36.0 * HOUR, 60.0 * HOUR)]);
+        assert_eq!(
+            plan.forecast_corruptions,
+            vec![ForecastCorruption { start: DAY, end: 2.0 * DAY, scale: 0.5, bias: -100.0 }]
+        );
+        assert_eq!(plan.telemetry_freezes, vec![(12.0 * HOUR, 18.0 * HOUR)]);
+        assert_eq!(plan.solver_failures, vec![(2.0 * DAY, 3.0 * DAY)]);
+        assert_eq!(plan.actuation_drops, vec![(HOUR, 2.0 * HOUR)]);
+        assert_eq!(
+            plan.actuation_delays,
+            vec![ActuationDelay { start: 36.0 * HOUR, end: 60.0 * HOUR, extra: 20.0 * MINUTE }]
+        );
+        assert_eq!(plan.forecast_corruption_at(1.5 * DAY), Some((0.5, -100.0)));
+        assert_eq!(plan.actuation_extra_lead_at(40.0 * HOUR), 20.0 * MINUTE);
+
+        // Bias defaults to zero when the `:<bias>` suffix is omitted.
+        let noscale = ControlFaultPlan::parse("forecast-corrupt=2@1h-2h").expect("valid");
+        assert_eq!(noscale.forecast_corruptions[0].bias, 0.0);
+        assert_eq!(noscale.forecast_corruptions[0].scale, 2.0);
+
+        let err = ControlFaultPlan::parse("forecast-blackout=2h-1h").unwrap_err();
+        assert!(err.contains("forecast-blackout=2h-1h"), "error names the clause: {err}");
+        assert!(ControlFaultPlan::parse("forecast-corrupt=-1@1h-2h").is_err());
+        assert!(ControlFaultPlan::parse("act-delay=1h-2h").is_err(), "missing '@'");
+        let err = ControlFaultPlan::parse("bogus=1").unwrap_err();
+        assert!(err.contains("unknown key 'bogus'"), "unknown keys are named: {err}");
+        assert!(ControlFaultPlan::parse("").expect("empty spec ok").is_empty());
+    }
+
+    #[test]
+    fn overlapping_delay_windows_take_the_worst_extra_lead() {
+        let plan = ControlFaultPlan {
+            actuation_delays: vec![
+                ActuationDelay { start: 0.0, end: 2.0 * HOUR, extra: 60.0 },
+                ActuationDelay { start: HOUR, end: 3.0 * HOUR, extra: 300.0 },
+            ],
+            ..ControlFaultPlan::default()
+        };
+        assert_eq!(plan.actuation_extra_lead_at(0.5 * HOUR), 60.0);
+        assert_eq!(plan.actuation_extra_lead_at(1.5 * HOUR), 300.0);
+        assert_eq!(plan.actuation_extra_lead_at(2.5 * HOUR), 300.0);
+        assert_eq!(plan.actuation_extra_lead_at(3.5 * HOUR), 0.0);
     }
 }

@@ -26,5 +26,5 @@ pub use chunked::{run_chunked, run_simulation_chunked, ChunkedOptions};
 pub use cluster::{Cluster, InstanceId, PoolTag};
 pub use engine::{SimConfig, SimHandoff, Simulation, Strategy};
 pub use event::{Event, EventQueue};
-pub use faults::{FaultPlan, RetryPolicy};
+pub use faults::{ControlFaultPlan, FaultPlan, RetryPolicy};
 pub use instance::{InstState, InstanceSim};

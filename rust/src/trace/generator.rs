@@ -46,7 +46,9 @@ use crate::trace::types::{AppKind, Request};
 /// evaluation setup with the four open-source models.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceConfig {
+    /// Calibration epoch (Jul-2025 evaluation or Nov-2024 validation).
     pub epoch: Epoch,
+    /// Model families the trace targets (drives per-model rate shares).
     pub models: Vec<ModelKind>,
     /// Trace length in days.
     pub days: f64,
@@ -54,6 +56,7 @@ pub struct TraceConfig {
     /// Experiments default to smaller scales for runtime; the shape is
     /// scale-invariant.
     pub scale: f64,
+    /// RNG seed — same seed, same trace, byte for byte.
     pub seed: u64,
     /// Day-of-week of t=0 (0 = Monday).
     pub start_weekday: usize,
@@ -281,6 +284,7 @@ const DEFAULT_CHUNK_MINUTES: u64 = 16;
 /// counter-seeded per (minute, stream), so every consumption mode —
 /// streaming, bulk, chunk-parallel — produces the identical trace.
 pub struct TraceGenerator {
+    /// The configuration this generator was built from.
     pub cfg: TraceConfig,
     bursts: Vec<Burst>,
     model_norm: Vec<f64>, // per (tier, region): sum of model weights
@@ -304,6 +308,8 @@ pub struct TraceGenerator {
 }
 
 impl TraceGenerator {
+    /// Build the generator: sample burst schedules, precompute stream
+    /// prefactors, alias tables and token parameters.
     pub fn new(cfg: TraceConfig) -> Self {
         let mut rng = Rng::seed_from_u64(cfg.seed ^ 0xb00b5);
         let mut bursts = Vec::new();

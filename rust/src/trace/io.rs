@@ -10,6 +10,7 @@ use std::path::Path;
 
 use crate::trace::types::Request;
 
+/// The CSV header line (field order of [`Request::to_csv`]).
 pub const HEADER: &str = "id,arrival,model,region,tier,app,input_tokens,output_tokens";
 
 /// Write a trace to a CSV file (one request per line, arrival-ordered).

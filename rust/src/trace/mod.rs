@@ -7,14 +7,13 @@
 //! per-region amplitudes, diurnal/weekly periodicity, token-count CDFs,
 //! the 5× Nov-2024 → Jul-2025 growth, and the application mix of Fig 6a.
 
-// Rustdoc debt: public surface not yet audited for `missing_docs`
-// (PR 4 audited config, perf, coordinator::router and sim::cluster);
-// drop this allow once every pub item here is documented.
-#![allow(missing_docs)]
-
+/// The paper-calibrated synthetic workload generator.
 pub mod generator;
+/// Trace CSV interchange (write/read the generator's format).
 pub mod io;
+/// Characterization statistics over traces (§3 figures).
 pub mod stats;
+/// The request record and its enum/CSV plumbing.
 pub mod types;
 
 pub use generator::{TraceConfig, TraceGenerator};

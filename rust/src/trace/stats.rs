@@ -12,17 +12,22 @@ use crate::trace::types::{AppKind, Request};
 /// One bucketed load series: requests and tokens per bucket.
 #[derive(Debug, Clone, Default)]
 pub struct LoadSeries {
+    /// Bucket width in seconds.
     pub bucket_secs: Time,
+    /// Request count per bucket.
     pub requests: Vec<u64>,
+    /// Token count per bucket.
     pub tokens: Vec<u64>,
 }
 
 impl LoadSeries {
+    /// Zeroed series covering `horizon` seconds.
     pub fn new(bucket_secs: Time, horizon: Time) -> Self {
         let n = (horizon / bucket_secs).ceil() as usize;
         LoadSeries { bucket_secs, requests: vec![0; n], tokens: vec![0; n] }
     }
 
+    /// Record one request of `tokens` total tokens arriving at `t`.
     pub fn add(&mut self, t: Time, tokens: u64) {
         let idx = (t / self.bucket_secs) as usize;
         if idx < self.requests.len() {
@@ -41,14 +46,17 @@ impl LoadSeries {
         self.tokens[i] as f64 / self.bucket_secs
     }
 
+    /// Number of buckets.
     pub fn len(&self) -> usize {
         self.requests.len()
     }
 
+    /// True when the series covers no buckets.
     pub fn is_empty(&self) -> bool {
         self.requests.is_empty()
     }
 
+    /// Highest per-bucket RPS across the series.
     pub fn peak_rps(&self) -> f64 {
         (0..self.len()).map(|i| self.rps(i)).fold(0.0, f64::max)
     }
@@ -56,7 +64,9 @@ impl LoadSeries {
 
 /// Stream aggregator for the characterization study.
 pub struct WorkloadStats {
+    /// Time span the series cover, seconds.
     pub horizon: Time,
+    /// Bucket width in seconds.
     pub bucket_secs: Time,
     /// (tier, model, region) → load series.
     pub series: BTreeMap<(Tier, ModelKind, Region), LoadSeries>,
@@ -66,11 +76,13 @@ pub struct WorkloadStats {
     pub apps: BTreeMap<AppKind, (u64, u64)>,
     /// model → sampled (input, output) token counts, decimated.
     pub token_samples: BTreeMap<ModelKind, Vec<(u32, u32)>>,
+    /// Requests observed so far.
     pub total_requests: u64,
     sample_stride: u64,
 }
 
 impl WorkloadStats {
+    /// Empty aggregator over `horizon` seconds of `bucket_secs` buckets.
     pub fn new(horizon: Time, bucket_secs: Time) -> Self {
         WorkloadStats {
             horizon,
@@ -84,6 +96,7 @@ impl WorkloadStats {
         }
     }
 
+    /// Fold one request into every series it belongs to.
     pub fn observe(&mut self, r: &Request) {
         let tokens = r.total_tokens();
         self.series

@@ -2,11 +2,13 @@
 
 use crate::config::{ModelKind, Region, Tier, Time};
 
+/// Unique request identifier (dense, assigned at generation time).
 pub type RequestId = u64;
 
 /// Top O365 application families (Fig 6a).  `Rag` alone contributes 41.2%
 /// of requests and drives the heavy-input token distribution.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[allow(missing_docs)] // variants are application names; see `AppKind::name`
 pub enum AppKind {
     Rag,
     InsightsGen,
@@ -21,6 +23,7 @@ pub enum AppKind {
 }
 
 impl AppKind {
+    /// Every application family, in dense-index order.
     pub const ALL: [AppKind; 10] = [
         AppKind::Rag,
         AppKind::InsightsGen,
@@ -51,6 +54,7 @@ impl AppKind {
         }
     }
 
+    /// Stable display name (the trace CSV's `app` column).
     pub fn name(self) -> &'static str {
         match self {
             AppKind::Rag => "rag-search",
@@ -72,15 +76,21 @@ impl AppKind {
 /// requests by value instead of cloning.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Request {
+    /// Unique id (dense, generation order).
     pub id: RequestId,
     /// Arrival at the global router, seconds since trace start.
     pub arrival: Time,
+    /// The model family the request targets.
     pub model: ModelKind,
     /// The client's nearest region (the router may send it elsewhere).
     pub origin: Region,
+    /// Service tier (IW-F / IW-N / NIW) — drives SLAs and scheduling.
     pub tier: Tier,
+    /// Originating application family (token-distribution driver).
     pub app: AppKind,
+    /// Prompt length in tokens.
     pub input_tokens: u32,
+    /// Generated length in tokens.
     pub output_tokens: u32,
 }
 

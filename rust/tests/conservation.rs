@@ -1,7 +1,8 @@
 //! Disaggregation invariant layer, part 2: conservation ledgers.
 //!
 //! Table-driven sweep over {strategy} × {unified, disaggregated} ×
-//! {no-fault, region-dark}.  Each cell must satisfy, exactly:
+//! {no-fault, data-fault, control-fault, combined}.  Each cell must
+//! satisfy, exactly:
 //!
 //! * **Request conservation** — `completed + dropped + lost + shed`
 //!   equals the arrival count of the materialized trace; nothing is
@@ -16,16 +17,65 @@
 //! * **Gate hygiene** — unified cells keep every disaggregation counter
 //!   at zero (the bit-identity guarantee rests on this), and no cell
 //!   ever sheds interactive traffic.
+//!
+//! The control-fault rows additionally pin the fault *plane* boundary:
+//! control faults rot the controller's inputs and outputs but never
+//! touch the data plane, so a control-only cell must kill nothing,
+//! while the per-cause exposure counters (and, on the guarded path,
+//! degraded time) must be non-zero exactly where the windows fired.
 
-use sageserve::config::{DisaggParams, ModelKind, Region};
+use sageserve::config::{DisaggParams, GuardrailParams, ModelKind, Region};
 use sageserve::sim::engine::{quick_config, run_simulation, SimConfig, Strategy};
-use sageserve::sim::faults::FaultPlan;
+use sageserve::sim::faults::{ActuationDelay, ControlFaultPlan, FaultPlan};
 use sageserve::trace::generator::TraceGenerator;
+
+#[derive(Clone, Copy, PartialEq)]
+enum FaultMix {
+    None,
+    /// Data plane only: a region outage kills in-flight work.
+    Data,
+    /// Control plane only: blackout + freeze + solver + actuation rot.
+    Control,
+    /// Both planes at once.
+    Both,
+}
+
+impl FaultMix {
+    fn name(self) -> &'static str {
+        match self {
+            FaultMix::None => "no-fault",
+            FaultMix::Data => "region-dark",
+            FaultMix::Control => "control-fault",
+            FaultMix::Both => "combined",
+        }
+    }
+
+    fn data(self) -> bool {
+        matches!(self, FaultMix::Data | FaultMix::Both)
+    }
+
+    fn control(self) -> bool {
+        matches!(self, FaultMix::Control | FaultMix::Both)
+    }
+}
 
 struct Cell {
     strategy: Strategy,
     disagg: bool,
-    fault: bool,
+    fault: FaultMix,
+}
+
+/// Every control-fault kind at once, with windows placed so that the
+/// quick trace's hourly control epochs (t = 0, 3600, 7200 over the
+/// 8640 s span) land inside them: the blackout covers t = 3600, the
+/// telemetry freeze and solver window cover t = 7200.
+fn control_plan() -> ControlFaultPlan {
+    let mut p = ControlFaultPlan::forecast_blackout(3000.0, 5000.0);
+    p.telemetry_freezes.push((5000.0, 7500.0));
+    p.solver_failures.push((7000.0, 8000.0));
+    p.actuation_drops.push((2000.0, 4000.0));
+    p.actuation_delays.push(ActuationDelay { start: 4000.0, end: 6000.0, extra: 60.0 });
+    p
 }
 
 fn cell_config(cell: &Cell) -> SimConfig {
@@ -34,8 +84,12 @@ fn cell_config(cell: &Cell) -> SimConfig {
     if cell.disagg {
         cfg.disagg = DisaggParams::enabled();
     }
-    if cell.fault {
+    if cell.fault.data() {
         cfg.faults = FaultPlan::region_dark(Region::EastUs, 2000.0, 5000.0);
+    }
+    if cell.fault.control() {
+        cfg.control_faults = control_plan();
+        cfg.guardrails = GuardrailParams::enabled();
     }
     cfg
 }
@@ -45,7 +99,7 @@ fn every_cell_conserves_requests_handoffs_and_hours() {
     let mut cells = Vec::new();
     for strategy in [Strategy::Reactive, Strategy::LtUa, Strategy::Chiron] {
         for disagg in [false, true] {
-            for fault in [false, true] {
+            for fault in [FaultMix::None, FaultMix::Data, FaultMix::Control, FaultMix::Both] {
                 cells.push(Cell { strategy, disagg, fault });
             }
         }
@@ -56,7 +110,7 @@ fn every_cell_conserves_requests_handoffs_and_hours() {
             "{}/{}/{}",
             cell.strategy.name(),
             if cell.disagg { "disagg" } else { "unified" },
-            if cell.fault { "region-dark" } else { "no-fault" }
+            cell.fault.name()
         );
         let sim = run_simulation(cell_config(cell));
         let m = &sim.metrics;
@@ -102,8 +156,36 @@ fn every_cell_conserves_requests_handoffs_and_hours() {
 
         // The phase rosters themselves stayed coherent.
         assert!(sim.cluster.aggregates_consistent(), "{tag}: cluster aggregates drifted");
-        if cell.fault {
+        if cell.fault.data() {
             assert!(f.killed_total() > 0, "{tag}: the outage must kill in-flight work");
+        }
+
+        // Fault-plane boundary: control faults must never reach the
+        // data plane (nothing killed), and a cell without control
+        // faults must leave every guardrail counter untouched.
+        let g = &m.guardrails;
+        match cell.fault {
+            FaultMix::Control => {
+                assert_eq!(f.killed_total(), 0, "{tag}: control faults must kill nothing");
+            }
+            FaultMix::None | FaultMix::Data => {
+                assert!(g.is_empty(), "{tag}: guardrail counters moved without control faults");
+            }
+            FaultMix::Both => {}
+        }
+        if cell.fault.control() && !cell.disagg && cell.strategy.uses_forecast() {
+            // Exposure stamps: the blackout window covers the t=3600
+            // epoch and the freeze window covers t=7200, so both
+            // per-cause counters must have fired...
+            assert!(g.blackout_epochs >= 1, "{tag}: blackout epoch never stamped");
+            assert!(g.stale_epochs >= 1, "{tag}: stale-telemetry epoch never stamped");
+            // ...and the guarded cascade must have left Fresh mode for
+            // exactly as long as the watchdog saw rotten inputs.
+            assert!(g.degraded_secs > 0.0, "{tag}: guarded cell never went degraded");
+            assert!(g.transition_count() > 0, "{tag}: guarded cell never transitioned");
+        }
+        if !cell.fault.control() {
+            assert_eq!(g.degraded_secs, 0.0, "{tag}: degraded time without control faults");
         }
     }
 }

@@ -1,0 +1,141 @@
+//! Control-plane guardrail invariant layer (ISSUE 10): the fault plane
+//! and the fallback cascade must not cost the engine its two headline
+//! guarantees.
+//!
+//! * **Empty-plan bit-identity** — an empty [`ControlFaultPlan`] (and a
+//!   parsed-from-"" one) leaves both the sequential and the chunked
+//!   engine bit-identical to a build that never heard of control
+//!   faults: the windows are pure predicates over `now`, compiled into
+//!   no events, and every consumer branches on the sampled values
+//!   rather than applying identity arithmetic.
+//! * **Chunked == sequential with faults active** — blackout windows,
+//!   frozen telemetry, solver failures and actuation rot must all
+//!   produce the same `Metrics` (full streaming-state equality) under
+//!   epoch-sliced execution, because the window predicates are
+//!   stateless and the guardrail state they provoke (residual ring,
+//!   held plan, cascade mode) rides the `SimHandoff`.
+
+use sageserve::config::GuardrailParams;
+use sageserve::sim::chunked::{run_simulation_chunked, ChunkedOptions};
+use sageserve::sim::engine::{quick_config, run_simulation, SimConfig, Strategy};
+use sageserve::sim::faults::{ActuationDelay, ControlFaultPlan};
+
+/// Multi-day config so chunk boundaries cross control epochs that sit
+/// inside, at the edges of, and outside the fault windows.
+fn multi_day_config(strategy: Strategy) -> SimConfig {
+    let mut cfg = quick_config(strategy, 2.0, 0.002);
+    cfg.scaling.max_instances = 8;
+    cfg
+}
+
+/// Every control-fault kind at once, windowed inside the 2-day span
+/// (48 hourly control epochs): blackout over hours 20–30, telemetry
+/// freeze over 30–40, solver failures over 40–44, actuation drops over
+/// hours 5–10 and delays over 10–20.
+fn active_plan() -> ControlFaultPlan {
+    const H: f64 = 3600.0;
+    let mut p = ControlFaultPlan::forecast_blackout(20.0 * H, 30.0 * H);
+    p.telemetry_freezes.push((30.0 * H, 40.0 * H));
+    p.solver_failures.push((40.0 * H, 44.0 * H));
+    p.actuation_drops.push((5.0 * H, 10.0 * H));
+    p.actuation_delays.push(ActuationDelay { start: 10.0 * H, end: 20.0 * H, extra: 120.0 });
+    p
+}
+
+#[test]
+fn empty_control_fault_plan_is_bit_identical_even_chunked() {
+    // Baseline: no control-fault field ever touched.
+    let baseline = run_simulation(multi_day_config(Strategy::LtUa));
+    assert!(baseline.metrics.completed > 1000, "trace too small to be meaningful");
+
+    // An explicitly-empty plan — both the Default and the parse("")
+    // spelling — through both executors.
+    for parsed in [false, true] {
+        let mk = || {
+            let mut cfg = multi_day_config(Strategy::LtUa);
+            cfg.control_faults = if parsed {
+                ControlFaultPlan::parse("").expect("empty plan must parse")
+            } else {
+                ControlFaultPlan::default()
+            };
+            cfg
+        };
+        assert!(mk().control_faults.is_empty());
+        let seq = run_simulation(mk());
+        assert!(
+            baseline.metrics == seq.metrics,
+            "empty plan (parsed={parsed}) diverged sequentially"
+        );
+        let ch = run_simulation_chunked(mk(), &ChunkedOptions { chunk_epochs: 3, workers: 2 });
+        assert!(
+            baseline.metrics == ch.metrics,
+            "empty plan (parsed={parsed}) diverged under chunked execution"
+        );
+        assert!(seq.metrics.guardrails.is_empty(), "empty plan moved a guardrail counter");
+    }
+}
+
+#[test]
+fn chunked_bit_identical_with_active_control_faults() {
+    // The headline grid: the full control-fault schedule through the
+    // naive controller (exposed, never degrades) and the guarded one
+    // (walks the cascade; `GuardrailState` must survive every chunk
+    // handoff), each at the corner chunk/worker combinations.
+    for guarded in [false, true] {
+        let mk = || {
+            let mut cfg = multi_day_config(Strategy::LtUa);
+            cfg.control_faults = active_plan();
+            if guarded {
+                cfg.guardrails = GuardrailParams::enabled();
+            }
+            cfg
+        };
+        let seq = run_simulation(mk());
+        let g = &seq.metrics.guardrails;
+        // Non-vacuity: every fault kind actually fired on the controller.
+        assert!(g.blackout_epochs > 0, "blackout window never hit a control epoch");
+        assert!(g.stale_epochs > 0, "freeze window never hit a control epoch");
+        assert!(g.solver_fault_epochs > 0, "solver window never hit a control epoch");
+        if guarded {
+            assert!(g.degraded_secs > 0.0, "guarded run never went degraded");
+            assert!(g.transition_count() > 0, "guarded run never transitioned");
+        } else {
+            assert_eq!(g.degraded_secs, 0.0, "naive run has no cascade to degrade");
+            assert_eq!(g.transition_count(), 0, "naive run has no cascade to transition");
+        }
+        for (chunk_epochs, workers) in [(1usize, 1usize), (1, 8), (24, 1), (24, 8)] {
+            let ch = run_simulation_chunked(mk(), &ChunkedOptions { chunk_epochs, workers });
+            assert!(
+                seq.metrics == ch.metrics,
+                "{} / {chunk_epochs} epoch(s) × {workers} worker(s): chunked diverged \
+                 from sequential with control faults active",
+                if guarded { "guarded" } else { "naive" }
+            );
+        }
+    }
+}
+
+#[test]
+fn guarded_fault_free_run_is_chunked_invariant() {
+    // Guardrails with *no* faults: the residual tracker still runs
+    // (θ inflation is active fault-free), so its ring buffer is live
+    // state that must ride the handoff for chunked to stay identical.
+    let mk = || {
+        let mut cfg = multi_day_config(Strategy::LtUa);
+        cfg.guardrails = GuardrailParams::enabled();
+        cfg
+    };
+    let seq = run_simulation(mk());
+    let g = &seq.metrics.guardrails;
+    assert!(g.epochs_fresh > 0, "guarded run never took a fresh epoch");
+    assert_eq!(g.epochs_held + g.epochs_reactive, 0, "degraded rung without faults");
+    assert_eq!(g.degraded_secs, 0.0, "degraded time without faults");
+    for (chunk_epochs, workers) in [(1usize, 2usize), (24, 2)] {
+        let ch = run_simulation_chunked(mk(), &ChunkedOptions { chunk_epochs, workers });
+        assert!(
+            seq.metrics == ch.metrics,
+            "{chunk_epochs} epoch(s) × {workers} worker(s): fault-free guarded run \
+             diverged under chunked execution — residual state lost in handoff?"
+        );
+    }
+}
